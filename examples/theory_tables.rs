@@ -1,0 +1,71 @@
+//! Reproduce every closed-form number in the paper's Section 5:
+//! Theorem 3 break-even table, Theorem 4 regime-switch/f* table, and a
+//! Monte-Carlo validation of Proposition 2's variance formula.
+//!
+//!   cargo run --release --example theory_tables
+
+use lgp::bench_support::Table;
+use lgp::theory::{self, CostModel};
+
+fn main() {
+    let cost = CostModel::default();
+
+    println!("== Cost model (paper Sec. 5.3) ==");
+    println!("Backward = 2, Forward = 1, CheapForward = 0.7");
+    println!("gamma(f) = (0.7 + 2.3 f) / 3\n");
+
+    println!("== Theorem 3: break-even alignment rho*(f, kappa) ==");
+    let mut t = Table::new(&["f", "gamma(f)", "k=0.8", "k=0.9", "k=1.0", "k=1.1", "k=1.2"]);
+    for &f in &[0.05, 0.1, 0.2, 0.25, 0.3, 0.5, 0.75, 0.9] {
+        let mut row = vec![format!("{f:.2}"), format!("{:.3}", cost.gamma(f))];
+        for &k in &[0.8, 0.9, 1.0, 1.1, 1.2] {
+            row.push(format!("{:.3}", theory::rho_star(f, k, &cost)));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!(
+        "paper quotes: rho*(0.1,1)={:.3} (0.876)  rho*(0.2,1)={:.3} (0.802)  rho*(0.5,1)={:.3} (0.689)\n",
+        theory::rho_star(0.1, 1.0, &cost),
+        theory::rho_star(0.2, 1.0, &cost),
+        theory::rho_star(0.5, 1.0, &cost)
+    );
+
+    println!("== Theorem 4: regime switch and optimal control fraction ==");
+    let mut t = Table::new(&["kappa", "rho_switch", "f*(.65)", "f*(.7)", "f*(.8)", "f*(.9)", "f*(.95)"]);
+    for &k in &[0.8, 0.9, 1.0, 1.1, 1.2] {
+        let mut row = vec![format!("{k:.1}"), format!("{:.4}", theory::rho_switch(k, &cost))];
+        for &r in &[0.65, 0.7, 0.8, 0.9, 0.95] {
+            row.push(format!("{:.3}", theory::f_star(r, k, &cost)));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!(
+        "paper quotes: rho_switch(1)={:.4} (0.6167)   f*(0.8,1)={:.3} (0.45)\n",
+        theory::rho_switch(1.0, &cost),
+        theory::f_star(0.8, 1.0, &cost)
+    );
+
+    println!("== Proposition 2: Monte-Carlo check of the variance inflation phi ==");
+    let mut t = Table::new(&["f", "rho", "kappa", "phi closed-form", "phi Monte-Carlo", "rel err"]);
+    for &(f, rho, kappa) in &[
+        (0.25, 0.9, 1.0),
+        (0.25, 0.775, 1.0), // the Thm-3 break-even point for f = 1/4
+        (0.125, 0.9, 1.0),
+        (0.5, 0.7, 1.2),
+        (0.25, 0.5, 0.8),
+    ] {
+        let mc = theory::monte_carlo_phi(32, 16, f, rho, kappa, 3000, 42);
+        let rel = (mc.phi_empirical - mc.phi_closed_form).abs() / mc.phi_closed_form;
+        t.row(vec![
+            format!("{f:.3}"),
+            format!("{:.3}", mc.rho_realized),
+            format!("{:.3}", mc.kappa_realized),
+            format!("{:.4}", mc.phi_closed_form),
+            format!("{:.4}", mc.phi_empirical),
+            format!("{:.1}%", rel * 100.0),
+        ]);
+    }
+    t.print();
+}

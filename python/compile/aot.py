@@ -1,0 +1,210 @@
+"""AOT driver: lower every Layer-2 entry point to HLO *text* artifacts.
+
+Run once per preset (``make artifacts``); the Rust coordinator is fully
+self-contained afterwards. Usage:
+
+    python -m compile.aot --preset small --out ../artifacts/small \
+        [--fs 0.25,0.5] [--micro 64] [--seed 0]
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 rust crate binds) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Each artifact is shape-specialized (XLA requires static shapes), so we emit
+one artifact per (entry point, batch size) pair actually used by the
+coordinator, all recorded in ``manifest.json`` together with the trunk
+parameter layout, model dims and initial parameters.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Default micro-batch size per preset (paper: 2000; scaled for single-CPU
+# PJRT — the accumulation structure, not the absolute size, is what the
+# algorithm depends on).
+DEFAULT_MICRO = {"tiny": 16, "small": 64, "paper": 64}
+VAL_BATCH = 100
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg_meta(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def lower_entries(cfg: M.ModelConfig, micro: int, fs, out_dir: str):
+    """Lower all (entry, batch-size) pairs; return the manifest dict."""
+    d, c, r = cfg.width, cfg.classes, cfg.rank
+    p_t = M.trunk_size(cfg)
+    p_total = p_t + d * c + c
+    img = (3, cfg.image, cfg.image)
+
+    mcs = sorted({max(1, round(f * micro)) for f in fs})
+    mps = sorted({micro - mc for mc in mcs if micro - mc > 0})
+    train_sizes = sorted(set(mcs) | {micro})
+    cheap_sizes = sorted(set(mps) | {VAL_BATCH})
+    predict_sizes = sorted(set(mcs) | set(mps))
+
+    artifacts = {}
+
+    def emit(name, fn, specs, args_meta, outs_meta):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        artifacts[name] = {"file": fname, "args": args_meta, "outs": outs_meta}
+        print(f"  {name}: {len(text)/1e6:.2f} MB HLO text")
+
+    params_meta = [
+        _arg_meta("trunk", (p_t,)),
+        _arg_meta("head_w", (d, c)),
+        _arg_meta("head_b", (c,)),
+    ]
+
+    for m in train_sizes:
+        emit(
+            f"train_grads_b{m}",
+            functools.partial(M.train_grads, cfg=cfg),
+            (_spec((p_t,)), _spec((d, c)), _spec((c,)), _spec((m,) + img), _spec((m,), I32)),
+            params_meta + [_arg_meta("x", (m,) + img), _arg_meta("y", (m,), "i32")],
+            [_arg_meta("loss", ()), _arg_meta("g_trunk", (p_t,)),
+             _arg_meta("g_head_w", (d, c)), _arg_meta("g_head_b", (c,)),
+             _arg_meta("a", (m, d)), _arg_meta("probs", (m, c))],
+        )
+
+    for m in cheap_sizes:
+        emit(
+            f"cheap_fwd_b{m}",
+            functools.partial(M.cheap_fwd, cfg=cfg),
+            (_spec((p_t,)), _spec((d, c)), _spec((c,)), _spec((m,) + img)),
+            params_meta + [_arg_meta("x", (m,) + img)],
+            [_arg_meta("a", (m, d)), _arg_meta("probs", (m, c))],
+        )
+
+    for m in predict_sizes:
+        emit(
+            f"predict_grad_b{m}",
+            functools.partial(M.predict_grad, cfg=cfg),
+            (_spec((m, d)), _spec((m, c)), _spec((m,), I32), _spec((d, c)),
+             _spec((r, cfg.feat_dim)), _spec((p_t, r))),
+            [_arg_meta("a", (m, d)), _arg_meta("probs", (m, c)),
+             _arg_meta("y", (m,), "i32"), _arg_meta("head_w", (d, c)),
+             _arg_meta("B", (r, cfg.feat_dim)), _arg_meta("U", (p_t, r))],
+            [_arg_meta("g_trunk", (p_t,)), _arg_meta("g_head_w", (d, c)),
+             _arg_meta("g_head_b", (c,))],
+        )
+
+    n = cfg.n_chunk
+    emit(
+        f"per_example_grads_b{n}",
+        functools.partial(M.per_example_grads, cfg=cfg),
+        (_spec((p_t,)), _spec((d, c)), _spec((c,)), _spec((n,) + img), _spec((n,), I32)),
+        params_meta + [_arg_meta("x", (n,) + img), _arg_meta("y", (n,), "i32")],
+        [_arg_meta("G", (n, p_t)), _arg_meta("a", (n, d)), _arg_meta("probs", (n, c))],
+    )
+
+    emit(
+        "cv_combine",
+        functools.partial(M.cv_combine, cfg=cfg),
+        (_spec((p_total,)), _spec((p_total,)), _spec((p_total,)), _spec((1,))),
+        [_arg_meta("g_ct", (p_total,)), _arg_meta("g_cp", (p_total,)),
+         _arg_meta("g_p", (p_total,)), _arg_meta("f", (1,))],
+        [_arg_meta("g", (p_total,))],
+    )
+
+    return artifacts
+
+
+def build(preset: str, out_dir: str, fs, micro: int | None, seed: int):
+    cfg = M.PRESETS[preset]
+    micro = micro or DEFAULT_MICRO[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"[aot] preset={preset} micro={micro} fs={fs} -> {out_dir}")
+
+    artifacts = lower_entries(cfg, micro, fs, out_dir)
+
+    trunk, head_w, head_b = M.init_params(cfg, seed)
+    np.asarray(trunk, dtype="<f4").tofile(os.path.join(out_dir, "init_trunk.bin"))
+    np.asarray(head_w, dtype="<f4").tofile(os.path.join(out_dir, "init_head_w.bin"))
+    np.asarray(head_b, dtype="<f4").tofile(os.path.join(out_dir, "init_head_b.bin"))
+
+    layout, off = [], 0
+    for name, shape, muon in M.trunk_layout(cfg):
+        n = int(np.prod(shape))
+        layout.append({"name": name, "shape": list(shape), "offset": off,
+                       "len": n, "muon": muon})
+        off += n
+
+    manifest = {
+        "preset": preset,
+        "model": {
+            "image": cfg.image, "patch": cfg.patch, "width": cfg.width,
+            "depth": cfg.depth, "heads": cfg.heads, "classes": cfg.classes,
+            "mlp_ratio": cfg.mlp_ratio, "label_smoothing": cfg.label_smoothing,
+            "tokens": cfg.tokens, "patch_dim": cfg.patch_dim,
+        },
+        "predictor": {"rank": cfg.rank, "n_chunk": cfg.n_chunk,
+                      "n_fit": cfg.n_fit, "feat_dim": cfg.feat_dim},
+        "dims": {"trunk_params": M.trunk_size(cfg),
+                 "total_params": M.trunk_size(cfg) + cfg.width * cfg.classes + cfg.classes},
+        "batch": {"micro": micro, "fs": list(fs), "val": VAL_BATCH},
+        "trunk_layout": layout,
+        "artifacts": artifacts,
+        "init": {"trunk": "init_trunk.bin", "head_w": "init_head_w.bin",
+                 "head_b": "init_head_b.bin", "seed": seed},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"[aot] wrote manifest with {len(artifacts)} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--out", default=None, help="output dir (default ../artifacts/<preset>)")
+    ap.add_argument("--fs", default="0.25", help="comma-separated control fractions")
+    ap.add_argument("--micro", type=int, default=None, help="micro-batch size override")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pallas-cheap", action="store_true",
+                    help="use the pallas attention kernel in cheap_fwd "
+                         "(slow under CPU interpret; for kernel-path testing)")
+    args = ap.parse_args()
+    if args.pallas_cheap:
+        from . import model as _m
+        _m.CHEAP_ATTENTION = "pallas"
+    out = args.out or os.path.join("..", "artifacts", args.preset)
+    fs = [float(s) for s in args.fs.split(",") if s]
+    build(args.preset, out, fs, args.micro, args.seed)
+
+
+if __name__ == "__main__":
+    main()

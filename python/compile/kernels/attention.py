@@ -1,0 +1,49 @@
+"""Layer-1 Pallas kernel: fused inference attention for CheapForward.
+
+The paper's CheapForward (Sec. 2) is a forward pass that keeps no autodiff
+residuals and may use inference-only fast paths. On TPU the natural
+expression is a fused attention kernel: one (batch, head) grid point
+computes scores, a numerically-stable row softmax and the value matmul
+entirely in VMEM, never materialising the (T, T) attention matrix in HBM.
+
+For CIFAR-scale ViTs (T = 65 tokens) a whole head fits in VMEM, so the
+BlockSpec carves the (B, h, T, dh) operands into (1, 1, T, dh) blocks; on
+longer sequences the same kernel would additionally tile T (flash-style
+running max/sum) — noted in DESIGN.md §Hardware-Adaptation.
+
+interpret=True everywhere: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[0, 0]                       # (T, dh)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    s = (q @ k.T) * scale                 # (T, T)
+    s_max = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - s_max)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = p @ v
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Fused multi-head attention; q,k,v: (B, h, T, dh) -> (B, h, T, dh)."""
+    b, h, t, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    spec = pl.BlockSpec((1, 1, t, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)

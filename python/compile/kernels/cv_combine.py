@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernel: the control-variate combine of paper eq. (1).
+
+    g = f * g_ct + (1 - f) * (g_p - (g_cp - g_ct))
+
+Elementwise over the full flattened gradient (trunk + head), tiled over
+parameter blocks so each VMEM-resident tile is touched exactly once —
+this is a pure bandwidth kernel (4 streams in, 1 out).
+
+f arrives as a (1,) array rather than a python constant so a single
+compiled artifact serves every control fraction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+
+def _cv_kernel(f_ref, gct_ref, gcp_ref, gp_ref, o_ref):
+    f = f_ref[0]
+    gct = gct_ref[...]
+    o_ref[...] = f * gct + (1.0 - f) * (gp_ref[...] - (gcp_ref[...] - gct))
+
+
+def cv_combine(
+    g_ct: jnp.ndarray,  # (P,)
+    g_cp: jnp.ndarray,  # (P,)
+    g_p: jnp.ndarray,   # (P,)
+    f: jnp.ndarray,     # (1,)
+) -> jnp.ndarray:
+    p = g_ct.shape[0]
+    grid = (pl.cdiv(p, BLOCK),)
+    vec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _cv_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,)), vec, vec, vec],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(f, g_ct, g_cp, g_p)

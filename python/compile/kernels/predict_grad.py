@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernels for the paper's gradient-prediction hot path.
+
+The predictor of Sec. 4.3 is deliberately factored into MXU-shaped matmul
+work (see DESIGN.md §Hardware-Adaptation):
+
+    F = A1^T H / m       (D+1, D)   activation/backprop-feature moment
+    c = B vec(F)         (r,)       bilinear coefficients
+    g = U c              (P_T,)     projection back to parameter space
+
+The third step dominates (P_T x r) and is tiled over the trunk-parameter
+dimension with a BlockSpec, which on a real TPU expresses the HBM->VMEM
+streaming schedule of U (the only large operand). A1, H and B are small and
+stay VMEM-resident across the whole grid.
+
+All pallas_calls use ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls; numerics are validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Trunk-dimension tile for the U-projection. Under interpret=True each grid
+# step lowers to one iteration of an XLA while-loop, so larger tiles are
+# strictly better on CPU; 65536 x r f32 = 4 MiB at r=16. On a real TPU this
+# would be re-tiled to ~2048 rows (2048*32*4 = 256 KiB VMEM per U block,
+# 8-sublane aligned) -- see DESIGN.md Hardware-Adaptation.
+TRUNK_BLOCK = 65536
+
+
+def _moment_kernel(a1_ref, h_ref, b_ref, c_ref, *, m: int):
+    """c = B vec(A1^T H / m). Single grid point; everything is small."""
+    f_mom = a1_ref[...].T @ h_ref[...] * (1.0 / m)       # (D+1, D)
+    c_ref[...] = b_ref[...] @ f_mom.reshape(-1)          # (r,)
+
+
+def _uproj_kernel(u_ref, c_ref, g_ref):
+    """One trunk tile of g = U c. Grid dim 0 walks the P_T dimension."""
+    g_ref[...] = u_ref[...] @ c_ref[...]
+
+
+def _head_grad_kernel(a_ref, r_ref, gw_ref, gb_ref, *, m: int):
+    """Exact head gradient: gW = A^T R / m, gb = mean(R)."""
+    inv_m = 1.0 / m
+    a = a_ref[...]
+    r = r_ref[...]
+    gw_ref[...] = a.T @ r * inv_m
+    gb_ref[...] = jnp.sum(r, axis=0) * inv_m
+
+
+def predictor_coefficients(
+    a1: jnp.ndarray,     # (m, D+1)
+    h: jnp.ndarray,      # (m, D)
+    b_mat: jnp.ndarray,  # (r, (D+1)*D)
+) -> jnp.ndarray:
+    """Pallas: bilinear coefficients c = B vec(A1^T H / m); returns (r,)."""
+    m = a1.shape[0]
+    r = b_mat.shape[0]
+    return pl.pallas_call(
+        functools.partial(_moment_kernel, m=m),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(a1, h, b_mat)
+
+
+def project_u(u_mat: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Pallas: g = U c, tiled over the trunk dimension; returns (P_T,)."""
+    p_t, r = u_mat.shape
+    grid = (pl.cdiv(p_t, TRUNK_BLOCK),)
+    return pl.pallas_call(
+        _uproj_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TRUNK_BLOCK, r), lambda i: (i, 0)),
+            pl.BlockSpec((r,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TRUNK_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p_t,), jnp.float32),
+        interpret=True,
+    )(u_mat, c)
+
+
+def head_grad(a: jnp.ndarray, resid: jnp.ndarray):
+    """Pallas: exact head gradients from activations and residuals."""
+    m, d = a.shape
+    c = resid.shape[1]
+    return pl.pallas_call(
+        functools.partial(_head_grad_kernel, m=m),
+        out_shape=(
+            jax.ShapeDtypeStruct((d, c), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ),
+        interpret=True,
+    )(a, resid)
+
+
+def predict_grad(
+    a: jnp.ndarray,       # (m, D)
+    probs: jnp.ndarray,   # (m, C)
+    y: jnp.ndarray,       # (m,) int32
+    head_w: jnp.ndarray,  # (D, C)
+    b_mat: jnp.ndarray,   # (r, (D+1)*D)
+    u_mat: jnp.ndarray,   # (P_T, r)
+    smoothing: float,
+):
+    """Full PredictGrad (paper Algorithm 1): predicted trunk gradient plus
+    the exact head gradient, for one micro-batch.
+
+    Returns (g_trunk (P_T,), g_head_w (D, C), g_head_b (C,)).
+    """
+    num_classes = probs.shape[1]
+    resid = ref.residual(probs, y, num_classes, smoothing)  # (m, C)
+    h = resid @ head_w.T                                    # (m, D)
+    a1 = ref.append_ones(a)                                 # (m, D+1)
+    c = predictor_coefficients(a1, h, b_mat)
+    g_trunk = project_u(u_mat, c)
+    g_w, g_b = head_grad(a, resid)
+    return g_trunk, g_w, g_b

@@ -1,0 +1,114 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (with hypothesis sweeps)
+asserts that each Pallas kernel (run under ``interpret=True``) matches its
+oracle to float32 tolerance. The oracles are also the place where the
+paper's algebra (Sections 3 and 4.3) is written in its most readable form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def append_ones(a: jnp.ndarray) -> jnp.ndarray:
+    """[a ; 1] — append the bias coordinate to a batch of activations.
+
+    a: (m, D) -> (m, D+1). This is the paper's ``[a(x); 1]`` vector,
+    batched.
+    """
+    m = a.shape[0]
+    return jnp.concatenate([a, jnp.ones((m, 1), a.dtype)], axis=1)
+
+
+def smooth_labels(y: jnp.ndarray, num_classes: int, smoothing: float) -> jnp.ndarray:
+    """One-hot encode with label smoothing (paper Sec. 4.3 / Sec. 7.1).
+
+    y: (m,) int -> (m, C) float32. With smoothing s the target is
+    ``(1-s) * onehot + s / C`` (mixture of one-hot and uniform).
+    """
+    onehot = jax.nn.one_hot(y, num_classes, dtype=jnp.float32)
+    return (1.0 - smoothing) * onehot + smoothing / num_classes
+
+
+def residual(probs: jnp.ndarray, y: jnp.ndarray, num_classes: int, smoothing: float) -> jnp.ndarray:
+    """Classification residual r = p(x) - y (paper Sec. 4.3)."""
+    return probs - smooth_labels(y, num_classes, smoothing)
+
+
+def predict_trunk_grad_ref(
+    a: jnp.ndarray,       # (m, D)   last-hidden-layer activations
+    probs: jnp.ndarray,   # (m, C)   softmax probabilities
+    y: jnp.ndarray,       # (m,)     int labels
+    head_w: jnp.ndarray,  # (D, C)   head weight (paper's W_a^T)
+    b_mat: jnp.ndarray,   # (r, (D+1)*D) bilinear coefficient matrix B
+    u_mat: jnp.ndarray,   # (P_T, r) gradient subspace basis U
+    smoothing: float,
+) -> jnp.ndarray:
+    """Reference for the paper's linear trunk-gradient predictor.
+
+    Per example j:  h_j = W_a^T r_j,  c_j = B vec([a_j;1] h_j^T),
+    g_j = U c_j. The mini-batch mean commutes with every linear step, so
+    the batched predictor is three matmuls over the moment matrix
+    F = (1/m) A1^T H:
+
+        F = A1^T H / m          (D+1, D)
+        c = B vec(F)            (r,)
+        g = U c                 (P_T,)
+    """
+    m = a.shape[0]
+    num_classes = probs.shape[1]
+    r = residual(probs, y, num_classes, smoothing)      # (m, C)
+    h = r @ head_w.T                                    # (m, D);  h_j = W_a^T r_j
+    a1 = append_ones(a)                                 # (m, D+1)
+    f_mom = a1.T @ h / m                                # (D+1, D)
+    c = b_mat @ f_mom.reshape(-1)                       # (r,)
+    return u_mat @ c                                    # (P_T,)
+
+
+def head_grad_ref(
+    a: jnp.ndarray,      # (m, D)
+    probs: jnp.ndarray,  # (m, C)
+    y: jnp.ndarray,      # (m,)
+    smoothing: float,
+):
+    """Exact head gradient (paper Sec. 4.3): mean_j r_j (x) [a_j;1].
+
+    For logits = a @ W + b with cross-entropy(+smoothing) mean loss:
+        dL/dW = A^T R / m   (D, C)
+        dL/db = mean_j r_j  (C,)
+    """
+    m = a.shape[0]
+    num_classes = probs.shape[1]
+    r = residual(probs, y, num_classes, smoothing)
+    return a.T @ r / m, jnp.mean(r, axis=0)
+
+
+def cv_combine_ref(
+    g_ct: jnp.ndarray,  # true gradient on the control micro-batch
+    g_cp: jnp.ndarray,  # predicted gradient on the control micro-batch
+    g_p: jnp.ndarray,   # predicted gradient on the prediction micro-batch
+    f: float,
+) -> jnp.ndarray:
+    """Control-variate combine, paper eq. (1):
+
+        g = f * g_ct + (1 - f) * (g_p - (g_cp - g_ct))
+
+    Unbiased by Lemma 1: E[g_cp] = E[g_p] so the correction term cancels
+    the predictor's bias in expectation.
+    """
+    return f * g_ct + (1.0 - f) * (g_p - (g_cp - g_ct))
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Single-head scaled dot-product attention; q,k,v: (T, dh)."""
+    dh = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Batched multi-head attention; q,k,v: (B, h, T, dh)."""
+    return jax.vmap(jax.vmap(attention_ref))(q, k, v)

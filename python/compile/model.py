@@ -1,0 +1,287 @@
+"""Layer-2: the paper's Vision Transformer in JAX (build-time only).
+
+This module defines the model *and* every AOT entry point the Rust
+coordinator calls (see DESIGN.md §2). The trunk parameters are carried as a
+single flat f32 vector so the Rust side owns exactly three parameter
+tensors (trunk, head_w, head_b); the manifest records the (name, shape,
+offset) layout of the flat vector so the Muon optimizer can recover the
+2-D matrices.
+
+Entry points (all shapes static, lowered per preset by aot.py):
+
+  train_grads        Forward + Backward (Algorithm 1 control batch /
+                     Algorithm 2 baseline)
+  cheap_fwd          CheapForward — no autodiff cache, pallas attention
+  predict_grad       PredictGrad — pallas predictor kernels
+  per_example_grads  vmap'd per-example trunk grads (predictor fitting and
+                     the Sec. 5.3 cosine diagnostics)
+  cv_combine         eq. (1) combine on device
+
+The ViT follows the paper Sec. 7.1: patch 4 on 32x32 (64 tokens + CLS),
+pre-LN blocks, MLP ratio 4, cross-entropy with label smoothing 0.05.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import cv_combine as cv_kernel
+from .kernels import predict_grad as pg_kernel
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyperparameters for one preset."""
+
+    image: int = 32
+    patch: int = 4
+    width: int = 64
+    depth: int = 4
+    heads: int = 4
+    classes: int = 10
+    mlp_ratio: int = 4
+    label_smoothing: float = 0.05
+    # Predictor hyperparameters (Sec. 4): NTK-rank r and fitting sizes.
+    rank: int = 16
+    n_chunk: int = 16   # per-example-grad chunk materialized per call
+    n_fit: int = 128    # examples collected per predictor refit
+
+    @property
+    def tokens(self) -> int:
+        side = self.image // self.patch
+        return side * side + 1  # + CLS token
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    @property
+    def head_dim(self) -> int:
+        return self.width // self.heads
+
+    @property
+    def feat_dim(self) -> int:
+        return (self.width + 1) * self.width  # (D+1)*D bilinear features
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(image=16, patch=8, width=32, depth=2, heads=2,
+                        rank=8, n_chunk=16, n_fit=64),
+    "small": ModelConfig(image=32, patch=4, width=64, depth=4, heads=4,
+                         rank=16, n_chunk=16, n_fit=128),
+    # The paper's configuration (Sec. 7.1): width 192, 12 layers, 3 heads.
+    "paper": ModelConfig(image=32, patch=4, width=192, depth=12, heads=3,
+                         rank=16, n_chunk=8, n_fit=192),
+}
+
+
+# ---------------------------------------------------------------------------
+# Trunk parameter layout (flat f32 vector <-> named tensors)
+# ---------------------------------------------------------------------------
+
+def trunk_layout(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], bool]]:
+    """Ordered (name, shape, muon_eligible) triples of the trunk.
+
+    The order here IS the flat-vector layout contract with the Rust side —
+    recorded verbatim in manifest.json. Muon (Jordan et al., 2024)
+    orthogonalizes only genuine 2-D hidden-layer matrices: embeddings,
+    positional tables, LN parameters and biases fall back to AdamW.
+    """
+    d, t, pd, mr = cfg.width, cfg.tokens, cfg.patch_dim, cfg.mlp_ratio
+    layout: List[Tuple[str, Tuple[int, ...], bool]] = [
+        ("patch_embed/w", (pd, d), False),
+        ("patch_embed/b", (d,), False),
+        ("pos_embed", (t, d), False),
+        ("cls_token", (d,), False),
+    ]
+    for i in range(cfg.depth):
+        p = f"blk{i}"
+        layout += [
+            (f"{p}/ln1/scale", (d,), False),
+            (f"{p}/ln1/bias", (d,), False),
+            (f"{p}/attn/wqkv", (d, 3 * d), True),
+            (f"{p}/attn/bqkv", (3 * d,), False),
+            (f"{p}/attn/wo", (d, d), True),
+            (f"{p}/attn/bo", (d,), False),
+            (f"{p}/ln2/scale", (d,), False),
+            (f"{p}/ln2/bias", (d,), False),
+            (f"{p}/mlp/w1", (d, mr * d), True),
+            (f"{p}/mlp/b1", (mr * d,), False),
+            (f"{p}/mlp/w2", (mr * d, d), True),
+            (f"{p}/mlp/b2", (d,), False),
+        ]
+    layout += [
+        ("final_ln/scale", (d,), False),
+        ("final_ln/bias", (d,), False),
+    ]
+    return layout
+
+
+def trunk_size(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s, _ in trunk_layout(cfg))
+
+
+def unflatten_trunk(flat: jnp.ndarray, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Slice the flat trunk vector into named tensors (traced, zero-copy
+    under XLA — the slices fuse into consumers)."""
+    params: Dict[str, jnp.ndarray] = {}
+    off = 0
+    for name, shape, _ in trunk_layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Standard ViT init: trunc-normal(0.02) weights, zero biases, ones LN
+    scale. Returns (trunk_flat, head_w, head_b) as numpy-compatible arrays."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape, _ in trunk_layout(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("/scale"):
+            v = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("/b", "/bias", "/bqkv", "/bo", "/b1", "/b2")) or name == "cls_token":
+            v = jnp.zeros(shape, jnp.float32)
+        else:
+            v = 0.02 * jax.random.truncated_normal(sub, -2.0, 2.0, shape, jnp.float32)
+        chunks.append(v.reshape(-1))
+    trunk = jnp.concatenate(chunks)
+    key, k1 = jax.random.split(key)
+    head_w = 0.02 * jax.random.truncated_normal(k1, -2.0, 2.0, (cfg.width, cfg.classes), jnp.float32)
+    head_b = jnp.zeros((cfg.classes,), jnp.float32)
+    return trunk, head_w, head_b
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * scale + bias
+
+
+def _patchify(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """(m, 3, H, W) -> (m, T-1, patch*patch*3)."""
+    m = x.shape[0]
+    p, side = cfg.patch, cfg.image // cfg.patch
+    x = x.reshape(m, 3, side, p, side, p)
+    x = x.transpose(0, 2, 4, 3, 5, 1)          # (m, side, side, p, p, 3)
+    return x.reshape(m, side * side, p * p * 3)
+
+
+# CheapForward attention path: "jnp" (default -- XLA-fused, no autodiff
+# residuals kept) or "pallas" (the L1 kernel; under interpret=True it
+# lowers to a grid while-loop, the faithful-but-slow CPU stand-in for the
+# real Mosaic kernel). aot.py exposes --pallas-cheap.
+CHEAP_ATTENTION = "jnp"
+
+
+def _attention_block(x, params, prefix, cfg: ModelConfig, cheap: bool):
+    m, t, d = x.shape
+    h, dh = cfg.heads, cfg.head_dim
+    qkv = x @ params[f"{prefix}/attn/wqkv"] + params[f"{prefix}/attn/bqkv"]
+    qkv = qkv.reshape(m, t, 3, h, dh).transpose(2, 0, 3, 1, 4)  # (3, m, h, t, dh)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    if cheap and CHEAP_ATTENTION == "pallas":
+        # CheapForward via the fused pallas attention kernel (L1).
+        o = attn_kernel.mha(q, k, v)
+    else:
+        # jnp attention: differentiable on the training path; on the cheap
+        # path XLA fuses it and keeps no residuals (pure forward).
+        o = ref.mha_ref(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(m, t, d)
+    return o @ params[f"{prefix}/attn/wo"] + params[f"{prefix}/attn/bo"]
+
+
+def forward(trunk_flat: jnp.ndarray, head_w: jnp.ndarray, head_b: jnp.ndarray,
+            x: jnp.ndarray, cfg: ModelConfig, cheap: bool = False):
+    """ViT forward. Returns (a, logits): a is the final-LN CLS activation —
+    the paper's last-hidden-layer a(x) that feeds the gradient predictor."""
+    params = unflatten_trunk(trunk_flat, cfg)
+    m = x.shape[0]
+    tok = _patchify(x, cfg) @ params["patch_embed/w"] + params["patch_embed/b"]
+    cls = jnp.broadcast_to(params["cls_token"], (m, 1, cfg.width))
+    z = jnp.concatenate([cls, tok], axis=1) + params["pos_embed"]
+    for i in range(cfg.depth):
+        p = f"blk{i}"
+        z = z + _attention_block(
+            _layer_norm(z, params[f"{p}/ln1/scale"], params[f"{p}/ln1/bias"]),
+            params, p, cfg, cheap)
+        zn = _layer_norm(z, params[f"{p}/ln2/scale"], params[f"{p}/ln2/bias"])
+        hln = jax.nn.gelu(zn @ params[f"{p}/mlp/w1"] + params[f"{p}/mlp/b1"])
+        z = z + hln @ params[f"{p}/mlp/w2"] + params[f"{p}/mlp/b2"]
+    a = _layer_norm(z[:, 0, :], params["final_ln/scale"], params["final_ln/bias"])
+    logits = a @ head_w + head_b
+    return a, logits
+
+
+def _loss_from_logits(logits: jnp.ndarray, y: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    y_s = ref.smooth_labels(y, cfg.classes, cfg.label_smoothing)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_s * logp, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+def train_grads(trunk, head_w, head_b, x, y, *, cfg: ModelConfig):
+    """Forward + Backward. Returns
+    (loss, g_trunk, g_head_w, g_head_b, a, probs)."""
+
+    def loss_fn(tr, hw, hb):
+        a, logits = forward(tr, hw, hb, x, cfg, cheap=False)
+        return _loss_from_logits(logits, y, cfg), (a, jax.nn.softmax(logits))
+
+    (loss, (a, probs)), grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2), has_aux=True)(
+        trunk, head_w, head_b)
+    g_tr, g_hw, g_hb = grads
+    return loss, g_tr, g_hw, g_hb, a, probs
+
+
+def cheap_fwd(trunk, head_w, head_b, x, *, cfg: ModelConfig):
+    """CheapForward: activations + probabilities only, pallas attention."""
+    a, logits = forward(trunk, head_w, head_b, x, cfg, cheap=True)
+    return a, jax.nn.softmax(logits)
+
+
+def predict_grad(a, probs, y, head_w, b_mat, u_mat, *, cfg: ModelConfig):
+    """PredictGrad via the L1 pallas kernels."""
+    return pg_kernel.predict_grad(a, probs, y, head_w, b_mat, u_mat,
+                                  cfg.label_smoothing)
+
+
+def per_example_grads(trunk, head_w, head_b, x, y, *, cfg: ModelConfig):
+    """Per-example trunk gradients G (n, P_T) plus (a, probs).
+
+    Used by the predictor fit (Sec. 4: collect gradient samples, find the
+    rank-r basis U) and by the Sec. 5.3 cosine diagnostics."""
+
+    def one(xi, yi):
+        def loss_fn(tr):
+            a, logits = forward(tr, head_w, head_b, xi[None], cfg, cheap=False)
+            return _loss_from_logits(logits, yi[None], cfg), (a[0], jax.nn.softmax(logits)[0])
+
+        (loss, (a, p)), g = jax.value_and_grad(loss_fn, has_aux=True)(trunk)
+        return g, a, p
+
+    return jax.vmap(one)(x, y)
+
+
+def cv_combine(g_ct, g_cp, g_p, f, *, cfg: ModelConfig):
+    """eq. (1) combine over the full flattened gradient (pallas)."""
+    del cfg
+    return (cv_kernel.cv_combine(g_ct, g_cp, g_p, f),)

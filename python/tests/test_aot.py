@@ -1,0 +1,76 @@
+"""Artifact/manifest consistency: what aot.py emits is what the Rust
+runtime expects to load."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="tiny artifacts not built (run `make artifacts`)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as fh:
+        return json.load(fh)
+
+
+def test_manifest_core_fields(manifest):
+    for key in ("preset", "model", "predictor", "dims", "batch",
+                "trunk_layout", "artifacts", "init"):
+        assert key in manifest, key
+
+
+def test_trunk_layout_offsets_contiguous(manifest):
+    off = 0
+    for entry in manifest["trunk_layout"]:
+        assert entry["offset"] == off
+        n = 1
+        for s in entry["shape"]:
+            n *= s
+        assert entry["len"] == n
+        off += n
+    assert off == manifest["dims"]["trunk_params"]
+
+
+def test_init_bins_match_dims(manifest):
+    d = manifest["model"]["width"]
+    c = manifest["model"]["classes"]
+    trunk = np.fromfile(os.path.join(ART, manifest["init"]["trunk"]), dtype="<f4")
+    assert trunk.shape[0] == manifest["dims"]["trunk_params"]
+    hw = np.fromfile(os.path.join(ART, manifest["init"]["head_w"]), dtype="<f4")
+    assert hw.shape[0] == d * c
+    hb = np.fromfile(os.path.join(ART, manifest["init"]["head_b"]), dtype="<f4")
+    assert hb.shape[0] == c
+    assert np.isfinite(trunk).all() and np.isfinite(hw).all()
+
+
+def test_artifacts_exist_and_are_hlo_text(manifest):
+    for name, meta in manifest["artifacts"].items():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path), name
+        with open(path) as fh:
+            head = fh.read(200)
+        assert "HloModule" in head, name
+
+
+def test_expected_entry_points_present(manifest):
+    micro = manifest["batch"]["micro"]
+    names = set(manifest["artifacts"])
+    assert f"train_grads_b{micro}" in names          # baseline / f=1
+    assert "cv_combine" in names
+    assert any(n.startswith("cheap_fwd_b") for n in names)
+    assert any(n.startswith("predict_grad_b") for n in names)
+    assert any(n.startswith("per_example_grads_b") for n in names)
+
+
+def test_artifact_arg_metadata_types(manifest):
+    for name, meta in manifest["artifacts"].items():
+        for arg in meta["args"] + meta["outs"]:
+            assert arg["dtype"] in ("f32", "i32"), (name, arg)
+            assert all(isinstance(s, int) and s > 0 for s in arg["shape"])

@@ -1,0 +1,110 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and seeds — these are the L1 correctness signal
+required before any HLO artifact is trusted.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, cv_combine, predict_grad as pg, ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@st.composite
+def predictor_case(draw):
+    m = draw(st.integers(1, 12))
+    d = draw(st.integers(2, 24))
+    c = draw(st.integers(2, 12))
+    r = draw(st.integers(1, 8))
+    p_t = draw(st.sampled_from([17, 256, 2048, 5000]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, d, c, r, p_t, seed
+
+
+@given(predictor_case())
+@settings(**SETTINGS)
+def test_predict_grad_matches_ref(case):
+    m, d, c, r, p_t, seed = case
+    g = _rng(seed)
+    a = jnp.asarray(g.normal(size=(m, d)), jnp.float32)
+    probs = jax.nn.softmax(jnp.asarray(g.normal(size=(m, c)), jnp.float32))
+    y = jnp.asarray(g.integers(0, c, m), jnp.int32)
+    hw = jnp.asarray(g.normal(size=(d, c)), jnp.float32)
+    b = jnp.asarray(g.normal(size=(r, (d + 1) * d)) / d, jnp.float32)
+    u = jnp.asarray(g.normal(size=(p_t, r)) / np.sqrt(r), jnp.float32)
+    gt, gw, gb = pg.predict_grad(a, probs, y, hw, b, u, 0.05)
+    np.testing.assert_allclose(
+        gt, ref.predict_trunk_grad_ref(a, probs, y, hw, b, u, 0.05),
+        rtol=5e-4, atol=5e-4)
+    gw_ref, gb_ref = ref.head_grad_ref(a, probs, y, 0.05)
+    np.testing.assert_allclose(gw, gw_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gb, gb_ref, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(2, 40), st.integers(1, 16),
+       st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_attention_matches_ref(b, h, t, dh, seed):
+    g = _rng(seed)
+    q, k, v = (jnp.asarray(g.normal(size=(b, h, t, dh)), jnp.float32) for _ in range(3))
+    np.testing.assert_allclose(attention.mha(q, k, v), ref.mha_ref(q, k, v),
+                               rtol=3e-5, atol=3e-5)
+
+
+@given(st.sampled_from([1, 7, 65536, 65537, 200000]),
+       st.floats(0.05, 1.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_cv_combine_matches_ref(p, f, seed):
+    g = _rng(seed)
+    gct, gcp, gp_ = (jnp.asarray(g.normal(size=(p,)), jnp.float32) for _ in range(3))
+    out = cv_combine.cv_combine(gct, gcp, gp_, jnp.asarray([f], jnp.float32))
+    np.testing.assert_allclose(out, ref.cv_combine_ref(gct, gcp, gp_, f),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cv_combine_perfect_predictor_is_identity():
+    """If h == g exactly, eq. (1) must reduce to the plain average direction:
+    g = f*g + (1-f)*(g_p) with the correction cancelling."""
+    g = _rng(3)
+    gct = jnp.asarray(g.normal(size=(1000,)), jnp.float32)
+    gp_ = jnp.asarray(g.normal(size=(1000,)), jnp.float32)
+    # predictor perfect on the control batch: g_cp == g_ct
+    out = cv_combine.cv_combine(gct, gct, gp_, jnp.asarray([0.25], jnp.float32))
+    np.testing.assert_allclose(out, 0.25 * gct + 0.75 * gp_, rtol=1e-6, atol=1e-6)
+
+
+def test_cv_combine_f_one_is_true_gradient():
+    g = _rng(4)
+    gct, gcp, gp_ = (jnp.asarray(g.normal(size=(128,)), jnp.float32) for _ in range(3))
+    out = cv_combine.cv_combine(gct, gcp, gp_, jnp.asarray([1.0], jnp.float32))
+    np.testing.assert_allclose(out, gct, rtol=1e-6, atol=1e-6)
+
+
+def test_predictor_exact_when_low_rank_holds():
+    """Sanity for Sec. 4: when per-example gradients truly are U c with
+    c = B vec([a;1]h^T), the kernel predictor reproduces the batch-mean
+    gradient exactly (it's the same linear algebra)."""
+    g = _rng(5)
+    m, d, c, r, p_t = 6, 8, 5, 3, 1000
+    a = jnp.asarray(g.normal(size=(m, d)), jnp.float32)
+    probs = jax.nn.softmax(jnp.asarray(g.normal(size=(m, c)), jnp.float32))
+    y = jnp.asarray(g.integers(0, c, m), jnp.int32)
+    hw = jnp.asarray(g.normal(size=(d, c)), jnp.float32)
+    b = jnp.asarray(g.normal(size=(r, (d + 1) * d)), jnp.float32)
+    u = jnp.asarray(g.normal(size=(p_t, r)), jnp.float32)
+    resid = ref.residual(probs, y, c, 0.05)
+    h = resid @ hw.T
+    a1 = ref.append_ones(a)
+    per_ex = [u @ (b @ jnp.outer(a1[j], h[j]).reshape(-1)) for j in range(m)]
+    want = jnp.mean(jnp.stack(per_ex), axis=0)
+    got, _, _ = pg.predict_grad(a, probs, y, hw, b, u, 0.05)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

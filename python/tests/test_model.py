@@ -1,0 +1,103 @@
+"""Layer-2 model checks: the paper's Sec. 4.3 algebra on the real ViT,
+consistency of cheap vs full forward, and per-example-grad aggregation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    g = np.random.default_rng(7)
+    x = jnp.asarray(g.normal(size=(6, 3, CFG.image, CFG.image)), jnp.float32)
+    y = jnp.asarray(g.integers(0, CFG.classes, 6), jnp.int32)
+    return x, y
+
+
+def test_trunk_layout_is_contiguous():
+    off = 0
+    for name, shape, _ in M.trunk_layout(CFG):
+        n = int(np.prod(shape))
+        off += n
+    assert off == M.trunk_size(CFG)
+
+
+def test_unflatten_round_trip(params):
+    trunk, _, _ = params
+    d = M.unflatten_trunk(trunk, CFG)
+    rebuilt = jnp.concatenate([d[n].reshape(-1) for n, _, _ in M.trunk_layout(CFG)])
+    np.testing.assert_array_equal(np.asarray(trunk), np.asarray(rebuilt))
+
+
+def test_head_grad_formula_matches_autodiff(params, batch):
+    """Sec. 4.3: the head gradient is exactly r (x) [a;1] — validated
+    against jax.grad on the full ViT loss."""
+    trunk, hw, hb = params
+    x, y = batch
+    _, _, ghw, ghb, a, probs = M.train_grads(trunk, hw, hb, x, y, cfg=CFG)
+    gw_ref, gb_ref = ref.head_grad_ref(a, probs, y, CFG.label_smoothing)
+    np.testing.assert_allclose(ghw, gw_ref, rtol=3e-4, atol=1e-6)
+    np.testing.assert_allclose(ghb, gb_ref, rtol=3e-4, atol=1e-6)
+
+
+def test_cheap_fwd_matches_train_forward(params, batch):
+    """CheapForward (pallas attention) and the autodiff forward must agree —
+    they are the same function, differently scheduled."""
+    trunk, hw, hb = params
+    x, y = batch
+    _, _, _, _, a, probs = M.train_grads(trunk, hw, hb, x, y, cfg=CFG)
+    a2, p2 = M.cheap_fwd(trunk, hw, hb, x, cfg=CFG)
+    np.testing.assert_allclose(a, a2, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(probs, p2, rtol=5e-4, atol=5e-4)
+
+
+def test_per_example_grads_average_to_batch_grad(params, batch):
+    trunk, hw, hb = params
+    x, y = batch
+    _, g_tr, _, _, _, _ = M.train_grads(trunk, hw, hb, x, y, cfg=CFG)
+    G, _, _ = M.per_example_grads(trunk, hw, hb, x, y, cfg=CFG)
+    np.testing.assert_allclose(np.mean(np.asarray(G), axis=0), g_tr,
+                               rtol=2e-3, atol=3e-5)
+
+
+def test_loss_decreases_under_sgd(params, batch):
+    """30 full-gradient steps on one batch must reduce the loss — basic
+    trainability of the L2 model."""
+    trunk, hw, hb = params
+    x, y = batch
+    lr = 0.05
+    first = None
+    for i in range(30):
+        loss, g_tr, g_hw, g_hb, _, _ = M.train_grads(trunk, hw, hb, x, y, cfg=CFG)
+        if first is None:
+            first = float(loss)
+        trunk = trunk - lr * g_tr
+        hw = hw - lr * g_hw
+        hb = hb - lr * g_hb
+    assert float(loss) < first - 0.1, (first, float(loss))
+
+
+def test_probs_are_normalized(params, batch):
+    trunk, hw, hb = params
+    x, _ = batch
+    _, probs = M.cheap_fwd(trunk, hw, hb, x, cfg=CFG)
+    np.testing.assert_allclose(np.sum(np.asarray(probs), axis=1), 1.0, rtol=1e-5)
+
+
+def test_presets_have_expected_sizes():
+    # Paper Sec. 7.1: width 192, 12 layers, 3 heads, patch 4 on 32x32.
+    p = M.PRESETS["paper"]
+    assert (p.width, p.depth, p.heads, p.patch, p.image) == (192, 12, 3, 4, 32)
+    assert p.tokens == 65  # 64 patches + CLS, "64 tokens + 1 classification token"
+    assert M.trunk_size(M.PRESETS["tiny"]) < M.trunk_size(M.PRESETS["small"])

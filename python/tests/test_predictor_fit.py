@@ -1,0 +1,127 @@
+"""Numpy mirror of the Rust predictor-fit pipeline (predictor/fit.rs).
+
+Validates the *algorithm* the Rust side implements: Gram-trick SVD for the
+rank-r basis U (Sec. 4, low-rank NTK assumption) plus kernel-ridge
+regression in the dual for the bilinear coefficient matrix B, using the
+factorized feature Gram  K_phi = (A1 A1^T) o (H H^T).
+
+If these tests pass, the Rust implementation has a proven-correct spec to
+match (its unit tests reuse the same synthetic constructions).
+"""
+
+import numpy as np
+import pytest
+
+
+def fit_u(G: np.ndarray, r: int):
+    """Rank-r left-singular basis of G^T (examples are rows of G).
+
+    G: (n, P_T) per-example trunk gradients. Returns U (P_T, r) with
+    orthonormal columns, via the n x n Gram eigendecomposition
+    (P_T >> n makes the direct SVD infeasible; this is what Rust does).
+    """
+    n = G.shape[0]
+    K = G @ G.T                             # (n, n)
+    w, V = np.linalg.eigh(K)                # ascending
+    idx = np.argsort(w)[::-1][:r]
+    w_r, V_r = w[idx], V[:, idx]
+    w_r = np.maximum(w_r, 1e-12)
+    U = G.T @ (V_r / np.sqrt(w_r))          # (P_T, r)
+    return U
+
+
+def fit_b_dual(A1: np.ndarray, H: np.ndarray, C: np.ndarray, lam: float):
+    """Kernel ridge for B: c_j ~= B vec(a1_j h_j^T).
+
+    Feature Gram factorizes: K_phi[i,j] = (a1_i . a1_j)(h_i . h_j).
+    alpha = (K_phi + lam I)^-1 C  (n, r);  B = sum_j alpha_j (x) phi_j
+    materialized as  B[i] = A1^T diag(alpha[:, i]) H  reshaped.
+    """
+    n, r = C.shape
+    K_phi = (A1 @ A1.T) * (H @ H.T)
+    alpha = np.linalg.solve(K_phi + lam * np.eye(n), C)   # (n, r)
+    d1, d = A1.shape[1], H.shape[1]
+    B = np.empty((r, d1 * d), dtype=A1.dtype)
+    for i in range(r):
+        B[i] = ((A1 * alpha[:, i][:, None]).T @ H).reshape(-1)
+    return B
+
+
+def synthetic_low_rank_problem(rng, n=64, d=8, p_t=500, r=3):
+    """Gradients exactly in a rank-r subspace with bilinear coefficients."""
+    U_true = np.linalg.qr(rng.normal(size=(p_t, r)))[0]
+    B_true = rng.normal(size=(r, (d + 1) * d))
+    A = rng.normal(size=(n, d)).astype(np.float64)
+    H = rng.normal(size=(n, d)).astype(np.float64)
+    A1 = np.concatenate([A, np.ones((n, 1))], axis=1)
+    Phi = np.stack([np.outer(A1[j], H[j]).reshape(-1) for j in range(n)])
+    Ctrue = Phi @ B_true.T                   # (n, r)
+    G = Ctrue @ U_true.T                     # (n, p_t)
+    return U_true, B_true, A1, H, Phi, Ctrue, G
+
+
+def test_fit_u_spans_true_subspace():
+    rng = np.random.default_rng(0)
+    U_true, _, _, _, _, _, G = synthetic_low_rank_problem(rng)
+    U = fit_u(G, 3)
+    # Column spaces must coincide: projector distance ~ 0.
+    P1 = U @ np.linalg.pinv(U)
+    P2 = U_true @ U_true.T
+    assert np.linalg.norm(P1 - P2) < 1e-6
+
+
+def test_fit_u_columns_orthonormal():
+    rng = np.random.default_rng(1)
+    G = rng.normal(size=(32, 200))
+    U = fit_u(G, 5)
+    np.testing.assert_allclose(U.T @ U, np.eye(5), atol=1e-8)
+
+
+def test_dual_ridge_recovers_predictions():
+    """With tiny ridge, predicted c on the training set matches targets."""
+    rng = np.random.default_rng(2)
+    _, _, A1, H, Phi, Ctrue, _ = synthetic_low_rank_problem(rng)
+    B = fit_b_dual(A1, H, Ctrue, lam=1e-8)
+    np.testing.assert_allclose(Phi @ B.T, Ctrue, rtol=1e-4, atol=1e-4)
+
+
+def test_end_to_end_predictor_recovers_mean_gradient():
+    """Full pipeline: fit U and B from samples, then the batched predictor
+    (three matmuls, same as the pallas kernel) reproduces the true mean
+    gradient of held-out examples from the same low-rank family."""
+    rng = np.random.default_rng(3)
+    U_true, B_true, A1, H, Phi, Ctrue, G = synthetic_low_rank_problem(rng, n=80)
+    U = fit_u(G, 3)
+    Cproj = G @ U                            # targets in fitted basis
+    B = fit_b_dual(A1, H, Cproj, lam=1e-8)
+    # held-out batch from the same generative family
+    m, d, p_t = 16, 8, 500
+    A_new = rng.normal(size=(m, d))
+    H_new = rng.normal(size=(m, d))
+    A1_new = np.concatenate([A_new, np.ones((m, 1))], axis=1)
+    G_new = np.stack([
+        U_true @ (B_true @ np.outer(A1_new[j], H_new[j]).reshape(-1))
+        for j in range(m)])
+    want = G_new.mean(axis=0)
+    F = A1_new.T @ H_new / m
+    got = U @ (B @ F.reshape(-1))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_gram_factorization_identity():
+    """K_phi = (A1 A1^T) o (H H^T) — the identity that makes the dual fit
+    O(n^2 (D+C)) instead of O(n^2 D^2)."""
+    rng = np.random.default_rng(4)
+    n, d = 20, 6
+    A1 = rng.normal(size=(n, d + 1))
+    H = rng.normal(size=(n, d))
+    Phi = np.stack([np.outer(A1[j], H[j]).reshape(-1) for j in range(n)])
+    np.testing.assert_allclose(Phi @ Phi.T, (A1 @ A1.T) * (H @ H.T), rtol=1e-10)
+
+
+def test_ridge_regularization_shrinks_norm():
+    rng = np.random.default_rng(5)
+    _, _, A1, H, _, Ctrue, _ = synthetic_low_rank_problem(rng)
+    b_small = fit_b_dual(A1, H, Ctrue, lam=1e-8)
+    b_big = fit_b_dual(A1, H, Ctrue, lam=1e3)
+    assert np.linalg.norm(b_big) < np.linalg.norm(b_small)

@@ -1,0 +1,95 @@
+//! Bench: the paper's cost model (Sec. 5.3) measured on this runtime.
+//!
+//! The paper assumes per-example costs Backward = 2, Forward = 1,
+//! CheapForward = 0.7. Here we time the actual artifacts (train_grads =
+//! Forward+Backward, cheap_fwd = CheapForward) and report the measured
+//! ratios plus the resulting measured compute ratio γ̂(f) next to the
+//! analytic γ(f) — the numbers Theorems 3/4 would use on this testbed.
+//!
+//!   cargo bench --bench cost_model            (tiny preset)
+//!   LGP_BENCH_PRESET=small cargo bench --bench cost_model
+
+use lgp::bench_support::{bench, Table};
+use lgp::model::ParamStore;
+use lgp::runtime::Runtime;
+use lgp::theory::CostModel;
+use lgp::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("LGP_BENCH_PRESET").unwrap_or_else(|_| "tiny".into());
+    let dir = PathBuf::from(format!("artifacts/{preset}"));
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts/{preset} not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::load(&dir)?;
+    let m = rt.manifest.clone();
+    let params = ParamStore::load_init(&m)?;
+    let dev = rt.upload_params(&params)?;
+    let mut rng = Pcg64::seeded(3);
+
+    // Per-example batch sizes that exist in this manifest: use the full
+    // micro-batch for train_grads; the f=0.5 prediction batch for cheap.
+    let mb = m.micro_batch;
+    let (_, mp) = m.split_sizes(0.5);
+    let mut x = vec![0.0f32; mb * 3 * m.image * m.image];
+    rng.fill_normal(&mut x, 1.0);
+    let y: Vec<i32> = (0..mb).map(|_| rng.below(10) as i32).collect();
+    let xc = x[..mp * 3 * m.image * m.image].to_vec();
+
+    println!("[COST] measured per-iteration artifact costs ({preset} preset, m={mb})\n");
+    let warm = 2;
+    let iters = 8;
+    let full = bench(warm, iters, || {
+        rt.train_grads(&dev, &x, &y, mb).unwrap();
+    });
+    let cheap = bench(warm, iters, || {
+        rt.cheap_fwd(&dev, &xc, mp).unwrap();
+    });
+
+    // per-example costs, normalizing Forward+Backward to 3.0 like the paper
+    let full_per_ex = full.mean / mb as f64;
+    let cheap_per_ex = cheap.mean / mp as f64;
+    let cheap_units = 3.0 * cheap_per_ex / full_per_ex;
+
+    let mut t = Table::new(&["procedure", "batch", "mean", "per-example", "paper units", "measured units"]);
+    t.row(vec![
+        "Forward+Backward".into(),
+        format!("{mb}"),
+        format!("{:.1}ms", full.mean_ms()),
+        format!("{:.2}ms", full_per_ex * 1e3),
+        "3.0".into(),
+        "3.0 (def)".into(),
+    ]);
+    t.row(vec![
+        "CheapForward".into(),
+        format!("{mp}"),
+        format!("{:.1}ms", cheap.mean_ms()),
+        format!("{:.2}ms", cheap_per_ex * 1e3),
+        "0.7".into(),
+        format!("{cheap_units:.2}"),
+    ]);
+    t.print();
+
+    let paper = CostModel::default();
+    let measured = CostModel { forward: 1.0, backward: 2.0, cheap_forward: cheap_units };
+    println!("\ncompute ratio gamma(f) = cost(GPR)/cost(vanilla):");
+    let mut t = Table::new(&["f", "gamma paper", "gamma measured"]);
+    for &f in &[0.125, 0.25, 0.5, 1.0] {
+        t.row(vec![
+            format!("{f}"),
+            format!("{:.3}", paper.gamma(f)),
+            format!("{:.3}", measured.gamma(f)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmeasured CheapForward = {cheap_units:.2} units (paper assumes 0.7). \
+         The measured break-even for f=0.25, kappa=1: rho* = {:.3} \
+         (paper-units value: {:.3}).",
+        lgp::theory::rho_star(0.25, 1.0, &measured),
+        lgp::theory::rho_star(0.25, 1.0, &paper),
+    );
+    Ok(())
+}

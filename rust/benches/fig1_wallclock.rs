@@ -1,0 +1,139 @@
+//! Bench: Figure 1 — validation accuracy vs wall-clock, GPR vs baseline,
+//! under an equal (short) wall-clock budget. This is the bench-sized
+//! version of `examples/e2e_vit_cifar.rs`; it asserts the paper's
+//! qualitative claim on this testbed: **GPR completes more optimizer
+//! updates than the baseline in the same wall-clock budget** (its
+//! iterations are cheaper), and reports the accuracy-vs-time rows.
+//!
+//! Regime note (recorded in EXPERIMENTS.md): the claim is about the
+//! compute-bound regime. On the overhead-dominated `tiny` preset the 4
+//! device calls per GPR micro-batch cost more than the saved backward —
+//! the bench reports that honestly and only asserts the speedup on
+//! presets where model compute dominates (small/paper), matching the
+//! paper's A100 setting.
+//!
+//!   cargo bench --bench fig1_wallclock                 (small, ~3 min)
+//!   LGP_BENCH_PRESET=tiny LGP_BENCH_BUDGET=15 cargo bench --bench fig1_wallclock
+
+use lgp::bench_support::Table;
+use lgp::config::{Algo, RunConfig};
+use lgp::coordinator::Trainer;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::var("LGP_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    let budget: f64 = std::env::var("LGP_BENCH_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if std::env::var("LGP_BENCH_PRESET").as_deref() == Ok("tiny") {
+            15.0
+        } else {
+            75.0
+        });
+    let dir = PathBuf::from(format!("artifacts/{preset}"));
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts/{preset} not built (run `make artifacts`)");
+        return Ok(());
+    }
+
+    println!("[FIG1] equal wall-clock budget ({budget}s) — GPR (f=1/4) vs baseline, {preset} preset\n");
+    let base = RunConfig {
+        artifacts_dir: dir,
+        f: 0.25,
+        accum: 4,
+        budget_secs: budget,
+        max_steps: 0,
+        refit_every: 20,
+        eval_every: 5,
+        train_size: 1500,
+        val_size: 300,
+        aug_multiplier: 2,
+        seed: 0,
+        ..RunConfig::default()
+    };
+
+    let mut rows: Vec<(Algo, usize, f64, f64, f64)> = Vec::new();
+    let mut curves = Vec::new();
+    for algo in [Algo::Baseline, Algo::Gpr] {
+        let mut cfg = base.clone();
+        cfg.algo = algo;
+        let mut tr = Trainer::new(cfg)?;
+        // compile outside the budget (the paper's runs don't count XLA
+        // compilation either)
+        tr.warmup()?;
+        tr.train(None)?;
+        rows.push((
+            algo,
+            tr.step_count(),
+            tr.final_val_acc(),
+            tr.cost_units,
+            tr.examples_seen as f64,
+        ));
+        curves.push((
+            algo,
+            tr.log
+                .iter()
+                .filter(|r| !r.val_acc.is_nan())
+                .map(|r| (r.wall_secs, r.val_acc))
+                .collect::<Vec<_>>(),
+        ));
+    }
+
+    let mut t = Table::new(&["algo", "updates", "final val acc", "cost units", "examples"]);
+    for (algo, steps, acc, cost, ex) in &rows {
+        t.row(vec![
+            format!("{algo:?}"),
+            steps.to_string(),
+            format!("{acc:.3}"),
+            format!("{cost:.0}"),
+            format!("{ex:.0}"),
+        ]);
+    }
+    t.print();
+
+    println!("\nval-acc-vs-time series (the Figure 1 shape):");
+    let mut t = Table::new(&["time(s)", "baseline", "GPR"]);
+    for i in 1..=6 {
+        let tm = budget * i as f64 / 6.0;
+        let pick = |algo: Algo| {
+            curves
+                .iter()
+                .find(|(a, _)| *a == algo)
+                .and_then(|(_, c)| c.iter().rev().find(|(ts, _)| *ts <= tm))
+                .map_or("-".to_string(), |(_, v)| format!("{v:.3}"))
+        };
+        t.row(vec![format!("{tm:.1}"), pick(Algo::Baseline), pick(Algo::Gpr)]);
+    }
+    t.print();
+
+    // the testable core of Figure 1 on this substrate: cheaper iterations
+    let (_, base_steps, _, base_cost, _) = rows[0];
+    let (_, gpr_steps, _, gpr_cost, _) = rows[1];
+    println!(
+        "\nupdates completed under equal budget: baseline {base_steps}, GPR {gpr_steps} \
+         ({:.2}x)",
+        gpr_steps as f64 / base_steps as f64
+    );
+    println!(
+        "analytic cost per example: baseline {:.2}, GPR {:.2} (gamma(0.25) = 0.425)",
+        base_cost / rows[0].4,
+        gpr_cost / rows[1].4
+    );
+    if preset == "tiny" {
+        // Overhead-dominated regime: 4 PJRT calls per GPR micro-batch vs 1
+        // for the baseline outweigh the saved backward on a ~30k-param
+        // model. This is expected and documented in EXPERIMENTS.md; the
+        // paper's claim concerns compute-bound models.
+        println!(
+            "note: tiny preset is per-call-overhead dominated; the compute-bound \
+             claim is asserted on small/paper presets."
+        );
+    } else {
+        assert!(
+            gpr_steps as f64 >= 1.15 * base_steps as f64,
+            "GPR should complete markedly more updates ({gpr_steps} vs {base_steps})"
+        );
+        println!("GPR completes more updates per unit wall-clock ✓ (paper's mechanism for Fig. 1)");
+    }
+    Ok(())
+}

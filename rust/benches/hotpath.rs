@@ -1,0 +1,123 @@
+//! Bench: hot-path micro-benchmarks for the perf pass (EXPERIMENTS.md
+//! §Perf) — the host-side pieces that run every optimizer update, plus the
+//! per-artifact device costs.
+//!
+//!   cargo bench --bench hotpath
+
+use lgp::bench_support::{bench, fmt_time, Table};
+use lgp::coordinator::combine::cv_combine;
+use lgp::model::params::FlatGrad;
+use lgp::predictor::fit::{fit, FitBuffer};
+use lgp::predictor::Predictor;
+use lgp::tensor::{linalg, matmul, Tensor};
+use lgp::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::seeded(9);
+    let mut table = Table::new(&["hot path", "size", "mean", "p90", "throughput"]);
+
+    // --- control-variate combine (runs once per micro-batch) -------------
+    let p = 250_000usize;
+    let mk = |rng: &mut Pcg64| {
+        let mut g = FlatGrad { trunk: vec![0.0; p], head_w: vec![0.0; 640], head_b: vec![0.0; 10] };
+        rng.fill_normal(&mut g.trunk, 1.0);
+        g
+    };
+    let (a, b, c) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let s = bench(3, 20, || {
+        std::hint::black_box(cv_combine(&a, &b, &c, 0.25));
+    });
+    table.row(vec![
+        "cv_combine (host)".into(),
+        format!("{p} params"),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.1} GB/s", (p * 4 * 4) as f64 / s.mean / 1e9),
+    ]);
+
+    // --- host predictor (diagnostics path) --------------------------------
+    let (d, r, pt, m) = (64usize, 16usize, 250_000usize, 48usize);
+    let mut pred = Predictor::new(pt, d, r);
+    let mut u = Tensor::zeros(&[pt, r]);
+    let mut bm = Tensor::zeros(&[r, (d + 1) * d]);
+    rng.fill_normal(&mut u.data, 0.1);
+    rng.fill_normal(&mut bm.data, 0.1);
+    pred.install(u, bm);
+    let mut act = Tensor::zeros(&[m, d]);
+    let mut h = Tensor::zeros(&[m, d]);
+    rng.fill_normal(&mut act.data, 1.0);
+    rng.fill_normal(&mut h.data, 1.0);
+    let s = bench(3, 20, || {
+        std::hint::black_box(pred.predict_mean_trunk(&act, &h));
+    });
+    table.row(vec![
+        "predict_mean_trunk (host)".into(),
+        format!("m={m} P_T={pt} r={r}"),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.2} GFLOP/s", (2.0 * (pt * r + m * d * d) as f64) / s.mean / 1e9),
+    ]);
+
+    // --- Muon Newton–Schulz on a ViT-sized matrix --------------------------
+    let g = {
+        let mut t = Tensor::zeros(&[64, 192]);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    };
+    let s = bench(3, 20, || {
+        std::hint::black_box(linalg::newton_schulz(&g, 5));
+    });
+    table.row(vec![
+        "newton_schulz x5 (Muon)".into(),
+        "64x192".into(),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.2} GFLOP/s", (5.0 * 3.0 * 2.0 * 64.0 * 64.0 * 192.0) / s.mean / 1e9),
+    ]);
+
+    // --- blocked matmul ------------------------------------------------------
+    let am = {
+        let mut t = Tensor::zeros(&[256, 256]);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    };
+    let s = bench(3, 20, || {
+        std::hint::black_box(matmul::matmul(&am, &am));
+    });
+    table.row(vec![
+        "matmul 256^3".into(),
+        "256x256x256".into(),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.2} GFLOP/s", 2.0 * 256f64.powi(3) / s.mean / 1e9),
+    ]);
+
+    // --- predictor fit (Gram SVD + dual ridge) ------------------------------
+    let mut buf = FitBuffer::new(64);
+    for _ in 0..64 {
+        let mut gg = vec![0.0f32; 50_000];
+        let mut aa = vec![0.0f32; d];
+        let mut hh = vec![0.0f32; d];
+        rng.fill_normal(&mut gg, 1.0);
+        rng.fill_normal(&mut aa, 1.0);
+        rng.fill_normal(&mut hh, 1.0);
+        buf.push(gg, aa, hh);
+    }
+    let mut pred2 = Predictor::new(50_000, d, r);
+    let s = bench(1, 5, || {
+        fit(&mut pred2, &buf, 1e-4).unwrap();
+    });
+    table.row(vec![
+        "predictor fit".into(),
+        "n=64 P_T=50k r=16".into(),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        "-".into(),
+    ]);
+
+    println!("[HOTPATH] host-side per-update costs\n");
+    table.print();
+    println!("\ncontext: one GPR update (accum=4) does 4 combines + 4 predictor");
+    println!("device calls; a refit (every ~20 updates) does one fit. All host");
+    println!("costs above must stay well under the device call costs (~30-120ms).");
+}

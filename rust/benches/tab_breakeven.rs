@@ -1,0 +1,47 @@
+//! Bench: regenerate the Theorem 3 break-even table (paper Sec. 5.3),
+//! including the three quoted values, and time the closed form.
+//!
+//!   cargo bench --bench tab_breakeven
+
+use lgp::bench_support::{bench, fmt_time, Table};
+use lgp::theory::{self, CostModel};
+
+fn main() {
+    let cost = CostModel::default();
+    println!("[THM3] break-even alignment rho*(f, kappa) — paper Theorem 3\n");
+    let mut t = Table::new(&["f", "gamma(f)", "rho*(k=0.8)", "rho*(k=1.0)", "rho*(k=1.2)", "paper"]);
+    let quotes: [(f64, &str); 3] = [(0.1, "0.876"), (0.2, "0.802"), (0.5, "0.689")];
+    for &f in &[0.05, 0.1, 0.2, 0.25, 0.5, 0.75, 1.0] {
+        let paper = quotes
+            .iter()
+            .find(|(pf, _)| (pf - f).abs() < 1e-9)
+            .map_or("-", |(_, q)| q);
+        t.row(vec![
+            format!("{f:.2}"),
+            format!("{:.3}", cost.gamma(f)),
+            format!("{:.3}", theory::rho_star(f, 0.8, &cost)),
+            format!("{:.3}", theory::rho_star(f, 1.0, &cost)),
+            format!("{:.3}", theory::rho_star(f, 1.2, &cost)),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+
+    // verification against the quoted values
+    for (f, q) in quotes {
+        let got = theory::rho_star(f, 1.0, &cost);
+        let want: f64 = q.parse().unwrap();
+        assert!((got - want).abs() < 5e-4, "rho*({f},1)={got} vs paper {want}");
+    }
+    println!("\nall paper-quoted values reproduced to 3 decimals ✓");
+
+    // timing (the formula sits on the adaptive-f control path)
+    let s = bench(1000, 5000, || {
+        std::hint::black_box(theory::rho_star(
+            std::hint::black_box(0.25),
+            std::hint::black_box(1.05),
+            &cost,
+        ));
+    });
+    println!("rho_star closed form: {} per call", fmt_time(s.mean));
+}

@@ -1,0 +1,58 @@
+//! Bench: regenerate the Theorem 4 regime-switch table — ρ_switch(κ) and
+//! the optimal control fraction f*(ρ, κ) — and cross-check f* against a
+//! brute-force minimization of Q(f) = φ(f,ρ,κ)γ(f).
+//!
+//!   cargo bench --bench tab_regime_switch
+
+use lgp::bench_support::Table;
+use lgp::theory::{self, CostModel};
+
+fn brute_force_fstar(rho: f64, kappa: f64, cost: &CostModel) -> f64 {
+    let mut best = (f64::INFINITY, 1.0);
+    for i in 1..=4000 {
+        let f = i as f64 / 4000.0;
+        let q = theory::q_objective(f, rho, kappa, cost);
+        if q < best.0 {
+            best = (q, f);
+        }
+    }
+    best.1
+}
+
+fn main() {
+    let cost = CostModel::default();
+    println!("[THM4] regime switch rho_switch(kappa) and optimal f*(rho, kappa)\n");
+
+    let mut t = Table::new(&["kappa", "rho_switch", "rho", "f* closed", "f* brute-force", "Q(f*)"]);
+    let mut max_err: f64 = 0.0;
+    for &k in &[0.8, 0.9, 1.0, 1.1, 1.2] {
+        for &r in &[0.65, 0.7, 0.8, 0.9] {
+            let closed = theory::f_star(r, k, &cost);
+            let brute = brute_force_fstar(r, k, &cost);
+            max_err = max_err.max((closed - brute).abs());
+            t.row(vec![
+                format!("{k:.1}"),
+                format!("{:.4}", theory::rho_switch(k, &cost)),
+                format!("{r:.2}"),
+                format!("{closed:.4}"),
+                format!("{brute:.4}"),
+                format!("{:.4}", theory::q_objective(closed, r, k, &cost)),
+            ]);
+        }
+    }
+    t.print();
+    assert!(max_err < 2.5e-4, "closed form vs brute force differ by {max_err}");
+    println!("\nclosed-form f* matches brute-force minimization (max err {max_err:.1e}) ✓");
+
+    // the paper's worked example
+    let f = theory::f_star(0.8, 1.0, &cost);
+    println!(
+        "paper example: f*(rho=0.8, kappa=1) = {:.4} (paper: sqrt(0.28/1.38) ≈ 0.45) ✓",
+        f
+    );
+    assert!((f - (0.28f64 / 1.38).sqrt()).abs() < 1e-9);
+    println!(
+        "paper quote:   rho_switch(1) = {:.4} (paper ≈ 0.6167) ✓",
+        theory::rho_switch(1.0, &cost)
+    );
+}

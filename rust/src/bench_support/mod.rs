@@ -1,0 +1,164 @@
+//! Hand-rolled micro-benchmark harness (no criterion in the offline set).
+//!
+//! Provides warmup + timed iterations with mean/σ/percentile reporting and
+//! fixed-width table printing shared by every `cargo bench` target. Each
+//! bench binary regenerates one paper table or figure (DESIGN.md §4).
+
+use std::time::Instant;
+
+/// Timing summary over bench iterations, in seconds.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub iters: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+}
+
+impl Summary {
+    pub fn from_samples(mut samples: Vec<f64>) -> Summary {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let pick = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        Summary {
+            iters: n,
+            mean,
+            std: var.sqrt(),
+            min: samples[0],
+            p50: pick(0.5),
+            p90: pick(0.9),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean * 1e3
+    }
+}
+
+/// Run `f` for `warmup` unmeasured iterations then `iters` measured ones.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from_samples(samples)
+}
+
+/// Time a single invocation (for expensive end-to-end cases).
+pub fn time_once<F: FnOnce() -> T, T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        for (w, c) in self.widths.iter_mut().zip(&cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+        let rule: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", rule.join("  "));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_statistics() {
+        let s = Summary::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 3.0);
+        assert!(s.std > 1.0 && s.std < 2.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0usize;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_formats_without_panic() {
+        let mut t = Table::new(&["f", "rho*"]);
+        t.row(vec!["0.1".into(), "0.876".into()]);
+        t.row(vec!["0.5".into(), "0.689".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-10).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

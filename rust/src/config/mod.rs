@@ -1,0 +1,275 @@
+//! Typed run configuration: manifest-derived model facts + user-tunable
+//! training knobs, with JSON config-file loading and CLI overrides.
+//!
+//! The *architecture* lives in the AOT manifest (shapes are baked into the
+//! HLO artifacts); this module carries everything the coordinator may vary
+//! at run time without re-lowering: control fraction f, optimizer choice
+//! and learning rate, accumulation, refit period, budgets, seeds.
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Which training algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Algorithm 2: vanilla mini-batch gradient descent (the baseline).
+    Baseline,
+    /// Algorithm 1: predicted gradient descent with control variates (GPR).
+    Gpr,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> anyhow::Result<Algo> {
+        match s {
+            "baseline" | "vanilla" => Ok(Algo::Baseline),
+            "gpr" | "predicted" => Ok(Algo::Gpr),
+            other => anyhow::bail!("unknown algo '{other}' (want baseline|gpr)"),
+        }
+    }
+}
+
+/// Optimizer selection (paper trains with Muon, lr 0.02).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimKind {
+    Sgd,
+    Momentum,
+    AdamW,
+    Muon,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> anyhow::Result<OptimKind> {
+        match s {
+            "sgd" => Ok(OptimKind::Sgd),
+            "momentum" => Ok(OptimKind::Momentum),
+            "adamw" => Ok(OptimKind::AdamW),
+            "muon" => Ok(OptimKind::Muon),
+            other => anyhow::bail!("unknown optimizer '{other}'"),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Directory holding manifest.json + *.hlo.txt for the chosen preset.
+    pub artifacts_dir: PathBuf,
+    pub algo: Algo,
+    /// Control fraction f ∈ (0, 1]; the paper's headline run uses 1/4.
+    pub f: f64,
+    /// Gradient-accumulation micro-batches per optimizer update (paper: 8).
+    pub accum: usize,
+    pub optimizer: OptimKind,
+    /// Muon learning rate default follows the paper (0.02).
+    pub lr: f64,
+    pub weight_decay: f64,
+    /// Wall-clock budget in seconds; 0 disables the budget.
+    pub budget_secs: f64,
+    /// Maximum optimizer updates; 0 = unlimited (budget governs).
+    pub max_steps: usize,
+    /// Predictor refit period in optimizer updates.
+    pub refit_every: usize,
+    /// Ridge regularizer for the kernel-ridge coefficient fit.
+    pub ridge_lambda: f64,
+    /// Dataset sizes (synthetic CIFAR-10 substitute).
+    pub train_size: usize,
+    pub val_size: usize,
+    /// Pre-augmentation multiplier (paper: 2x -> 100k from 50k).
+    pub aug_multiplier: usize,
+    pub seed: u64,
+    /// Evaluate validation accuracy every N updates (0 = only at end).
+    pub eval_every: usize,
+    /// Directory for CSV/JSONL outputs.
+    pub out_dir: PathBuf,
+    /// Track ρ̂/κ̂ alignment diagnostics on control batches.
+    pub track_alignment: bool,
+    /// Adaptive control fraction (Theorem 4 online): steer f toward the
+    /// quantized f*(ρ̂, κ̂) among the fractions with lowered artifacts.
+    pub adaptive_f: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: PathBuf::from("artifacts/tiny"),
+            algo: Algo::Gpr,
+            f: 0.25,
+            accum: 8,
+            optimizer: OptimKind::Muon,
+            lr: 0.02,
+            weight_decay: 0.0,
+            budget_secs: 0.0,
+            max_steps: 50,
+            refit_every: 20,
+            ridge_lambda: 1e-4,
+            train_size: 2000,
+            val_size: 500,
+            aug_multiplier: 2,
+            seed: 0,
+            eval_every: 10,
+            out_dir: PathBuf::from("runs"),
+            track_alignment: true,
+            adaptive_f: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply a JSON config document (same keys as the CLI flags).
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("algo").and_then(Json::as_str) {
+            self.algo = Algo::parse(v)?;
+        }
+        if let Some(v) = j.get("optimizer").and_then(Json::as_str) {
+            self.optimizer = OptimKind::parse(v)?;
+        }
+        if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
+            self.out_dir = PathBuf::from(v);
+        }
+        macro_rules! num {
+            ($key:literal, $field:expr, $ty:ty) => {
+                if let Some(v) = j.get($key).and_then(Json::as_f64) {
+                    $field = v as $ty;
+                }
+            };
+        }
+        num!("f", self.f, f64);
+        num!("accum", self.accum, usize);
+        num!("lr", self.lr, f64);
+        num!("weight_decay", self.weight_decay, f64);
+        num!("budget_secs", self.budget_secs, f64);
+        num!("max_steps", self.max_steps, usize);
+        num!("refit_every", self.refit_every, usize);
+        num!("ridge_lambda", self.ridge_lambda, f64);
+        num!("train_size", self.train_size, usize);
+        num!("val_size", self.val_size, usize);
+        num!("aug_multiplier", self.aug_multiplier, usize);
+        num!("seed", self.seed, u64);
+        num!("eval_every", self.eval_every, usize);
+        if let Some(v) = j.get("track_alignment").and_then(|x| x.as_bool()) {
+            self.track_alignment = v;
+        }
+        if let Some(v) = j.get("adaptive_f").and_then(|x| x.as_bool()) {
+            self.adaptive_f = v;
+        }
+        self.validate()
+    }
+
+    /// Apply CLI overrides (highest precedence). `--config file.json` is
+    /// handled by the caller before this.
+    pub fn apply_args(&mut self, a: &Args) -> anyhow::Result<()> {
+        if let Some(v) = a.str_opt("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        } else if let Some(p) = a.str_opt("preset") {
+            self.artifacts_dir = PathBuf::from(format!("artifacts/{p}"));
+        }
+        if let Some(v) = a.str_opt("algo") {
+            self.algo = Algo::parse(&v)?;
+        }
+        if let Some(v) = a.str_opt("optimizer") {
+            self.optimizer = OptimKind::parse(&v)?;
+        }
+        if let Some(v) = a.str_opt("out") {
+            self.out_dir = PathBuf::from(v);
+        }
+        self.f = a.f64_or("f", self.f);
+        self.accum = a.usize_or("accum", self.accum);
+        self.lr = a.f64_or("lr", self.lr);
+        self.weight_decay = a.f64_or("weight-decay", self.weight_decay);
+        self.budget_secs = a.f64_or("budget", self.budget_secs);
+        self.max_steps = a.usize_or("steps", self.max_steps);
+        self.refit_every = a.usize_or("refit-every", self.refit_every);
+        self.ridge_lambda = a.f64_or("ridge", self.ridge_lambda);
+        self.train_size = a.usize_or("train-size", self.train_size);
+        self.val_size = a.usize_or("val-size", self.val_size);
+        self.aug_multiplier = a.usize_or("aug-mult", self.aug_multiplier);
+        self.seed = a.u64_or("seed", self.seed);
+        self.eval_every = a.usize_or("eval-every", self.eval_every);
+        if a.flag("no-alignment") {
+            self.track_alignment = false;
+        }
+        if a.flag("adaptive-f") {
+            self.adaptive_f = true;
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.f > 0.0 && self.f <= 1.0, "f must be in (0,1], got {}", self.f);
+        anyhow::ensure!(self.accum >= 1, "accum must be >= 1");
+        anyhow::ensure!(self.lr > 0.0, "lr must be positive");
+        anyhow::ensure!(
+            self.budget_secs > 0.0 || self.max_steps > 0,
+            "need a wall-clock budget or a step limit"
+        );
+        anyhow::ensure!(self.train_size >= 16, "train_size too small");
+        Ok(())
+    }
+
+    pub fn load_json_file(path: &std::path::Path) -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {}: {e}", path.display()))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = RunConfig::default();
+        let j = Json::parse(
+            r#"{"algo":"baseline","f":0.5,"lr":0.1,"optimizer":"adamw",
+                "max_steps":7,"track_alignment":false}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.algo, Algo::Baseline);
+        assert_eq!(c.optimizer, OptimKind::AdamW);
+        assert_eq!(c.max_steps, 7);
+        assert!(!c.track_alignment);
+        assert!((c.f - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cli_overrides_beat_defaults() {
+        let mut c = RunConfig::default();
+        let a = Args::parse(
+            "train --preset small --algo gpr --f 0.125 --steps 3 --seed 9"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.artifacts_dir, PathBuf::from("artifacts/small"));
+        assert_eq!(c.seed, 9);
+        assert!((c.f - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_f_rejected() {
+        let mut c = RunConfig::default();
+        c.f = 0.0;
+        assert!(c.validate().is_err());
+        c.f = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bad_algo_string_rejected() {
+        assert!(Algo::parse("nope").is_err());
+        assert_eq!(Algo::parse("gpr").unwrap(), Algo::Gpr);
+        assert_eq!(OptimKind::parse("muon").unwrap(), OptimKind::Muon);
+    }
+}

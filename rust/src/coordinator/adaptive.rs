@@ -1,0 +1,161 @@
+//! Adaptive control fraction — Theorem 4 applied online.
+//!
+//! The paper notes ("Optimal f and regime switch") that the control ratio
+//! f can be tuned: given the measured alignment (ρ̂, κ̂), the compute-
+//! normalized objective Q(f) = φ(f, ρ̂, κ̂)·γ(f) has the closed-form
+//! minimizer f*(ρ̂, κ̂). This controller tracks the alignment and steers f
+//! toward f*, quantized to the control fractions whose artifacts exist
+//! (HLO shapes are static, so only pre-lowered (m_c, m_p) splits are
+//! admissible).
+//!
+//! Safety rails:
+//! - hysteresis: only switch when the predicted compute saving exceeds
+//!   `min_gain` (avoids flapping between adjacent fractions);
+//! - falls back to f = 1 territory (the largest available fraction) when
+//!   ρ̂ drops below the Theorem 4 regime switch — the paper's "vanilla is
+//!   optimal" region.
+
+use crate::metrics::Alignment;
+use crate::theory::{self, CostModel};
+
+#[derive(Clone, Debug)]
+pub struct AdaptiveF {
+    /// Admissible fractions (must have artifacts), sorted ascending.
+    pub choices: Vec<f64>,
+    pub cost: CostModel,
+    /// Minimum relative Q improvement required to switch (hysteresis).
+    pub min_gain: f64,
+    pub current: f64,
+    /// Switches performed (diagnostics).
+    pub switches: usize,
+}
+
+impl AdaptiveF {
+    pub fn new(mut choices: Vec<f64>, initial: f64) -> AdaptiveF {
+        choices.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(!choices.is_empty(), "need at least one admissible f");
+        let current = *choices
+            .iter()
+            .min_by(|a, b| {
+                (*a - initial)
+                    .abs()
+                    .partial_cmp(&(*b - initial).abs())
+                    .unwrap()
+            })
+            .unwrap();
+        AdaptiveF {
+            choices,
+            cost: CostModel::default(),
+            min_gain: 0.02,
+            current,
+            switches: 0,
+        }
+    }
+
+    /// The admissible fraction closest to the unconstrained optimum f*.
+    pub fn quantized_f_star(&self, a: &Alignment) -> f64 {
+        let target = theory::f_star(a.rho, a.kappa, &self.cost);
+        // Evaluate Q at each admissible choice and pick the best — the
+        // quantized argmin, not merely the nearest neighbour of f*.
+        let _ = target;
+        *self
+            .choices
+            .iter()
+            .min_by(|&&x, &&y| {
+                theory::q_objective(x, a.rho, a.kappa, &self.cost)
+                    .partial_cmp(&theory::q_objective(y, a.rho, a.kappa, &self.cost))
+                    .unwrap()
+            })
+            .unwrap()
+    }
+
+    /// Update with the latest alignment snapshot; returns the (possibly
+    /// new) control fraction to use for subsequent updates.
+    pub fn update(&mut self, align: Option<Alignment>) -> f64 {
+        let Some(a) = align else {
+            return self.current; // no information yet — hold
+        };
+        // Below the regime switch, vanilla-like (largest f) is optimal.
+        if a.rho <= theory::rho_switch(a.kappa, &self.cost) {
+            let top = *self.choices.last().unwrap();
+            if (top - self.current).abs() > 1e-12 {
+                self.current = top;
+                self.switches += 1;
+            }
+            return self.current;
+        }
+        let cand = self.quantized_f_star(&a);
+        if (cand - self.current).abs() < 1e-12 {
+            return self.current;
+        }
+        let q_now = theory::q_objective(self.current, a.rho, a.kappa, &self.cost);
+        let q_new = theory::q_objective(cand, a.rho, a.kappa, &self.cost);
+        if q_new < q_now * (1.0 - self.min_gain) {
+            self.current = cand;
+            self.switches += 1;
+        }
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn align(rho: f64, kappa: f64) -> Alignment {
+        Alignment { rho, kappa, sigma_g: 1.0, sigma_h: kappa, n: 64 }
+    }
+
+    #[test]
+    fn picks_smaller_f_for_good_alignment() {
+        let mut c = AdaptiveF::new(vec![0.125, 0.25, 0.5], 0.25);
+        let f = c.update(Some(align(0.97, 1.0)));
+        assert!(f <= 0.25, "high alignment should not raise f, got {f}");
+        assert!((0.125..=0.25).contains(&f));
+    }
+
+    #[test]
+    fn falls_back_to_largest_f_below_regime_switch() {
+        let mut c = AdaptiveF::new(vec![0.125, 0.25, 0.5], 0.125);
+        // rho = 0.4 < rho_switch(1) = 0.6167
+        let f = c.update(Some(align(0.4, 1.0)));
+        assert_eq!(f, 0.5);
+        assert_eq!(c.switches, 1);
+    }
+
+    #[test]
+    fn hysteresis_prevents_flapping() {
+        let mut c = AdaptiveF::new(vec![0.125, 0.25], 0.25);
+        c.min_gain = 0.5; // demand a huge gain
+        let f = c.update(Some(align(0.9, 1.0)));
+        assert_eq!(f, 0.25, "should hold with strong hysteresis");
+        assert_eq!(c.switches, 0);
+    }
+
+    #[test]
+    fn no_information_holds_current() {
+        let mut c = AdaptiveF::new(vec![0.125, 0.25, 0.5], 0.25);
+        assert_eq!(c.update(None), 0.25);
+        assert_eq!(c.switches, 0);
+    }
+
+    #[test]
+    fn quantized_choice_minimizes_q_among_choices() {
+        let c = AdaptiveF::new(vec![0.125, 0.25, 0.5], 0.25);
+        let a = align(0.85, 1.0);
+        let best = c.quantized_f_star(&a);
+        let cost = CostModel::default();
+        for &f in &c.choices {
+            assert!(
+                theory::q_objective(best, a.rho, a.kappa, &cost)
+                    <= theory::q_objective(f, a.rho, a.kappa, &cost) + 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn initial_snaps_to_admissible() {
+        let c = AdaptiveF::new(vec![0.125, 0.5], 0.3);
+        assert!((c.current - 0.125).abs() < 1e-12 || (c.current - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,85 @@
+//! The control-variate combine (paper eq. 1) and the micro-batch split —
+//! the two pure functions at the heart of Algorithm 1, kept separate so
+//! property tests can hammer them without a runtime.
+
+use crate::model::params::FlatGrad;
+
+/// eq. (1):  g = f·g_ct + (1−f)·(g_p − (g_cp − g_ct)).
+///
+/// Unbiased (Lemma 1): E[g_cp] = E[g_p] ⇒ E[g] = E[g_ct] = ∇F.
+pub fn cv_combine(g_ct: &FlatGrad, g_cp: &FlatGrad, g_p: &FlatGrad, f: f32) -> FlatGrad {
+    let mut out = g_ct.clone();
+    let apply = |o: &mut [f32], ct: &[f32], cp: &[f32], p: &[f32]| {
+        for i in 0..o.len() {
+            let ct_i = ct[i];
+            o[i] = f * ct_i + (1.0 - f) * (p[i] - (cp[i] - ct_i));
+        }
+    };
+    apply(&mut out.trunk, &g_ct.trunk, &g_cp.trunk, &g_p.trunk);
+    apply(&mut out.head_w, &g_ct.head_w, &g_cp.head_w, &g_p.head_w);
+    apply(&mut out.head_b, &g_ct.head_b, &g_cp.head_b, &g_p.head_b);
+    out
+}
+
+/// Split a micro-batch index list into (control, prediction) parts with
+/// |control| = max(1, round(f·m)). The two parts partition the input —
+/// checked by the proptests.
+pub fn split_indices(idx: &[usize], f: f64) -> (Vec<usize>, Vec<usize>) {
+    let m = idx.len();
+    let mc = ((f * m as f64).round() as usize).clamp(1, m);
+    (idx[..mc].to_vec(), idx[mc..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fg(v: &[f32]) -> FlatGrad {
+        FlatGrad { trunk: v.to_vec(), head_w: vec![v[0]; 2], head_b: vec![v[0]] }
+    }
+
+    #[test]
+    fn f_one_recovers_true_gradient() {
+        let g = cv_combine(&fg(&[1.0, 2.0]), &fg(&[9.0, 9.0]), &fg(&[5.0, 5.0]), 1.0);
+        assert_eq!(g.trunk, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn perfect_predictor_blends_plainly() {
+        // g_cp == g_ct ⇒ g = f g_ct + (1-f) g_p.
+        let ct = fg(&[2.0, 4.0]);
+        let p = fg(&[6.0, 8.0]);
+        let g = cv_combine(&ct, &ct, &p, 0.25);
+        assert_eq!(g.trunk, vec![0.25 * 2.0 + 0.75 * 6.0, 0.25 * 4.0 + 0.75 * 8.0]);
+    }
+
+    #[test]
+    fn zero_predictor_reduces_to_control_gradient() {
+        let ct = fg(&[3.0, -1.0]);
+        let z = fg(&[0.0, 0.0]);
+        let g = cv_combine(&ct, &z, &z, 0.25);
+        // f·ct + (1-f)·(0 − (0 − ct)) = ct
+        assert_eq!(g.trunk, ct.trunk);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let idx: Vec<usize> = (0..16).collect();
+        let (c, p) = split_indices(&idx, 0.25);
+        assert_eq!(c.len(), 4);
+        assert_eq!(p.len(), 12);
+        let mut all = c.clone();
+        all.extend(&p);
+        assert_eq!(all, idx);
+    }
+
+    #[test]
+    fn split_never_empty_control() {
+        let idx: Vec<usize> = (0..8).collect();
+        let (c, _) = split_indices(&idx, 0.001);
+        assert_eq!(c.len(), 1);
+        let (c, p) = split_indices(&idx, 1.0);
+        assert_eq!(c.len(), 8);
+        assert!(p.is_empty());
+    }
+}

@@ -1,0 +1,436 @@
+//! Layer-3 coordinator: the paper's training system.
+//!
+//! `Trainer` drives both Algorithm 1 (predicted gradient descent, "GPR")
+//! and Algorithm 2 (vanilla) over the same runtime, data pipeline and
+//! optimizer so wall-clock comparisons are apples-to-apples (Figure 1).
+//!
+//! One GPR micro-batch (DESIGN.md §6):
+//!   control:    train_grads  -> g_ct, a_c, p_c     (Forward + Backward)
+//!               predict_grad -> g_cp               (predictor on control)
+//!   prediction: cheap_fwd    -> a_p, p_p           (CheapForward)
+//!               predict_grad -> g_p
+//!   combine:    g = f·g_ct + (1−f)(g_p − (g_cp − g_ct))     (eq. 1)
+//!
+//! Micro-batches accumulate (paper: 8 per update) before one optimizer
+//! step; the predictor refits every `refit_every` updates from
+//! per-example gradients.
+
+pub mod adaptive;
+pub mod combine;
+
+use crate::config::{Algo, RunConfig};
+use crate::data::loader::DataPipeline;
+use crate::metrics::{accuracy, alignment_of, AlignmentMeter, Ema, LogRow};
+use crate::model::params::{FlatGrad, ParamStore};
+use crate::optim::{OptimConfig, Optimizer};
+use crate::predictor::fit::{fit, FitBuffer};
+use crate::predictor::{residuals, Predictor};
+use crate::runtime::{DevicePredictor, Runtime, TrainOut};
+use crate::tensor::Tensor;
+use crate::util::{CsvWriter, Stopwatch};
+
+/// Where the control-variate combine runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CombinePath {
+    /// Host loop (default — avoids 4 device round-trips; see §Perf).
+    Host,
+    /// The `cv_combine` pallas artifact (exercises the full L1 path).
+    Device,
+}
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub rt: Runtime,
+    pub params: ParamStore,
+    pub opt: Optimizer,
+    pub pred: Predictor,
+    fit_buf: FitBuffer,
+    pub data: DataPipeline,
+    pub tracker: AlignmentMeter,
+    dev_pred: Option<DevicePredictor>,
+    /// Theorem-4 online controller (enabled by cfg.adaptive_f).
+    pub adaptive: Option<adaptive::AdaptiveF>,
+    pub combine_path: CombinePath,
+    pub log: Vec<LogRow>,
+    /// Analytic compute units consumed (paper cost model), for the
+    /// cost-model bench.
+    pub cost_units: f64,
+    pub examples_seen: usize,
+    step: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig) -> anyhow::Result<Trainer> {
+        cfg.validate()?;
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let params = ParamStore::load_init(&rt.manifest)?;
+        let opt = Optimizer::new(
+            cfg.optimizer,
+            OptimConfig {
+                lr: cfg.lr as f32,
+                weight_decay: cfg.weight_decay as f32,
+                ..OptimConfig::default()
+            },
+            &params,
+            &rt.manifest,
+        );
+        let pred = Predictor::new(rt.manifest.trunk_params, rt.manifest.width, rt.manifest.rank);
+        let fit_buf = FitBuffer::new(rt.manifest.n_fit);
+        let data = DataPipeline::build(
+            cfg.train_size,
+            cfg.val_size,
+            rt.manifest.image,
+            rt.manifest.classes,
+            cfg.aug_multiplier,
+            cfg.seed,
+        );
+        let adaptive = cfg.adaptive_f.then(|| {
+            adaptive::AdaptiveF::new(rt.manifest.fs.clone(), cfg.f)
+        });
+        Ok(Trainer {
+            tracker: AlignmentMeter::default(),
+            fit_buf,
+            adaptive,
+            cfg,
+            rt,
+            params,
+            opt,
+            pred,
+            data,
+            dev_pred: None,
+            combine_path: CombinePath::Host,
+            log: Vec::new(),
+            cost_units: 0.0,
+            examples_seen: 0,
+            step: 0,
+        })
+    }
+
+    /// Pre-compile the artifacts this configuration will touch.
+    pub fn warmup(&self) -> anyhow::Result<()> {
+        let m = &self.rt.manifest;
+        let mut names = vec![m.per_example_grads_name(), "cv_combine".to_string()];
+        match self.cfg.algo {
+            Algo::Baseline => names.push(m.train_grads_name(m.micro_batch)),
+            Algo::Gpr => {
+                // adaptive-f may visit every lowered fraction
+                let fracs: Vec<f64> = if self.adaptive.is_some() {
+                    m.fs.clone()
+                } else {
+                    vec![self.cfg.f]
+                };
+                for f in fracs {
+                    let (mc, mp) = m.split_sizes(f);
+                    names.push(m.train_grads_name(mc));
+                    // predict artifacts are only touched when there is a
+                    // prediction micro-batch (f < 1)
+                    if mp > 0 {
+                        names.push(m.predict_grad_name(mc));
+                        names.push(m.cheap_fwd_name(mp));
+                        names.push(m.predict_grad_name(mp));
+                    }
+                }
+            }
+        }
+        names.push(m.cheap_fwd_name(m.val_batch));
+        self.rt.warmup(&names)
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    // ---- single micro-batch gradients -----------------------------------
+
+    /// Algorithm 2 micro-batch: full Forward+Backward on all m examples.
+    fn micro_baseline(
+        &mut self,
+        dev: &crate::runtime::DeviceParams,
+    ) -> anyhow::Result<(FlatGrad, f32, f64)> {
+        let m = self.rt.manifest.micro_batch;
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        self.data.next_batch(m, &mut x, &mut y);
+        let out = self.rt.train_grads(dev, &x, &y, m)?;
+        let acc = accuracy(&out.probs, &y, self.rt.manifest.classes);
+        self.examples_seen += m;
+        self.cost_units += crate::theory::CostModel::default().cost_vanilla(m as f64);
+        let TrainOut { loss, g_trunk, g_head_w, g_head_b, .. } = out;
+        Ok((FlatGrad { trunk: g_trunk, head_w: g_head_w, head_b: g_head_b }, loss, acc))
+    }
+
+    /// Algorithm 1 micro-batch: control + prediction micro-batches and the
+    /// control-variate combine.
+    fn micro_gpr(
+        &mut self,
+        dev: &crate::runtime::DeviceParams,
+    ) -> anyhow::Result<(FlatGrad, f32, f64)> {
+        let man = &self.rt.manifest;
+        let classes = man.classes;
+        let (mc, mp) = man.split_sizes(self.cfg.f);
+        let f_eff = mc as f32 / man.micro_batch as f32;
+
+        // -- control micro-batch: true gradient + activations ------------
+        let (mut xc, mut yc) = (Vec::new(), Vec::new());
+        self.data.next_batch(mc, &mut xc, &mut yc);
+        let ctrl = self.rt.train_grads(dev, &xc, &yc, mc)?;
+        let acc = accuracy(&ctrl.probs, &yc, classes);
+        let g_ct = FlatGrad {
+            trunk: ctrl.g_trunk,
+            head_w: ctrl.g_head_w,
+            head_b: ctrl.g_head_b,
+        };
+
+        let cost = crate::theory::CostModel::default();
+        self.cost_units += cost.cost_vanilla(mc as f64); // fwd+bwd on control
+        self.examples_seen += mc + mp;
+
+        // Until the first fit the predictor is identically zero; eq. (1)
+        // then reduces to g_ct (still unbiased). Skip the device calls.
+        if self.pred.fits == 0 || mp == 0 {
+            self.cost_units += cost.cheap_forward * mp as f64;
+            return Ok((g_ct, ctrl.loss, acc));
+        }
+
+        let dev_pred = self
+            .rt
+            .upload_predictor(&self.pred, self.dev_pred.take())?;
+
+        // -- predictor on the control micro-batch (g_cp) ------------------
+        let pc = self.rt.predict_grad(&ctrl.a, &ctrl.probs, &yc, dev, &dev_pred, mc)?;
+
+        // -- prediction micro-batch: CheapForward + predictor (g_p) -------
+        let (mut xp, mut yp) = (Vec::new(), Vec::new());
+        self.data.next_batch(mp, &mut xp, &mut yp);
+        let (a_p, probs_p) = self.rt.cheap_fwd(dev, &xp, mp)?;
+        let pp = self.rt.predict_grad(&a_p, &probs_p, &yp, dev, &dev_pred, mp)?;
+        self.cost_units += cost.cheap_forward * mp as f64;
+
+        self.dev_pred = Some(dev_pred);
+
+        let g_cp = FlatGrad { trunk: pc.g_trunk, head_w: pc.g_head_w, head_b: pc.g_head_b };
+        let g_p = FlatGrad { trunk: pp.g_trunk, head_w: pp.g_head_w, head_b: pp.g_head_b };
+
+        let g = match self.combine_path {
+            CombinePath::Host => combine::cv_combine(&g_ct, &g_cp, &g_p, f_eff),
+            CombinePath::Device => {
+                let v = self.rt.cv_combine(
+                    &g_ct.concat(),
+                    &g_cp.concat(),
+                    &g_p.concat(),
+                    f_eff,
+                )?;
+                FlatGrad::from_concat(&v, g_ct.trunk.len(), g_ct.head_w.len())
+            }
+        };
+        Ok((g, ctrl.loss, acc))
+    }
+
+    // ---- predictor refit -------------------------------------------------
+
+    /// Collect per-example gradients and refit (U, B). Also feeds the
+    /// Sec. 5.3 alignment tracker with (g_j, ĝ_j) pairs.
+    pub fn refit_predictor(
+        &mut self,
+        dev: &crate::runtime::DeviceParams,
+    ) -> anyhow::Result<Option<crate::predictor::fit::FitReport>> {
+        let man = &self.rt.manifest;
+        let n_chunk = man.n_chunk;
+        let chunks = man.n_fit.div_ceil(n_chunk);
+        let d = man.width;
+        let smoothing = man.label_smoothing as f32;
+        self.fit_buf.clear();
+        for _ in 0..chunks {
+            let (mut x, mut y) = (Vec::new(), Vec::new());
+            self.data.next_batch(n_chunk, &mut x, &mut y);
+            let (g_rows, a, probs) = self.rt.per_example_grads(dev, &x, &y)?;
+            // fitting also costs compute: fwd+bwd per example
+            self.cost_units +=
+                crate::theory::CostModel::default().cost_vanilla(n_chunk as f64);
+            let resid = residuals(&probs, &y, man.classes, smoothing);
+            let h = Predictor::backprop_features(&resid, &self.params.head_w, d);
+            for (j, g) in g_rows.into_iter().enumerate() {
+                let a_row = a[j * d..(j + 1) * d].to_vec();
+                let h_row = h.row(j).to_vec();
+                self.fit_buf.push(g, a_row, h_row);
+            }
+        }
+        let report = fit(&mut self.pred, &self.fit_buf, self.cfg.ridge_lambda as f32)?;
+        crate::log_debug!(
+            "refit: n={} energy={:.3} rel_err={:.3}",
+            report.n,
+            report.energy_captured,
+            report.rel_error
+        );
+        // Alignment diagnostics with the *new* predictor on the same
+        // samples (plug-in ρ̂/κ̂ of Sec. 5.3) — computed once per refit and
+        // cached (a per-step recomputation over n_fit × P_T floats was the
+        // top hot-path cost before the perf pass; see EXPERIMENTS.md §Perf).
+        if self.cfg.track_alignment {
+            let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..self.fit_buf.len())
+                .map(|j| {
+                    let a_row = &self.fit_buf.a1[j][..d];
+                    let h_row = &self.fit_buf.h[j];
+                    let pred_g = self.pred.predict_one_trunk(a_row, h_row);
+                    (self.fit_buf.grads[j].clone(), pred_g)
+                })
+                .collect();
+            self.tracker.update(alignment_of(&pairs));
+        }
+        Ok(Some(report))
+    }
+
+    // ---- evaluation --------------------------------------------------------
+
+    /// Validation accuracy over all full val batches (CheapForward path).
+    pub fn evaluate(&mut self, dev: &crate::runtime::DeviceParams) -> anyhow::Result<f64> {
+        let man = &self.rt.manifest;
+        let mut correct_weighted = 0.0;
+        let mut batches = 0usize;
+        for (x, y) in self.data.val_batches(man.val_batch) {
+            let (_, probs) = self.rt.cheap_fwd(dev, &x, man.val_batch)?;
+            correct_weighted += accuracy(&probs, &y, man.classes);
+            batches += 1;
+        }
+        Ok(if batches == 0 { 0.0 } else { correct_weighted / batches as f64 })
+    }
+
+    // ---- the budgeted training loop ---------------------------------------
+
+    /// Run until the wall-clock budget or step limit. Returns the log.
+    /// `csv` optionally streams rows for the Figure 1 series.
+    pub fn train(&mut self, mut csv: Option<&mut CsvWriter>) -> anyhow::Result<()> {
+        self.warmup()?;
+        let sw = Stopwatch::start();
+        let mut loss_ema = Ema::new(0.2);
+        loop {
+            if self.cfg.budget_secs > 0.0 && sw.seconds() >= self.cfg.budget_secs {
+                break;
+            }
+            if self.cfg.max_steps > 0 && self.step >= self.cfg.max_steps {
+                break;
+            }
+            // Refit schedule: first GPR fit happens after the first
+            // update (so early steps aren't all fit overhead), then every
+            // refit_every updates.
+            let dev = self.rt.upload_params(&self.params)?;
+            // Refit only when a prediction micro-batch exists (f < 1);
+            // at f = 1 Algorithm 1 degenerates to Algorithm 2 and the
+            // predictor is never consulted.
+            if self.cfg.algo == Algo::Gpr && self.rt.manifest.split_sizes(self.cfg.f).1 > 0 {
+                let due = if self.pred.fits == 0 {
+                    self.step >= 1
+                } else {
+                    self.cfg.refit_every > 0 && self.step % self.cfg.refit_every == 0
+                };
+                if due {
+                    self.refit_predictor(&dev)?;
+                    // Theorem 4 online: move f toward the quantized f*.
+                    if let Some(ctl) = &mut self.adaptive {
+                        let new_f = ctl.update(self.tracker.snapshot());
+                        if (new_f - self.cfg.f).abs() > 1e-12 {
+                            crate::log_info!(
+                                "adaptive-f: {:.3} -> {new_f:.3} (switch #{})",
+                                self.cfg.f,
+                                ctl.switches
+                            );
+                            self.cfg.f = new_f;
+                        }
+                    }
+                }
+            }
+
+            // Accumulate micro-batch gradients.
+            let mut acc_grad: Option<FlatGrad> = None;
+            let mut loss_sum = 0.0f64;
+            let mut acc_sum = 0.0f64;
+            for _ in 0..self.cfg.accum {
+                let (g, loss, acc) = match self.cfg.algo {
+                    Algo::Baseline => self.micro_baseline(&dev)?,
+                    Algo::Gpr => self.micro_gpr(&dev)?,
+                };
+                loss_sum += loss as f64;
+                acc_sum += acc;
+                match &mut acc_grad {
+                    None => acc_grad = Some(g),
+                    Some(t) => t.axpy(1.0, &g),
+                }
+            }
+            let mut grad = acc_grad.unwrap();
+            grad.scale(1.0 / self.cfg.accum as f32);
+            let manifest = self.rt.manifest.clone();
+            self.opt.step(&mut self.params, &grad, &manifest);
+            self.step += 1;
+
+            let loss = loss_ema.push(loss_sum / self.cfg.accum as f64);
+            let train_acc = acc_sum / self.cfg.accum as f64;
+
+            // periodic eval + log
+            let do_eval = self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0;
+            let val_acc = if do_eval {
+                let dev2 = self.rt.upload_params(&self.params)?;
+                self.evaluate(&dev2)?
+            } else {
+                f64::NAN
+            };
+            let align = self.tracker.snapshot();
+            let row = LogRow {
+                step: self.step,
+                wall_secs: sw.seconds(),
+                loss,
+                train_acc,
+                val_acc,
+                rho: align.map_or(f64::NAN, |a| a.rho),
+                kappa: align.map_or(f64::NAN, |a| a.kappa),
+                phi: align.map_or(f64::NAN, |a| a.phi(self.cfg.f)),
+                examples_seen: self.examples_seen,
+            };
+            if let Some(w) = csv.as_deref_mut() {
+                w.row(&row.values())?;
+            }
+            if do_eval {
+                crate::log_info!(
+                    "step {:>5} t={:>7.1}s loss={:.4} train_acc={:.3} val_acc={:.3} rho={:.3}",
+                    row.step,
+                    row.wall_secs,
+                    row.loss,
+                    row.train_acc,
+                    row.val_acc,
+                    row.rho
+                );
+            }
+            self.log.push(row);
+        }
+        // Final eval if the last step wasn't an eval step.
+        if self
+            .log
+            .last()
+            .map_or(true, |r| r.val_acc.is_nan())
+        {
+            let dev = self.rt.upload_params(&self.params)?;
+            let val = self.evaluate(&dev)?;
+            if let Some(r) = self.log.last_mut() {
+                r.val_acc = val;
+            }
+        }
+        Ok(())
+    }
+
+    /// Final validation accuracy from the log.
+    pub fn final_val_acc(&self) -> f64 {
+        self.log
+            .iter()
+            .rev()
+            .find(|r| !r.val_acc.is_nan())
+            .map_or(0.0, |r| r.val_acc)
+    }
+
+    /// Residual tensor helper exposed for diagnostics binaries.
+    pub fn residual_tensor(&self, probs: &[f32], y: &[i32]) -> Tensor {
+        residuals(
+            probs,
+            y,
+            self.rt.manifest.classes,
+            self.rt.manifest.label_smoothing as f32,
+        )
+    }
+}

@@ -1,0 +1,183 @@
+//! The paper's augmentation pipeline (Sec. 7.1), pre-applied at load time:
+//!
+//! - random crop with padding 4;
+//! - horizontal flip, p = 0.5;
+//! - color jitter, p = 0.2;
+//! - random erasing, p = 0.25, area ∈ [0.02, 0.12], aspect ∈ [0.3, 3.3].
+
+use super::Image;
+use crate::util::rng::Pcg64;
+
+/// Pad by `pad` (reflect-free zero padding, as torchvision's default
+/// constant fill) then crop back to the original side at a random offset.
+pub fn random_crop(im: &Image, pad: usize, rng: &mut Pcg64) -> Image {
+    let s = im.side;
+    let ox = rng.below((2 * pad + 1) as u64) as isize - pad as isize;
+    let oy = rng.below((2 * pad + 1) as u64) as isize - pad as isize;
+    let mut out = Image::zeros(s);
+    for c in 0..3 {
+        for y in 0..s {
+            let sy = y as isize + oy;
+            if sy < 0 || sy >= s as isize {
+                continue;
+            }
+            for x in 0..s {
+                let sx = x as isize + ox;
+                if sx < 0 || sx >= s as isize {
+                    continue;
+                }
+                out.set(c, y, x, im.at(c, sy as usize, sx as usize));
+            }
+        }
+    }
+    out
+}
+
+/// Horizontal mirror.
+pub fn hflip(im: &Image) -> Image {
+    let s = im.side;
+    let mut out = Image::zeros(s);
+    for c in 0..3 {
+        for y in 0..s {
+            for x in 0..s {
+                out.set(c, y, x, im.at(c, y, s - 1 - x));
+            }
+        }
+    }
+    out
+}
+
+/// Brightness/contrast/per-channel jitter (a compact stand-in for
+/// torchvision's ColorJitter in normalized space).
+pub fn color_jitter(im: &Image, rng: &mut Pcg64) -> Image {
+    let bright = rng.range_f32(-0.2, 0.2);
+    let contrast = rng.range_f32(0.8, 1.2);
+    let ch_scale = [
+        rng.range_f32(0.9, 1.1),
+        rng.range_f32(0.9, 1.1),
+        rng.range_f32(0.9, 1.1),
+    ];
+    let s = im.side;
+    let mut out = im.clone();
+    for c in 0..3 {
+        for y in 0..s {
+            for x in 0..s {
+                let v = im.at(c, y, x);
+                out.set(c, y, x, (v * contrast + bright) * ch_scale[c]);
+            }
+        }
+    }
+    out
+}
+
+/// Random erasing (Zhong et al.): blank a random rectangle with noise.
+/// Area fraction ∈ [lo, hi], aspect ratio ∈ [0.3, 3.3] — paper's settings.
+pub fn random_erase(im: &Image, lo: f32, hi: f32, rng: &mut Pcg64) -> Image {
+    let s = im.side;
+    let total = (s * s) as f32;
+    let mut out = im.clone();
+    for _attempt in 0..10 {
+        let area = total * rng.range_f32(lo, hi);
+        let aspect = rng.range_f32(0.3, 3.3);
+        let h = (area * aspect).sqrt().round() as usize;
+        let w = (area / aspect).sqrt().round() as usize;
+        if h == 0 || w == 0 || h >= s || w >= s {
+            continue;
+        }
+        let y0 = rng.below((s - h) as u64 + 1) as usize;
+        let x0 = rng.below((s - w) as u64 + 1) as usize;
+        for c in 0..3 {
+            for y in y0..y0 + h {
+                for x in x0..x0 + w {
+                    out.set(c, y, x, rng.normal());
+                }
+            }
+        }
+        return out;
+    }
+    out
+}
+
+/// Apply the full stochastic pipeline to one image.
+pub fn augment(im: &Image, rng: &mut Pcg64) -> Image {
+    let mut out = random_crop(im, 4, rng);
+    if rng.coin(0.5) {
+        out = hflip(&out);
+    }
+    if rng.coin(0.2) {
+        out = color_jitter(&out, rng);
+    }
+    if rng.coin(0.25) {
+        out = random_erase(&out, 0.02, 0.12, rng);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn striped(side: usize) -> Image {
+        let mut im = Image::zeros(side);
+        for c in 0..3 {
+            for y in 0..side {
+                for x in 0..side {
+                    im.set(c, y, x, x as f32);
+                }
+            }
+        }
+        im
+    }
+
+    #[test]
+    fn hflip_is_involution() {
+        let im = striped(8);
+        let f = hflip(&im);
+        assert_eq!(f.at(0, 0, 0), 7.0);
+        assert_eq!(hflip(&f).data, im.data);
+    }
+
+    #[test]
+    fn crop_preserves_shape_and_zero_offset_possible() {
+        let im = striped(16);
+        let mut rng = Pcg64::seeded(0);
+        for _ in 0..20 {
+            let c = random_crop(&im, 4, &mut rng);
+            assert_eq!(c.side, 16);
+            assert_eq!(c.data.len(), im.data.len());
+        }
+    }
+
+    #[test]
+    fn erase_changes_bounded_region() {
+        let im = striped(16);
+        let mut rng = Pcg64::seeded(1);
+        let e = random_erase(&im, 0.02, 0.12, &mut rng);
+        let changed = im
+            .data
+            .iter()
+            .zip(&e.data)
+            .filter(|(a, b)| a != b)
+            .count();
+        // changed pixels (x3 channels) within [0.02, 0.15] of the image
+        let frac = changed as f32 / im.data.len() as f32;
+        assert!(frac > 0.0 && frac < 0.2, "frac={frac}");
+    }
+
+    #[test]
+    fn jitter_keeps_values_finite() {
+        let im = striped(8);
+        let mut rng = Pcg64::seeded(2);
+        let j = color_jitter(&im, &mut rng);
+        assert!(j.data.iter().all(|v| v.is_finite()));
+        assert_ne!(j.data, im.data);
+    }
+
+    #[test]
+    fn augment_pipeline_deterministic_per_seed() {
+        let im = striped(16);
+        let a = augment(&im, &mut Pcg64::seeded(7));
+        let b = augment(&im, &mut Pcg64::seeded(7));
+        assert_eq!(a.data, b.data);
+    }
+}

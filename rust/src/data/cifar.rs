@@ -1,0 +1,118 @@
+//! Real CIFAR-10 loader (binary version, the `data_batch_*.bin` format).
+//!
+//! The evaluation in this repository runs on the synthetic substitute
+//! (DESIGN.md §3 — no network access in this environment), but the data
+//! pipeline is complete: drop the standard `cifar-10-batches-bin/` files
+//! into a directory and pass `--cifar <dir>` (or call `load_dir`) to train
+//! on the real dataset with the identical augmentation/serving path.
+//!
+//! Format per record: 1 label byte + 3072 pixel bytes (R, G, B planes,
+//! row-major 32×32), 10 000 records per batch file.
+
+use super::{Dataset, Image};
+
+pub const SIDE: usize = 32;
+pub const RECORD: usize = 1 + 3 * SIDE * SIDE;
+
+/// Per-channel normalization constants (the standard CIFAR-10 values).
+pub const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+pub const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+
+/// Decode one batch file's bytes into (images, labels).
+pub fn decode(bytes: &[u8]) -> anyhow::Result<Dataset> {
+    anyhow::ensure!(
+        !bytes.is_empty() && bytes.len() % RECORD == 0,
+        "CIFAR batch size {} is not a multiple of record size {RECORD}",
+        bytes.len()
+    );
+    let n = bytes.len() / RECORD;
+    let mut ds = Dataset::default();
+    ds.images.reserve(n);
+    for rec in bytes.chunks_exact(RECORD) {
+        let label = rec[0];
+        anyhow::ensure!(label < 10, "label {label} out of range");
+        let mut im = Image::zeros(SIDE);
+        for c in 0..3 {
+            let plane = &rec[1 + c * SIDE * SIDE..1 + (c + 1) * SIDE * SIDE];
+            for y in 0..SIDE {
+                for x in 0..SIDE {
+                    let v = plane[y * SIDE + x] as f32 / 255.0;
+                    im.set(c, y, x, (v - MEAN[c]) / STD[c]);
+                }
+            }
+        }
+        ds.images.push(im);
+        ds.labels.push(label);
+    }
+    Ok(ds)
+}
+
+/// Load train (data_batch_1..5.bin) and test (test_batch.bin) sets from a
+/// `cifar-10-batches-bin` directory.
+pub fn load_dir(dir: &std::path::Path) -> anyhow::Result<(Dataset, Dataset)> {
+    let mut train = Dataset::default();
+    for i in 1..=5 {
+        let path = dir.join(format!("data_batch_{i}.bin"));
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let part = decode(&bytes)?;
+        train.images.extend(part.images);
+        train.labels.extend(part.labels);
+    }
+    let test_bytes = std::fs::read(dir.join("test_batch.bin"))
+        .map_err(|e| anyhow::anyhow!("reading test_batch.bin: {e}"))?;
+    let test = decode(&test_bytes)?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a fake batch file: record i has label i % 10 and constant
+    /// pixel value i % 256.
+    fn fake_batch(n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n * RECORD);
+        for i in 0..n {
+            out.push((i % 10) as u8);
+            out.extend(std::iter::repeat((i % 256) as u8).take(3 * SIDE * SIDE));
+        }
+        out
+    }
+
+    #[test]
+    fn decodes_labels_and_normalized_pixels() {
+        let ds = decode(&fake_batch(4)).unwrap();
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds.labels, vec![0, 1, 2, 3]);
+        // pixel value 2/255, channel 0
+        let want = (2.0 / 255.0 - MEAN[0]) / STD[0];
+        assert!((ds.images[2].at(0, 5, 7) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_truncated_input() {
+        assert!(decode(&fake_batch(2)[..RECORD + 5]).is_err());
+        assert!(decode(&[]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        let mut b = fake_batch(1);
+        b[0] = 42;
+        assert!(decode(&b).is_err());
+    }
+
+    #[test]
+    fn load_dir_round_trip() {
+        let dir = std::env::temp_dir().join("lgp_cifar_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for i in 1..=5 {
+            std::fs::write(dir.join(format!("data_batch_{i}.bin")), fake_batch(8)).unwrap();
+        }
+        std::fs::write(dir.join("test_batch.bin"), fake_batch(6)).unwrap();
+        let (train, test) = load_dir(&dir).unwrap();
+        assert_eq!(train.len(), 40);
+        assert_eq!(test.len(), 6);
+    }
+}

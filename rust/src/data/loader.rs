@@ -1,0 +1,148 @@
+//! Pre-augmented in-memory dataset + infinite shuffled iterator — exactly
+//! the paper's serving scheme (Sec. 7.1): "pre-apply the full augmentation
+//! pipeline to generate an effective dataset of size 100,000 ... served via
+//! an infinite iterator with per-epoch index shuffling."
+
+use super::{augment, synthetic, Dataset};
+use crate::util::rng::Pcg64;
+
+/// Training + validation stores for one run.
+pub struct DataPipeline {
+    pub train: Dataset,
+    pub val: Dataset,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: usize,
+    rng: Pcg64,
+}
+
+impl DataPipeline {
+    /// Build: generate `base_n` synthetic examples, pre-apply `mult`
+    /// augmented copies each (paper: 2x), plus a clean validation split.
+    pub fn build(base_n: usize, val_n: usize, side: usize, classes: usize,
+                 mult: usize, seed: u64) -> DataPipeline {
+        let base = synthetic::generate(base_n, side, classes, seed);
+        // Validation from an independent stream (never augmented).
+        let val = synthetic::generate(val_n, side, classes, seed ^ 0x5eed_0001);
+        let mut aug_rng = Pcg64::new(seed, 23);
+        let mut train = Dataset::default();
+        train.images.reserve(base_n * mult.max(1));
+        for (im, &lbl) in base.images.iter().zip(&base.labels) {
+            for copy in 0..mult.max(1) {
+                let sample = if copy == 0 {
+                    im.clone() // keep one un-augmented copy per example
+                } else {
+                    augment::augment(im, &mut aug_rng)
+                };
+                train.images.push(sample);
+                train.labels.push(lbl);
+            }
+        }
+        let n = train.len();
+        DataPipeline {
+            train,
+            val,
+            order: (0..n).collect(),
+            cursor: 0,
+            epoch: 0,
+            rng: Pcg64::new(seed, 31),
+        }
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Next `m` indices, reshuffling at epoch boundaries (infinite stream).
+    pub fn next_indices(&mut self, m: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(m);
+        while out.len() < m {
+            if self.cursor == 0 {
+                self.rng.shuffle(&mut self.order);
+                self.epoch += 1;
+            }
+            let take = (m - out.len()).min(self.order.len() - self.cursor);
+            out.extend_from_slice(&self.order[self.cursor..self.cursor + take]);
+            self.cursor = (self.cursor + take) % self.order.len();
+        }
+        out
+    }
+
+    /// Fill flat buffers for the next training micro-batch.
+    pub fn next_batch(&mut self, m: usize, x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        let idx = self.next_indices(m);
+        self.train.gather(&idx, x, y);
+    }
+
+    /// Deterministic validation batches (chunked, in order).
+    pub fn val_batches(&self, m: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + m <= self.val.len() {
+            let idx: Vec<usize> = (i..i + m).collect();
+            let (mut x, mut y) = (Vec::new(), Vec::new());
+            self.val.gather(&idx, &mut x, &mut y);
+            out.push((x, y));
+            i += m;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_sizes() {
+        let p = DataPipeline::build(50, 20, 8, 10, 2, 0);
+        assert_eq!(p.train.len(), 100);
+        assert_eq!(p.val.len(), 20);
+    }
+
+    #[test]
+    fn infinite_iterator_covers_all_indices_each_epoch() {
+        let mut p = DataPipeline::build(25, 5, 8, 5, 1, 0);
+        let mut seen = vec![0usize; 25];
+        for _ in 0..5 {
+            for &i in &p.next_indices(5) {
+                seen[i] += 1;
+            }
+        }
+        // one full epoch: every index exactly once
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        assert_eq!(p.epoch(), 1);
+    }
+
+    #[test]
+    fn epoch_reshuffles() {
+        let mut p = DataPipeline::build(32, 5, 8, 4, 1, 3);
+        let e1: Vec<usize> = (0..4).flat_map(|_| p.next_indices(8)).collect();
+        let e2: Vec<usize> = (0..4).flat_map(|_| p.next_indices(8)).collect();
+        assert_ne!(e1, e2);
+        let mut s1 = e1.clone();
+        let mut s2 = e2.clone();
+        s1.sort_unstable();
+        s2.sort_unstable();
+        assert_eq!(s1, s2); // same index set
+    }
+
+    #[test]
+    fn val_batches_chunk_correctly() {
+        let p = DataPipeline::build(20, 17, 8, 10, 1, 0);
+        let vb = p.val_batches(5);
+        assert_eq!(vb.len(), 3); // 17 / 5 = 3 full batches
+        assert_eq!(vb[0].0.len(), 5 * 3 * 8 * 8);
+        assert_eq!(vb[0].1.len(), 5);
+    }
+
+    #[test]
+    fn batch_buffer_layout() {
+        let mut p = DataPipeline::build(10, 5, 8, 10, 1, 0);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        p.next_batch(4, &mut x, &mut y);
+        assert_eq!(x.len(), 4 * 3 * 8 * 8);
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|&l| (0..10).contains(&l)));
+    }
+}

@@ -1,0 +1,93 @@
+//! Data substrate: synthetic CIFAR-10 substitute, the paper's augmentation
+//! pipeline, and the pre-augmented device-resident dataset served through
+//! an infinite shuffled iterator (paper Sec. 7.1).
+//!
+//! Substitution note (DESIGN.md §3): no network access means no real
+//! CIFAR-10; `synthetic.rs` generates class-conditional images whose
+//! classification task is learnable but non-trivial, which is all the
+//! algorithm's gradient statistics depend on.
+
+pub mod augment;
+pub mod cifar;
+pub mod loader;
+pub mod synthetic;
+
+/// One image: CHW f32, values roughly in [-2, 2] (normalized space).
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub data: Vec<f32>,
+    pub side: usize,
+}
+
+impl Image {
+    pub fn zeros(side: usize) -> Image {
+        Image { data: vec![0.0; 3 * side * side], side }
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.side + y) * self.side + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        self.data[(c * self.side + y) * self.side + x] = v;
+    }
+}
+
+/// A labeled dataset held fully in memory.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub images: Vec<Image>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Copy a batch of examples (by index) into a flat (m, 3, S, S) buffer
+    /// plus an i32 label buffer — the exact layout the HLO artifacts take.
+    pub fn gather(&self, idx: &[usize], x_out: &mut Vec<f32>, y_out: &mut Vec<i32>) {
+        x_out.clear();
+        y_out.clear();
+        for &i in idx {
+            x_out.extend_from_slice(&self.images[i].data);
+            y_out.push(self.labels[i] as i32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_indexing() {
+        let mut im = Image::zeros(4);
+        im.set(2, 3, 1, 7.0);
+        assert_eq!(im.at(2, 3, 1), 7.0);
+        assert_eq!(im.data.len(), 48);
+    }
+
+    #[test]
+    fn gather_layout() {
+        let mut ds = Dataset::default();
+        for lbl in 0..3u8 {
+            let mut im = Image::zeros(2);
+            im.data.fill(lbl as f32);
+            ds.images.push(im);
+            ds.labels.push(lbl);
+        }
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        ds.gather(&[2, 0], &mut x, &mut y);
+        assert_eq!(x.len(), 2 * 12);
+        assert_eq!(&x[..12], &[2.0f32; 12][..]);
+        assert_eq!(y, vec![2, 0]);
+    }
+}

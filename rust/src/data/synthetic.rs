@@ -1,0 +1,153 @@
+//! Synthetic CIFAR-10 substitute.
+//!
+//! Each class is defined by a small family of oriented sinusoid gratings
+//! with a class-specific color palette; samples draw a random family
+//! member, random phase, a smooth luminance gradient and pixel noise. The
+//! task is linearly non-separable in pixel space but comfortably learnable
+//! by a small ViT — validation accuracy climbs well above the 10% chance
+//! floor, which is what Figure 1 needs to show relative progress.
+
+use super::{Dataset, Image};
+use crate::util::rng::Pcg64;
+
+/// Class definition: orientation (radians), spatial frequency, color
+/// weights per channel, and a secondary harmonic.
+#[derive(Clone, Copy, Debug)]
+struct ClassProto {
+    angle: f32,
+    freq: f32,
+    color: [f32; 3],
+    harmonic: f32,
+}
+
+fn prototypes(classes: usize) -> Vec<ClassProto> {
+    // Deterministic, well-separated prototype grid.
+    (0..classes)
+        .map(|k| {
+            let t = k as f32 / classes as f32;
+            ClassProto {
+                angle: std::f32::consts::PI * t,
+                freq: 0.25 + 0.55 * ((k % 5) as f32 / 4.0),
+                color: [
+                    0.4 + 0.6 * ((k % 3) as f32 / 2.0),
+                    0.4 + 0.6 * (((k + 1) % 3) as f32 / 2.0),
+                    0.4 + 0.6 * (((k + 2) % 3) as f32 / 2.0),
+                ],
+                harmonic: if k % 2 == 0 { 2.0 } else { 3.0 },
+            }
+        })
+        .collect()
+}
+
+/// Generate one sample of class `label`.
+pub fn sample(label: usize, side: usize, classes: usize, rng: &mut Pcg64) -> Image {
+    let protos = prototypes(classes);
+    let p = protos[label % protos.len()];
+    // Per-sample nuisance parameters.
+    let phase = rng.range_f32(0.0, 2.0 * std::f32::consts::PI);
+    let angle = p.angle + rng.range_f32(-0.12, 0.12);
+    let freq = p.freq * rng.range_f32(0.9, 1.1);
+    let grad_dir = rng.range_f32(0.0, 2.0 * std::f32::consts::PI);
+    let grad_amp = rng.range_f32(0.0, 0.4);
+    let noise = 0.35f32;
+    let (ca, sa) = (angle.cos(), angle.sin());
+    let mut im = Image::zeros(side);
+    for y in 0..side {
+        for x in 0..side {
+            let xf = x as f32 - side as f32 / 2.0;
+            let yf = y as f32 - side as f32 / 2.0;
+            let u = ca * xf + sa * yf;
+            let base = (freq * u + phase).sin() + 0.5 * (p.harmonic * freq * u + phase).cos();
+            let lum = grad_amp
+                * ((grad_dir.cos() * xf + grad_dir.sin() * yf) / side as f32);
+            for c in 0..3 {
+                let v = p.color[c] * base + lum + noise * rng.normal();
+                im.set(c, y, x, v);
+            }
+        }
+    }
+    im
+}
+
+/// Generate a balanced dataset of `n` examples over `classes` classes.
+pub fn generate(n: usize, side: usize, classes: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 17);
+    let mut ds = Dataset::default();
+    ds.images.reserve(n);
+    for i in 0..n {
+        let label = (i % classes) as u8;
+        ds.images.push(sample(label as usize, side, classes, &mut rng));
+        ds.labels.push(label);
+    }
+    // Shuffle jointly so mini-batches are class-mixed.
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let images = perm.iter().map(|&i| ds.images[i].clone()).collect();
+    let labels = perm.iter().map(|&i| ds.labels[i]).collect();
+    Dataset { images, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::stats;
+
+    #[test]
+    fn generates_requested_size_and_balance() {
+        let ds = generate(100, 16, 10, 0);
+        assert_eq!(ds.len(), 100);
+        let mut counts = [0usize; 10];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(10, 8, 10, 42);
+        let b = generate(10, 8, 10, 42);
+        assert_eq!(a.images[3].data, b.images[3].data);
+        let c = generate(10, 8, 10, 43);
+        assert_ne!(a.images[3].data, c.images[3].data);
+    }
+
+    #[test]
+    fn classes_are_statistically_distinct() {
+        // Mean within-class correlation must exceed cross-class — the
+        // signal a classifier will pick up.
+        let mut rng = Pcg64::seeded(5);
+        let side = 16;
+        let a1 = sample(0, side, 10, &mut rng);
+        let a2 = sample(0, side, 10, &mut rng);
+        let b1 = sample(5, side, 10, &mut rng);
+        let within = stats::cosine(&a1.data, &a2.data).abs();
+        let cross = stats::cosine(&a1.data, &b1.data).abs();
+        // Random phase means within-class cosine isn't huge; but across
+        // many pixels the structure still correlates more than cross-class
+        // on average. Use a soft check over several draws.
+        let mut w_sum = 0.0;
+        let mut c_sum = 0.0;
+        for _ in 0..20 {
+            let x = sample(2, side, 10, &mut rng);
+            let y = sample(2, side, 10, &mut rng);
+            let z = sample(7, side, 10, &mut rng);
+            w_sum += stats::cosine(&x.data, &y.data).abs();
+            c_sum += stats::cosine(&x.data, &z.data).abs();
+        }
+        assert!(
+            w_sum > c_sum || within > cross,
+            "within {w_sum} vs cross {c_sum}"
+        );
+    }
+
+    #[test]
+    fn values_are_bounded() {
+        let ds = generate(20, 16, 10, 1);
+        for im in &ds.images {
+            for &v in &im.data {
+                assert!(v.is_finite() && v.abs() < 10.0);
+            }
+        }
+    }
+}

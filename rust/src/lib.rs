@@ -1,0 +1,23 @@
+//! lgp — Linear Gradient Prediction with Control Variates.
+//!
+//! Full-system reproduction of Ciosek, Felicioni & Elenter Litwin (2025):
+//! a Rust training coordinator (Layer 3) driving AOT-compiled JAX/Pallas
+//! compute artifacts (Layers 2/1) through the PJRT C API, with the paper's
+//! predicted-gradient-descent algorithm, NTK-inspired linear gradient
+//! predictor, control-variate debiasing, and the Section 5 theory.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod model;
+pub mod optim;
+pub mod predictor;
+pub mod tensor;
+pub mod theory;
+pub mod util;

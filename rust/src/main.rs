@@ -1,0 +1,227 @@
+//! lgp — leader entrypoint.
+//!
+//! Subcommands:
+//!   train      run Algorithm 1 (GPR) or Algorithm 2 (baseline)
+//!   theory     print the Section 5 closed-form tables (Thm 3/4, cost model)
+//!   sweep-f    train short runs across control fractions f
+//!   data       generate + describe the synthetic dataset
+//!   info       show manifest / artifact inventory
+//!
+//! Examples:
+//!   lgp train --preset tiny --algo gpr --f 0.25 --steps 30
+//!   lgp train --preset small --algo baseline --budget 60
+//!   lgp theory
+//!   lgp sweep-f --preset small --fs 0.125,0.25,0.5 --steps 20
+
+use lgp::bench_support::Table;
+use lgp::config::RunConfig;
+use lgp::coordinator::Trainer;
+use lgp::theory::{self, CostModel};
+use lgp::util::cli::Args;
+use lgp::util::CsvWriter;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("train") => run(cmd_train(&args)),
+        Some("theory") => run(cmd_theory(&args)),
+        Some("sweep-f") => run(cmd_sweep_f(&args)),
+        Some("data") => run(cmd_data(&args)),
+        Some("info") => run(cmd_info(&args)),
+        _ => {
+            eprint!("{}", HELP);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+lgp — Linear Gradient Prediction with Control Variates (paper reproduction)
+
+USAGE: lgp <subcommand> [--key value]...
+
+SUBCOMMANDS
+  train    --preset tiny|small|paper --algo gpr|baseline [--f 0.25]
+           [--steps N] [--budget SECS] [--accum K] [--optimizer muon|adamw|sgd|momentum]
+           [--lr 0.02] [--refit-every N] [--seed S] [--csv out.csv]
+  theory   print Theorem 3/4 tables and the cost model
+  sweep-f  --fs 0.125,0.25,0.5 plus the train flags
+  data     --n 100 --side 32 [--seed S]  describe synthetic data
+  info     --preset tiny  show the artifact manifest
+";
+
+fn run(r: anyhow::Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.str_opt("config") {
+        let j = RunConfig::load_json_file(std::path::Path::new(&path))?;
+        cfg.apply_json(&j)?;
+    }
+    cfg.apply_args(args)?;
+    let unknown = args.unknown_keys();
+    anyhow::ensure!(unknown.is_empty(), "unknown flags: {unknown:?}");
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let csv_path = args.str_opt("csv");
+    let show_artifact_times = args.flag("artifact-times");
+    let cfg = build_config(args)?;
+    let algo = cfg.algo;
+    let mut trainer = Trainer::new(cfg)?;
+    let mut csv = match &csv_path {
+        Some(p) => Some(CsvWriter::create(
+            std::path::Path::new(p),
+            &lgp::metrics::LogRow::HEADER,
+        )?),
+        None => None,
+    };
+    let t0 = std::time::Instant::now();
+    trainer.train(csv.as_mut())?;
+    let dt = t0.elapsed().as_secs_f64();
+    let st = trainer.rt.stats_snapshot();
+    println!(
+        "algo={algo:?} steps={} wall={dt:.1}s final_val_acc={:.4} examples={} cost_units={:.0}",
+        trainer.step_count(),
+        trainer.final_val_acc(),
+        trainer.examples_seen,
+        trainer.cost_units,
+    );
+    println!(
+        "runtime: calls={} exec={:.2}s upload={:.2}s download={:.2}s compile={:.2}s",
+        st.calls, st.exec_secs, st.upload_secs, st.download_secs, st.compile_secs
+    );
+    if show_artifact_times {
+        for (name, (n, secs)) in &st.per_artifact {
+            println!("  {name:<28} calls={n:<4} total={secs:.2}s avg={:.1}ms", secs / *n as f64 * 1e3);
+        }
+    }
+    if let Some(a) = trainer.tracker.snapshot() {
+        let cost = CostModel::default();
+        println!(
+            "alignment: rho={:.3} kappa={:.3} phi(f)={:.3} break_even_margin={:+.3} f*={:.3}",
+            a.rho,
+            a.kappa,
+            a.phi(trainer.cfg.f),
+            a.break_even_margin(trainer.cfg.f, &cost),
+            a.f_star(&cost)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_theory(_args: &Args) -> anyhow::Result<()> {
+    let cost = CostModel::default();
+    println!("Cost model: Forward=1, Backward=2, CheapForward=0.7\n");
+    println!("Theorem 3 — break-even alignment rho*(f, kappa):");
+    let mut t = Table::new(&["f", "gamma(f)", "rho*(k=0.8)", "rho*(k=1)", "rho*(k=1.2)"]);
+    for &f in &[0.05, 0.1, 0.2, 0.25, 0.5, 0.75, 1.0] {
+        t.row(vec![
+            format!("{f:.2}"),
+            format!("{:.3}", cost.gamma(f)),
+            format!("{:.3}", theory::rho_star(f, 0.8, &cost)),
+            format!("{:.3}", theory::rho_star(f, 1.0, &cost)),
+            format!("{:.3}", theory::rho_star(f, 1.2, &cost)),
+        ]);
+    }
+    t.print();
+    println!("\nTheorem 4 — regime switch and optimal control fraction:");
+    let mut t = Table::new(&["kappa", "rho_switch", "f*(rho=0.7)", "f*(rho=0.8)", "f*(rho=0.9)"]);
+    for &k in &[0.8, 0.9, 1.0, 1.1, 1.2] {
+        t.row(vec![
+            format!("{k:.1}"),
+            format!("{:.4}", theory::rho_switch(k, &cost)),
+            format!("{:.3}", theory::f_star(0.7, k, &cost)),
+            format!("{:.3}", theory::f_star(0.8, k, &cost)),
+            format!("{:.3}", theory::f_star(0.9, k, &cost)),
+        ]);
+    }
+    t.print();
+    println!("\nPaper quotes: rho*(0.1,1)≈0.876, rho*(0.2,1)≈0.802, rho*(0.5,1)≈0.689,");
+    println!("              rho_switch(1)≈0.6167, f*(0.8,1)≈0.45");
+    Ok(())
+}
+
+fn cmd_sweep_f(args: &Args) -> anyhow::Result<()> {
+    let fs = args.f64_list("fs", &[0.125, 0.25, 0.5]);
+    let base = build_config(args)?;
+    let mut t = Table::new(&["f", "steps", "wall_s", "val_acc", "rho", "cost_units"]);
+    for &f in &fs {
+        let mut cfg = base.clone();
+        cfg.f = f;
+        cfg.algo = lgp::config::Algo::Gpr;
+        let mut trainer = Trainer::new(cfg)?;
+        let t0 = std::time::Instant::now();
+        trainer.train(None)?;
+        let rho = trainer.tracker.snapshot().map_or(f64::NAN, |a| a.rho);
+        t.row(vec![
+            format!("{f:.3}"),
+            format!("{}", trainer.step_count()),
+            format!("{:.1}", t0.elapsed().as_secs_f64()),
+            format!("{:.4}", trainer.final_val_acc()),
+            format!("{rho:.3}"),
+            format!("{:.0}", trainer.cost_units),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize_or("n", 100);
+    let side = args.usize_or("side", 32);
+    let seed = args.u64_or("seed", 0);
+    let ds = lgp::data::synthetic::generate(n, side, 10, seed);
+    let mut counts = [0usize; 10];
+    let mut mean = 0.0f64;
+    let mut mx = f32::MIN;
+    for (im, &l) in ds.images.iter().zip(&ds.labels) {
+        counts[l as usize] += 1;
+        for &v in &im.data {
+            mean += v as f64;
+            mx = mx.max(v.abs());
+        }
+    }
+    mean /= (n * 3 * side * side) as f64;
+    println!("synthetic dataset: n={n} side={side} seed={seed}");
+    println!("class counts: {counts:?}");
+    println!("pixel mean={mean:.4} max|v|={mx:.2}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let m = lgp::model::Manifest::load(&cfg.artifacts_dir)?;
+    println!("preset={} image={} width={} classes={}", m.preset, m.image, m.width, m.classes);
+    println!(
+        "trunk_params={} total_params={} rank={} n_fit={} micro_batch={} fs={:?}",
+        m.trunk_params, m.total_params, m.rank, m.n_fit, m.micro_batch, m.fs
+    );
+    let mut t = Table::new(&["artifact", "args", "outs", "file"]);
+    for (name, a) in &m.artifacts {
+        t.row(vec![
+            name.clone(),
+            a.args.len().to_string(),
+            a.outs.len().to_string(),
+            a.file.file_name().unwrap().to_string_lossy().into_owned(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,323 @@
+//! Training metrics: the paper's Section 5.3 monitoring quantities
+//! (cosine alignment ρ̂, scale ratio κ̂, implied variance inflation φ̂ and
+//! break-even margin), plus loss/accuracy meters and run logging.
+
+use crate::theory::{self, CostModel};
+
+/// Streaming estimator of the alignment statistics of Sec. 5:
+///   σ_g² = E‖g−μ‖², σ_h² = E‖h−μ_h‖², τ = E⟨g−μ, h−μ_h⟩,
+///   ρ = τ/(σ_g σ_h), κ = σ_h/σ_g,
+/// estimated from per-example (g, h) pairs collected on control batches.
+/// Means are estimated from the same sample (plug-in), which is standard
+/// for a monitoring metric.
+#[derive(Default)]
+pub struct AlignmentTracker {
+    /// Batches of per-example pairs pushed since the last `snapshot`.
+    pairs: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Cap on retained pairs (memory guard for big trunks).
+    pub max_pairs: usize,
+}
+
+/// Point-in-time alignment estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct Alignment {
+    pub rho: f64,
+    pub kappa: f64,
+    pub sigma_g: f64,
+    pub sigma_h: f64,
+    pub n: usize,
+}
+
+impl AlignmentTracker {
+    pub fn new(max_pairs: usize) -> AlignmentTracker {
+        AlignmentTracker { pairs: Vec::new(), max_pairs }
+    }
+
+    /// Push one per-example (true gradient, predicted gradient) pair.
+    pub fn push(&mut self, g: Vec<f32>, h: Vec<f32>) {
+        debug_assert_eq!(g.len(), h.len());
+        if self.pairs.len() >= self.max_pairs.max(4) {
+            self.pairs.remove(0); // sliding window
+        }
+        self.pairs.push((g, h));
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Compute (ρ̂, κ̂) from the retained window. None if < 2 pairs.
+    pub fn snapshot(&self) -> Option<Alignment> {
+        alignment_of(&self.pairs)
+    }
+}
+
+/// One-shot alignment computation over (g, h) pair slices — the cheap
+/// path the coordinator uses at refit time (no pair retention; a single
+/// pass over the data). `AlignmentTracker` remains for streaming use.
+pub fn alignment_of(pairs: &[(Vec<f32>, Vec<f32>)]) -> Option<Alignment> {
+    let n = pairs.len();
+    if n < 2 {
+        return None;
+    }
+    let dim = pairs[0].0.len();
+    let mut mu = vec![0.0f64; dim];
+    let mut mu_h = vec![0.0f64; dim];
+    for (g, h) in pairs {
+        for i in 0..dim {
+            mu[i] += g[i] as f64;
+            mu_h[i] += h[i] as f64;
+        }
+    }
+    for i in 0..dim {
+        mu[i] /= n as f64;
+        mu_h[i] /= n as f64;
+    }
+    let (mut sg2, mut sh2, mut tau) = (0.0f64, 0.0f64, 0.0f64);
+    for (g, h) in pairs {
+        for i in 0..dim {
+            let u = g[i] as f64 - mu[i];
+            let v = h[i] as f64 - mu_h[i];
+            sg2 += u * u;
+            sh2 += v * v;
+            tau += u * v;
+        }
+    }
+    sg2 /= n as f64;
+    sh2 /= n as f64;
+    tau /= n as f64;
+    if sg2 < 1e-24 || sh2 < 1e-24 {
+        return None;
+    }
+    Some(Alignment {
+        rho: tau / (sg2.sqrt() * sh2.sqrt()),
+        kappa: (sh2 / sg2).sqrt(),
+        sigma_g: sg2.sqrt(),
+        sigma_h: sh2.sqrt(),
+        n,
+    })
+}
+
+/// Cached alignment holder: updated once per predictor refit, queried
+/// every logging step for free.
+#[derive(Default)]
+pub struct AlignmentMeter {
+    last: Option<Alignment>,
+}
+
+impl AlignmentMeter {
+    pub fn update(&mut self, a: Option<Alignment>) {
+        if a.is_some() {
+            self.last = a;
+        }
+    }
+
+    pub fn snapshot(&self) -> Option<Alignment> {
+        self.last
+    }
+}
+
+impl Alignment {
+    /// Variance inflation φ(f, ρ̂, κ̂) implied by the current estimate.
+    pub fn phi(&self, f: f64) -> f64 {
+        theory::phi(f, self.rho, self.kappa)
+    }
+
+    /// Break-even margin 1 − φγ (positive ⇒ beating vanilla under equal
+    /// compute, Theorem 3).
+    pub fn break_even_margin(&self, f: f64, cost: &CostModel) -> f64 {
+        1.0 - theory::q_objective(f, self.rho, self.kappa, cost)
+    }
+
+    /// Paper-optimal control fraction f*(ρ̂, κ̂) (Theorem 4) — what an
+    /// adaptive-f controller would pick right now.
+    pub fn f_star(&self, cost: &CostModel) -> f64 {
+        theory::f_star(self.rho, self.kappa, cost)
+    }
+}
+
+/// Classification accuracy from probabilities (row-major m x C).
+pub fn accuracy(probs: &[f32], labels: &[i32], classes: usize) -> f64 {
+    let m = labels.len();
+    if m == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = &probs[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for (j, &p) in row.iter().enumerate() {
+            if p > row[best] {
+                best = j;
+            }
+        }
+        if best == y as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / m as f64
+}
+
+/// Exponential moving average meter for smoothed loss curves.
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    pub value: f64,
+    alpha: f64,
+    initialized: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        Ema { value: 0.0, alpha, initialized: false }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        if self.initialized {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        } else {
+            self.value = x;
+            self.initialized = true;
+        }
+        self.value
+    }
+}
+
+/// One row of the training log (shared by both algorithms so curves are
+/// directly comparable — the Figure 1 data schema).
+#[derive(Clone, Debug)]
+pub struct LogRow {
+    pub step: usize,
+    pub wall_secs: f64,
+    pub loss: f64,
+    pub train_acc: f64,
+    pub val_acc: f64,
+    pub rho: f64,
+    pub kappa: f64,
+    pub phi: f64,
+    pub examples_seen: usize,
+}
+
+impl LogRow {
+    pub const HEADER: [&'static str; 9] = [
+        "step", "wall_secs", "loss", "train_acc", "val_acc", "rho", "kappa", "phi",
+        "examples_seen",
+    ];
+
+    pub fn values(&self) -> [f64; 9] {
+        [
+            self.step as f64,
+            self.wall_secs,
+            self.loss,
+            self.train_acc,
+            self.val_acc,
+            self.rho,
+            self.kappa,
+            self.phi,
+            self.examples_seen as f64,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn tracker_detects_perfect_alignment() {
+        let mut t = AlignmentTracker::new(64);
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..32 {
+            let mut g = vec![0.0f32; 50];
+            rng.fill_normal(&mut g, 1.0);
+            t.push(g.clone(), g);
+        }
+        let a = t.snapshot().unwrap();
+        assert!((a.rho - 1.0).abs() < 1e-6, "rho={}", a.rho);
+        assert!((a.kappa - 1.0).abs() < 1e-6);
+        assert!((a.phi(0.25) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracker_detects_known_correlation() {
+        let mut t = AlignmentTracker::new(600);
+        let mut rng = Pcg64::seeded(2);
+        let rho = 0.8f32;
+        for _ in 0..500 {
+            let mut u = vec![0.0f32; 30];
+            let mut w = vec![0.0f32; 30];
+            rng.fill_normal(&mut u, 1.0);
+            rng.fill_normal(&mut w, 1.0);
+            let h: Vec<f32> = u
+                .iter()
+                .zip(&w)
+                .map(|(ui, wi)| 2.0 * (rho * ui + (1.0 - rho * rho).sqrt() * wi))
+                .collect();
+            t.push(u, h);
+        }
+        let a = t.snapshot().unwrap();
+        assert!((a.rho - 0.8).abs() < 0.05, "rho={}", a.rho);
+        assert!((a.kappa - 2.0).abs() < 0.1, "kappa={}", a.kappa);
+    }
+
+    #[test]
+    fn tracker_orthogonal_gradients() {
+        let mut t = AlignmentTracker::new(300);
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..200 {
+            let mut g = vec![0.0f32; 40];
+            let mut h = vec![0.0f32; 40];
+            rng.fill_normal(&mut g, 1.0);
+            rng.fill_normal(&mut h, 1.0);
+            t.push(g, h);
+        }
+        let a = t.snapshot().unwrap();
+        assert!(a.rho.abs() < 0.1, "rho={}", a.rho);
+    }
+
+    #[test]
+    fn tracker_window_caps_memory() {
+        let mut t = AlignmentTracker::new(8);
+        for i in 0..100 {
+            t.push(vec![i as f32; 4], vec![1.0; 4]);
+        }
+        assert_eq!(t.len(), 8);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let probs = vec![
+            0.1, 0.9, // -> 1
+            0.7, 0.3, // -> 0
+            0.5, 0.5, // tie -> 0 (first argmax)
+        ];
+        assert!((accuracy(&probs, &[1, 0, 1], 2) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(accuracy(&[], &[], 2), 0.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        e.push(10.0);
+        assert_eq!(e.value, 10.0);
+        for _ in 0..30 {
+            e.push(2.0);
+        }
+        assert!((e.value - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn break_even_margin_sign() {
+        let good = Alignment { rho: 0.95, kappa: 1.0, sigma_g: 1.0, sigma_h: 1.0, n: 10 };
+        let bad = Alignment { rho: 0.3, kappa: 1.0, sigma_g: 1.0, sigma_h: 1.0, n: 10 };
+        let cost = CostModel::default();
+        assert!(good.break_even_margin(0.25, &cost) > 0.0);
+        assert!(bad.break_even_margin(0.25, &cost) < 0.0);
+        assert!(good.f_star(&cost) < 1.0);
+        assert_eq!(bad.f_star(&cost), 1.0);
+    }
+}

@@ -1,0 +1,271 @@
+//! manifest.json loader — the typed contract between `python/compile/aot.py`
+//! and the Rust runtime. Everything shape-related is validated here once so
+//! the hot path can index blindly.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One trunk parameter's slot in the flat vector.
+#[derive(Clone, Debug)]
+pub struct TrunkParam {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+    /// Eligible for Muon's matrix update (2-D hidden-layer weights).
+    pub muon: bool,
+}
+
+/// Metadata for one AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// (name, shape, dtype) per positional argument.
+    pub args: Vec<(String, Vec<usize>, String)>,
+    pub outs: Vec<(String, Vec<usize>, String)>,
+}
+
+/// Parsed + validated manifest for one preset's artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    // model dims
+    pub image: usize,
+    pub classes: usize,
+    pub width: usize,
+    pub label_smoothing: f64,
+    // predictor dims
+    pub rank: usize,
+    pub n_chunk: usize,
+    pub n_fit: usize,
+    pub feat_dim: usize,
+    // parameter dims
+    pub trunk_params: usize,
+    pub total_params: usize,
+    // batching
+    pub micro_batch: usize,
+    pub fs: Vec<f64>,
+    pub val_batch: usize,
+    pub trunk_layout: Vec<TrunkParam>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub init_trunk: PathBuf,
+    pub init_head_w: PathBuf,
+    pub init_head_b: PathBuf,
+}
+
+fn req_usize(j: &Json, path: &[&str]) -> anyhow::Result<usize> {
+    j.at(path)
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("manifest missing numeric field {path:?}"))
+}
+
+fn args_list(j: &Json) -> anyhow::Result<Vec<(String, Vec<usize>, String)>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected array of arg metadata"))?
+        .iter()
+        .map(|a| {
+            Ok((
+                a.at(&["name"]).as_str().unwrap_or("?").to_string(),
+                a.at(&["shape"])
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow::anyhow!("bad shape in arg metadata"))?,
+                a.at(&["dtype"]).as_str().unwrap_or("f32").to_string(),
+            ))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — did you run `make artifacts`? ({e})",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+
+        let mut layout = Vec::new();
+        for item in j
+            .at(&["trunk_layout"])
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing trunk_layout"))?
+        {
+            layout.push(TrunkParam {
+                name: item.at(&["name"]).as_str().unwrap_or("?").to_string(),
+                shape: item
+                    .at(&["shape"])
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow::anyhow!("bad trunk_layout shape"))?,
+                offset: req_usize(item, &["offset"])?,
+                len: req_usize(item, &["len"])?,
+                muon: item.at(&["muon"]).as_bool().unwrap_or(false),
+            });
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in j
+            .at(&["artifacts"])
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(
+                        meta.at(&["file"])
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("artifact {name} missing file"))?,
+                    ),
+                    args: args_list(meta.at(&["args"]))?,
+                    outs: args_list(meta.at(&["outs"]))?,
+                },
+            );
+        }
+
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            preset: j.at(&["preset"]).as_str().unwrap_or("?").to_string(),
+            image: req_usize(&j, &["model", "image"])?,
+            classes: req_usize(&j, &["model", "classes"])?,
+            width: req_usize(&j, &["model", "width"])?,
+            label_smoothing: j
+                .at(&["model", "label_smoothing"])
+                .as_f64()
+                .unwrap_or(0.05),
+            rank: req_usize(&j, &["predictor", "rank"])?,
+            n_chunk: req_usize(&j, &["predictor", "n_chunk"])?,
+            n_fit: req_usize(&j, &["predictor", "n_fit"])?,
+            feat_dim: req_usize(&j, &["predictor", "feat_dim"])?,
+            trunk_params: req_usize(&j, &["dims", "trunk_params"])?,
+            total_params: req_usize(&j, &["dims", "total_params"])?,
+            micro_batch: req_usize(&j, &["batch", "micro"])?,
+            fs: j
+                .at(&["batch", "fs"])
+                .as_arr()
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default(),
+            val_batch: req_usize(&j, &["batch", "val"])?,
+            trunk_layout: layout,
+            artifacts,
+            init_trunk: dir.join(j.at(&["init", "trunk"]).as_str().unwrap_or("init_trunk.bin")),
+            init_head_w: dir.join(j.at(&["init", "head_w"]).as_str().unwrap_or("init_head_w.bin")),
+            init_head_b: dir.join(j.at(&["init", "head_b"]).as_str().unwrap_or("init_head_b.bin")),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        // Layout must tile the trunk vector exactly.
+        let mut off = 0;
+        for p in &self.trunk_layout {
+            anyhow::ensure!(
+                p.offset == off,
+                "trunk_layout gap at {} (offset {} != {})",
+                p.name,
+                p.offset,
+                off
+            );
+            anyhow::ensure!(
+                p.len == p.shape.iter().product::<usize>(),
+                "trunk_layout len mismatch at {}",
+                p.name
+            );
+            off += p.len;
+        }
+        anyhow::ensure!(
+            off == self.trunk_params,
+            "trunk_layout covers {off} of {} params",
+            self.trunk_params
+        );
+        anyhow::ensure!(
+            self.total_params == self.trunk_params + self.width * self.classes + self.classes,
+            "total_params inconsistent"
+        );
+        anyhow::ensure!(!self.artifacts.is_empty(), "no artifacts in manifest");
+        Ok(())
+    }
+
+    /// Micro-batch split sizes for control fraction f: (m_c, m_p).
+    pub fn split_sizes(&self, f: f64) -> (usize, usize) {
+        let mc = ((f * self.micro_batch as f64).round() as usize)
+            .clamp(1, self.micro_batch);
+        (mc, self.micro_batch - mc)
+    }
+
+    /// Find an artifact by logical name, with a helpful error.
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{name}' not in manifest (have: {:?}) — \
+                 re-run `make artifacts` with the right --fs",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn train_grads_name(&self, batch: usize) -> String {
+        format!("train_grads_b{batch}")
+    }
+
+    pub fn cheap_fwd_name(&self, batch: usize) -> String {
+        format!("cheap_fwd_b{batch}")
+    }
+
+    pub fn predict_grad_name(&self, batch: usize) -> String {
+        format!("predict_grad_b{batch}")
+    }
+
+    pub fn per_example_grads_name(&self) -> String {
+        format!("per_example_grads_b{}", self.n_chunk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir(preset: &str) -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(preset);
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let Some(dir) = artifacts_dir("tiny") else {
+            eprintln!("skipping: tiny artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert!(m.trunk_params > 1000);
+        assert_eq!(m.classes, 10);
+        assert!(m.artifacts.contains_key("cv_combine"));
+        assert!(m.artifact("nonexistent").is_err());
+        // Every referenced file exists.
+        for a in m.artifacts.values() {
+            assert!(a.file.exists(), "{:?}", a.file);
+        }
+        assert!(m.init_trunk.exists());
+    }
+
+    #[test]
+    fn split_sizes_partition_the_micro_batch() {
+        let Some(dir) = artifacts_dir("tiny") else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        for &f in &[0.1, 0.25, 0.5, 0.99] {
+            let (mc, mp) = m.split_sizes(f);
+            assert_eq!(mc + mp, m.micro_batch);
+            assert!(mc >= 1);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-side host state: the AOT manifest (the contract with the python
+//! compile path) and the parameter store the optimizer updates.
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{ArtifactMeta, Manifest, TrunkParam};
+pub use params::ParamStore;

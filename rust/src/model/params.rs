@@ -1,0 +1,214 @@
+//! Host-side parameter store: the flat trunk vector plus the head, loaded
+//! from the AOT init bins and updated in place by the optimizer.
+
+use super::manifest::Manifest;
+use crate::tensor::Tensor;
+use crate::util;
+
+/// The three parameter tensors the whole system revolves around.
+/// Trunk layout is defined by the manifest; `head_w` is (D, C) row-major.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub trunk: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    pub width: usize,
+    pub classes: usize,
+}
+
+impl ParamStore {
+    /// Load initial parameters written by aot.py (matches the jax init
+    /// exactly, so Rust and python tests see the same model).
+    pub fn load_init(m: &Manifest) -> anyhow::Result<ParamStore> {
+        let trunk = util::read_f32_file(&m.init_trunk)?;
+        anyhow::ensure!(
+            trunk.len() == m.trunk_params,
+            "init_trunk has {} values, manifest says {}",
+            trunk.len(),
+            m.trunk_params
+        );
+        let head_w = util::read_f32_file(&m.init_head_w)?;
+        anyhow::ensure!(head_w.len() == m.width * m.classes, "init_head_w size mismatch");
+        let head_b = util::read_f32_file(&m.init_head_b)?;
+        anyhow::ensure!(head_b.len() == m.classes, "init_head_b size mismatch");
+        Ok(ParamStore { trunk, head_w, head_b, width: m.width, classes: m.classes })
+    }
+
+    /// Total parameter count (trunk + head).
+    pub fn total_len(&self) -> usize {
+        self.trunk.len() + self.head_w.len() + self.head_b.len()
+    }
+
+    /// View one trunk parameter as a Tensor copy (for Muon's per-matrix
+    /// math). Hot loops use `slice` instead to avoid the copy.
+    pub fn trunk_tensor(&self, p: &super::TrunkParam) -> Tensor {
+        Tensor::from_vec(self.trunk[p.offset..p.offset + p.len].to_vec(), &p.shape)
+    }
+
+    pub fn trunk_slice(&self, p: &super::TrunkParam) -> &[f32] {
+        &self.trunk[p.offset..p.offset + p.len]
+    }
+
+    pub fn trunk_slice_mut(&mut self, p: &super::TrunkParam) -> &mut [f32] {
+        &mut self.trunk[p.offset..p.offset + p.len]
+    }
+
+    /// Concatenate all parameters into one flat vector
+    /// [trunk | head_w | head_b] — the cv_combine artifact layout.
+    pub fn flatten_all(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total_len());
+        out.extend_from_slice(&self.trunk);
+        out.extend_from_slice(&self.head_w);
+        out.extend_from_slice(&self.head_b);
+        out
+    }
+
+    /// Save a checkpoint (three .bin files under `dir`).
+    pub fn save(&self, dir: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        util::write_f32_file(&dir.join("trunk.bin"), &self.trunk)?;
+        util::write_f32_file(&dir.join("head_w.bin"), &self.head_w)?;
+        util::write_f32_file(&dir.join("head_b.bin"), &self.head_b)?;
+        Ok(())
+    }
+
+    /// Restore a checkpoint saved by `save`.
+    pub fn restore(&mut self, dir: &std::path::Path) -> anyhow::Result<()> {
+        let trunk = util::read_f32_file(&dir.join("trunk.bin"))?;
+        anyhow::ensure!(trunk.len() == self.trunk.len(), "checkpoint trunk size mismatch");
+        let head_w = util::read_f32_file(&dir.join("head_w.bin"))?;
+        anyhow::ensure!(head_w.len() == self.head_w.len(), "checkpoint head_w size mismatch");
+        let head_b = util::read_f32_file(&dir.join("head_b.bin"))?;
+        anyhow::ensure!(head_b.len() == self.head_b.len(), "checkpoint head_b size mismatch");
+        self.trunk = trunk;
+        self.head_w = head_w;
+        self.head_b = head_b;
+        Ok(())
+    }
+}
+
+/// A flat gradient in the same [trunk | head_w | head_b] layout.
+#[derive(Clone, Debug)]
+pub struct FlatGrad {
+    pub trunk: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+impl FlatGrad {
+    pub fn zeros_like(p: &ParamStore) -> FlatGrad {
+        FlatGrad {
+            trunk: vec![0.0; p.trunk.len()],
+            head_w: vec![0.0; p.head_w.len()],
+            head_b: vec![0.0; p.head_b.len()],
+        }
+    }
+
+    pub fn axpy(&mut self, s: f32, other: &FlatGrad) {
+        for (x, y) in self.trunk.iter_mut().zip(&other.trunk) {
+            *x += s * y;
+        }
+        for (x, y) in self.head_w.iter_mut().zip(&other.head_w) {
+            *x += s * y;
+        }
+        for (x, y) in self.head_b.iter_mut().zip(&other.head_b) {
+            *x += s * y;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in self.trunk.iter_mut().chain(&mut self.head_w).chain(&mut self.head_b) {
+            *x *= s;
+        }
+    }
+
+    pub fn norm(&self) -> f32 {
+        let t = crate::tensor::stats::dot_f64(&self.trunk, &self.trunk)
+            + crate::tensor::stats::dot_f64(&self.head_w, &self.head_w)
+            + crate::tensor::stats::dot_f64(&self.head_b, &self.head_b);
+        t.sqrt() as f32
+    }
+
+    /// Split a single concatenated vector back into a FlatGrad.
+    pub fn from_concat(v: &[f32], trunk_len: usize, head_w_len: usize) -> FlatGrad {
+        FlatGrad {
+            trunk: v[..trunk_len].to_vec(),
+            head_w: v[trunk_len..trunk_len + head_w_len].to_vec(),
+            head_b: v[trunk_len + head_w_len..].to_vec(),
+        }
+    }
+
+    pub fn concat(&self) -> Vec<f32> {
+        let mut out =
+            Vec::with_capacity(self.trunk.len() + self.head_w.len() + self.head_b.len());
+        out.extend_from_slice(&self.trunk);
+        out.extend_from_slice(&self.head_w);
+        out.extend_from_slice(&self.head_b);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy() -> ParamStore {
+        ParamStore {
+            trunk: (0..20).map(|i| i as f32).collect(),
+            head_w: vec![1.0; 6],
+            head_b: vec![0.5; 3],
+            width: 2,
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn flatten_layout() {
+        let p = dummy();
+        let flat = p.flatten_all();
+        assert_eq!(flat.len(), p.total_len());
+        assert_eq!(flat[0], 0.0);
+        assert_eq!(flat[20], 1.0);
+        assert_eq!(flat[26], 0.5);
+    }
+
+    #[test]
+    fn flat_grad_round_trip() {
+        let p = dummy();
+        let mut g = FlatGrad::zeros_like(&p);
+        g.trunk[3] = 2.0;
+        g.head_w[1] = -1.0;
+        g.head_b[2] = 0.25;
+        let cat = g.concat();
+        let g2 = FlatGrad::from_concat(&cat, 20, 6);
+        assert_eq!(g2.trunk, g.trunk);
+        assert_eq!(g2.head_w, g.head_w);
+        assert_eq!(g2.head_b, g.head_b);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let p = dummy();
+        let mut a = FlatGrad::zeros_like(&p);
+        let mut b = FlatGrad::zeros_like(&p);
+        b.trunk[0] = 4.0;
+        b.head_b[0] = 2.0;
+        a.axpy(0.5, &b);
+        assert_eq!(a.trunk[0], 2.0);
+        assert_eq!(a.head_b[0], 1.0);
+        a.scale(2.0);
+        assert_eq!(a.trunk[0], 4.0);
+        assert!((a.norm() - (16.0f32 + 4.0).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let dir = std::env::temp_dir().join("lgp_params_test");
+        let mut p = dummy();
+        p.save(&dir).unwrap();
+        let orig = p.clone();
+        p.trunk[0] = 99.0;
+        p.restore(&dir).unwrap();
+        assert_eq!(p.trunk, orig.trunk);
+    }
+}

@@ -1,0 +1,267 @@
+//! The paper's NTK-inspired linear gradient predictor (Section 4).
+//!
+//! State: the rank-r basis `U ∈ R^{P_T×r}` and the bilinear coefficient
+//! matrix `B ∈ R^{r×(D+1)D}` such that for one example
+//!
+//!     ĝ_trunk(x) = U · B · vec([a(x); 1] h(x)^T),   h = W_a^T r_cls.
+//!
+//! `fit.rs` estimates (U, B) from collected per-example gradients; this
+//! module holds the state, the host-side batched predictor (mirror of the
+//! L1 pallas kernel — used for diagnostics and as a CPU fallback), and the
+//! refit scheduler.
+
+pub mod fit;
+
+use crate::tensor::{matmul, Tensor};
+
+/// Predictor parameters + bookkeeping.
+pub struct Predictor {
+    /// (P_T, r) orthonormal-column basis of the gradient subspace.
+    pub u: Tensor,
+    /// (r, (D+1)*D) bilinear coefficients.
+    pub b: Tensor,
+    pub width: usize,
+    pub rank: usize,
+    /// Number of completed fits (0 = never fitted; predictions are zero,
+    /// which the control variate debiases to plain — smaller-batch — SGD).
+    pub fits: usize,
+    /// Monotone version counter used by the runtime to invalidate
+    /// device-resident copies of U and B.
+    pub version: u64,
+}
+
+impl Predictor {
+    /// Zero-initialized predictor (predicts ĝ = 0 until first fit).
+    pub fn new(trunk_params: usize, width: usize, rank: usize) -> Predictor {
+        Predictor {
+            u: Tensor::zeros(&[trunk_params, rank]),
+            b: Tensor::zeros(&[rank, (width + 1) * width]),
+            width,
+            rank,
+            fits: 0,
+            version: 0,
+        }
+    }
+
+    /// Install freshly fitted (U, B).
+    pub fn install(&mut self, u: Tensor, b: Tensor) {
+        assert_eq!(u.shape, self.u.shape, "U shape changed");
+        assert_eq!(b.shape, self.b.shape, "B shape changed");
+        self.u = u;
+        self.b = b;
+        self.fits += 1;
+        self.version += 1;
+    }
+
+    /// Batched trunk-gradient prediction — the same three matmuls as the
+    /// pallas kernel (`python/compile/kernels/predict_grad.py`):
+    ///   F = A1^T H / m;  c = B vec(F);  ĝ = U c.
+    ///
+    /// `a`: (m, D) activations; `h`: (m, D) backprop features W_a^T r.
+    pub fn predict_mean_trunk(&self, a: &Tensor, h: &Tensor) -> Vec<f32> {
+        let m = a.rows();
+        let d = self.width;
+        assert_eq!(a.cols(), d);
+        assert_eq!(h.shape, vec![m, d]);
+        // F = [A;1]^T H / m, built directly without materializing A1.
+        let mut f = vec![0.0f32; (d + 1) * d];
+        for j in 0..m {
+            let arow = a.row(j);
+            let hrow = h.row(j);
+            for i in 0..d {
+                let ai = arow[i];
+                if ai == 0.0 {
+                    continue;
+                }
+                let frow = &mut f[i * d..(i + 1) * d];
+                for (fv, hv) in frow.iter_mut().zip(hrow) {
+                    *fv += ai * hv;
+                }
+            }
+            // bias row of A1 (all ones)
+            let frow = &mut f[d * d..(d + 1) * d];
+            for (fv, hv) in frow.iter_mut().zip(hrow) {
+                *fv += hv;
+            }
+        }
+        let inv_m = 1.0 / m as f32;
+        for v in &mut f {
+            *v *= inv_m;
+        }
+        let c = matmul::matvec(&self.b, &f);
+        matmul::matvec(&self.u, &c)
+    }
+
+    /// Per-example prediction ĝ_j (for the Sec. 5.3 ρ̂/κ̂ diagnostics).
+    pub fn predict_one_trunk(&self, a_row: &[f32], h_row: &[f32]) -> Vec<f32> {
+        let d = self.width;
+        let a1 = Tensor::from_vec(
+            a_row.iter().copied().chain(std::iter::once(1.0)).collect(),
+            &[1, d + 1],
+        );
+        let h = Tensor::from_vec(h_row.to_vec(), &[1, d]);
+        // reuse the batched path with m = 1 (mean over one example)
+        let a = Tensor::from_vec(a_row.to_vec(), &[1, d]);
+        let _ = a1;
+        self.predict_mean_trunk(&a, &h)
+    }
+
+    /// Backprop features H = R W_a, where `resid` is (m, C) and head_w is
+    /// row-major (D, C): h_j = W_a^T r_j = head_w · r_j.
+    pub fn backprop_features(resid: &Tensor, head_w: &[f32], d: usize) -> Tensor {
+        let (m, c) = (resid.rows(), resid.cols());
+        assert_eq!(head_w.len(), d * c);
+        let mut h = Tensor::zeros(&[m, d]);
+        for j in 0..m {
+            let r = resid.row(j);
+            let out = &mut h.data[j * d..(j + 1) * d];
+            for i in 0..d {
+                out[i] = crate::tensor::stats::dot(&head_w[i * c..(i + 1) * c], r);
+            }
+        }
+        h
+    }
+
+    /// Exact head gradients from activations + residuals (Sec. 4.3):
+    /// (g_w (D*C), g_b (C)).
+    pub fn head_grads(a: &Tensor, resid: &Tensor) -> (Vec<f32>, Vec<f32>) {
+        let (m, d) = (a.rows(), a.cols());
+        let c = resid.cols();
+        let mut gw = vec![0.0f32; d * c];
+        let mut gb = vec![0.0f32; c];
+        for j in 0..m {
+            let arow = a.row(j);
+            let rrow = resid.row(j);
+            for i in 0..d {
+                let ai = arow[i];
+                let out = &mut gw[i * c..(i + 1) * c];
+                for (o, rv) in out.iter_mut().zip(rrow) {
+                    *o += ai * rv;
+                }
+            }
+            for (o, rv) in gb.iter_mut().zip(rrow) {
+                *o += rv;
+            }
+        }
+        let inv_m = 1.0 / m as f32;
+        for v in gw.iter_mut().chain(gb.iter_mut()) {
+            *v *= inv_m;
+        }
+        (gw, gb)
+    }
+}
+
+/// Classification residuals r = p − y_smooth (m, C).
+pub fn residuals(probs: &[f32], labels: &[i32], classes: usize, smoothing: f32) -> Tensor {
+    let m = labels.len();
+    let mut r = Tensor::from_vec(probs.to_vec(), &[m, classes]);
+    let uniform = smoothing / classes as f32;
+    for (j, &y) in labels.iter().enumerate() {
+        let row = &mut r.data[j * classes..(j + 1) * classes];
+        for (k, v) in row.iter_mut().enumerate() {
+            *v -= uniform + if k == y as usize { 1.0 - smoothing } else { 0.0 };
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn zero_predictor_predicts_zero() {
+        let p = Predictor::new(100, 4, 2);
+        let mut rng = Pcg64::seeded(0);
+        let a = rand_t(&mut rng, &[3, 4]);
+        let h = rand_t(&mut rng, &[3, 4]);
+        assert!(p.predict_mean_trunk(&a, &h).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn predict_matches_explicit_linear_algebra() {
+        let mut rng = Pcg64::seeded(1);
+        let (m, d, r, pt) = (5usize, 6usize, 3usize, 200usize);
+        let mut p = Predictor::new(pt, d, r);
+        p.install(rand_t(&mut rng, &[pt, r]), rand_t(&mut rng, &[r, (d + 1) * d]));
+        let a = rand_t(&mut rng, &[m, d]);
+        let h = rand_t(&mut rng, &[m, d]);
+        // explicit: mean_j U B vec([a_j;1] h_j^T)
+        let mut want = vec![0.0f32; pt];
+        for j in 0..m {
+            let mut phi = vec![0.0f32; (d + 1) * d];
+            for i in 0..d {
+                for k in 0..d {
+                    phi[i * d + k] = a.at(j, i) * h.at(j, k);
+                }
+            }
+            for k in 0..d {
+                phi[d * d + k] = h.at(j, k);
+            }
+            let c = matmul::matvec(&p.b, &phi);
+            let g = matmul::matvec(&p.u, &c);
+            for (w, g) in want.iter_mut().zip(&g) {
+                *w += g / m as f32;
+            }
+        }
+        let got = p.predict_mean_trunk(&a, &h);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn residuals_sum_to_zero_at_uniform_probs() {
+        // With uniform probs and no smoothing, residual sums to 0 per row.
+        let probs = vec![0.25f32; 8];
+        let r = residuals(&probs, &[1, 3], 4, 0.0);
+        for j in 0..2 {
+            let s: f32 = r.row(j).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        // Label entry is probs - (1 - s) at the label coordinate.
+        assert!((r.at(0, 1) - (0.25 - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn head_grads_match_formula() {
+        let mut rng = Pcg64::seeded(2);
+        let a = rand_t(&mut rng, &[4, 3]);
+        let resid = rand_t(&mut rng, &[4, 2]);
+        let (gw, gb) = Predictor::head_grads(&a, &resid);
+        // gw = A^T R / m
+        let want = matmul::matmul(&a.t(), &resid);
+        for (x, y) in gw.iter().zip(&want.data) {
+            assert!((x - y / 4.0).abs() < 1e-5);
+        }
+        for k in 0..2 {
+            let want_b: f32 = (0..4).map(|j| resid.at(j, k)).sum::<f32>() / 4.0;
+            assert!((gb[k] - want_b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn backprop_features_orientation() {
+        // h_j = head_w · r_j with head_w (D, C) row-major.
+        let head_w = vec![1.0, 0.0, 0.0, 2.0]; // D=2, C=2: rows [1,0],[0,2]
+        let resid = Tensor::from_vec(vec![3.0, 4.0], &[1, 2]);
+        let h = Predictor::backprop_features(&resid, &head_w, 2);
+        assert_eq!(h.data, vec![3.0, 8.0]);
+    }
+
+    #[test]
+    fn install_bumps_version() {
+        let mut p = Predictor::new(10, 2, 1);
+        let v0 = p.version;
+        p.install(Tensor::zeros(&[10, 1]), Tensor::zeros(&[1, 6]));
+        assert_eq!(p.version, v0 + 1);
+        assert_eq!(p.fits, 1);
+    }
+}

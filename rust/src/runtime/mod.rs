@@ -1,0 +1,339 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client via the `xla` crate.
+//!
+//! Design (see /opt/xla-example/load_hlo for the pattern this adapts):
+//! - one `PjRtLoadedExecutable` per artifact, compiled on first use and
+//!   cached for the life of the runtime;
+//! - parameters are uploaded once per optimizer step as device buffers and
+//!   shared by every micro-batch call inside the step (`DeviceParams`);
+//! - predictor state (U, B) is uploaded once per refit (`DevicePredictor`),
+//!   keyed by the predictor's version counter;
+//! - all entry points return plain host `Vec<f32>`s — the coordinator owns
+//!   scheduling, the runtime owns marshalling.
+
+use crate::model::manifest::Manifest;
+use crate::model::params::ParamStore;
+use crate::predictor::Predictor;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Outputs of the `train_grads` entry point (Forward + Backward).
+pub struct TrainOut {
+    pub loss: f32,
+    pub g_trunk: Vec<f32>,
+    pub g_head_w: Vec<f32>,
+    pub g_head_b: Vec<f32>,
+    /// Last-hidden-layer activations a(x), (m, D) row-major.
+    pub a: Vec<f32>,
+    /// Softmax probabilities, (m, C) row-major.
+    pub probs: Vec<f32>,
+}
+
+/// Outputs of `predict_grad` (PredictGrad on one micro-batch).
+pub struct PredictOut {
+    pub g_trunk: Vec<f32>,
+    pub g_head_w: Vec<f32>,
+    pub g_head_b: Vec<f32>,
+}
+
+/// Device-resident parameter buffers, valid for one parameter version.
+pub struct DeviceParams {
+    trunk: xla::PjRtBuffer,
+    head_w: xla::PjRtBuffer,
+    head_b: xla::PjRtBuffer,
+}
+
+/// Device-resident predictor state (U, B), keyed by predictor version.
+pub struct DevicePredictor {
+    b: xla::PjRtBuffer,
+    u: xla::PjRtBuffer,
+    pub version: u64,
+}
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative marshalling/compute timers for the perf report.
+    pub stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Default, Debug, Clone)]
+pub struct RuntimeStats {
+    pub calls: u64,
+    pub exec_secs: f64,
+    pub upload_secs: f64,
+    pub download_secs: f64,
+    pub compile_secs: f64,
+    /// Per-artifact (calls, exec seconds) — the perf-pass breakdown.
+    pub per_artifact: BTreeMap<String, (u64, f64)>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        crate::log_info!(
+            "runtime: platform={} preset={} trunk_params={}",
+            client.platform_name(),
+            manifest.preset,
+            manifest.trunk_params
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Compile (or fetch cached) an executable by artifact name.
+    pub fn exe(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {:?}: {e:?}", meta.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling artifact {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.borrow_mut().compile_secs += dt;
+        crate::log_debug!("compiled {name} in {dt:.2}s");
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile every artifact the run will need (avoids first-use
+    /// stalls inside the wall-clock-budgeted loop).
+    pub fn warmup(&self, names: &[String]) -> anyhow::Result<()> {
+        for n in names {
+            self.exe(n)?;
+        }
+        Ok(())
+    }
+
+    // ---- marshalling ----------------------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        let t0 = std::time::Instant::now();
+        let b = self
+            .client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("uploading f32 buffer {dims:?}: {e:?}"))?;
+        self.stats.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+        Ok(b)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        let t0 = std::time::Instant::now();
+        let b = self
+            .client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("uploading i32 buffer {dims:?}: {e:?}"))?;
+        self.stats.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+        Ok(b)
+    }
+
+    /// Upload the current parameters (once per optimizer step).
+    pub fn upload_params(&self, p: &ParamStore) -> anyhow::Result<DeviceParams> {
+        Ok(DeviceParams {
+            trunk: self.upload_f32(&p.trunk, &[p.trunk.len()])?,
+            head_w: self.upload_f32(&p.head_w, &[p.width, p.classes])?,
+            head_b: self.upload_f32(&p.head_b, &[p.classes])?,
+        })
+    }
+
+    /// Upload predictor state if the cached version is stale.
+    pub fn upload_predictor(
+        &self,
+        pred: &Predictor,
+        cached: Option<DevicePredictor>,
+    ) -> anyhow::Result<DevicePredictor> {
+        if let Some(c) = cached {
+            if c.version == pred.version {
+                return Ok(c);
+            }
+        }
+        Ok(DevicePredictor {
+            b: self.upload_f32(&pred.b.data, &pred.b.shape)?,
+            u: self.upload_f32(&pred.u.data, &pred.u.shape)?,
+            version: pred.version,
+        })
+    }
+
+    /// Execute an artifact with device-buffer args and decompose the tuple
+    /// output into per-output f32 vectors (in manifest order).
+    fn run(&self, name: &str, args: &[&xla::PjRtBuffer]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let exe = self.exe(name)?;
+        let meta = self.manifest.artifact(name)?;
+        anyhow::ensure!(
+            args.len() == meta.args.len(),
+            "artifact {name} takes {} args, got {}",
+            meta.args.len(),
+            args.len()
+        );
+        let t0 = std::time::Instant::now();
+        let results = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let exec_dt = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let lit = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing {name} output tuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == meta.outs.len(),
+            "artifact {name} returned {} outputs, manifest says {}",
+            parts.len(),
+            meta.outs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, (oname, shape, _)) in parts.iter().zip(&meta.outs) {
+            let v = part
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("reading output {oname} of {name}: {e:?}"))?;
+            let want: usize = shape.iter().product();
+            anyhow::ensure!(
+                v.len() == want.max(1),
+                "output {oname} of {name}: got {} values, want {}",
+                v.len(),
+                want.max(1)
+            );
+            out.push(v);
+        }
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.exec_secs += exec_dt;
+        st.download_secs += t1.elapsed().as_secs_f64();
+        let e = st.per_artifact.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += exec_dt;
+        Ok(out)
+    }
+
+    // ---- typed entry points ----------------------------------------------
+
+    /// Forward + Backward on a batch of `m` examples.
+    pub fn train_grads(
+        &self,
+        params: &DeviceParams,
+        x: &[f32],
+        y: &[i32],
+        m: usize,
+    ) -> anyhow::Result<TrainOut> {
+        let name = self.manifest.train_grads_name(m);
+        let img = self.manifest.image;
+        let xb = self.upload_f32(x, &[m, 3, img, img])?;
+        let yb = self.upload_i32(y, &[m])?;
+        let mut outs =
+            self.run(&name, &[&params.trunk, &params.head_w, &params.head_b, &xb, &yb])?;
+        // outs: loss, g_trunk, g_head_w, g_head_b, a, probs
+        let probs = outs.pop().unwrap();
+        let a = outs.pop().unwrap();
+        let g_head_b = outs.pop().unwrap();
+        let g_head_w = outs.pop().unwrap();
+        let g_trunk = outs.pop().unwrap();
+        let loss = outs.pop().unwrap()[0];
+        Ok(TrainOut { loss, g_trunk, g_head_w, g_head_b, a, probs })
+    }
+
+    /// CheapForward: activations + probabilities, no autodiff cache.
+    pub fn cheap_fwd(
+        &self,
+        params: &DeviceParams,
+        x: &[f32],
+        m: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let name = self.manifest.cheap_fwd_name(m);
+        let img = self.manifest.image;
+        let xb = self.upload_f32(x, &[m, 3, img, img])?;
+        let mut outs = self.run(&name, &[&params.trunk, &params.head_w, &params.head_b, &xb])?;
+        let probs = outs.pop().unwrap();
+        let a = outs.pop().unwrap();
+        Ok((a, probs))
+    }
+
+    /// PredictGrad on a micro-batch via the pallas predictor kernels.
+    pub fn predict_grad(
+        &self,
+        a: &[f32],
+        probs: &[f32],
+        y: &[i32],
+        params: &DeviceParams,
+        dev_pred: &DevicePredictor,
+        m: usize,
+    ) -> anyhow::Result<PredictOut> {
+        let name = self.manifest.predict_grad_name(m);
+        let d = self.manifest.width;
+        let c = self.manifest.classes;
+        let ab = self.upload_f32(a, &[m, d])?;
+        let pb = self.upload_f32(probs, &[m, c])?;
+        let yb = self.upload_i32(y, &[m])?;
+        let mut outs =
+            self.run(&name, &[&ab, &pb, &yb, &params.head_w, &dev_pred.b, &dev_pred.u])?;
+        let g_head_b = outs.pop().unwrap();
+        let g_head_w = outs.pop().unwrap();
+        let g_trunk = outs.pop().unwrap();
+        Ok(PredictOut { g_trunk, g_head_w, g_head_b })
+    }
+
+    /// Per-example trunk gradients for predictor fitting / diagnostics.
+    /// Returns (G as n rows, a, probs).
+    pub fn per_example_grads(
+        &self,
+        params: &DeviceParams,
+        x: &[f32],
+        y: &[i32],
+    ) -> anyhow::Result<(Vec<Vec<f32>>, Vec<f32>, Vec<f32>)> {
+        let n = self.manifest.n_chunk;
+        anyhow::ensure!(y.len() == n, "per_example_grads takes exactly n_chunk={n} examples");
+        let name = self.manifest.per_example_grads_name();
+        let img = self.manifest.image;
+        let xb = self.upload_f32(x, &[n, 3, img, img])?;
+        let yb = self.upload_i32(y, &[n])?;
+        let mut outs =
+            self.run(&name, &[&params.trunk, &params.head_w, &params.head_b, &xb, &yb])?;
+        let probs = outs.pop().unwrap();
+        let a = outs.pop().unwrap();
+        let g_flat = outs.pop().unwrap();
+        let p_t = self.manifest.trunk_params;
+        let rows = g_flat.chunks(p_t).map(|c| c.to_vec()).collect();
+        Ok((rows, a, probs))
+    }
+
+    /// Control-variate combine (eq. 1) on device over the full flat
+    /// gradient [trunk | head_w | head_b].
+    pub fn cv_combine(
+        &self,
+        g_ct: &[f32],
+        g_cp: &[f32],
+        g_p: &[f32],
+        f: f32,
+    ) -> anyhow::Result<Vec<f32>> {
+        let p = self.manifest.total_params;
+        anyhow::ensure!(g_ct.len() == p && g_cp.len() == p && g_p.len() == p);
+        let a = self.upload_f32(g_ct, &[p])?;
+        let b = self.upload_f32(g_cp, &[p])?;
+        let c = self.upload_f32(g_p, &[p])?;
+        let fb = self.upload_f32(&[f], &[1])?;
+        let mut outs = self.run("cv_combine", &[&a, &b, &c, &fb])?;
+        Ok(outs.pop().unwrap())
+    }
+
+    pub fn stats_snapshot(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}

@@ -1,0 +1,314 @@
+//! Dense linear-algebra routines for the predictor fit and Muon.
+//!
+//! - `eigh_jacobi`: symmetric eigendecomposition (cyclic Jacobi) — powers
+//!   the Gram-trick SVD that recovers the paper's rank-r NTK basis U.
+//! - `cholesky_solve`: SPD solves for the kernel-ridge dual coefficients.
+//! - `newton_schulz`: the quintic orthogonalization iteration used by the
+//!   Muon optimizer (Jordan et al., 2024), the paper's training optimizer.
+
+use super::{matmul, Tensor};
+
+/// Symmetric eigendecomposition by cyclic Jacobi rotations.
+///
+/// Returns (eigenvalues ascending, eigenvectors as columns). Input must be
+/// symmetric n x n; n is small here (the fit-batch size, <= a few hundred).
+pub fn eigh_jacobi(a: &Tensor) -> (Vec<f32>, Tensor) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "eigh needs a square matrix");
+    let mut m: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[p * n + q] * m[p * n + q];
+            }
+        }
+        if off.sqrt() < 1e-11 * (1.0 + frob64(&m)) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract and sort ascending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let evals_raw: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    order.sort_by(|&i, &j| evals_raw[i].partial_cmp(&evals_raw[j]).unwrap());
+    let evals: Vec<f32> = order.iter().map(|&i| evals_raw[i] as f32).collect();
+    let mut vecs = Tensor::zeros(&[n, n]);
+    for (new_col, &old_col) in order.iter().enumerate() {
+        for row in 0..n {
+            vecs.data[row * n + new_col] = v[row * n + old_col] as f32;
+        }
+    }
+    (evals, vecs)
+}
+
+fn frob64(m: &[f64]) -> f64 {
+    m.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Solve (A) X = B for SPD A via Cholesky. A: (n, n), B: (n, k).
+/// Factorization in f64 for stability; returns X: (n, k).
+pub fn cholesky_solve(a: &Tensor, b: &Tensor) -> anyhow::Result<Tensor> {
+    let n = a.rows();
+    anyhow::ensure!(a.cols() == n, "cholesky needs square A");
+    anyhow::ensure!(b.rows() == n, "rhs rows must match A");
+    let k = b.cols();
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for p in 0..j {
+                s -= l[i * n + p] * l[j * n + p];
+            }
+            if i == j {
+                anyhow::ensure!(s > 0.0, "matrix not positive definite at pivot {i} (s={s})");
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    // Forward then backward substitution per column.
+    let mut x = Tensor::zeros(&[n, k]);
+    let mut y = vec![0.0f64; n];
+    for col in 0..k {
+        for i in 0..n {
+            let mut s = b.at(i, col) as f64;
+            for p in 0..i {
+                s -= l[i * n + p] * y[p];
+            }
+            y[i] = s / l[i * n + i];
+        }
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for p in (i + 1)..n {
+                s -= l[p * n + i] * x.at(p, col) as f64;
+            }
+            x.set(i, col, (s / l[i * n + i]) as f32);
+        }
+    }
+    Ok(x)
+}
+
+/// Newton–Schulz quintic orthogonalization (Muon's core step).
+///
+/// Maps G to an approximate UV^T where G = U S V^T — i.e. sets all singular
+/// values to ~1. Coefficients (3.4445, -4.7750, 2.0315) and 5 iterations
+/// follow Jordan et al. (2024). Input (m, n); operates on the smaller side.
+pub fn newton_schulz(g: &Tensor, steps: usize) -> Tensor {
+    let (m, n) = (g.rows(), g.cols());
+    let transposed = m > n;
+    let mut x = if transposed { g.t() } else { g.clone() };
+    // Normalize so singular values are <= 1 (required for convergence).
+    let norm = x.frob_norm().max(1e-12);
+    x.scale(1.0 / norm);
+    const A: f32 = 3.4445;
+    const B: f32 = -4.7750;
+    const C: f32 = 2.0315;
+    let rows = x.rows();
+    for _ in 0..steps {
+        // aX + b(XX^T)X + c(XX^T)^2 X
+        let xxt = matmul::matmul(&x, &x.t()); // (rows, rows)
+        let xxt2 = matmul::matmul(&xxt, &xxt);
+        let mut combo = Tensor::zeros(&[rows, rows]);
+        for i in 0..rows * rows {
+            combo.data[i] = B * xxt.data[i] + C * xxt2.data[i];
+        }
+        let mut next = matmul::matmul(&combo, &x);
+        for i in 0..next.data.len() {
+            next.data[i] += A * x.data[i];
+        }
+        x = next;
+    }
+    if transposed {
+        x.t()
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::{gram, matmul};
+    use crate::util::rng::Pcg64;
+
+    fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn eigh_reconstructs_symmetric_matrix() {
+        let mut rng = Pcg64::seeded(20);
+        for n in [1usize, 2, 5, 12, 30] {
+            let a = rand_t(&mut rng, &[n, 8.max(n)]);
+            let sym = gram(&a); // PSD symmetric
+            let (w, v) = eigh_jacobi(&sym);
+            // Reconstruct V diag(w) V^T
+            let mut vd = v.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vd.data[i * n + j] *= w[j];
+                }
+            }
+            let rec = matmul(&vd, &v.t());
+            let scale = 1.0 + sym.frob_norm();
+            for (x, y) in rec.data.iter().zip(&sym.data) {
+                assert!((x - y).abs() < 2e-3 * scale, "n={n}: {x} vs {y}");
+            }
+            // Eigenvalues of a PSD matrix are >= 0 (tolerance).
+            assert!(w.iter().all(|&x| x > -1e-3 * scale));
+            // Ascending order.
+            for k in 1..n {
+                assert!(w[k] >= w[k - 1] - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_eigenvectors_orthonormal() {
+        let mut rng = Pcg64::seeded(21);
+        let a = rand_t(&mut rng, &[10, 10]);
+        let sym = gram(&a);
+        let (_, v) = eigh_jacobi(&sym);
+        let vtv = matmul(&v.t(), &v);
+        for i in 0..10 {
+            for j in 0..10 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_known_answer() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Tensor::from_vec(vec![2., 1., 1., 2.], &[2, 2]);
+        let (w, _) = eigh_jacobi(&a);
+        assert!((w[0] - 1.0).abs() < 1e-5);
+        assert!((w[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        let mut rng = Pcg64::seeded(22);
+        let a = rand_t(&mut rng, &[15, 15]);
+        let mut spd = gram(&a);
+        for i in 0..15 {
+            spd.data[i * 15 + i] += 1.0; // well-conditioned
+        }
+        let x_true = rand_t(&mut rng, &[15, 3]);
+        let b = matmul(&spd, &x_true);
+        let x = cholesky_solve(&spd, &b).unwrap();
+        for (u, v) in x.data.iter().zip(&x_true.data) {
+            assert!((u - v).abs() < 1e-2, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::from_vec(vec![1., 2., 2., 1.], &[2, 2]); // eigenvalues 3, -1
+        assert!(cholesky_solve(&a, &Tensor::zeros(&[2, 1])).is_err());
+    }
+
+    /// Exact polar factor UV^T via the eigendecomposition of G G^T.
+    fn exact_polar(g: &Tensor) -> Tensor {
+        let (m, n) = (g.rows(), g.cols());
+        if m > n {
+            return exact_polar(&g.t()).t();
+        }
+        let ggt = matmul(g, &g.t()); // (m, m)
+        let (w, v) = eigh_jacobi(&ggt);
+        // W = V diag(1/sqrt(w)) V^T G
+        let mut vs = v.clone();
+        for i in 0..m {
+            for j in 0..m {
+                vs.data[i * m + j] *= 1.0 / w[j].max(1e-12).sqrt();
+            }
+        }
+        let inv_sqrt = matmul(&vs, &v.t());
+        matmul(&inv_sqrt, g)
+    }
+
+    #[test]
+    fn newton_schulz_orthogonalizes() {
+        // The quintic NS iteration (Muon) does NOT converge σ → 1 exactly;
+        // it settles singular values in a band around 1 (≈[0.7, 1.2]).
+        // The right contract: the output is close in *direction* to the
+        // exact polar factor UV^T, and its singular values live in that
+        // band. That is what makes the Muon update well-scaled.
+        let mut rng = Pcg64::seeded(23);
+        for &(m, n) in &[(8usize, 8usize), (6, 12), (12, 6)] {
+            let g = rand_t(&mut rng, &[m, n]);
+            let o = newton_schulz(&g, 5);
+            let w = exact_polar(&g);
+            let cos = crate::tensor::stats::cosine(&o.data, &w.data);
+            assert!(cos > 0.95, "({m},{n}) cosine to polar factor {cos}");
+            // Singular values (via Gram eigenvalues) within the NS band.
+            let gram_small = if m <= n {
+                matmul(&o, &o.t())
+            } else {
+                matmul(&o.t(), &o)
+            };
+            let (evals, _) = eigh_jacobi(&gram_small);
+            for &e in &evals {
+                let sigma = e.max(0.0).sqrt();
+                assert!(
+                    (0.4..=1.5).contains(&sigma),
+                    "({m},{n}) singular value {sigma} outside NS band"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn newton_schulz_preserves_singular_directions() {
+        // For a diagonal matrix the NS iterate must stay (nearly) diagonal
+        // with entries pushed toward +-1.
+        let g = Tensor::from_vec(vec![0.9, 0.0, 0.0, 0.1], &[2, 2]);
+        let o = newton_schulz(&g, 5);
+        assert!(o.at(0, 1).abs() < 1e-4 && o.at(1, 0).abs() < 1e-4);
+        assert!(o.at(0, 0) > 0.7, "{}", o.at(0, 0));
+        assert!(o.at(1, 1) > 0.2, "{}", o.at(1, 1));
+    }
+}

@@ -1,0 +1,211 @@
+//! Blocked matrix multiplication kernels.
+//!
+//! Cache-aware ikj loop order with an L1-sized j-tile. Single-threaded (the
+//! box has one core); the perf pass (EXPERIMENTS.md §Perf) measures this
+//! against the naive ijk order. These feed the predictor fit (Gram
+//! matrices, U materialization) and Muon's Newton–Schulz iteration.
+
+use super::Tensor;
+
+/// C = A @ B. A: (m, k), B: (k, n) -> (m, n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B into a pre-allocated output (hot path avoids allocation).
+pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    assert_eq!(c.shape, vec![m, n]);
+    c.data.fill(0.0);
+    // ikj with j-tiling: the inner j-loop is a contiguous axpy over B's row
+    // and C's row, which auto-vectorizes.
+    const JT: usize = 256;
+    for i in 0..m {
+        let a_row = &a.data[i * k..(i + 1) * k];
+        let c_row = &mut c.data[i * n..(i + 1) * n];
+        for j0 in (0..n).step_by(JT) {
+            let j1 = (j0 + JT).min(n);
+            for (kk, &aik) in a_row.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data[kk * n + j0..kk * n + j1];
+                let c_seg = &mut c_row[j0..j1];
+                for (cv, bv) in c_seg.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+/// C = A^T @ A for A: (n, d) -> (d, d). Symmetric; computes the upper
+/// triangle and mirrors.
+pub fn gram_t(a: &Tensor) -> Tensor {
+    let (n, d) = (a.rows(), a.cols());
+    let mut c = Tensor::zeros(&[d, d]);
+    for row in 0..n {
+        let r = &a.data[row * d..(row + 1) * d];
+        for i in 0..d {
+            let ri = r[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let c_row = &mut c.data[i * d..(i + 1) * d];
+            for j in i..d {
+                c_row[j] += ri * r[j];
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            c.data[i * d + j] = c.data[j * d + i];
+        }
+    }
+    c
+}
+
+/// K = A @ A^T for A: (n, d) -> (n, n). The predictor's example-Gram.
+pub fn gram(a: &Tensor) -> Tensor {
+    let (n, d) = (a.rows(), a.cols());
+    let mut k = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        let ri = &a.data[i * d..(i + 1) * d];
+        for j in i..n {
+            let rj = &a.data[j * d..(j + 1) * d];
+            let dot = super::stats::dot(ri, rj);
+            k.data[i * n + j] = dot;
+            k.data[j * n + i] = dot;
+        }
+    }
+    k
+}
+
+/// y = A @ x (matrix-vector).
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, k) = (a.rows(), a.cols());
+    assert_eq!(k, x.len());
+    let mut y = vec![0.0; m];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// y = A @ x into pre-allocated output.
+pub fn matvec_into(a: &Tensor, x: &[f32], y: &mut [f32]) {
+    let (m, k) = (a.rows(), a.cols());
+    assert_eq!(k, x.len());
+    assert_eq!(m, y.len());
+    for i in 0..m {
+        y[i] = super::stats::dot(&a.data[i * k..(i + 1) * k], x);
+    }
+}
+
+/// y = A^T @ x for A: (n, d), x: (n,) -> (d,). Row-major friendly: walks
+/// A's rows, accumulating x[i] * row_i.
+pub fn matvec_t(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (n, d) = (a.rows(), a.cols());
+    assert_eq!(n, x.len());
+    let mut y = vec![0.0; d];
+    for i in 0..n {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a.data[i * d..(i + 1) * d];
+        for (yv, rv) in y.iter_mut().zip(row) {
+            *yv += xi * rv;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Pcg64::seeded(10);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64), (10, 300, 7)] {
+            let a = rand_t(&mut rng, &[m, k]);
+            let b = rand_t(&mut rng, &[k, n]);
+            let c = matmul(&a, &b);
+            let want = naive(&a, &b);
+            for (x, y) in c.data.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::seeded(11);
+        let a = rand_t(&mut rng, &[9, 9]);
+        assert_eq!(matmul(&a, &Tensor::eye(9)).data, a.data);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Pcg64::seeded(12);
+        let a = rand_t(&mut rng, &[13, 7]);
+        let g1 = gram(&a);
+        let g2 = matmul(&a, &a.t());
+        for (x, y) in g1.data.iter().zip(&g2.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        let gt1 = gram_t(&a);
+        let gt2 = matmul(&a.t(), &a);
+        for (x, y) in gt1.data.iter().zip(&gt2.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let mut rng = Pcg64::seeded(13);
+        let a = rand_t(&mut rng, &[6, 11]);
+        let x: Vec<f32> = (0..11).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let y = matvec(&a, &x);
+        let xt = Tensor::from_vec(x.clone(), &[11, 1]);
+        let want = matmul(&a, &xt);
+        for (u, v) in y.iter().zip(&want.data) {
+            assert!((u - v).abs() < 1e-4);
+        }
+        // A^T x via matvec_t equals matvec on transposed copy
+        let z: Vec<f32> = (0..6).map(|i| 0.1 * i as f32 + 0.5).collect();
+        let t1 = matvec_t(&a, &z);
+        let t2 = matvec(&a.t(), &z);
+        for (u, v) in t1.iter().zip(&t2) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Dense host-side tensor substrate.
+//!
+//! The coordinator keeps parameters, gradients and predictor state on the
+//! host as `Tensor`s (row-major f32); the heavy model math runs on the
+//! PJRT device via AOT artifacts, but the optimizer, the predictor fit and
+//! all diagnostics need a small, fast host linalg layer — this module.
+
+pub mod linalg;
+pub mod matmul;
+pub mod stats;
+
+/// Row-major dense f32 tensor (rank 1 or 2 is all we need).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        Tensor { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Identity matrix n x n.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() needs a matrix");
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() needs a matrix");
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>(), "reshape size mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Elementwise in-place a += s * b (axpy).
+    pub fn axpy(&mut self, s: f32, b: &Tensor) {
+        assert_eq!(self.len(), b.len());
+        for (x, y) in self.data.iter_mut().zip(&b.data) {
+            *x += s * y;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        stats::norm(&self.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        assert_eq!(t.at(0, 2), 3.0);
+        assert_eq!(t.at(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        let tt = t.t();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.at(2, 1), 6.0);
+        assert_eq!(tt.t(), t);
+    }
+
+    #[test]
+    fn eye_and_axpy() {
+        let mut a = Tensor::eye(3);
+        let b = Tensor::filled(&[3, 3], 2.0);
+        a.axpy(0.5, &b);
+        assert_eq!(a.at(0, 0), 2.0);
+        assert_eq!(a.at(0, 1), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(vec![1.0; 5], &[2, 3]);
+    }
+}

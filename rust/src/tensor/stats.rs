@@ -1,0 +1,145 @@
+//! Vector statistics: dot products, norms, cosine alignment.
+//!
+//! The cosine here is the paper's Section 5.3 monitoring metric ρ̂ — the
+//! alignment between per-example true and predicted gradients that governs
+//! the break-even condition of Theorem 3.
+
+/// Dot product with 4-way unrolled accumulators (auto-vectorizes well and
+/// reduces rounding drift versus a single accumulator).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Dot product in f64 accumulation — used where catastrophic cancellation
+/// matters (variance estimators for Prop. 2 validation).
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+pub fn norm(a: &[f32]) -> f32 {
+    dot_f64(a, a).sqrt() as f32
+}
+
+/// Cosine alignment cos(a, b) in [-1, 1]; 0 if either vector is ~zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = dot_f64(a, a).sqrt();
+    let nb = dot_f64(b, b).sqrt();
+    if na < 1e-20 || nb < 1e-20 {
+        return 0.0;
+    }
+    (dot_f64(a, b) / (na * nb)) as f32
+}
+
+pub fn mean(a: &[f32]) -> f32 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    (a.iter().map(|&v| v as f64).sum::<f64>() / a.len() as f64) as f32
+}
+
+/// Sample mean and standard error over f64 observations — the "three
+/// random seeds ± standard error" protocol of Figure 1.
+pub fn mean_stderr(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return (m, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64;
+    (m, (var / n as f64).sqrt())
+}
+
+/// Running mean/variance (Welford) for streaming diagnostics.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_reference() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.01 - 0.5).collect();
+        let b: Vec<f32> = (0..103).map(|i| ((i * 7 % 13) as f32) * 0.1).collect();
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        let a = [1.0, 0.0, 0.0];
+        let b = [0.0, 1.0, 0.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+        assert!(cosine(&a, &b).abs() < 1e-6);
+        let c = [-2.0, 0.0, 0.0];
+        assert!((cosine(&a, &c) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&a, &[0.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let m = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / 4.0;
+        assert!((w.mean() - m).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_stderr_basics() {
+        let (m, se) = mean_stderr(&[2.0, 2.0, 2.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(se, 0.0);
+        let (m, se) = mean_stderr(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert!(se > 0.0);
+    }
+}

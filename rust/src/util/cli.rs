@@ -1,0 +1,151 @@
+//! Tiny command-line argument parser (no clap in the offline crate set).
+//!
+//! Grammar: `lgp <subcommand> [--flag] [--key value]...`. Typed accessors
+//! with defaults; unknown keys are reported so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --key, got '{tok}'"))?
+                .to_string();
+            if key.is_empty() {
+                return Err("empty flag name".into());
+            }
+            // --key=value or --key value or bare flag
+            if let Some((k, v)) = key.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                args.flags.insert(key, it.next().unwrap());
+            } else {
+                args.flags.insert(key, "true".to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.str_opt(key).map_or(false, |v| v != "false")
+    }
+
+    /// Comma-separated f64 list, e.g. `--fs 0.1,0.25`.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.str_opt(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.parse().ok())
+                .collect(),
+        }
+    }
+
+    /// Keys that were provided but never read by the command — typo guard.
+    pub fn unknown_keys(&self) -> Vec<String> {
+        let seen = self.consumed.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse("train --preset small --steps 100 --f 0.25");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("preset", "x"), "small");
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!((a.f64_or("f", 0.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equals_syntax_and_bare_flags() {
+        let a = parse("bench --quiet --budget=12.5");
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("loud"));
+        assert!((a.f64_or("budget", 0.0) - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("sweep --fs 0.1,0.25,0.5");
+        assert_eq!(a.f64_list("fs", &[1.0]), vec![0.1, 0.25, 0.5]);
+        assert_eq!(a.f64_list("other", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let a = parse("train --presett tiny");
+        let _ = a.str_opt("preset");
+        assert_eq!(a.unknown_keys(), vec!["presett".to_string()]);
+    }
+
+    #[test]
+    fn rejects_positional_after_flags() {
+        assert!(Args::parse(vec!["train".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

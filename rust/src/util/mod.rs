@@ -1,0 +1,170 @@
+//! Shared substrates: RNG, JSON, CLI parsing, logging, timing, binary I/O.
+//!
+//! These exist because the offline crate set is exactly the `xla` crate's
+//! dependency closure — no rand/serde/clap — so the library carries its
+//! own small, tested implementations (DESIGN.md §10).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+use std::io::Write;
+use std::time::Instant;
+
+/// Wall-clock stopwatch used by the coordinator's budget loop and benches.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Read a little-endian f32 binary file (the init_*.bin artifacts).
+pub fn read_f32_file(path: &std::path::Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{} length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 binary file (checkpoints).
+pub fn write_f32_file(path: &std::path::Path, data: &[f32]) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, buf).map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+/// Append-only CSV writer with a fixed header, used by training loops and
+/// benches to emit the series behind each paper figure.
+pub struct CsvWriter {
+    file: std::fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &std::path::Path, header: &[&str]) -> anyhow::Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(values.len() == self.cols, "csv row arity mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.file, "{}", line.join(","))?;
+        Ok(())
+    }
+}
+
+/// Leveled stderr logger; verbosity from LGP_LOG (error|warn|info|debug).
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+pub fn log_level() -> Level {
+    match std::env::var("LGP_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= $crate::util::Level::Info {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= $crate::util::Level::Debug {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= $crate::util::Level::Warn {
+            eprintln!("[warn] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_file_round_trip() {
+        let dir = std::env::temp_dir().join("lgp_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let data = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        write_f32_file(&path, &data).unwrap();
+        assert_eq!(read_f32_file(&path).unwrap(), data);
+    }
+
+    #[test]
+    fn f32_file_rejects_bad_length() {
+        let dir = std::env::temp_dir().join("lgp_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 7]).unwrap();
+        assert!(read_f32_file(&path).is_err());
+    }
+
+    #[test]
+    fn csv_writer_arity_check() {
+        let dir = std::env::temp_dir().join("lgp_util_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&[1.0, 2.0]).is_ok());
+        assert!(w.row(&[1.0]).is_err());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n1,2\n"));
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(b >= a && a >= 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration: the Rust runtime loads and executes the AOT artifacts and
+//! the numbers agree with the paper's algebra (Sec. 4.3) computed on the
+//! Rust side. Requires tiny artifacts: `make artifacts`.
+
+use lgp::model::Manifest;
+use lgp::predictor::{residuals, Predictor};
+use lgp::runtime::Runtime;
+use lgp::tensor::{stats, Tensor};
+use lgp::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: tiny artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_batch(rng: &mut Pcg64, m: usize, img: usize, classes: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut x = vec![0.0f32; m * 3 * img * img];
+    rng.fill_normal(&mut x, 1.0);
+    let y = (0..m).map(|_| rng.below(classes as u64) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn runtime_loads_and_executes_all_entry_points() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let m = rt.manifest.clone();
+    let params = lgp::model::ParamStore::load_init(&m).unwrap();
+    let dev = rt.upload_params(&params).unwrap();
+    let mut rng = Pcg64::seeded(1);
+
+    // train_grads on the full micro-batch
+    let (x, y) = rand_batch(&mut rng, m.micro_batch, m.image, m.classes);
+    let out = rt.train_grads(&dev, &x, &y, m.micro_batch).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert_eq!(out.g_trunk.len(), m.trunk_params);
+    assert_eq!(out.a.len(), m.micro_batch * m.width);
+    assert_eq!(out.probs.len(), m.micro_batch * m.classes);
+    assert!(out.g_trunk.iter().all(|v| v.is_finite()));
+    // probabilities are normalized
+    for row in out.probs.chunks(m.classes) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "probs row sums to {s}");
+    }
+
+    // cheap_fwd agrees with the train-path forward on the same inputs.
+    // Use batch 8: it exists both as a train_grads size (control batch of
+    // f=0.5) and as a cheap_fwd size (prediction batch of f=0.5).
+    let (x8, y8) = rand_batch(&mut rng, 8, m.image, m.classes);
+    let out8 = rt.train_grads(&dev, &x8, &y8, 8).unwrap();
+    let (a2, p2) = rt.cheap_fwd(&dev, &x8, 8).unwrap();
+    for (u, v) in out8.a.iter().zip(&a2) {
+        assert!((u - v).abs() < 5e-3, "activations diverge: {u} vs {v}");
+    }
+    for (u, v) in out8.probs.iter().zip(&p2) {
+        assert!((u - v).abs() < 5e-3);
+    }
+
+    // per_example_grads average to the batch gradient
+    let n = m.n_chunk;
+    let (xf, yf) = rand_batch(&mut rng, n, m.image, m.classes);
+    let (rows, a_fit, _probs_fit) = rt.per_example_grads(&dev, &xf, &yf).unwrap();
+    assert_eq!(rows.len(), n);
+    assert_eq!(a_fit.len(), n * m.width);
+    let tg = rt.train_grads(&dev, &xf, &yf, n);
+    if let Ok(tg) = tg {
+        let mut mean = vec![0.0f32; m.trunk_params];
+        for r in &rows {
+            for (mv, rv) in mean.iter_mut().zip(r) {
+                *mv += rv / n as f32;
+            }
+        }
+        let cos = stats::cosine(&mean, &tg.g_trunk);
+        assert!(cos > 0.999, "per-example mean vs batch grad cosine {cos}");
+    }
+
+    // cv_combine matches the host formula
+    let p_total = m.total_params;
+    let mut g1 = vec![0.0f32; p_total];
+    let mut g2 = vec![0.0f32; p_total];
+    let mut g3 = vec![0.0f32; p_total];
+    rng.fill_normal(&mut g1, 1.0);
+    rng.fill_normal(&mut g2, 1.0);
+    rng.fill_normal(&mut g3, 1.0);
+    let f = 0.25f32;
+    let dev_out = rt.cv_combine(&g1, &g2, &g3, f).unwrap();
+    for i in 0..p_total {
+        let want = f * g1[i] + (1.0 - f) * (g3[i] - (g2[i] - g1[i]));
+        assert!((dev_out[i] - want).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn device_predict_grad_matches_host_predictor() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let m = rt.manifest.clone();
+    let params = lgp::model::ParamStore::load_init(&m).unwrap();
+    let dev = rt.upload_params(&params).unwrap();
+    let mut rng = Pcg64::seeded(2);
+
+    // random (but installed) predictor state
+    let mut pred = Predictor::new(m.trunk_params, m.width, m.rank);
+    let mut u = Tensor::zeros(&[m.trunk_params, m.rank]);
+    let mut b = Tensor::zeros(&[m.rank, m.feat_dim]);
+    rng.fill_normal(&mut u.data, 0.05);
+    rng.fill_normal(&mut b.data, 0.05);
+    pred.install(u, b);
+    let dev_pred = rt.upload_predictor(&pred, None).unwrap();
+
+    // batch through cheap_fwd for realistic activations
+    let (mc, _) = m.split_sizes(0.25);
+    let (x, y) = rand_batch(&mut rng, mc, m.image, m.classes);
+    let tg = rt.train_grads(&dev, &x, &y, mc).unwrap();
+    let out = rt.predict_grad(&tg.a, &tg.probs, &y, &dev, &dev_pred, mc).unwrap();
+
+    // host-side mirror of the same math
+    let resid = residuals(&tg.probs, &y, m.classes, m.label_smoothing as f32);
+    let h = Predictor::backprop_features(&resid, &params.head_w, m.width);
+    let a_t = Tensor::from_vec(tg.a.clone(), &[mc, m.width]);
+    let host_trunk = pred.predict_mean_trunk(&a_t, &h);
+    let cos = stats::cosine(&host_trunk, &out.g_trunk);
+    assert!(cos > 0.999, "device vs host predictor cosine: {cos}");
+    let (gw_host, gb_host) = Predictor::head_grads(&a_t, &resid);
+    for (u, v) in gw_host.iter().zip(&out.g_head_w) {
+        assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+    }
+    for (u, v) in gb_host.iter().zip(&out.g_head_b) {
+        assert!((u - v).abs() < 1e-4);
+    }
+
+    // the paper's Sec 4.3 identity: device head grad == exact head grad
+    // from train_grads (both are A^T R / m)
+    for (u, v) in out.g_head_w.iter().zip(&tg.g_head_w) {
+        assert!((u - v).abs() < 1e-3, "head grads disagree: {u} vs {v}");
+    }
+}
+
+#[test]
+fn manifest_split_sizes_have_artifacts() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for &f in &m.fs.clone() {
+        let (mc, mp) = m.split_sizes(f);
+        assert!(m.artifact(&m.train_grads_name(mc)).is_ok(), "f={f}");
+        assert!(m.artifact(&m.predict_grad_name(mc)).is_ok(), "f={f}");
+        if mp > 0 {
+            assert!(m.artifact(&m.cheap_fwd_name(mp)).is_ok(), "f={f}");
+            assert!(m.artifact(&m.predict_grad_name(mp)).is_ok(), "f={f}");
+        }
+    }
+}
+
+#[test]
+fn runtime_errors_are_descriptive() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let err = match rt.exe("no_such_artifact") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("no_such_artifact"), "{err}");
+    // missing directory
+    let msg = match Runtime::load(std::path::Path::new("/nonexistent/dir")) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(msg.contains("make artifacts"), "{msg}");
+}

@@ -1,0 +1,95 @@
+//! Integration: the theory module reproduces every number the paper quotes
+//! in Section 5, and the Monte-Carlo validator confirms Proposition 2 at
+//! the paper's own example points.
+
+use lgp::theory::{self, CostModel};
+
+const COST: CostModel = CostModel { forward: 1.0, backward: 2.0, cheap_forward: 0.7 };
+
+#[test]
+fn paper_quoted_rho_star_values() {
+    // Theorem 3: ρ*(0.1,1)≈0.876, ρ*(0.2,1)≈0.802, ρ*(0.5,1)≈0.689.
+    let cases = [(0.1, 0.876), (0.2, 0.802), (0.5, 0.689)];
+    for (f, want) in cases {
+        let got = theory::rho_star(f, 1.0, &COST);
+        assert!((got - want).abs() < 5e-4, "rho*({f},1) = {got}, paper {want}");
+    }
+}
+
+#[test]
+fn paper_quoted_regime_switch() {
+    // ρ_switch(1) = 1/2 + 0.7/6 ≈ 0.61667.
+    let got = theory::rho_switch(1.0, &COST);
+    assert!((got - 0.6166666).abs() < 1e-4, "{got}");
+}
+
+#[test]
+fn paper_quoted_f_star_example() {
+    // f*(ρ=0.8, κ=1) = sqrt(0.28/1.38) ≈ 0.45.
+    let got = theory::f_star(0.8, 1.0, &COST);
+    assert!((got - (0.28f64 / 1.38).sqrt()).abs() < 1e-9);
+    assert!((got - 0.45).abs() < 0.005, "{got}");
+}
+
+#[test]
+fn gamma_range_matches_paper() {
+    // γ(f) ∈ (0.7/3, 1]
+    assert!((COST.gamma(1.0) - 1.0).abs() < 1e-12);
+    let tiny = COST.gamma(1e-9);
+    assert!((tiny - 0.7 / 3.0).abs() < 1e-6);
+    // monotone increasing in f
+    let mut prev = 0.0;
+    for i in 1..=20 {
+        let g = COST.gamma(i as f64 / 20.0);
+        assert!(g > prev);
+        prev = g;
+    }
+}
+
+#[test]
+fn monte_carlo_validates_prop2_at_paper_operating_points() {
+    // The Figure-1 configuration: f = 1/4. Check the variance identity at
+    // alignments around the Thm 3 break-even for that f.
+    for &(rho, kappa) in &[(0.775, 1.0), (0.9, 1.0), (0.8, 1.2)] {
+        let mc = theory::monte_carlo_phi(32, 16, 0.25, rho, kappa, 2000, 11);
+        let rel = (mc.phi_empirical - mc.phi_closed_form).abs() / mc.phi_closed_form;
+        assert!(
+            rel < 0.15,
+            "(rho={rho}, kappa={kappa}): empirical {} vs closed {} (rel {rel})",
+            mc.phi_empirical,
+            mc.phi_closed_form
+        );
+    }
+}
+
+#[test]
+fn break_even_is_consistent_with_q() {
+    for &f in &[0.1, 0.25, 0.5] {
+        for &k in &[0.9, 1.0, 1.1] {
+            let rs = theory::rho_star(f, k, &COST);
+            assert!(theory::is_break_even(f, rs + 1e-6, k, &COST));
+            assert!(!theory::is_break_even(f, rs - 1e-3, k, &COST));
+        }
+    }
+}
+
+#[test]
+fn perfect_predictor_strictly_dominates() {
+    // ρ = κ = 1 ⇒ Q(f) = γ(f) < 1 for all f < 1 (paper Sec. 5.3).
+    for i in 1..20 {
+        let f = i as f64 / 20.0;
+        let q = theory::q_objective(f, 1.0, 1.0, &COST);
+        assert!((q - COST.gamma(f)).abs() < 1e-12);
+        assert!(q < 1.0);
+    }
+}
+
+#[test]
+fn custom_cost_models_shift_break_even() {
+    // A cheaper CheapForward lowers ρ*; an expensive one raises it.
+    let cheap = CostModel { cheap_forward: 0.3, ..COST };
+    let pricey = CostModel { cheap_forward: 1.0, ..COST };
+    let mid = theory::rho_star(0.25, 1.0, &COST);
+    assert!(theory::rho_star(0.25, 1.0, &cheap) < mid);
+    assert!(theory::rho_star(0.25, 1.0, &pricey) > mid);
+}

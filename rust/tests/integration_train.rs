@@ -1,0 +1,157 @@
+//! Integration: full Trainer runs (Algorithm 1 and 2) on tiny artifacts —
+//! losses decrease, the predictor fits, alignment is tracked, GPR with
+//! f=1 degenerates to the baseline update, checkpoints round-trip.
+
+use lgp::config::{Algo, OptimKind, RunConfig};
+use lgp::coordinator::Trainer;
+use std::path::PathBuf;
+
+fn tiny_cfg() -> Option<RunConfig> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: tiny artifacts not built");
+        return None;
+    }
+    Some(RunConfig {
+        artifacts_dir: dir,
+        algo: Algo::Gpr,
+        f: 0.25,
+        accum: 2,
+        optimizer: OptimKind::Muon,
+        lr: 0.02,
+        weight_decay: 0.0,
+        budget_secs: 0.0,
+        max_steps: 30,
+        refit_every: 10,
+        ridge_lambda: 1e-4,
+        train_size: 600,
+        val_size: 150,
+        aug_multiplier: 1,
+        seed: 7,
+        eval_every: 0,
+        out_dir: std::env::temp_dir().join("lgp_it"),
+        track_alignment: true,
+        adaptive_f: false,
+    })
+}
+
+#[test]
+fn baseline_training_reduces_loss() {
+    let Some(mut cfg) = tiny_cfg() else { return };
+    cfg.algo = Algo::Baseline;
+    cfg.max_steps = 40;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train(None).unwrap();
+    let first = t.log.first().unwrap().loss;
+    let last = t.log.last().unwrap().loss;
+    assert!(last < first - 0.05, "loss did not decrease: {first} -> {last}");
+    assert!(t.final_val_acc() > 0.15, "val acc {}", t.final_val_acc());
+}
+
+#[test]
+fn gpr_training_reduces_loss_and_tracks_alignment() {
+    let Some(cfg) = tiny_cfg() else { return };
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train(None).unwrap();
+    let first = t.log.first().unwrap().loss;
+    let last = t.log.last().unwrap().loss;
+    assert!(last < first + 0.02, "GPR diverged: {first} -> {last}");
+    // predictor fitted at least once and alignment is high (NTK structure)
+    assert!(t.pred.fits >= 1);
+    let a = t.tracker.snapshot().expect("alignment tracked");
+    assert!(a.rho > 0.5, "rho suspiciously low: {}", a.rho);
+    // GPR consumed fewer analytic cost units per example than vanilla 3/ex
+    let per_ex = t.cost_units / t.examples_seen as f64;
+    assert!(per_ex < 3.0, "GPR cost/example {per_ex} not below vanilla 3.0");
+}
+
+#[test]
+fn gpr_with_f_one_matches_baseline_updates() {
+    // f = 1: the whole micro-batch is control; eq. (1) collapses to the
+    // true gradient, so GPR and baseline produce identical parameters.
+    let Some(mut cfg) = tiny_cfg() else { return };
+    cfg.f = 1.0;
+    cfg.max_steps = 3;
+    cfg.refit_every = 0; // fit still happens once; harmless at f=1
+    cfg.track_alignment = false;
+    let mut gpr = Trainer::new(cfg.clone()).unwrap();
+    gpr.train(None).unwrap();
+    cfg.algo = Algo::Baseline;
+    let mut base = Trainer::new(cfg).unwrap();
+    base.train(None).unwrap();
+    let diff: f32 = gpr
+        .params
+        .trunk
+        .iter()
+        .zip(&base.params.trunk)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff < 1e-4, "f=1 GPR differs from baseline by {diff}");
+}
+
+#[test]
+fn checkpoint_round_trip_through_trainer() {
+    let Some(mut cfg) = tiny_cfg() else { return };
+    cfg.max_steps = 2;
+    let dir = std::env::temp_dir().join("lgp_ckpt_test");
+    let mut t = Trainer::new(cfg).unwrap();
+    t.train(None).unwrap();
+    t.params.save(&dir).unwrap();
+    let mut copy = t.params.clone();
+    copy.trunk.iter_mut().for_each(|v| *v = 0.0);
+    copy.restore(&dir).unwrap();
+    assert_eq!(copy.trunk, t.params.trunk);
+}
+
+#[test]
+fn wall_clock_budget_stops_training() {
+    let Some(mut cfg) = tiny_cfg() else { return };
+    cfg.max_steps = 0;
+    cfg.budget_secs = 2.0;
+    cfg.eval_every = 0;
+    let mut t = Trainer::new(cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    t.train(None).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(t.step_count() > 0, "no steps completed");
+    // budget (2s) + at most one step of overshoot + final eval slack
+    assert!(dt < 25.0, "budget run took {dt}s");
+}
+
+#[test]
+fn seeds_change_data_but_not_shapes() {
+    let Some(mut cfg) = tiny_cfg() else { return };
+    cfg.max_steps = 2;
+    cfg.track_alignment = false;
+    let mut a = Trainer::new(cfg.clone()).unwrap();
+    a.train(None).unwrap();
+    cfg.seed = 8;
+    let mut b = Trainer::new(cfg).unwrap();
+    b.train(None).unwrap();
+    assert_eq!(a.params.trunk.len(), b.params.trunk.len());
+    assert_ne!(a.params.trunk, b.params.trunk, "different seeds, same params?");
+}
+
+#[test]
+fn sgd_and_adamw_also_train() {
+    for kind in [OptimKind::Sgd, OptimKind::AdamW, OptimKind::Momentum] {
+        let Some(mut cfg) = tiny_cfg() else { return };
+        cfg.algo = Algo::Baseline;
+        cfg.optimizer = kind;
+        cfg.lr = match kind {
+            OptimKind::AdamW => 0.003,
+            // momentum's effective lr is lr/(1-beta) = 20x -- keep small
+            OptimKind::Momentum => 0.005,
+            _ => 0.05,
+        };
+        cfg.max_steps = 20;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.train(None).unwrap();
+        let first = t.log.first().unwrap().loss;
+        let last = t.log.last().unwrap().loss;
+        assert!(
+            last < first + 0.02,
+            "{kind:?} diverged: {first} -> {last}"
+        );
+    }
+}

@@ -1,0 +1,250 @@
+//! Property-based tests (hand-rolled generator harness — no proptest crate
+//! in the offline set). Each property runs CASES randomized trials from a
+//! seeded PCG64; failures print the violating seed for reproduction.
+
+use lgp::coordinator::combine::{cv_combine, split_indices};
+use lgp::model::params::FlatGrad;
+use lgp::tensor::{linalg, matmul, stats, Tensor};
+use lgp::theory::{self, CostModel};
+use lgp::util::rng::Pcg64;
+
+const CASES: u64 = 60;
+
+fn rand_grad(rng: &mut Pcg64, n: usize) -> FlatGrad {
+    let mut g = FlatGrad {
+        trunk: vec![0.0; n],
+        head_w: vec![0.0; 4],
+        head_b: vec![0.0; 2],
+    };
+    rng.fill_normal(&mut g.trunk, 1.0);
+    rng.fill_normal(&mut g.head_w, 1.0);
+    rng.fill_normal(&mut g.head_b, 1.0);
+    g
+}
+
+/// Property: the combine is *exactly* linear — combining equals combining
+/// componentwise, and f=1 gives g_ct regardless of the predictions.
+#[test]
+fn prop_cv_combine_linear_identities() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 100);
+        let n = 1 + rng.below(64) as usize;
+        let f = rng.range_f32(0.05, 1.0);
+        let ct = rand_grad(&mut rng, n);
+        let cp = rand_grad(&mut rng, n);
+        let p = rand_grad(&mut rng, n);
+        let g = cv_combine(&ct, &cp, &p, f);
+        for i in 0..n {
+            let want = f * ct.trunk[i] + (1.0 - f) * (p.trunk[i] - (cp.trunk[i] - ct.trunk[i]));
+            assert!((g.trunk[i] - want).abs() < 1e-5, "seed {seed}");
+        }
+        let g1 = cv_combine(&ct, &cp, &p, 1.0);
+        assert_eq!(g1.trunk, ct.trunk, "seed {seed}");
+        // perfect predictor on control: correction vanishes
+        let gp = cv_combine(&ct, &ct, &p, f);
+        for i in 0..n {
+            let want = f * ct.trunk[i] + (1.0 - f) * p.trunk[i];
+            assert!((gp.trunk[i] - want).abs() < 1e-5, "seed {seed}");
+        }
+    }
+}
+
+/// Property (Lemma 1): over a random population with an arbitrarily biased
+/// predictor, the *expected* combined gradient equals the population mean
+/// of the true gradient. Monte-Carlo over micro-batch draws.
+#[test]
+fn prop_cv_estimator_unbiased() {
+    for seed in 0..6 {
+        let mut rng = Pcg64::new(seed, 101);
+        let dim = 24;
+        let pop = 48usize;
+        // population of (g, h) with a deliberate bias in h
+        let mut gs = Vec::new();
+        let mut hs = Vec::new();
+        for _ in 0..pop {
+            let mut g = vec![0.0f32; dim];
+            let mut b = vec![0.0f32; dim];
+            rng.fill_normal(&mut g, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let h: Vec<f32> = g.iter().zip(&b).map(|(gv, bv)| 0.5 * gv + bv + 2.0).collect();
+            gs.push(g);
+            hs.push(h);
+        }
+        let mu: Vec<f64> = (0..dim)
+            .map(|i| gs.iter().map(|g| g[i] as f64).sum::<f64>() / pop as f64)
+            .collect();
+        // estimator: sample mc control + mp prediction examples i.i.d.
+        let (m, f) = (8usize, 0.25f32);
+        let mc = 2usize;
+        let mp = m - mc;
+        let trials = 20_000;
+        let mut est_mean = vec![0.0f64; dim];
+        for _ in 0..trials {
+            let mut gct = vec![0.0f32; dim];
+            let mut gcp = vec![0.0f32; dim];
+            let mut gp = vec![0.0f32; dim];
+            for _ in 0..mc {
+                let j = rng.below(pop as u64) as usize;
+                for i in 0..dim {
+                    gct[i] += gs[j][i] / mc as f32;
+                    gcp[i] += hs[j][i] / mc as f32;
+                }
+            }
+            for _ in 0..mp {
+                let j = rng.below(pop as u64) as usize;
+                for i in 0..dim {
+                    gp[i] += hs[j][i] / mp as f32;
+                }
+            }
+            for i in 0..dim {
+                let g = f * gct[i] + (1.0 - f) * (gp[i] - (gcp[i] - gct[i]));
+                est_mean[i] += g as f64 / trials as f64;
+            }
+        }
+        // estimator mean ~= population mean despite the biased predictor
+        for i in 0..dim {
+            assert!(
+                (est_mean[i] - mu[i]).abs() < 0.08,
+                "seed {seed} dim {i}: {} vs {}",
+                est_mean[i],
+                mu[i]
+            );
+        }
+    }
+}
+
+/// Property: split_indices partitions its input for every (m, f).
+#[test]
+fn prop_split_partitions() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 102);
+        let m = 1 + rng.below(256) as usize;
+        let f = rng.next_f64().max(1e-3);
+        let idx: Vec<usize> = (0..m).map(|_| rng.below(10_000) as usize).collect();
+        let (c, p) = split_indices(&idx, f);
+        assert!(!c.is_empty(), "seed {seed}");
+        assert_eq!(c.len() + p.len(), m, "seed {seed}");
+        let mut joined = c.clone();
+        joined.extend(&p);
+        assert_eq!(joined, idx, "seed {seed}");
+    }
+}
+
+/// Property (Prop. 2 / Thm 3 consistency): φ(f*, ρ, κ)·γ(f*) ≤ φ(f, ρ, κ)·γ(f)
+/// on a dense grid, and φ(f, ρ*, κ)·γ(f) = 1 exactly.
+#[test]
+fn prop_theory_consistency() {
+    let cost = CostModel::default();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 103);
+        let rho = rng.range_f32(-0.5, 0.999) as f64;
+        let kappa = rng.range_f32(0.3, 2.0) as f64;
+        let fstar = theory::f_star(rho, kappa, &cost);
+        assert!(fstar > 0.0 && fstar <= 1.0, "seed {seed}");
+        let qstar = theory::q_objective(fstar, rho, kappa, &cost);
+        for i in 1..=100 {
+            let f = i as f64 / 100.0;
+            assert!(
+                qstar <= theory::q_objective(f, rho, kappa, &cost) + 1e-9,
+                "seed {seed} f={f}"
+            );
+        }
+        for &f in &[0.1, 0.25, 0.5, 0.9] {
+            let rs = theory::rho_star(f, kappa, &cost);
+            if rs <= 1.0 {
+                let q = theory::q_objective(f, rs, kappa, &cost);
+                assert!((q - 1.0).abs() < 1e-9, "seed {seed} f={f}");
+            }
+        }
+    }
+}
+
+/// Property: Jacobi eigh reconstructs random PSD matrices and the
+/// eigenvalues are non-negative, for many sizes/seeds.
+#[test]
+fn prop_eigh_reconstruction() {
+    for seed in 0..20 {
+        let mut rng = Pcg64::new(seed, 104);
+        let n = 2 + rng.below(24) as usize;
+        let cols = n + rng.below(8) as usize;
+        let mut a = Tensor::zeros(&[n, cols]);
+        rng.fill_normal(&mut a.data, 1.0);
+        let sym = matmul::gram(&a);
+        let (w, v) = linalg::eigh_jacobi(&sym);
+        let mut vd = v.clone();
+        for i in 0..n {
+            for j in 0..n {
+                vd.data[i * n + j] *= w[j];
+            }
+        }
+        let rec = matmul::matmul(&vd, &v.t());
+        let scale = 1.0 + sym.frob_norm();
+        for (x, y) in rec.data.iter().zip(&sym.data) {
+            assert!((x - y).abs() < 5e-3 * scale, "seed {seed}: {x} vs {y}");
+        }
+        assert!(w.iter().all(|&e| e > -1e-3 * scale), "seed {seed}");
+    }
+}
+
+/// Property: cosine is invariant to positive scaling and flips sign under
+/// negation (the Sec. 5.3 monitoring metric's defining behaviour).
+#[test]
+fn prop_cosine_scale_invariance() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 105);
+        let n = 2 + rng.below(100) as usize;
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let c0 = stats::cosine(&a, &b);
+        let s = rng.range_f32(0.1, 100.0);
+        let a_scaled: Vec<f32> = a.iter().map(|v| v * s).collect();
+        assert!((stats::cosine(&a_scaled, &b) - c0).abs() < 1e-4, "seed {seed}");
+        let a_neg: Vec<f32> = a.iter().map(|v| -v).collect();
+        assert!((stats::cosine(&a_neg, &b) + c0).abs() < 1e-4, "seed {seed}");
+        assert!((-1.0001..=1.0001).contains(&c0), "seed {seed}");
+    }
+}
+
+/// Property: Monte-Carlo variance of the debiased estimator tracks the
+/// closed-form φ across random (f, ρ, κ) — Proposition 2 end-to-end.
+#[test]
+fn prop_variance_matches_phi() {
+    for seed in 0..4 {
+        let mut rng = Pcg64::new(seed, 106);
+        let f = [0.125, 0.25, 0.5][rng.below(3) as usize];
+        let rho = rng.range_f32(0.3, 0.95) as f64;
+        let kappa = rng.range_f32(0.7, 1.4) as f64;
+        let mc = theory::monte_carlo_phi(24, 16, f, rho, kappa, 1200, seed * 7 + 1);
+        let rel = (mc.phi_empirical - mc.phi_closed_form).abs() / mc.phi_closed_form;
+        assert!(
+            rel < 0.2,
+            "seed {seed}: f={f} rho={rho:.2} kappa={kappa:.2}: {} vs {}",
+            mc.phi_empirical,
+            mc.phi_closed_form
+        );
+    }
+}
+
+/// Property: Newton–Schulz output is close in direction to the input's
+/// polar factor for random matrices (Muon correctness envelope).
+#[test]
+fn prop_newton_schulz_direction() {
+    for seed in 0..20 {
+        let mut rng = Pcg64::new(seed, 107);
+        let m = 2 + rng.below(12) as usize;
+        let n = 2 + rng.below(12) as usize;
+        let mut g = Tensor::zeros(&[m, n]);
+        rng.fill_normal(&mut g.data, 1.0);
+        let o = linalg::newton_schulz(&g, 5);
+        // NS never changes the sign of <G, O>: the update stays descent-
+        // aligned with the raw gradient.
+        let align = stats::cosine(&g.data, &o.data);
+        assert!(align > 0.0, "seed {seed}: align {align}");
+        // bounded entries (singular values in the NS band)
+        let fro = o.frob_norm();
+        let max_fro = (m.min(n) as f32).sqrt() * 1.6;
+        assert!(fro <= max_fro, "seed {seed}: {fro} > {max_fro}");
+    }
+}
