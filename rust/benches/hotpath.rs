@@ -1,30 +1,48 @@
 //! Bench: hot-path micro-benchmarks for the perf pass (EXPERIMENTS.md
 //! §Perf) — the host-side pieces that run every optimizer update, plus the
-//! per-artifact device costs.
+//! backend × shape kernel comparison that seeds `BENCH_kernels.json`.
 //!
 //!   cargo bench --bench hotpath
+//!   LGP_BENCH_FAST=1 cargo bench --bench hotpath     (sub-second suite)
+//!   LGP_BACKEND=micro cargo bench --bench hotpath    (pin the hot-path backend)
 
-use lgp::bench_support::{bench, fmt_time, Table};
+use lgp::bench_support::json_out::write_bench_doc;
+use lgp::bench_support::{bench, fmt_time, kernels, Table};
 use lgp::coordinator::combine::cv_combine;
 use lgp::model::params::FlatGrad;
 use lgp::predictor::fit::{fit, FitBuffer};
 use lgp::predictor::Predictor;
-use lgp::tensor::{linalg, matmul, Tensor};
+use lgp::tensor::{backend, linalg, matmul, BackendKind, Tensor};
 use lgp::util::rng::Pcg64;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    // Optional backend pin for the hot-path section; default is the
+    // calibration probe (the same startup path the trainer takes).
+    let kind = match std::env::var("LGP_BACKEND") {
+        Ok(v) => BackendKind::parse(&v)?,
+        Err(_) => BackendKind::Auto,
+    };
+    let active = backend::set_active(kind);
+    println!("[HOTPATH] active tensor backend: {}\n", active.name());
+
+    // LGP_BENCH_FAST shrinks every section (iteration counts and the fit
+    // problem size), not just the kernel sweep, so the whole binary stays
+    // ~sub-second for smoke runs.
+    let fast = std::env::var_os("LGP_BENCH_FAST").is_some();
+    let (warm, iters) = if fast { (1, 3) } else { (3, 20) };
+
     let mut rng = Pcg64::seeded(9);
     let mut table = Table::new(&["hot path", "size", "mean", "p90", "throughput"]);
 
     // --- control-variate combine (runs once per micro-batch) -------------
-    let p = 250_000usize;
+    let p = if fast { 50_000usize } else { 250_000usize };
     let mk = |rng: &mut Pcg64| {
         let mut g = FlatGrad { trunk: vec![0.0; p], head_w: vec![0.0; 640], head_b: vec![0.0; 10] };
         rng.fill_normal(&mut g.trunk, 1.0);
         g
     };
     let (a, b, c) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
-    let s = bench(3, 20, || {
+    let s = bench(warm, iters, || {
         std::hint::black_box(cv_combine(&a, &b, &c, 0.25));
     });
     table.row(vec![
@@ -36,7 +54,7 @@ fn main() {
     ]);
 
     // --- host predictor (diagnostics path) --------------------------------
-    let (d, r, pt, m) = (64usize, 16usize, 250_000usize, 48usize);
+    let (d, r, pt, m) = (64usize, 16usize, if fast { 50_000usize } else { 250_000usize }, 48usize);
     let mut pred = Predictor::new(pt, d, r);
     let mut u = Tensor::zeros(&[pt, r]);
     let mut bm = Tensor::zeros(&[r, (d + 1) * d]);
@@ -47,7 +65,7 @@ fn main() {
     let mut h = Tensor::zeros(&[m, d]);
     rng.fill_normal(&mut act.data, 1.0);
     rng.fill_normal(&mut h.data, 1.0);
-    let s = bench(3, 20, || {
+    let s = bench(warm, iters, || {
         std::hint::black_box(pred.predict_mean_trunk(&act, &h));
     });
     table.row(vec![
@@ -64,7 +82,7 @@ fn main() {
         rng.fill_normal(&mut t.data, 1.0);
         t
     };
-    let s = bench(3, 20, || {
+    let s = bench(warm, iters, || {
         std::hint::black_box(linalg::newton_schulz(&g, 5));
     });
     table.row(vec![
@@ -75,17 +93,17 @@ fn main() {
         format!("{:.2} GFLOP/s", (5.0 * 3.0 * 2.0 * 64.0 * 64.0 * 192.0) / s.mean / 1e9),
     ]);
 
-    // --- blocked matmul ------------------------------------------------------
+    // --- matmul on the active backend ----------------------------------------
     let am = {
         let mut t = Tensor::zeros(&[256, 256]);
         rng.fill_normal(&mut t.data, 1.0);
         t
     };
-    let s = bench(3, 20, || {
+    let s = bench(warm, iters, || {
         std::hint::black_box(matmul::matmul(&am, &am));
     });
     table.row(vec![
-        "matmul 256^3".into(),
+        format!("matmul 256^3 ({})", active.name()),
         "256x256x256".into(),
         fmt_time(s.mean),
         fmt_time(s.p90),
@@ -95,7 +113,7 @@ fn main() {
     // --- predictor fit (Gram SVD + dual ridge) ------------------------------
     let mut buf = FitBuffer::new(64);
     for _ in 0..64 {
-        let mut gg = vec![0.0f32; 50_000];
+        let mut gg = vec![0.0f32; if fast { 10_000 } else { 50_000 }];
         let mut aa = vec![0.0f32; d];
         let mut hh = vec![0.0f32; d];
         rng.fill_normal(&mut gg, 1.0);
@@ -103,13 +121,13 @@ fn main() {
         rng.fill_normal(&mut hh, 1.0);
         buf.push(gg, aa, hh);
     }
-    let mut pred2 = Predictor::new(50_000, d, r);
-    let s = bench(1, 5, || {
+    let mut pred2 = Predictor::new(if fast { 10_000 } else { 50_000 }, d, r);
+    let s = bench(1, if fast { 2 } else { 5 }, || {
         fit(&mut pred2, &buf, 1e-4).unwrap();
     });
     table.row(vec![
         "predictor fit".into(),
-        "n=64 P_T=50k r=16".into(),
+        format!("n=64 P_T={}k r=16", if fast { 10 } else { 50 }),
         fmt_time(s.mean),
         fmt_time(s.p90),
         "-".into(),
@@ -120,4 +138,14 @@ fn main() {
     println!("\ncontext: one GPR update (accum=4) does 4 combines + 4 predictor");
     println!("device calls; a refit (every ~20 updates) does one fit. All host");
     println!("costs above must stay well under the device call costs (~30-120ms).");
+
+    // --- backend × shape kernel comparison -> BENCH_kernels.json -------------
+    let kcfg = kernels::KernelBenchConfig::from_env();
+    let records = kernels::run(&kcfg);
+    println!("\n[KERNELS] backend x shape comparison ({} records)\n", records.len());
+    kernels::table(&records).print();
+    let doc = kernels::doc(&records);
+    let path = write_bench_doc("BENCH_kernels.json", &doc)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
 }

@@ -1,0 +1,176 @@
+//! Machine-readable bench output: the `BENCH_*.json` trajectory files.
+//!
+//! Every bench binary that produces perf numbers serializes them through
+//! [`BenchRecord`] into a `lgp.bench.v1` document (schema documented in
+//! EXPERIMENTS.md) and drops it at the repository root, so future PRs can
+//! regress against the recorded trajectory. The `bench-report` binary and
+//! the smoke tests validate the same documents via `bench_support::schema`.
+
+use super::Summary;
+use crate::util::json::{num, obj, s, Json};
+use std::path::PathBuf;
+
+/// Schema identifier stamped into every emitted document.
+pub const SCHEMA_ID: &str = "lgp.bench.v1";
+
+/// One timed entry: a kernel/procedure on one backend at one shape.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Kernel or procedure name, e.g. `matmul`, `gram_t`, `train_grads`.
+    pub name: String,
+    /// Tensor backend (`naive`/`blocked`/`micro`), or `device` for PJRT
+    /// timings, or `-` where the notion does not apply.
+    pub backend: String,
+    /// Problem shape, kernel-specific (matmul: `[m, k, n]`).
+    pub shape: Vec<usize>,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    /// Throughput where a flop count is defined.
+    pub gflops: Option<f64>,
+}
+
+impl BenchRecord {
+    /// Build a record from a timing [`Summary`] and an optional flop count
+    /// per iteration.
+    pub fn from_summary(
+        name: &str,
+        backend: &str,
+        shape: &[usize],
+        summary: &Summary,
+        flops: Option<f64>,
+    ) -> BenchRecord {
+        BenchRecord {
+            name: name.to_string(),
+            backend: backend.to_string(),
+            shape: shape.to_vec(),
+            iters: summary.iters,
+            mean_ns: summary.mean * 1e9,
+            p50_ns: summary.p50 * 1e9,
+            p90_ns: summary.p90 * 1e9,
+            gflops: flops.and_then(|fl| {
+                let g = fl / summary.mean / 1e9;
+                g.is_finite().then_some(g)
+            }),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", s(&self.name)),
+            ("backend", s(&self.backend)),
+            (
+                "shape",
+                Json::Arr(self.shape.iter().map(|&d| num(d as f64)).collect()),
+            ),
+            ("iters", num(self.iters as f64)),
+            ("mean_ns", num(self.mean_ns)),
+            ("p50_ns", num(self.p50_ns)),
+            ("p90_ns", num(self.p90_ns)),
+        ];
+        if let Some(g) = self.gflops {
+            pairs.push(("gflops", num(g)));
+        }
+        obj(pairs)
+    }
+}
+
+/// Assemble a full `lgp.bench.v1` document. `derived` carries
+/// bench-specific summary values (e.g. the cost-model γ table) that the
+/// generic validator does not interpret.
+pub fn bench_doc(bench: &str, records: &[BenchRecord], derived: Option<Json>) -> Json {
+    let created = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let mut pairs = vec![
+        ("schema", s(SCHEMA_ID)),
+        ("bench", s(bench)),
+        ("created_unix", num(created)),
+        (
+            "records",
+            Json::Arr(records.iter().map(BenchRecord::to_json).collect()),
+        ),
+    ];
+    if let Some(d) = derived {
+        pairs.push(("derived", d));
+    }
+    obj(pairs)
+}
+
+/// Where `BENCH_*.json` files land: `$LGP_BENCH_DIR` if set, else the
+/// repository root (first ancestor of the current directory holding
+/// `.git` or `ROADMAP.md`), else the current directory.
+pub fn bench_out_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("LGP_BENCH_DIR") {
+        return PathBuf::from(dir);
+    }
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join(".git").exists() || dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return cwd;
+        }
+    }
+}
+
+/// Serialize `doc` to `<bench_out_dir>/<file_name>` and return the path.
+pub fn write_bench_doc(file_name: &str, doc: &Json) -> anyhow::Result<PathBuf> {
+    let path = bench_out_dir().join(file_name);
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write(&path, text)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary() -> Summary {
+        Summary::from_samples(vec![1e-6, 2e-6, 3e-6])
+    }
+
+    #[test]
+    fn record_converts_units() {
+        let r = BenchRecord::from_summary("matmul", "blocked", &[8, 8, 8], &summary(), Some(1024.0));
+        assert_eq!(r.iters, 3);
+        assert!((r.mean_ns - 2000.0).abs() < 1e-6);
+        let g = r.gflops.unwrap();
+        assert!((g - 1024.0 / 2e-6 / 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn doc_is_valid_json_with_schema_header() {
+        let r = BenchRecord::from_summary("dot", "naive", &[64], &summary(), None);
+        let doc = bench_doc("kernels", &[r], None);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.at(&["schema"]).as_str(), Some(SCHEMA_ID));
+        assert_eq!(parsed.at(&["bench"]).as_str(), Some("kernels"));
+        assert_eq!(parsed.at(&["records"]).as_arr().unwrap().len(), 1);
+        // gflops omitted when no flop count was given
+        assert!(parsed.at(&["records"]).as_arr().unwrap()[0]
+            .get("gflops")
+            .is_none());
+    }
+
+    #[test]
+    fn out_dir_honors_env_override() {
+        // Serialize access to the env var across test threads is not
+        // needed: this test sets a unique value and restores immediately.
+        let dir = std::env::temp_dir().join("lgp_json_out_test");
+        std::env::set_var("LGP_BENCH_DIR", &dir);
+        let got = bench_out_dir();
+        std::env::remove_var("LGP_BENCH_DIR");
+        assert_eq!(got, dir);
+        // Without the override the walk-up finds a marker or falls back.
+        let root = bench_out_dir();
+        assert!(root.as_os_str().len() > 0);
+    }
+}

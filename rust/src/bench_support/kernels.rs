@@ -1,0 +1,184 @@
+//! The backend × shape kernel benchmark suite.
+//!
+//! Library form of the kernel comparison so `cargo bench --bench hotpath`
+//! and the `cargo test` smoke test (`tests/backend_equivalence.rs`) run
+//! the exact same code: time `matmul`, `gram_t` and `dot` on every
+//! concrete backend, and serialize the results as `lgp.bench.v1` records
+//! destined for `BENCH_kernels.json` (EXPERIMENTS.md §Benches).
+
+use super::json_out::{bench_doc, BenchRecord};
+use super::{bench, Table};
+use crate::tensor::{Backend, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Suite sizing. `full()` is the trajectory-recording run; `fast()` keeps
+/// the whole sweep under ~1s for test-mode runs (`LGP_BENCH_FAST=1`).
+#[derive(Clone, Debug)]
+pub struct KernelBenchConfig {
+    pub warmup: usize,
+    pub iters: usize,
+    /// (m, k, n) matmul shapes — deliberately including non-multiples of
+    /// the register/L1 tile sizes.
+    pub matmul_shapes: Vec<(usize, usize, usize)>,
+    /// (n, d) gram_t shapes.
+    pub gram_shapes: Vec<(usize, usize)>,
+    pub dot_lens: Vec<usize>,
+}
+
+impl KernelBenchConfig {
+    pub fn full() -> KernelBenchConfig {
+        KernelBenchConfig {
+            warmup: 2,
+            iters: 12,
+            matmul_shapes: vec![(64, 64, 64), (96, 128, 80), (192, 192, 192), (256, 256, 256)],
+            gram_shapes: vec![(128, 64), (256, 96)],
+            dot_lens: vec![4096, 65536],
+        }
+    }
+
+    pub fn fast() -> KernelBenchConfig {
+        KernelBenchConfig {
+            warmup: 1,
+            iters: 3,
+            matmul_shapes: vec![(24, 32, 20), (48, 48, 48)],
+            gram_shapes: vec![(32, 24)],
+            dot_lens: vec![4096],
+        }
+    }
+
+    /// Honor `LGP_BENCH_FAST` (any value) for test-mode runs.
+    pub fn from_env() -> KernelBenchConfig {
+        if std::env::var_os("LGP_BENCH_FAST").is_some() {
+            KernelBenchConfig::fast()
+        } else {
+            KernelBenchConfig::full()
+        }
+    }
+}
+
+fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(&mut t.data, 1.0);
+    t
+}
+
+/// Run the suite: every concrete backend over every configured shape.
+pub fn run(cfg: &KernelBenchConfig) -> Vec<BenchRecord> {
+    let mut rng = Pcg64::seeded(0xBE7C);
+    let mut records = Vec::new();
+
+    for &(m, k, n) in &cfg.matmul_shapes {
+        let a = rand_t(&mut rng, &[m, k]);
+        let b = rand_t(&mut rng, &[k, n]);
+        let mut c = Tensor::zeros(&[m, n]);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        for be in Backend::all() {
+            let s = bench(cfg.warmup, cfg.iters, || {
+                be.matmul_into(&a, &b, &mut c);
+                std::hint::black_box(&c);
+            });
+            records.push(BenchRecord::from_summary(
+                "matmul",
+                be.name(),
+                &[m, k, n],
+                &s,
+                Some(flops),
+            ));
+        }
+    }
+
+    for &(rows, d) in &cfg.gram_shapes {
+        let a = rand_t(&mut rng, &[rows, d]);
+        // n rows × d(d+1)/2 upper entries × 2 flops each.
+        let flops = rows as f64 * d as f64 * (d + 1) as f64;
+        for be in Backend::all() {
+            let s = bench(cfg.warmup, cfg.iters, || {
+                std::hint::black_box(be.gram_t(&a));
+            });
+            records.push(BenchRecord::from_summary(
+                "gram_t",
+                be.name(),
+                &[rows, d],
+                &s,
+                Some(flops),
+            ));
+        }
+    }
+
+    for &len in &cfg.dot_lens {
+        let mut a = vec![0.0f32; len];
+        let mut b = vec![0.0f32; len];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        for be in Backend::all() {
+            let s = bench(cfg.warmup, cfg.iters, || {
+                std::hint::black_box(be.dot(&a, &b));
+            });
+            records.push(BenchRecord::from_summary(
+                "dot",
+                be.name(),
+                &[len],
+                &s,
+                Some(2.0 * len as f64),
+            ));
+        }
+    }
+
+    records
+}
+
+/// Wrap the records in the `lgp.bench.v1` document for
+/// `BENCH_kernels.json`.
+pub fn doc(records: &[BenchRecord]) -> Json {
+    bench_doc("kernels", records, None)
+}
+
+/// Fixed-width comparison table for terminal output.
+pub fn table(records: &[BenchRecord]) -> Table {
+    let mut t = Table::new(&["kernel", "shape", "backend", "mean", "p90", "GFLOP/s"]);
+    for r in records {
+        let shape = r
+            .shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        t.row(vec![
+            r.name.clone(),
+            shape,
+            r.backend.clone(),
+            super::fmt_time(r.mean_ns / 1e9),
+            super::fmt_time(r.p90_ns / 1e9),
+            r.gflops.map_or("-".into(), |g| format!("{g:.2}")),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_suite_covers_all_backends_and_kernels() {
+        let records = run(&KernelBenchConfig::fast());
+        for be in ["naive", "blocked", "micro"] {
+            for kernel in ["matmul", "gram_t", "dot"] {
+                assert!(
+                    records.iter().any(|r| r.backend == be && r.name == kernel),
+                    "missing {kernel} on {be}"
+                );
+            }
+        }
+        assert!(records.iter().all(|r| r.mean_ns >= 0.0 && r.mean_ns.is_finite()));
+        // doc round-trips through the parser
+        let d = doc(&records);
+        let reparsed = Json::parse(&d.to_string()).unwrap();
+        assert_eq!(
+            reparsed.at(&["records"]).as_arr().unwrap().len(),
+            records.len()
+        );
+        table(&records).print();
+    }
+}

@@ -3,6 +3,17 @@
 //! Provides warmup + timed iterations with mean/σ/percentile reporting and
 //! fixed-width table printing shared by every `cargo bench` target. Each
 //! bench binary regenerates one paper table or figure (DESIGN.md §4).
+//!
+//! Machine-readable output: `json_out` serializes timing records to the
+//! repo-root `BENCH_*.json` trajectory files (schema `lgp.bench.v1`,
+//! documented in EXPERIMENTS.md), `kernels` is the backend×shape kernel
+//! suite shared by `cargo bench --bench hotpath` and the smoke tests, and
+//! `schema` validates emitted documents (also used by the `bench-report`
+//! binary).
+
+pub mod json_out;
+pub mod kernels;
+pub mod schema;
 
 use std::time::Instant;
 

@@ -1,0 +1,202 @@
+//! Validation of `lgp.bench.v1` documents (the `BENCH_*.json` trajectory
+//! files). The rules here are the normative schema described in
+//! EXPERIMENTS.md §Schema; the `bench-report` binary and the cargo-test
+//! smoke tests both call into this module, so a malformed emitter fails
+//! in CI and at the command line identically.
+
+use super::json_out::SCHEMA_ID;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Summary of one successfully validated document.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub bench: String,
+    pub records: usize,
+    /// Distinct backend names seen across records.
+    pub backends: Vec<String>,
+}
+
+fn field<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("{what}: missing field '{key}'"))
+}
+
+fn req_str(j: &Json, key: &str, what: &str) -> Result<String, String> {
+    let v = field(j, key, what)?
+        .as_str()
+        .ok_or_else(|| format!("{what}: field '{key}' must be a string"))?;
+    if v.is_empty() {
+        return Err(format!("{what}: field '{key}' must be non-empty"));
+    }
+    Ok(v.to_string())
+}
+
+fn req_num(j: &Json, key: &str, what: &str) -> Result<f64, String> {
+    let v = field(j, key, what)?
+        .as_f64()
+        .ok_or_else(|| format!("{what}: field '{key}' must be a number"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("{what}: field '{key}' must be finite and >= 0, got {v}"));
+    }
+    Ok(v)
+}
+
+/// Validate one parsed document against the `lgp.bench.v1` schema.
+pub fn validate(doc: &Json) -> Result<ValidationReport, String> {
+    if doc.as_obj().is_none() {
+        return Err("top level must be a JSON object".into());
+    }
+    let schema = req_str(doc, "schema", "document")?;
+    if schema != SCHEMA_ID {
+        return Err(format!("unknown schema '{schema}' (want '{SCHEMA_ID}')"));
+    }
+    let bench = req_str(doc, "bench", "document")?;
+    req_num(doc, "created_unix", "document")?;
+
+    let records = field(doc, "records", "document")?
+        .as_arr()
+        .ok_or_else(|| "document: 'records' must be an array".to_string())?;
+    if records.is_empty() {
+        return Err("document: 'records' must be non-empty".into());
+    }
+
+    let mut backends: Vec<String> = Vec::new();
+    for (i, rec) in records.iter().enumerate() {
+        let what = format!("records[{i}]");
+        if rec.as_obj().is_none() {
+            return Err(format!("{what}: must be an object"));
+        }
+        req_str(rec, "name", &what)?;
+        let be = req_str(rec, "backend", &what)?;
+        if !backends.contains(&be) {
+            backends.push(be);
+        }
+        let shape = field(rec, "shape", &what)?
+            .as_arr()
+            .ok_or_else(|| format!("{what}: 'shape' must be an array"))?;
+        for (d, dim) in shape.iter().enumerate() {
+            let v = dim
+                .as_f64()
+                .ok_or_else(|| format!("{what}: shape[{d}] must be a number"))?;
+            if v < 0.0 || v.fract() != 0.0 {
+                return Err(format!("{what}: shape[{d}] must be a non-negative integer"));
+            }
+        }
+        let iters = req_num(rec, "iters", &what)?;
+        if iters < 1.0 || iters.fract() != 0.0 {
+            return Err(format!("{what}: 'iters' must be a positive integer"));
+        }
+        req_num(rec, "mean_ns", &what)?;
+        req_num(rec, "p50_ns", &what)?;
+        req_num(rec, "p90_ns", &what)?;
+        if let Some(g) = rec.get("gflops") {
+            let v = g
+                .as_f64()
+                .ok_or_else(|| format!("{what}: 'gflops' must be a number"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{what}: 'gflops' must be finite and >= 0"));
+            }
+        }
+    }
+
+    // Bench-specific invariant: the kernel trajectory must cover every
+    // tensor backend, or cross-PR comparisons silently lose a column.
+    if bench == "kernels" {
+        for required in ["naive", "blocked", "micro"] {
+            if !backends.iter().any(|b| b == required) {
+                return Err(format!("kernels document missing backend '{required}'"));
+            }
+        }
+    }
+
+    Ok(ValidationReport { bench, records: records.len(), backends })
+}
+
+/// Read, parse and validate a `BENCH_*.json` file.
+pub fn validate_file(path: &Path) -> Result<ValidationReport, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+    validate(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal(backend_list: &[&str]) -> String {
+        let records: Vec<String> = backend_list
+            .iter()
+            .map(|b| {
+                format!(
+                    r#"{{"name":"matmul","backend":"{b}","shape":[4,4,4],
+                        "iters":3,"mean_ns":10.0,"p50_ns":9.0,"p90_ns":12.0,"gflops":1.5}}"#
+                )
+            })
+            .collect();
+        format!(
+            r#"{{"schema":"lgp.bench.v1","bench":"kernels","created_unix":1,
+                "records":[{}]}}"#,
+            records.join(",")
+        )
+    }
+
+    #[test]
+    fn accepts_well_formed_kernels_doc() {
+        let doc = Json::parse(&minimal(&["naive", "blocked", "micro"])).unwrap();
+        let rep = validate(&doc).unwrap();
+        assert_eq!(rep.bench, "kernels");
+        assert_eq!(rep.records, 3);
+        assert_eq!(rep.backends.len(), 3);
+    }
+
+    #[test]
+    fn rejects_missing_backend_coverage() {
+        let doc = Json::parse(&minimal(&["naive", "blocked"])).unwrap();
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("micro"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_schema_and_shapes() {
+        let doc = Json::parse(r#"{"schema":"nope","bench":"x","created_unix":1,"records":[]}"#)
+            .unwrap();
+        assert!(validate(&doc).unwrap_err().contains("unknown schema"));
+
+        let doc = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"x","created_unix":1,"records":[]}"#,
+        )
+        .unwrap();
+        assert!(validate(&doc).unwrap_err().contains("non-empty"));
+
+        let doc = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"x","created_unix":1,
+                "records":[{"name":"m","backend":"naive","shape":[-1],
+                            "iters":1,"mean_ns":1,"p50_ns":1,"p90_ns":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate(&doc).unwrap_err().contains("shape[0]"));
+    }
+
+    #[test]
+    fn rejects_non_numeric_timings() {
+        let doc = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"x","created_unix":1,
+                "records":[{"name":"m","backend":"naive","shape":[2],
+                            "iters":1,"mean_ns":"fast","p50_ns":1,"p90_ns":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate(&doc).unwrap_err().contains("mean_ns"));
+    }
+
+    #[test]
+    fn validate_file_reports_io_and_parse_errors() {
+        let missing = std::path::Path::new("/nonexistent/BENCH_x.json");
+        assert!(validate_file(missing).is_err());
+        let dir = std::env::temp_dir().join("lgp_schema_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("BENCH_bad.json");
+        std::fs::write(&bad, "{not json").unwrap();
+        assert!(validate_file(&bad).unwrap_err().contains("parsing"));
+    }
+}

@@ -1,0 +1,103 @@
+//! bench-report — validate the emitted `BENCH_*.json` trajectory files.
+//!
+//! Scans a directory (default: the repo root, where the bench binaries
+//! write) for `BENCH_*.json`, validates each against the `lgp.bench.v1`
+//! schema (EXPERIMENTS.md §Schema), prints a summary table, and exits
+//! nonzero if any document is malformed or an expected document is
+//! missing. The same validator runs under `cargo test` via
+//! `tests/backend_equivalence.rs`, so emitters cannot drift silently.
+//!
+//!   cargo run --release --bin bench_report
+//!   cargo run --release --bin bench_report -- --dir . --expect kernels,cost_model
+
+use lgp::bench_support::json_out::bench_out_dir;
+use lgp::bench_support::{schema, Table};
+use lgp::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    std::process::exit(run());
+}
+
+fn run() -> i32 {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            return 2;
+        }
+    };
+    let dir = args
+        .str_opt("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(bench_out_dir);
+    let expect: Vec<String> = args
+        .str_opt("expect")
+        .map(|v| v.split(',').filter(|s| !s.is_empty()).map(String::from).collect())
+        .unwrap_or_default();
+    let unknown = args.unknown_keys();
+    if !unknown.is_empty() {
+        eprintln!("unknown flags: {unknown:?}");
+        return 2;
+    }
+
+    let mut files: Vec<PathBuf> = match std::fs::read_dir(&dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map_or(false, |n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            })
+            .collect(),
+        Err(e) => {
+            eprintln!("cannot read {}: {e}", dir.display());
+            return 1;
+        }
+    };
+    files.sort();
+
+    let mut table = Table::new(&["file", "bench", "records", "backends", "status"]);
+    let mut failures = 0usize;
+    let mut seen_benches: Vec<String> = Vec::new();
+    for path in &files {
+        let fname = path.file_name().unwrap().to_string_lossy().into_owned();
+        match schema::validate_file(path) {
+            Ok(rep) => {
+                seen_benches.push(rep.bench.clone());
+                table.row(vec![
+                    fname,
+                    rep.bench,
+                    rep.records.to_string(),
+                    rep.backends.join(","),
+                    "ok".into(),
+                ]);
+            }
+            Err(msg) => {
+                failures += 1;
+                table.row(vec![fname, "-".into(), "-".into(), "-".into(), "MALFORMED".into()]);
+                eprintln!("error: {}: {msg}", path.display());
+            }
+        }
+    }
+
+    println!("[BENCH-REPORT] {} ({} file(s))\n", dir.display(), files.len());
+    table.print();
+
+    for want in &expect {
+        if !seen_benches.iter().any(|b| b == want) {
+            eprintln!("error: expected bench document '{want}' not found in {}", dir.display());
+            failures += 1;
+        }
+    }
+    if files.is_empty() && expect.is_empty() {
+        println!("\nno BENCH_*.json files found — run `cargo bench` first (EXPERIMENTS.md)");
+    }
+    if failures > 0 {
+        eprintln!("\n{failures} validation failure(s)");
+        1
+    } else {
+        0
+    }
+}

@@ -6,6 +6,7 @@
 //! at run time without re-lowering: control fraction f, optimizer choice
 //! and learning rate, accumulation, refit period, budgets, seeds.
 
+use crate::tensor::backend::BackendKind;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use std::path::PathBuf;
@@ -87,6 +88,9 @@ pub struct RunConfig {
     /// Adaptive control fraction (Theorem 4 online): steer f toward the
     /// quantized f*(ρ̂, κ̂) among the fractions with lowered artifacts.
     pub adaptive_f: bool,
+    /// Host tensor backend for the dense hot paths (`--backend`); `Auto`
+    /// runs the one-shot calibration probe at startup (DESIGN.md §2).
+    pub backend: BackendKind,
 }
 
 impl Default for RunConfig {
@@ -111,6 +115,7 @@ impl Default for RunConfig {
             out_dir: PathBuf::from("runs"),
             track_alignment: true,
             adaptive_f: false,
+            backend: BackendKind::Auto,
         }
     }
 }
@@ -129,6 +134,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
             self.out_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("backend").and_then(Json::as_str) {
+            self.backend = BackendKind::parse(v)?;
         }
         macro_rules! num {
             ($key:literal, $field:expr, $ty:ty) => {
@@ -175,6 +183,9 @@ impl RunConfig {
         }
         if let Some(v) = a.str_opt("out") {
             self.out_dir = PathBuf::from(v);
+        }
+        if let Some(v) = a.str_opt("backend") {
+            self.backend = BackendKind::parse(&v)?;
         }
         self.f = a.f64_or("f", self.f);
         self.accum = a.usize_or("accum", self.accum);
@@ -231,7 +242,7 @@ mod tests {
         let mut c = RunConfig::default();
         let j = Json::parse(
             r#"{"algo":"baseline","f":0.5,"lr":0.1,"optimizer":"adamw",
-                "max_steps":7,"track_alignment":false}"#,
+                "max_steps":7,"track_alignment":false,"backend":"micro"}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -240,13 +251,14 @@ mod tests {
         assert_eq!(c.max_steps, 7);
         assert!(!c.track_alignment);
         assert!((c.f - 0.5).abs() < 1e-12);
+        assert_eq!(c.backend, BackendKind::Micro);
     }
 
     #[test]
     fn cli_overrides_beat_defaults() {
         let mut c = RunConfig::default();
         let a = Args::parse(
-            "train --preset small --algo gpr --f 0.125 --steps 3 --seed 9"
+            "train --preset small --algo gpr --f 0.125 --steps 3 --seed 9 --backend blocked"
                 .split_whitespace()
                 .map(String::from),
         )
@@ -255,6 +267,15 @@ mod tests {
         assert_eq!(c.artifacts_dir, PathBuf::from("artifacts/small"));
         assert_eq!(c.seed, 9);
         assert!((c.f - 0.125).abs() < 1e-12);
+        assert_eq!(c.backend, BackendKind::Blocked);
+    }
+
+    #[test]
+    fn bad_backend_string_rejected() {
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"backend":"gpu"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
     }
 
     #[test]

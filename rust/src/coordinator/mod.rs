@@ -23,10 +23,10 @@ use crate::data::loader::DataPipeline;
 use crate::metrics::{accuracy, alignment_of, AlignmentMeter, Ema, LogRow};
 use crate::model::params::{FlatGrad, ParamStore};
 use crate::optim::{OptimConfig, Optimizer};
-use crate::predictor::fit::{fit, FitBuffer};
+use crate::predictor::fit::{fit_with, FitBuffer};
 use crate::predictor::{residuals, Predictor};
 use crate::runtime::{DevicePredictor, Runtime, TrainOut};
-use crate::tensor::Tensor;
+use crate::tensor::{backend, Backend, Tensor};
 use crate::util::{CsvWriter, Stopwatch};
 
 /// Where the control-variate combine runs.
@@ -47,6 +47,9 @@ pub struct Trainer {
     fit_buf: FitBuffer,
     pub data: DataPipeline,
     pub tracker: AlignmentMeter,
+    /// Host tensor backend selected at startup from `cfg.backend` (Auto →
+    /// calibration probe); threaded through the fit and the optimizer.
+    pub backend: Backend,
     dev_pred: Option<DevicePredictor>,
     /// Theorem-4 online controller (enabled by cfg.adaptive_f).
     pub adaptive: Option<adaptive::AdaptiveF>,
@@ -62,6 +65,10 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: RunConfig) -> anyhow::Result<Trainer> {
         cfg.validate()?;
+        // Install the tensor backend first: every dense host path below
+        // (fit, Muon, diagnostics) dispatches through it.
+        let be = backend::set_active(cfg.backend);
+        crate::log_info!("tensor backend: {} (requested: {})", be.name(), cfg.backend.as_str());
         let rt = Runtime::load(&cfg.artifacts_dir)?;
         let params = ParamStore::load_init(&rt.manifest)?;
         let opt = Optimizer::new(
@@ -69,6 +76,7 @@ impl Trainer {
             OptimConfig {
                 lr: cfg.lr as f32,
                 weight_decay: cfg.weight_decay as f32,
+                backend: be,
                 ..OptimConfig::default()
             },
             &params,
@@ -89,6 +97,7 @@ impl Trainer {
         });
         Ok(Trainer {
             tracker: AlignmentMeter::default(),
+            backend: be,
             fit_buf,
             adaptive,
             cfg,
@@ -254,7 +263,8 @@ impl Trainer {
                 self.fit_buf.push(g, a_row, h_row);
             }
         }
-        let report = fit(&mut self.pred, &self.fit_buf, self.cfg.ridge_lambda as f32)?;
+        let report =
+            fit_with(self.backend, &mut self.pred, &self.fit_buf, self.cfg.ridge_lambda as f32)?;
         crate::log_debug!(
             "refit: n={} energy={:.3} rel_err={:.3}",
             report.n,

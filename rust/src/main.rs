@@ -51,10 +51,14 @@ SUBCOMMANDS
   train    --preset tiny|small|paper --algo gpr|baseline [--f 0.25]
            [--steps N] [--budget SECS] [--accum K] [--optimizer muon|adamw|sgd|momentum]
            [--lr 0.02] [--refit-every N] [--seed S] [--csv out.csv]
+           [--backend naive|blocked|micro|auto]   (host tensor kernels; auto = probe)
   theory   print Theorem 3/4 tables and the cost model
   sweep-f  --fs 0.125,0.25,0.5 plus the train flags
   data     --n 100 --side 32 [--seed S]  describe synthetic data
   info     --preset tiny  show the artifact manifest
+
+See also: `bench_report` (validates the BENCH_*.json bench trajectory,
+EXPERIMENTS.md) and DESIGN.md for the architecture.
 ";
 
 fn run(r: anyhow::Result<()>) -> i32 {
@@ -97,7 +101,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     let st = trainer.rt.stats_snapshot();
     println!(
-        "algo={algo:?} steps={} wall={dt:.1}s final_val_acc={:.4} examples={} cost_units={:.0}",
+        "algo={algo:?} backend={} steps={} wall={dt:.1}s final_val_acc={:.4} examples={} cost_units={:.0}",
+        trainer.backend.name(),
         trainer.step_count(),
         trainer.final_val_acc(),
         trainer.examples_seen,

@@ -9,7 +9,7 @@
 
 use crate::model::manifest::Manifest;
 use crate::model::params::{FlatGrad, ParamStore};
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::{backend, backend::Backend, linalg, Tensor};
 
 /// Hyperparameters shared across optimizers.
 #[derive(Clone, Debug)]
@@ -25,6 +25,9 @@ pub struct OptimConfig {
     /// non-matrix parameters.
     pub ns_steps: usize,
     pub aux_lr: f32,
+    /// Tensor backend for Muon's Newton–Schulz matmuls (the coordinator
+    /// threads its startup-selected backend through here).
+    pub backend: Backend,
 }
 
 impl Default for OptimConfig {
@@ -38,6 +41,7 @@ impl Default for OptimConfig {
             eps: 1e-8,
             ns_steps: 5,
             aux_lr: 3e-3,
+            backend: backend::active(),
         }
     }
 }
@@ -131,7 +135,7 @@ impl Optimizer {
                             .collect();
                         let (rows, cols) = (p.shape[0], p.shape[1]);
                         let gm = Tensor::from_vec(blended, &[rows, cols]);
-                        let o = linalg::newton_schulz(&gm, cfg.ns_steps);
+                        let o = linalg::newton_schulz_with(cfg.backend, &gm, cfg.ns_steps);
                         // Muon's shape-aware scale: sqrt(max(1, rows/cols)).
                         let scale = (rows as f32 / cols as f32).max(1.0).sqrt();
                         let slice = &mut params.trunk[p.offset..p.offset + p.len];

@@ -18,7 +18,7 @@
 //! synthetic low-rank constructions.
 
 use super::Predictor;
-use crate::tensor::{linalg, stats, Tensor};
+use crate::tensor::{backend, backend::Backend, linalg, stats, Tensor};
 
 /// Accumulates fit samples between refits.
 pub struct FitBuffer {
@@ -80,8 +80,20 @@ pub struct FitReport {
     pub rel_error: f64,
 }
 
-/// Fit (U, B) from the buffer and install into `pred`.
+/// Fit (U, B) from the buffer and install into `pred`, using the active
+/// tensor backend for the dense reductions.
 pub fn fit(pred: &mut Predictor, buf: &FitBuffer, lambda: f32) -> anyhow::Result<FitReport> {
+    fit_with(backend::active(), pred, buf, lambda)
+}
+
+/// [`fit`] with an explicit tensor backend (the coordinator threads its
+/// configured backend through here; equivalence tests pin each one).
+pub fn fit_with(
+    be: Backend,
+    pred: &mut Predictor,
+    buf: &FitBuffer,
+    lambda: f32,
+) -> anyhow::Result<FitReport> {
     let n = buf.len();
     let r = pred.rank;
     anyhow::ensure!(n >= 2 * r, "need at least 2r = {} fit samples, have {n}", 2 * r);
@@ -89,13 +101,14 @@ pub fn fit(pred: &mut Predictor, buf: &FitBuffer, lambda: f32) -> anyhow::Result
     let d = pred.width;
 
     // ---- 1. basis U via the Gram trick --------------------------------
-    // K = G G^T (n, n). f32 4-way dot: at P_T ~ 10^5..10^7 the relative
-    // error is ~1e-5·sqrt(P_T) of norm — far below the fit's own noise —
-    // and 5-10x faster than the f64 path (perf pass, EXPERIMENTS.md).
+    // K = G G^T (n, n). f32 unrolled dot via the backend: at P_T ~
+    // 10^5..10^7 the relative error is ~1e-5·sqrt(P_T) of norm — far below
+    // the fit's own noise — and 5-10x faster than the f64 path (perf pass,
+    // EXPERIMENTS.md).
     let mut k = Tensor::zeros(&[n, n]);
     for i in 0..n {
         for j in i..n {
-            let dot = stats::dot(&buf.grads[i], &buf.grads[j]);
+            let dot = be.dot(&buf.grads[i], &buf.grads[j]);
             k.set(i, j, dot);
             k.set(j, i, dot);
         }
@@ -141,7 +154,7 @@ pub fn fit(pred: &mut Predictor, buf: &FitBuffer, lambda: f32) -> anyhow::Result
     for j in 0..n {
         let g = &buf.grads[j];
         for c in 0..r {
-            targets.set(j, c, stats::dot(g, &u_cols.data[c * p_t..(c + 1) * p_t]));
+            targets.set(j, c, be.dot(g, &u_cols.data[c * p_t..(c + 1) * p_t]));
         }
     }
     let u = u_cols.t(); // (p_t, r) row-major

@@ -1,0 +1,660 @@
+//! Runtime-selectable tensor backends (DESIGN.md §2, ADR-001).
+//!
+//! Every dense hot path in the reproduction — the predictor-fit Gram
+//! matrices, the U materialization dots, Muon's Newton–Schulz matmuls —
+//! funnels through the [`TensorBackend`] trait so the kernel strategy is
+//! an extension point instead of a hardcoded loop nest:
+//!
+//! - [`NaiveBackend`] — the textbook ijk kernels, moved here verbatim from
+//!   the old `matmul.rs` test oracle. Slow, obviously correct; every other
+//!   backend is property-tested against it (`tests/backend_equivalence.rs`).
+//! - [`BlockedBackend`] — the cache-aware ikj / j-tiled kernels that were
+//!   previously the only implementation.
+//! - [`MicroBackend`] — register-tiled 4-row kernels: the inner loop keeps
+//!   four output-row accumulators live so each B row loaded from L1 is
+//!   reused four times, and the unrolled multiply–add chains are
+//!   FMA/auto-vectorization friendly.
+//!
+//! Selection is by [`BackendKind`] (`--backend` CLI flag / `backend` config
+//! key); `Auto` runs a one-shot [`calibrate`] probe at startup and pins the
+//! fastest backend for the process. The chosen backend is held in a global
+//! the free functions in `tensor::matmul` dispatch through, and is also
+//! threaded explicitly (as a [`Backend`] handle) through the predictor fit,
+//! the Muon optimizer and the coordinator so call sites can pin a backend
+//! independently of the global (the equivalence tests and benches do).
+
+use super::Tensor;
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The dense kernels the reproduction's hot paths need. Implementations
+/// may assume shape-checked inputs: the [`Backend`] handle validates before
+/// dispatching.
+pub trait TensorBackend: Sync {
+    /// Stable lowercase identifier (appears in bench JSON and logs).
+    fn name(&self) -> &'static str;
+
+    /// Dot product of equal-length slices (the stats reduction feeding the
+    /// Gram matrices and `matvec`).
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// C = A @ B into a pre-allocated, zeroed-by-the-kernel output.
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor);
+
+    /// C = A^T @ A for A: (n, d) -> (d, d).
+    fn gram_t(&self, a: &Tensor) -> Tensor;
+
+    /// K = A @ A^T for A: (n, d) -> (n, n). Default: symmetric row-dot
+    /// fill using this backend's `dot`.
+    fn gram(&self, a: &Tensor) -> Tensor {
+        let (n, d) = (a.rows(), a.cols());
+        let mut k = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            let ri = &a.data[i * d..(i + 1) * d];
+            for j in i..n {
+                let rj = &a.data[j * d..(j + 1) * d];
+                let dot = self.dot(ri, rj);
+                k.data[i * n + j] = dot;
+                k.data[j * n + i] = dot;
+            }
+        }
+        k
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference kernels (the correctness oracle)
+// ---------------------------------------------------------------------------
+
+/// Textbook ijk kernels. The equivalence proptests and the other backends'
+/// unit tests all compare against this implementation.
+pub struct NaiveBackend;
+
+impl TensorBackend for NaiveBackend {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut s = 0.0f32;
+        for (x, y) in a.iter().zip(b) {
+            s += x * y;
+        }
+        s
+    }
+
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+    }
+
+    fn gram_t(&self, a: &Tensor) -> Tensor {
+        let (n, d) = (a.rows(), a.cols());
+        let mut c = Tensor::zeros(&[d, d]);
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0f32;
+                for row in 0..n {
+                    s += a.at(row, i) * a.at(row, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked kernels (the previous hardcoded implementation, moved here)
+// ---------------------------------------------------------------------------
+
+/// Cache-aware ikj loop order with an L1-sized j-tile. The inner j-loop is
+/// a contiguous axpy over B's row and C's row, which auto-vectorizes.
+pub struct BlockedBackend;
+
+const BLOCKED_JT: usize = 256;
+
+/// One ikj/j-tiled output row: c_row += a_row @ B. Shared by the blocked
+/// kernel and the micro kernel's remainder rows.
+fn blocked_row(a_row: &[f32], b: &Tensor, c_row: &mut [f32], n: usize) {
+    for j0 in (0..n).step_by(BLOCKED_JT) {
+        let j1 = (j0 + BLOCKED_JT).min(n);
+        for (kk, &aik) in a_row.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let b_row = &b.data[kk * n + j0..kk * n + j1];
+            let c_seg = &mut c_row[j0..j1];
+            for (cv, bv) in c_seg.iter_mut().zip(b_row) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+impl TensorBackend for BlockedBackend {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        super::stats::dot(a, b)
+    }
+
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        c.data.fill(0.0);
+        for i in 0..m {
+            let a_row = &a.data[i * k..(i + 1) * k];
+            let c_row = &mut c.data[i * n..(i + 1) * n];
+            blocked_row(a_row, b, c_row, n);
+        }
+    }
+
+    fn gram_t(&self, a: &Tensor) -> Tensor {
+        let (n, d) = (a.rows(), a.cols());
+        let mut c = Tensor::zeros(&[d, d]);
+        for row in 0..n {
+            let r = &a.data[row * d..(row + 1) * d];
+            for i in 0..d {
+                let ri = r[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let c_row = &mut c.data[i * d..(i + 1) * d];
+                for j in i..d {
+                    c_row[j] += ri * r[j];
+                }
+            }
+        }
+        mirror_upper(&mut c, d);
+        c
+    }
+}
+
+fn mirror_upper(c: &mut Tensor, d: usize) {
+    for i in 0..d {
+        for j in 0..i {
+            c.data[i * d + j] = c.data[j * d + i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Register-tiled micro kernels (new)
+// ---------------------------------------------------------------------------
+
+/// Register-tiled kernels: 4 output rows per pass with 4-wide accumulator
+/// chains. Each B row fetched from cache feeds four C rows, quartering B
+/// traffic versus the blocked kernel; the dense (no zero-skip) inner loop
+/// keeps the multiply–add chains straight-line for the vectorizer.
+pub struct MicroBackend;
+
+const MICRO_JT: usize = 512;
+const MICRO_MR: usize = 4;
+
+/// The 4-row register-tiled block: c[0..4] += a_rows[0..4] @ B over one
+/// j-tile at a time.
+#[allow(clippy::too_many_arguments)]
+fn micro_block4(
+    ar0: &[f32],
+    ar1: &[f32],
+    ar2: &[f32],
+    ar3: &[f32],
+    b: &Tensor,
+    c_block: &mut [f32],
+    k: usize,
+    n: usize,
+) {
+    let (c0, rest) = c_block.split_at_mut(n);
+    let (c1, rest) = rest.split_at_mut(n);
+    let (c2, c3) = rest.split_at_mut(n);
+    for j0 in (0..n).step_by(MICRO_JT) {
+        let j1 = (j0 + MICRO_JT).min(n);
+        let w = j1 - j0;
+        let s0 = &mut c0[j0..j1];
+        let s1 = &mut c1[j0..j1];
+        let s2 = &mut c2[j0..j1];
+        let s3 = &mut c3[j0..j1];
+        for kk in 0..k {
+            let (a0, a1, a2, a3) = (ar0[kk], ar1[kk], ar2[kk], ar3[kk]);
+            let b_row = &b.data[kk * n + j0..kk * n + j1];
+            for idx in 0..w {
+                let bv = b_row[idx];
+                s0[idx] += a0 * bv;
+                s1[idx] += a1 * bv;
+                s2[idx] += a2 * bv;
+                s3[idx] += a3 * bv;
+            }
+        }
+    }
+}
+
+impl TensorBackend for MicroBackend {
+    fn name(&self) -> &'static str {
+        "micro"
+    }
+
+    /// 8-accumulator unrolled dot (wider than the blocked 4-way; the extra
+    /// chains hide FMA latency on longer reductions).
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = [0.0f32; 8];
+        for i in 0..chunks {
+            let j = i * 8;
+            for (lane, s) in acc.iter_mut().enumerate() {
+                *s += a[j + lane] * b[j + lane];
+            }
+        }
+        let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+            + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for j in chunks * 8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        c.data.fill(0.0);
+        let full_blocks = m / MICRO_MR;
+        for blk in 0..full_blocks {
+            let i0 = blk * MICRO_MR;
+            let ar0 = &a.data[i0 * k..(i0 + 1) * k];
+            let ar1 = &a.data[(i0 + 1) * k..(i0 + 2) * k];
+            let ar2 = &a.data[(i0 + 2) * k..(i0 + 3) * k];
+            let ar3 = &a.data[(i0 + 3) * k..(i0 + 4) * k];
+            let c_block = &mut c.data[i0 * n..(i0 + MICRO_MR) * n];
+            micro_block4(ar0, ar1, ar2, ar3, b, c_block, k, n);
+        }
+        // Remainder rows (m % 4) fall back to the single-row axpy kernel.
+        for i in full_blocks * MICRO_MR..m {
+            let a_row = &a.data[i * k..(i + 1) * k];
+            let c_row = &mut c.data[i * n..(i + 1) * n];
+            blocked_row(a_row, b, c_row, n);
+        }
+    }
+
+    fn gram_t(&self, a: &Tensor) -> Tensor {
+        let (n, d) = (a.rows(), a.cols());
+        let mut c = Tensor::zeros(&[d, d]);
+        // Two samples per pass: each upper-triangle row update pulls two
+        // A rows, halving passes over C relative to the blocked kernel.
+        let pairs = n / 2;
+        for p in 0..pairs {
+            let r0 = &a.data[2 * p * d..(2 * p + 1) * d];
+            let r1 = &a.data[(2 * p + 1) * d..(2 * p + 2) * d];
+            for i in 0..d {
+                let (x0, x1) = (r0[i], r1[i]);
+                let c_row = &mut c.data[i * d..(i + 1) * d];
+                for j in i..d {
+                    c_row[j] += x0 * r0[j] + x1 * r1[j];
+                }
+            }
+        }
+        if n % 2 == 1 {
+            let r = &a.data[(n - 1) * d..n * d];
+            for i in 0..d {
+                let ri = r[i];
+                let c_row = &mut c.data[i * d..(i + 1) * d];
+                for j in i..d {
+                    c_row[j] += ri * r[j];
+                }
+            }
+        }
+        mirror_upper(&mut c, d);
+        c
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection
+// ---------------------------------------------------------------------------
+
+/// Which backend to use (config key `backend`, CLI `--backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Naive,
+    Blocked,
+    Micro,
+    /// One-shot calibration probe at startup picks among the concrete
+    /// kinds; resolves once per process.
+    Auto,
+}
+
+impl BackendKind {
+    /// The concrete (selectable-by-probe) kinds.
+    pub const CONCRETE: [BackendKind; 3] =
+        [BackendKind::Naive, BackendKind::Blocked, BackendKind::Micro];
+
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        match s {
+            "naive" | "reference" => Ok(BackendKind::Naive),
+            "blocked" => Ok(BackendKind::Blocked),
+            "micro" | "microkernel" => Ok(BackendKind::Micro),
+            "auto" => Ok(BackendKind::Auto),
+            other => anyhow::bail!("unknown backend '{other}' (want naive|blocked|micro|auto)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Naive => "naive",
+            BackendKind::Blocked => "blocked",
+            BackendKind::Micro => "micro",
+            BackendKind::Auto => "auto",
+        }
+    }
+}
+
+static NAIVE: NaiveBackend = NaiveBackend;
+static BLOCKED: BlockedBackend = BlockedBackend;
+static MICRO: MicroBackend = MicroBackend;
+
+/// Copyable handle to a backend implementation — the thing threaded through
+/// `fit_with`, `newton_schulz_with`, `OptimConfig` and the bench suites.
+/// Validates shapes once, then dispatches.
+#[derive(Clone, Copy)]
+pub struct Backend {
+    imp: &'static dyn TensorBackend,
+    kind: BackendKind,
+}
+
+impl Backend {
+    pub fn naive() -> Backend {
+        Backend { imp: &NAIVE, kind: BackendKind::Naive }
+    }
+
+    pub fn blocked() -> Backend {
+        Backend { imp: &BLOCKED, kind: BackendKind::Blocked }
+    }
+
+    pub fn micro() -> Backend {
+        Backend { imp: &MICRO, kind: BackendKind::Micro }
+    }
+
+    /// Resolve a kind to a handle; `Auto` runs (or reuses) the calibration
+    /// probe.
+    pub fn of(kind: BackendKind) -> Backend {
+        match kind {
+            BackendKind::Naive => Backend::naive(),
+            BackendKind::Blocked => Backend::blocked(),
+            BackendKind::Micro => Backend::micro(),
+            BackendKind::Auto => auto_select(),
+        }
+    }
+
+    /// All concrete backends, for equivalence tests and bench sweeps.
+    pub fn all() -> [Backend; 3] {
+        [Backend::naive(), Backend::blocked(), Backend::micro()]
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.imp.name()
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    // ---- dispatching kernel API (shape-checked once, here) --------------
+
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot length mismatch: {} vs {}", a.len(), b.len());
+        self.imp.dot(a, b)
+    }
+
+    /// C = A @ B. A: (m, k), B: (k, n) -> (m, n).
+    pub fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let mut c = Tensor::zeros(&[a.rows(), b.cols()]);
+        self.matmul_into(a, b, &mut c);
+        c
+    }
+
+    /// C = A @ B into a pre-allocated output (hot path avoids allocation).
+    pub fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+        let (m, k) = (a.rows(), a.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
+        assert_eq!(c.shape, vec![m, n], "matmul output shape mismatch");
+        self.imp.matmul_into(a, b, c);
+    }
+
+    /// C = A^T @ A for A: (n, d) -> (d, d).
+    pub fn gram_t(&self, a: &Tensor) -> Tensor {
+        assert_eq!(a.shape.len(), 2, "gram_t needs a matrix");
+        self.imp.gram_t(a)
+    }
+
+    /// K = A @ A^T for A: (n, d) -> (n, n).
+    pub fn gram(&self, a: &Tensor) -> Tensor {
+        assert_eq!(a.shape.len(), 2, "gram needs a matrix");
+        self.imp.gram(a)
+    }
+}
+
+impl fmt::Debug for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Backend({})", self.name())
+    }
+}
+
+impl PartialEq for Backend {
+    fn eq(&self, other: &Backend) -> bool {
+        self.name() == other.name()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global active backend + calibration probe
+// ---------------------------------------------------------------------------
+
+// Codes for the atomic: 0 = naive, 1 = blocked (default), 2 = micro.
+static ACTIVE: AtomicU8 = AtomicU8::new(1);
+
+fn code_of(kind: BackendKind) -> u8 {
+    match kind {
+        BackendKind::Naive => 0,
+        BackendKind::Blocked => 1,
+        BackendKind::Micro => 2,
+        BackendKind::Auto => 1,
+    }
+}
+
+/// The process-wide backend the `tensor::matmul` free functions dispatch
+/// through. Defaults to blocked until someone calls [`set_active`].
+pub fn active() -> Backend {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => Backend::naive(),
+        2 => Backend::micro(),
+        _ => Backend::blocked(),
+    }
+}
+
+/// Install the process-wide backend (Auto resolves through the calibration
+/// probe first) and return the resolved handle.
+pub fn set_active(kind: BackendKind) -> Backend {
+    let be = Backend::of(kind);
+    ACTIVE.store(code_of(be.kind()), Ordering::Relaxed);
+    be
+}
+
+/// Per-backend probe timings, for logs and bench JSON.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub chosen: BackendKind,
+    /// (kind, best-of-three seconds) per concrete backend.
+    pub timings: Vec<(BackendKind, f64)>,
+}
+
+/// One-shot startup probe: time a representative matmul + Gram pair on
+/// each concrete backend and pick the fastest. Shapes are sized so the
+/// whole probe stays in the low milliseconds (it runs before training and
+/// before bench suites; DESIGN.md §2).
+pub fn calibrate() -> CalibrationReport {
+    use crate::util::rng::Pcg64;
+    let mut rng = Pcg64::new(0xC0FF_EE, 17);
+    let mut a = Tensor::zeros(&[64, 96]);
+    let mut b = Tensor::zeros(&[96, 80]);
+    let mut g = Tensor::zeros(&[96, 48]);
+    rng.fill_normal(&mut a.data, 1.0);
+    rng.fill_normal(&mut b.data, 1.0);
+    rng.fill_normal(&mut g.data, 1.0);
+    let mut c = Tensor::zeros(&[64, 80]);
+
+    let mut timings = Vec::new();
+    for kind in BackendKind::CONCRETE {
+        let be = Backend::of(kind);
+        // one unmeasured warmup, then best of three
+        be.matmul_into(&a, &b, &mut c);
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            be.matmul_into(&a, &b, &mut c);
+            std::hint::black_box(be.gram_t(&g));
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        timings.push((kind, best));
+    }
+    let chosen = timings
+        .iter()
+        .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+        .map(|&(k, _)| k)
+        .unwrap_or(BackendKind::Blocked);
+    CalibrationReport { chosen, timings }
+}
+
+static AUTO_CHOICE: OnceLock<BackendKind> = OnceLock::new();
+
+/// The calibrated backend, probing at most once per process.
+pub fn auto_select() -> Backend {
+    let kind = *AUTO_CHOICE.get_or_init(|| {
+        let report = calibrate();
+        crate::log_debug!(
+            "backend calibration: chose {} ({:?})",
+            report.chosen.as_str(),
+            report
+                .timings
+                .iter()
+                .map(|(k, s)| format!("{}={:.1}µs", k.as_str(), s * 1e6))
+                .collect::<Vec<_>>()
+        );
+        report.chosen
+    });
+    Backend::of(kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    fn assert_close(got: &Tensor, want: &Tensor, what: &str) {
+        assert_eq!(got.shape, want.shape, "{what} shape");
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!(
+                (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                "{what}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_backends_match_naive_matmul() {
+        let mut rng = Pcg64::seeded(77);
+        let oracle = Backend::naive();
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 7, 3), (17, 33, 9), (20, 8, 12)] {
+            let a = rand_t(&mut rng, &[m, k]);
+            let b = rand_t(&mut rng, &[k, n]);
+            let want = oracle.matmul(&a, &b);
+            for be in Backend::all() {
+                assert_close(&be.matmul(&a, &b), &want, be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn all_backends_match_naive_gram() {
+        let mut rng = Pcg64::seeded(78);
+        let oracle = Backend::naive();
+        for &(n, d) in &[(1usize, 4usize), (9, 5), (16, 16), (7, 1)] {
+            let a = rand_t(&mut rng, &[n, d]);
+            let want_t = oracle.gram_t(&a);
+            let want = oracle.gram(&a);
+            for be in Backend::all() {
+                assert_close(&be.gram_t(&a), &want_t, be.name());
+                assert_close(&be.gram(&a), &want, be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_across_backends() {
+        let mut rng = Pcg64::seeded(79);
+        for len in [0usize, 1, 3, 8, 9, 31, 1024] {
+            let mut a = vec![0.0f32; len];
+            let mut b = vec![0.0f32; len];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            for be in Backend::all() {
+                let got = be.dot(&a, &b) as f64;
+                assert!(
+                    (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "{}: {got} vs {want}",
+                    be.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kind_round_trips_through_parse_and_handle() {
+        for kind in BackendKind::CONCRETE {
+            assert_eq!(BackendKind::parse(kind.as_str()).unwrap(), kind);
+            assert_eq!(Backend::of(kind).kind(), kind);
+        }
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn calibration_picks_a_concrete_backend() {
+        let report = calibrate();
+        assert_ne!(report.chosen, BackendKind::Auto);
+        assert_eq!(report.timings.len(), 3);
+        assert!(report.timings.iter().all(|&(_, s)| s > 0.0 && s.is_finite()));
+        assert_ne!(auto_select().kind(), BackendKind::Auto);
+    }
+
+    #[test]
+    fn set_active_round_trips() {
+        let prev = active();
+        let be = set_active(BackendKind::Micro);
+        assert_eq!(be.name(), "micro");
+        assert_eq!(active().name(), "micro");
+        set_active(prev.kind());
+    }
+}

@@ -6,7 +6,7 @@
 //! - `newton_schulz`: the quintic orthogonalization iteration used by the
 //!   Muon optimizer (Jordan et al., 2024), the paper's training optimizer.
 
-use super::{matmul, Tensor};
+use super::{backend, backend::Backend, Tensor};
 
 /// Symmetric eigendecomposition by cyclic Jacobi rotations.
 ///
@@ -134,6 +134,12 @@ pub fn cholesky_solve(a: &Tensor, b: &Tensor) -> anyhow::Result<Tensor> {
 /// values to ~1. Coefficients (3.4445, -4.7750, 2.0315) and 5 iterations
 /// follow Jordan et al. (2024). Input (m, n); operates on the smaller side.
 pub fn newton_schulz(g: &Tensor, steps: usize) -> Tensor {
+    newton_schulz_with(backend::active(), g, steps)
+}
+
+/// [`newton_schulz`] with an explicit tensor backend (Muon threads its
+/// configured backend through here; benches pin specific ones).
+pub fn newton_schulz_with(be: Backend, g: &Tensor, steps: usize) -> Tensor {
     let (m, n) = (g.rows(), g.cols());
     let transposed = m > n;
     let mut x = if transposed { g.t() } else { g.clone() };
@@ -146,13 +152,13 @@ pub fn newton_schulz(g: &Tensor, steps: usize) -> Tensor {
     let rows = x.rows();
     for _ in 0..steps {
         // aX + b(XX^T)X + c(XX^T)^2 X
-        let xxt = matmul::matmul(&x, &x.t()); // (rows, rows)
-        let xxt2 = matmul::matmul(&xxt, &xxt);
+        let xxt = be.matmul(&x, &x.t()); // (rows, rows)
+        let xxt2 = be.matmul(&xxt, &xxt);
         let mut combo = Tensor::zeros(&[rows, rows]);
         for i in 0..rows * rows {
             combo.data[i] = B * xxt.data[i] + C * xxt2.data[i];
         }
-        let mut next = matmul::matmul(&combo, &x);
+        let mut next = be.matmul(&combo, &x);
         for i in 0..next.data.len() {
             next.data[i] += A * x.data[i];
         }

@@ -1,91 +1,35 @@
-//! Blocked matrix multiplication kernels.
+//! Dense matrix products, dispatched through the active tensor backend.
 //!
-//! Cache-aware ikj loop order with an L1-sized j-tile. Single-threaded (the
-//! box has one core); the perf pass (EXPERIMENTS.md §Perf) measures this
-//! against the naive ijk order. These feed the predictor fit (Gram
-//! matrices, U materialization) and Muon's Newton–Schulz iteration.
+//! The kernel implementations live in `tensor::backend` (naive reference,
+//! blocked ikj/j-tiled, register-tiled micro-kernel); these free functions
+//! route through [`backend::active`] so existing call sites pick up
+//! whatever the startup selection (config flag or calibration probe)
+//! installed. Single-threaded (the box has one core); the perf pass
+//! (EXPERIMENTS.md §Perf) measures the backends against each other and
+//! `BENCH_kernels.json` records the trajectory. These feed the predictor
+//! fit (Gram matrices, U materialization) and Muon's Newton–Schulz
+//! iteration.
 
-use super::Tensor;
+use super::{backend, Tensor};
 
 /// C = A @ B. A: (m, k), B: (k, n) -> (m, n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.rows(), a.cols());
-    let (k2, n) = (b.rows(), b.cols());
-    assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
-    let mut c = Tensor::zeros(&[m, n]);
-    matmul_into(a, b, &mut c);
-    c
+    backend::active().matmul(a, b)
 }
 
 /// C = A @ B into a pre-allocated output (hot path avoids allocation).
 pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
-    let (m, k) = (a.rows(), a.cols());
-    let n = b.cols();
-    assert_eq!(b.rows(), k);
-    assert_eq!(c.shape, vec![m, n]);
-    c.data.fill(0.0);
-    // ikj with j-tiling: the inner j-loop is a contiguous axpy over B's row
-    // and C's row, which auto-vectorizes.
-    const JT: usize = 256;
-    for i in 0..m {
-        let a_row = &a.data[i * k..(i + 1) * k];
-        let c_row = &mut c.data[i * n..(i + 1) * n];
-        for j0 in (0..n).step_by(JT) {
-            let j1 = (j0 + JT).min(n);
-            for (kk, &aik) in a_row.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let b_row = &b.data[kk * n + j0..kk * n + j1];
-                let c_seg = &mut c_row[j0..j1];
-                for (cv, bv) in c_seg.iter_mut().zip(b_row) {
-                    *cv += aik * bv;
-                }
-            }
-        }
-    }
+    backend::active().matmul_into(a, b, c);
 }
 
-/// C = A^T @ A for A: (n, d) -> (d, d). Symmetric; computes the upper
-/// triangle and mirrors.
+/// C = A^T @ A for A: (n, d) -> (d, d).
 pub fn gram_t(a: &Tensor) -> Tensor {
-    let (n, d) = (a.rows(), a.cols());
-    let mut c = Tensor::zeros(&[d, d]);
-    for row in 0..n {
-        let r = &a.data[row * d..(row + 1) * d];
-        for i in 0..d {
-            let ri = r[i];
-            if ri == 0.0 {
-                continue;
-            }
-            let c_row = &mut c.data[i * d..(i + 1) * d];
-            for j in i..d {
-                c_row[j] += ri * r[j];
-            }
-        }
-    }
-    for i in 0..d {
-        for j in 0..i {
-            c.data[i * d + j] = c.data[j * d + i];
-        }
-    }
-    c
+    backend::active().gram_t(a)
 }
 
 /// K = A @ A^T for A: (n, d) -> (n, n). The predictor's example-Gram.
 pub fn gram(a: &Tensor) -> Tensor {
-    let (n, d) = (a.rows(), a.cols());
-    let mut k = Tensor::zeros(&[n, n]);
-    for i in 0..n {
-        let ri = &a.data[i * d..(i + 1) * d];
-        for j in i..n {
-            let rj = &a.data[j * d..(j + 1) * d];
-            let dot = super::stats::dot(ri, rj);
-            k.data[i * n + j] = dot;
-            k.data[j * n + i] = dot;
-        }
-    }
-    k
+    backend::active().gram(a)
 }
 
 /// y = A @ x (matrix-vector).
@@ -102,8 +46,9 @@ pub fn matvec_into(a: &Tensor, x: &[f32], y: &mut [f32]) {
     let (m, k) = (a.rows(), a.cols());
     assert_eq!(k, x.len());
     assert_eq!(m, y.len());
+    let be = backend::active();
     for i in 0..m {
-        y[i] = super::stats::dot(&a.data[i * k..(i + 1) * k], x);
+        y[i] = be.dot(&a.data[i * k..(i + 1) * k], x);
     }
 }
 
@@ -129,22 +74,8 @@ pub fn matvec_t(a: &Tensor, x: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Backend;
     use crate::util::rng::Pcg64;
-
-    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
-        let (m, k, n) = (a.rows(), a.cols(), b.cols());
-        let mut c = Tensor::zeros(&[m, n]);
-        for i in 0..m {
-            for j in 0..n {
-                let mut s = 0.0;
-                for kk in 0..k {
-                    s += a.at(i, kk) * b.at(kk, j);
-                }
-                c.set(i, j, s);
-            }
-        }
-        c
-    }
 
     fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
         let mut t = Tensor::zeros(shape);
@@ -159,7 +90,7 @@ mod tests {
             let a = rand_t(&mut rng, &[m, k]);
             let b = rand_t(&mut rng, &[k, n]);
             let c = matmul(&a, &b);
-            let want = naive(&a, &b);
+            let want = Backend::naive().matmul(&a, &b);
             for (x, y) in c.data.iter().zip(&want.data) {
                 assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
             }

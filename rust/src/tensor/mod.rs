@@ -4,10 +4,19 @@
 //! host as `Tensor`s (row-major f32); the heavy model math runs on the
 //! PJRT device via AOT artifacts, but the optimizer, the predictor fit and
 //! all diagnostics need a small, fast host linalg layer — this module.
+//!
+//! The dense kernels (matmul, Gram products, dot reductions) are pluggable:
+//! `backend` defines the [`backend::TensorBackend`] trait with naive /
+//! blocked / register-tiled micro-kernel implementations, selected at
+//! startup by config or a calibration probe (DESIGN.md §2). The free
+//! functions in `matmul` dispatch through the active backend.
 
+pub mod backend;
 pub mod linalg;
 pub mod matmul;
 pub mod stats;
+
+pub use backend::{Backend, BackendKind};
 
 /// Row-major dense f32 tensor (rank 1 or 2 is all we need).
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,282 @@
+//! Property tests: every tensor backend agrees with the naive reference
+//! kernels to 1e-4 relative tolerance across rectangular and degenerate
+//! shapes (hand-rolled generator harness, same style as `proptests.rs` —
+//! no proptest crate in the offline set), the calibration probe picks a
+//! valid backend, and the bench JSON pipeline (kernel suite -> schema
+//! validation, the path `bench-report` exercises) works in fast mode.
+
+use lgp::bench_support::json_out::{bench_doc, BenchRecord};
+use lgp::bench_support::{kernels, schema, Summary};
+use lgp::predictor::fit::{fit_with, FitBuffer};
+use lgp::predictor::Predictor;
+use lgp::tensor::{backend, linalg, Backend, BackendKind, Tensor};
+use lgp::util::json::Json;
+use lgp::util::rng::Pcg64;
+
+const CASES: u64 = 40;
+
+fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(&mut t.data, 1.0);
+    t
+}
+
+/// |x - y| <= tol * (1 + |y|): relative with an absolute floor so
+/// near-zero entries do not blow up the ratio.
+fn assert_rel_close(got: &Tensor, want: &Tensor, tol: f32, what: &str) {
+    assert_eq!(got.shape, want.shape, "{what}: shape mismatch");
+    for (i, (x, y)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+/// The shape grid every property sweeps: square, rectangular, degenerate
+/// (0-dim, 1×n, n×1) and non-multiples of the register (4) and j-tile
+/// (256/512) sizes.
+const MATMUL_SHAPES: &[(usize, usize, usize)] = &[
+    (0, 3, 2),
+    (3, 0, 2),
+    (3, 2, 0),
+    (1, 1, 1),
+    (1, 17, 1),
+    (1, 5, 9),
+    (9, 5, 1),
+    (4, 4, 4),
+    (5, 7, 3),
+    (17, 33, 9),
+    (31, 2, 63),
+    (33, 47, 65),
+    (64, 64, 64),
+    (10, 300, 7),
+];
+
+#[test]
+fn prop_matmul_all_backends_match_reference() {
+    let oracle = Backend::naive();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 200);
+        let &(m, k, n) = &MATMUL_SHAPES[(seed as usize) % MATMUL_SHAPES.len()];
+        let a = rand_t(&mut rng, &[m, k]);
+        let b = rand_t(&mut rng, &[k, n]);
+        let want = oracle.matmul(&a, &b);
+        for be in Backend::all() {
+            let got = be.matmul(&a, &b);
+            assert_rel_close(&got, &want, 1e-4, &format!("seed {seed} matmul {}", be.name()));
+            // matmul_into with a reused (dirty) output must agree too.
+            let mut c = Tensor::filled(&[m, n], f32::NAN);
+            be.matmul_into(&a, &b, &mut c);
+            assert_rel_close(&c, &want, 1e-4, &format!("seed {seed} matmul_into {}", be.name()));
+        }
+    }
+}
+
+#[test]
+fn prop_gram_all_backends_match_reference() {
+    let shapes: &[(usize, usize)] = &[
+        (0, 4),
+        (4, 0),
+        (1, 1),
+        (1, 13),
+        (13, 1),
+        (2, 9),
+        (9, 2),
+        (15, 15),
+        (33, 17),
+        (64, 48),
+    ];
+    let oracle = Backend::naive();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 201);
+        let &(n, d) = &shapes[(seed as usize) % shapes.len()];
+        let a = rand_t(&mut rng, &[n, d]);
+        let want_t = oracle.gram_t(&a);
+        let want = oracle.gram(&a);
+        for be in Backend::all() {
+            assert_rel_close(
+                &be.gram_t(&a),
+                &want_t,
+                1e-4,
+                &format!("seed {seed} gram_t {}", be.name()),
+            );
+            assert_rel_close(
+                &be.gram(&a),
+                &want,
+                1e-4,
+                &format!("seed {seed} gram {}", be.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dot_matches_f64_reference() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 202);
+        let len = (rng.below(700)) as usize; // includes 0 and odd tails
+        let mut a = vec![0.0f32; len];
+        let mut b = vec![0.0f32; len];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        for be in Backend::all() {
+            let got = be.dot(&a, &b) as f64;
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()) * (1.0 + (len as f64).sqrt()),
+                "seed {seed} {} len {len}: {got} vs {want}",
+                be.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn newton_schulz_agrees_across_backends() {
+    let mut rng = Pcg64::seeded(303);
+    for &(m, n) in &[(6usize, 6usize), (5, 11), (11, 5)] {
+        let g = rand_t(&mut rng, &[m, n]);
+        let want = linalg::newton_schulz_with(Backend::naive(), &g, 5);
+        for be in [Backend::blocked(), Backend::micro()] {
+            let got = linalg::newton_schulz_with(be, &g, 5);
+            // five matmul-squaring rounds amplify f32 noise; the contract
+            // is agreement well inside Muon's update scale.
+            assert_rel_close(&got, &want, 1e-3, be.name());
+        }
+    }
+}
+
+#[test]
+fn predictor_fit_agrees_across_backends() {
+    // Same synthetic family as predictor::fit's unit tests: exactly
+    // low-rank gradients. All backends must recover the same subspace —
+    // compared through predictions, which are basis-invariant.
+    let (p_t, d, r) = (160usize, 5usize, 2usize);
+    let mut rng = Pcg64::seeded(404);
+    let mut u_true = Tensor::zeros(&[p_t, r]);
+    rng.fill_normal(&mut u_true.data, (1.0 / p_t as f32).sqrt());
+    let mut b_true = Tensor::zeros(&[r, (d + 1) * d]);
+    rng.fill_normal(&mut b_true.data, 1.0);
+
+    let sample = |rng: &mut Pcg64| {
+        let mut a = vec![0.0f32; d];
+        let mut h = vec![0.0f32; d];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut h, 1.0);
+        let mut phi = vec![0.0f32; (d + 1) * d];
+        for i in 0..d {
+            for k in 0..d {
+                phi[i * d + k] = a[i] * h[k];
+            }
+        }
+        phi[d * d..].copy_from_slice(&h);
+        let c = lgp::tensor::matmul::matvec(&b_true, &phi);
+        let g = lgp::tensor::matmul::matvec(&u_true, &c);
+        (g, a, h)
+    };
+
+    let mut buf = FitBuffer::new(32);
+    let mut probes = Vec::new();
+    for i in 0..36 {
+        let (g, a, h) = sample(&mut rng);
+        if i < 32 {
+            buf.push(g, a, h);
+        } else {
+            probes.push((a, h));
+        }
+    }
+
+    let mut predictions = Vec::new();
+    for be in Backend::all() {
+        let mut pred = Predictor::new(p_t, d, r);
+        let report = fit_with(be, &mut pred, &buf, 1e-7).unwrap();
+        assert!(report.energy_captured > 0.99, "{}: {report:?}", be.name());
+        assert!(report.rel_error < 0.05, "{}: {report:?}", be.name());
+        let got: Vec<Vec<f32>> = probes
+            .iter()
+            .map(|(a, h)| pred.predict_one_trunk(a, h))
+            .collect();
+        predictions.push((be.name(), got));
+    }
+    let (_, reference) = &predictions[0];
+    for (name, got) in &predictions[1..] {
+        for (gv, rv) in got.iter().zip(reference) {
+            for (x, y) in gv.iter().zip(rv) {
+                assert!((x - y).abs() <= 1e-2 * (1.0 + y.abs()), "{name}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn calibration_probe_picks_valid_backend() {
+    let report = backend::calibrate();
+    assert!(
+        BackendKind::CONCRETE.contains(&report.chosen),
+        "probe chose {:?}",
+        report.chosen
+    );
+    assert_eq!(report.timings.len(), BackendKind::CONCRETE.len());
+    for (kind, secs) in &report.timings {
+        assert!(BackendKind::CONCRETE.contains(kind));
+        assert!(secs.is_finite() && *secs > 0.0, "{kind:?} timed at {secs}");
+    }
+    // Auto resolution produces a usable handle that computes correctly.
+    let be = Backend::of(BackendKind::Auto);
+    let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+    let c = be.matmul(&a, &Tensor::eye(2));
+    assert_eq!(c.data, a.data);
+}
+
+// ---------------------------------------------------------------------------
+// Bench JSON pipeline smoke tests (the `cargo test`-visible wiring of the
+// bench-report validator)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kernel_bench_fast_mode_emits_schema_valid_json() {
+    let records = kernels::run(&kernels::KernelBenchConfig::fast());
+    let doc = kernels::doc(&records);
+    let report = schema::validate(&doc).expect("fast kernel suite must emit valid documents");
+    assert_eq!(report.bench, "kernels");
+    assert_eq!(report.records, records.len());
+    for be in ["naive", "blocked", "micro"] {
+        assert!(report.backends.iter().any(|b| b == be), "missing {be}");
+    }
+
+    // Round-trip through disk exactly like the bench binary + bench-report.
+    let dir = std::env::temp_dir().join("lgp_bench_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_kernels.json");
+    std::fs::write(&path, doc.to_string()).unwrap();
+    let file_report = schema::validate_file(&path).unwrap();
+    assert_eq!(file_report.records, records.len());
+}
+
+#[test]
+fn schema_rejects_truncated_and_tampered_documents() {
+    let summary = Summary::from_samples(vec![1e-6, 2e-6]);
+    let rec = BenchRecord::from_summary("matmul", "naive", &[2, 2, 2], &summary, Some(16.0));
+    let good = bench_doc("custom", &[rec], None);
+    assert!(schema::validate(&good).is_ok());
+
+    // Tamper: wrong schema id.
+    let mut text = good.to_string();
+    text = text.replace("lgp.bench.v1", "lgp.bench.v999");
+    let doc = Json::parse(&text).unwrap();
+    assert!(schema::validate(&doc).is_err());
+
+    // Tamper: drop a required record field.
+    let text = good.to_string().replace("\"mean_ns\"", "\"renamed_ns\"");
+    let doc = Json::parse(&text).unwrap();
+    assert!(schema::validate(&doc).is_err());
+
+    // Truncated file on disk.
+    let dir = std::env::temp_dir().join("lgp_bench_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_truncated.json");
+    let full = good.to_string();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    assert!(schema::validate_file(&path).is_err());
+}

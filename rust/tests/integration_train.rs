@@ -32,6 +32,7 @@ fn tiny_cfg() -> Option<RunConfig> {
         out_dir: std::env::temp_dir().join("lgp_it"),
         track_alignment: true,
         adaptive_f: false,
+        backend: lgp::tensor::BackendKind::Blocked,
     })
 }
 

@@ -1,0 +1,192 @@
+//! Offline subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no crates.io access, so the repository vendors
+//! the slice of anyhow's API that the `lgp` crate actually uses:
+//! `anyhow::Error`, `anyhow::Result`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros, with the same `?`-conversion and `{:#}` chain
+//! formatting semantics. See DESIGN.md ADR-002 for the rationale; swap
+//! this path dependency for `anyhow = "1"` when building online.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+enum Repr {
+    /// Ad-hoc message built by `anyhow!` / `bail!` / `ensure!`.
+    Msg(String),
+    /// A concrete error converted through `?` — keeps its source chain.
+    Wrapped(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+/// Dynamic error type: any `std::error::Error` converts into it via `?`.
+pub struct Error {
+    repr: Repr,
+}
+
+impl Error {
+    /// Construct from a display-able message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { repr: Repr::Msg(message.to_string()) }
+    }
+
+    /// Construct from a concrete error, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { repr: Repr::Wrapped(Box::new(error)) }
+    }
+
+    /// The root-most error message (no chain).
+    pub fn root_message(&self) -> String {
+        match &self.repr {
+            Repr::Msg(m) => m.clone(),
+            Repr::Wrapped(e) => e.to_string(),
+        }
+    }
+
+    fn source_chain(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Repr::Wrapped(e) = &self.repr {
+            let mut cur = e.source();
+            while let Some(s) = cur {
+                out.push(s.to_string());
+                cur = s.source();
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.root_message())?;
+        if f.alternate() {
+            for cause in self.source_chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.root_message())?;
+        let chain = self.source_chain();
+        if !chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in chain {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion that powers `?`. Coherent because `Error` itself
+// deliberately does not implement `std::error::Error` (same trade anyhow
+// makes).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result` with `anyhow::Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// display-able value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn check(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            let x = 41;
+            if x < 10 {
+                bail!("too small: {x}");
+            }
+            Ok(x + 1)
+        }
+        assert_eq!(check(true).unwrap(), 42);
+        let e = check(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+    }
+
+    #[test]
+    fn ensure_without_message_names_the_condition() {
+        fn inner(n: usize) -> Result<()> {
+            ensure!(n > 3);
+            Ok(())
+        }
+        let e = inner(1).unwrap_err();
+        assert!(e.to_string().contains("n > 3"), "{e}");
+    }
+
+    #[test]
+    fn anyhow_from_display_value() {
+        let e = anyhow!(String::from("plain string error"));
+        assert_eq!(e.to_string(), "plain string error");
+    }
+
+    #[test]
+    fn alternate_formatting_walks_chain() {
+        let e = Error::new(io_err());
+        let s = format!("{e:#}");
+        assert!(s.contains("missing thing"));
+    }
+}
