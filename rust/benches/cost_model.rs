@@ -21,7 +21,7 @@ use lgp::bench_support::json_out::{bench_doc, write_bench_doc, BenchRecord};
 use lgp::bench_support::{bench, Table};
 use lgp::model::ParamStore;
 use lgp::runtime::Runtime;
-use lgp::tensor::{backend, BackendKind, Tensor};
+use lgp::tensor::{backend, BackendKind, Tensor, Workspace};
 use lgp::theory::CostModel;
 use lgp::util::json::{num, obj, s, Json};
 use lgp::util::rng::Pcg64;
@@ -167,15 +167,18 @@ fn host_proxy_mode(fast: bool) -> (Vec<BenchRecord>, f64, &'static str) {
     let w_cheap = rand(&mut rng, &[dc, dc]);
     let mut c_full = Tensor::zeros(&[m, d]);
     let mut c_cheap = Tensor::zeros(&[m, dc]);
+    // Steady-state entry points (shared workspace, reused outputs) so the
+    // proxy measures the same code path the trainer runs (ADR-003).
+    let mut ws = Workspace::new();
 
     let warm = if fast { 1 } else { 3 };
     let iters = if fast { 5 } else { 20 };
     let fwd = bench(warm, iters, || {
-        be.matmul_into(&a_full, &w_full, &mut c_full);
+        be.matmul_into_ws(&a_full, &w_full, &mut c_full, &mut ws);
         std::hint::black_box(&c_full);
     });
     let cheap = bench(warm, iters, || {
-        be.matmul_into(&a_cheap, &w_cheap, &mut c_cheap);
+        be.matmul_into_ws(&a_cheap, &w_cheap, &mut c_cheap, &mut ws);
         std::hint::black_box(&c_cheap);
     });
 

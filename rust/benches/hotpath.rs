@@ -8,11 +8,11 @@
 
 use lgp::bench_support::json_out::write_bench_doc;
 use lgp::bench_support::{bench, fmt_time, kernels, Table};
-use lgp::coordinator::combine::cv_combine;
+use lgp::coordinator::combine::cv_combine_into;
 use lgp::model::params::FlatGrad;
-use lgp::predictor::fit::{fit, FitBuffer};
+use lgp::predictor::fit::{fit_with_ws, FitBuffer};
 use lgp::predictor::Predictor;
-use lgp::tensor::{backend, linalg, matmul, BackendKind, Tensor};
+use lgp::tensor::{backend, linalg, BackendKind, Tensor, Workspace};
 use lgp::util::rng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
@@ -33,6 +33,9 @@ fn main() -> anyhow::Result<()> {
 
     let mut rng = Pcg64::seeded(9);
     let mut table = Table::new(&["hot path", "size", "mean", "p90", "throughput"]);
+    // One long-lived arena for every workspace-aware section below — the
+    // same steady-state footprint the trainer runs with (ADR-003).
+    let mut ws = Workspace::new();
 
     // --- control-variate combine (runs once per micro-batch) -------------
     let p = if fast { 50_000usize } else { 250_000usize };
@@ -42,11 +45,18 @@ fn main() -> anyhow::Result<()> {
         g
     };
     let (a, b, c) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    // The trainer's fused in-place combine: refresh the control slab, then
+    // one axpy-style pass — no allocation in the timed region.
+    let mut out = a.clone();
     let s = bench(warm, iters, || {
-        std::hint::black_box(cv_combine(&a, &b, &c, 0.25));
+        out.trunk.copy_from_slice(&a.trunk);
+        out.head_w.copy_from_slice(&a.head_w);
+        out.head_b.copy_from_slice(&a.head_b);
+        cv_combine_into(&mut out, &b, &c, 0.25);
+        std::hint::black_box(&out);
     });
     table.row(vec![
-        "cv_combine (host)".into(),
+        "cv_combine_into (host)".into(),
         format!("{p} params"),
         fmt_time(s.mean),
         fmt_time(s.p90),
@@ -82,8 +92,10 @@ fn main() -> anyhow::Result<()> {
         rng.fill_normal(&mut t.data, 1.0);
         t
     };
+    let mut ns_out = Tensor::zeros(&[64, 192]);
     let s = bench(warm, iters, || {
-        std::hint::black_box(linalg::newton_schulz(&g, 5));
+        linalg::newton_schulz_into(active, &g, 5, &mut ns_out, &mut ws);
+        std::hint::black_box(&ns_out);
     });
     table.row(vec![
         "newton_schulz x5 (Muon)".into(),
@@ -99,8 +111,10 @@ fn main() -> anyhow::Result<()> {
         rng.fill_normal(&mut t.data, 1.0);
         t
     };
+    let mut cm = Tensor::zeros(&[256, 256]);
     let s = bench(warm, iters, || {
-        std::hint::black_box(matmul::matmul(&am, &am));
+        active.matmul_into_ws(&am, &am, &mut cm, &mut ws);
+        std::hint::black_box(&cm);
     });
     table.row(vec![
         format!("matmul 256^3 ({})", active.name()),
@@ -119,11 +133,11 @@ fn main() -> anyhow::Result<()> {
         rng.fill_normal(&mut gg, 1.0);
         rng.fill_normal(&mut aa, 1.0);
         rng.fill_normal(&mut hh, 1.0);
-        buf.push(gg, aa, hh);
+        buf.push(&gg, &aa, &hh);
     }
     let mut pred2 = Predictor::new(if fast { 10_000 } else { 50_000 }, d, r);
     let s = bench(1, if fast { 2 } else { 5 }, || {
-        fit(&mut pred2, &buf, 1e-4).unwrap();
+        fit_with_ws(active, &mut pred2, &buf, 1e-4, &mut ws).unwrap();
     });
     table.row(vec![
         "predictor fit".into(),

@@ -1,0 +1,269 @@
+//! Perf-regression gate: compare two `lgp.bench.v1` documents cell by
+//! cell and fail on slowdowns (EXPERIMENTS.md §Compare gate).
+//!
+//! A *cell* is one (kernel name, backend, shape) triple; the compared
+//! quantity is `mean_ns`. The gate fails when any cell present in both
+//! documents regresses by more than the threshold (default 10%), or when
+//! a baseline cell disappears from the new document (silent coverage loss
+//! reads as a pass otherwise). Cells that exist only in the new document
+//! are fine — shape grids may grow.
+//!
+//! Drivers: `bench_report --compare <baseline.json> <new.json>` at the
+//! command line, and the cargo-test smoke check in
+//! `tests/backend_equivalence.rs` that validates the repo-root
+//! `BENCH_kernels.json` against the committed
+//! `BENCH_kernels.baseline.json` whenever both exist.
+
+use super::schema;
+use super::Table;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Default regression threshold: fail on >10% mean ns/op slowdown.
+pub const DEFAULT_THRESHOLD: f64 = 0.10;
+
+/// One compared cell.
+#[derive(Clone, Debug)]
+pub struct CellDelta {
+    /// "name backend m×k×n" — stable, human-readable cell id.
+    pub key: String,
+    pub base_ns: f64,
+    pub new_ns: f64,
+    /// new / base; > 1 means slower.
+    pub ratio: f64,
+}
+
+/// Outcome of one comparison.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    /// Cells present in both documents, baseline order.
+    pub cells: Vec<CellDelta>,
+    /// Baseline cells missing from the new document.
+    pub missing: Vec<String>,
+    pub threshold: f64,
+}
+
+impl CompareReport {
+    /// Cells slower than `1 + threshold`.
+    pub fn regressions(&self) -> Vec<&CellDelta> {
+        self.cells
+            .iter()
+            .filter(|c| c.ratio > 1.0 + self.threshold)
+            .collect()
+    }
+
+    /// Cells at least `1 + threshold` faster (for the summary line).
+    pub fn improvements(&self) -> Vec<&CellDelta> {
+        self.cells
+            .iter()
+            .filter(|c| c.ratio < 1.0 / (1.0 + self.threshold))
+            .collect()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.regressions().is_empty() && self.missing.is_empty()
+    }
+
+    /// Fixed-width per-cell table for terminal output.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&["cell", "base ns", "new ns", "ratio", "verdict"]);
+        for c in &self.cells {
+            let verdict = if c.ratio > 1.0 + self.threshold {
+                "REGRESSED"
+            } else if c.ratio < 1.0 / (1.0 + self.threshold) {
+                "improved"
+            } else {
+                "ok"
+            };
+            t.row(vec![
+                c.key.clone(),
+                format!("{:.0}", c.base_ns),
+                format!("{:.0}", c.new_ns),
+                format!("{:.3}", c.ratio),
+                verdict.into(),
+            ]);
+        }
+        for m in &self.missing {
+            t.row(vec![m.clone(), "-".into(), "-".into(), "-".into(), "MISSING".into()]);
+        }
+        t
+    }
+}
+
+fn cell_key(rec: &Json) -> Option<String> {
+    let name = rec.get("name")?.as_str()?;
+    let backend = rec.get("backend")?.as_str()?;
+    let shape = rec
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_f64().map(|v| format!("{}", v as u64)))
+        .collect::<Option<Vec<_>>>()?
+        .join("x");
+    Some(format!("{name} {backend} {shape}"))
+}
+
+fn index_cells(doc: &Json, what: &str) -> Result<BTreeMap<String, f64>, String> {
+    let mut cells = BTreeMap::new();
+    let records = doc
+        .get("records")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{what}: missing records array"))?;
+    for (i, rec) in records.iter().enumerate() {
+        let key =
+            cell_key(rec).ok_or_else(|| format!("{what}: records[{i}] has a malformed key"))?;
+        let mean = rec
+            .get("mean_ns")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{what}: records[{i}] missing mean_ns"))?;
+        // Duplicate cells would make the comparison ambiguous.
+        if cells.insert(key.clone(), mean).is_some() {
+            return Err(format!("{what}: duplicate cell '{key}'"));
+        }
+    }
+    Ok(cells)
+}
+
+/// Compare two validated documents. Both must pass schema validation and
+/// describe the same bench.
+pub fn compare_docs(base: &Json, new: &Json, threshold: f64) -> Result<CompareReport, String> {
+    let base_rep = schema::validate(base).map_err(|e| format!("baseline: {e}"))?;
+    let new_rep = schema::validate(new).map_err(|e| format!("new: {e}"))?;
+    if base_rep.bench != new_rep.bench {
+        return Err(format!(
+            "bench mismatch: baseline is '{}', new is '{}'",
+            base_rep.bench, new_rep.bench
+        ));
+    }
+    let base_cells = index_cells(base, "baseline")?;
+    let new_cells = index_cells(new, "new")?;
+    let mut cells = Vec::new();
+    let mut missing = Vec::new();
+    for (key, &base_ns) in &base_cells {
+        match new_cells.get(key) {
+            Some(&new_ns) => {
+                let ratio = if base_ns > 0.0 { new_ns / base_ns } else { 1.0 };
+                cells.push(CellDelta { key: key.clone(), base_ns, new_ns, ratio });
+            }
+            None => missing.push(key.clone()),
+        }
+    }
+    Ok(CompareReport { cells, missing, threshold })
+}
+
+/// Read, validate and compare two `BENCH_*.json` files.
+pub fn compare_files(
+    base: &Path,
+    new: &Path,
+    threshold: f64,
+) -> Result<CompareReport, String> {
+    let read = |p: &Path| -> Result<Json, String> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| format!("reading {}: {e}", p.display()))?;
+        Json::parse(&text).map_err(|e| format!("parsing {}: {e}", p.display()))
+    };
+    compare_docs(&read(base)?, &read(new)?, threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(cells: &[(&str, &str, &[usize], f64)]) -> Json {
+        let records: Vec<String> = cells
+            .iter()
+            .map(|(name, be, shape, ns)| {
+                let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+                format!(
+                    r#"{{"name":"{name}","backend":"{be}","shape":[{}],
+                        "iters":3,"mean_ns":{ns},"p50_ns":{ns},"p90_ns":{ns}}}"#,
+                    dims.join(",")
+                )
+            })
+            .collect();
+        Json::parse(&format!(
+            r#"{{"schema":"lgp.bench.v1","bench":"custom","created_unix":1,
+                "records":[{}]}}"#,
+            records.join(",")
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let d = doc(&[
+            ("matmul", "naive", &[8, 8, 8], 100.0),
+            ("gram_t", "micro", &[32, 16], 50.0),
+        ]);
+        let rep = compare_docs(&d, &d, DEFAULT_THRESHOLD).unwrap();
+        assert!(rep.passed());
+        assert_eq!(rep.cells.len(), 2);
+        assert!(rep.regressions().is_empty());
+        rep.table().print();
+    }
+
+    #[test]
+    fn twenty_percent_slower_fails_ten_percent_gate() {
+        let base = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
+        let slow = doc(&[("matmul", "micro", &[8, 8, 8], 120.0)]);
+        let rep = compare_docs(&base, &slow, DEFAULT_THRESHOLD).unwrap();
+        assert!(!rep.passed());
+        assert_eq!(rep.regressions().len(), 1);
+        assert!((rep.regressions()[0].ratio - 1.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nine_percent_slower_passes_ten_percent_gate() {
+        let base = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
+        let ok = doc(&[("matmul", "micro", &[8, 8, 8], 109.0)]);
+        let rep = compare_docs(&base, &ok, DEFAULT_THRESHOLD).unwrap();
+        assert!(rep.passed());
+    }
+
+    #[test]
+    fn missing_baseline_cell_fails() {
+        let base = doc(&[
+            ("matmul", "micro", &[8, 8, 8], 100.0),
+            ("gram_t", "micro", &[32, 16], 50.0),
+        ]);
+        let new = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
+        let rep = compare_docs(&base, &new, DEFAULT_THRESHOLD).unwrap();
+        assert!(!rep.passed());
+        assert_eq!(rep.missing, vec!["gram_t micro 32x16".to_string()]);
+    }
+
+    #[test]
+    fn extra_new_cells_are_fine_and_improvements_counted() {
+        let base = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
+        let new = doc(&[
+            ("matmul", "micro", &[8, 8, 8], 60.0),
+            ("matmul", "micro", &[16, 16, 16], 400.0),
+        ]);
+        let rep = compare_docs(&base, &new, DEFAULT_THRESHOLD).unwrap();
+        assert!(rep.passed());
+        assert_eq!(rep.improvements().len(), 1);
+    }
+
+    #[test]
+    fn mismatched_bench_ids_and_duplicates_error() {
+        let a = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
+        let other = Json::parse(
+            &a.to_string().replace("\"bench\":\"custom\"", "\"bench\":\"other\""),
+        )
+        .unwrap();
+        assert!(compare_docs(&a, &other, DEFAULT_THRESHOLD).is_err());
+
+        let dup = doc(&[
+            ("matmul", "micro", &[8, 8, 8], 100.0),
+            ("matmul", "micro", &[8, 8, 8], 90.0),
+        ]);
+        assert!(compare_docs(&dup, &a, DEFAULT_THRESHOLD).is_err());
+    }
+
+    #[test]
+    fn compare_files_reports_io_errors() {
+        let missing = Path::new("/nonexistent/BENCH_a.json");
+        assert!(compare_files(missing, missing, DEFAULT_THRESHOLD).is_err());
+    }
+}

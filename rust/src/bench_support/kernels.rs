@@ -8,7 +8,7 @@
 
 use super::json_out::{bench_doc, BenchRecord};
 use super::{bench, Table};
-use crate::tensor::{Backend, Tensor};
+use crate::tensor::{Backend, Tensor, Workspace};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -63,10 +63,14 @@ fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
     t
 }
 
-/// Run the suite: every concrete backend over every configured shape.
+/// Run the suite: every concrete backend over every configured shape,
+/// through the steady-state (`*_into_ws`) entry points the hot paths use —
+/// the timed region matches what the trainer actually runs: reused outputs,
+/// reused workspace, zero allocation.
 pub fn run(cfg: &KernelBenchConfig) -> Vec<BenchRecord> {
     let mut rng = Pcg64::seeded(0xBE7C);
     let mut records = Vec::new();
+    let mut ws = Workspace::new();
 
     for &(m, k, n) in &cfg.matmul_shapes {
         let a = rand_t(&mut rng, &[m, k]);
@@ -75,7 +79,7 @@ pub fn run(cfg: &KernelBenchConfig) -> Vec<BenchRecord> {
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
         for be in Backend::all() {
             let s = bench(cfg.warmup, cfg.iters, || {
-                be.matmul_into(&a, &b, &mut c);
+                be.matmul_into_ws(&a, &b, &mut c, &mut ws);
                 std::hint::black_box(&c);
             });
             records.push(BenchRecord::from_summary(
@@ -90,11 +94,13 @@ pub fn run(cfg: &KernelBenchConfig) -> Vec<BenchRecord> {
 
     for &(rows, d) in &cfg.gram_shapes {
         let a = rand_t(&mut rng, &[rows, d]);
+        let mut c = Tensor::zeros(&[d, d]);
         // n rows × d(d+1)/2 upper entries × 2 flops each.
         let flops = rows as f64 * d as f64 * (d + 1) as f64;
         for be in Backend::all() {
             let s = bench(cfg.warmup, cfg.iters, || {
-                std::hint::black_box(be.gram_t(&a));
+                be.gram_t_into_ws(&a, &mut c, &mut ws);
+                std::hint::black_box(&c);
             });
             records.push(BenchRecord::from_summary(
                 "gram_t",

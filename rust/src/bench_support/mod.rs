@@ -7,10 +7,12 @@
 //! Machine-readable output: `json_out` serializes timing records to the
 //! repo-root `BENCH_*.json` trajectory files (schema `lgp.bench.v1`,
 //! documented in EXPERIMENTS.md), `kernels` is the backend×shape kernel
-//! suite shared by `cargo bench --bench hotpath` and the smoke tests, and
+//! suite shared by `cargo bench --bench hotpath` and the smoke tests,
 //! `schema` validates emitted documents (also used by the `bench-report`
-//! binary).
+//! binary), and `compare` is the perf-regression gate behind
+//! `bench_report --compare` and the tier-1 smoke check.
 
+pub mod compare;
 pub mod json_out;
 pub mod kernels;
 pub mod schema;

@@ -1,22 +1,99 @@
-//! bench-report — validate the emitted `BENCH_*.json` trajectory files.
+//! bench-report — validate the emitted `BENCH_*.json` trajectory files
+//! and gate perf regressions between two of them.
 //!
-//! Scans a directory (default: the repo root, where the bench binaries
-//! write) for `BENCH_*.json`, validates each against the `lgp.bench.v1`
-//! schema (EXPERIMENTS.md §Schema), prints a summary table, and exits
-//! nonzero if any document is malformed or an expected document is
-//! missing. The same validator runs under `cargo test` via
-//! `tests/backend_equivalence.rs`, so emitters cannot drift silently.
+//! **Validate** (default): scans a directory (default: the repo root,
+//! where the bench binaries write) for `BENCH_*.json`, validates each
+//! against the `lgp.bench.v1` schema (EXPERIMENTS.md §Schema), prints a
+//! summary table, and exits nonzero if any document is malformed or an
+//! expected document is missing. The same validator runs under
+//! `cargo test` via `tests/backend_equivalence.rs`, so emitters cannot
+//! drift silently.
+//!
+//! **Compare**: `--compare <baseline.json> <new.json>` diffs the two
+//! documents cell by cell ((kernel, backend, shape) → mean ns/op) and
+//! exits nonzero if any cell regressed by more than the threshold
+//! (default 10%, override with `--threshold 0.15`) or disappeared from
+//! the new document. This is the enforced perf-regression gate
+//! (EXPERIMENTS.md §Compare gate).
 //!
 //!   cargo run --release --bin bench_report
 //!   cargo run --release --bin bench_report -- --dir . --expect kernels,cost_model
+//!   cargo run --release --bin bench_report -- --compare BENCH_kernels.baseline.json BENCH_kernels.json
 
 use lgp::bench_support::json_out::bench_out_dir;
-use lgp::bench_support::{schema, Table};
+use lgp::bench_support::{compare, schema, Table};
 use lgp::util::cli::Args;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.first().map(String::as_str) == Some("--compare") {
+        std::process::exit(run_compare(&argv[1..]));
+    }
     std::process::exit(run());
+}
+
+/// `--compare <baseline.json> <new.json> [--threshold 0.10]`: positional
+/// paths (two files is the natural grammar here), parsed by hand since the
+/// shared flag parser is strictly `--key value`.
+fn run_compare(rest: &[String]) -> i32 {
+    let mut paths: Vec<&String> = Vec::new();
+    let mut threshold = compare::DEFAULT_THRESHOLD;
+    let mut i = 0;
+    while i < rest.len() {
+        if rest[i] == "--threshold" {
+            match rest.get(i + 1).and_then(|v| v.parse::<f64>().ok()) {
+                Some(t) if t > 0.0 => threshold = t,
+                _ => {
+                    eprintln!("--threshold needs a positive number");
+                    return 2;
+                }
+            }
+            i += 2;
+        } else if rest[i].starts_with("--") {
+            eprintln!("unknown compare flag '{}'", rest[i]);
+            return 2;
+        } else {
+            paths.push(&rest[i]);
+            i += 1;
+        }
+    }
+    if paths.len() != 2 {
+        eprintln!(
+            "usage: bench_report --compare <baseline.json> <new.json> [--threshold 0.10]"
+        );
+        return 2;
+    }
+    let (base, new) = (Path::new(paths[0]), Path::new(paths[1]));
+    let report = match compare::compare_files(base, new, threshold) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "[BENCH-COMPARE] {} vs {} (threshold {:.0}%)\n",
+        base.display(),
+        new.display(),
+        threshold * 100.0
+    );
+    report.table().print();
+    let (regs, imps) = (report.regressions().len(), report.improvements().len());
+    println!(
+        "\n{} cell(s): {} regressed, {} improved, {} missing",
+        report.cells.len() + report.missing.len(),
+        regs,
+        imps,
+        report.missing.len()
+    );
+    if report.passed() {
+        println!("gate: PASS");
+        0
+    } else {
+        eprintln!("gate: FAIL (>{:.0}% ns/op regression or lost coverage)", threshold * 100.0);
+        1
+    }
 }
 
 fn run() -> i32 {

@@ -7,18 +7,30 @@ use crate::model::params::FlatGrad;
 /// eq. (1):  g = f·g_ct + (1−f)·(g_p − (g_cp − g_ct)).
 ///
 /// Unbiased (Lemma 1): E[g_cp] = E[g_p] ⇒ E[g] = E[g_ct] = ∇F.
+/// Allocating convenience over [`cv_combine_into`].
 pub fn cv_combine(g_ct: &FlatGrad, g_cp: &FlatGrad, g_p: &FlatGrad, f: f32) -> FlatGrad {
     let mut out = g_ct.clone();
-    let apply = |o: &mut [f32], ct: &[f32], cp: &[f32], p: &[f32]| {
-        for i in 0..o.len() {
-            let ct_i = ct[i];
-            o[i] = f * ct_i + (1.0 - f) * (p[i] - (cp[i] - ct_i));
+    cv_combine_into(&mut out, g_cp, g_p, f);
+    out
+}
+
+/// eq. (1) fused in place over the control-gradient buffers: since
+/// f·g_ct + (1−f)·(g_p − (g_cp − g_ct)) = g_ct + (1−f)·(g_p − g_cp),
+/// the combine is a single axpy-style pass over each preallocated
+/// gradient slab — no temporaries, no allocation (ADR-003). `g` holds
+/// g_ct on entry and the combined gradient on return.
+pub fn cv_combine_into(g: &mut FlatGrad, g_cp: &FlatGrad, g_p: &FlatGrad, f: f32) {
+    let w = 1.0 - f;
+    let apply = |o: &mut [f32], cp: &[f32], p: &[f32]| {
+        debug_assert_eq!(o.len(), cp.len());
+        debug_assert_eq!(o.len(), p.len());
+        for ((ov, cv), pv) in o.iter_mut().zip(cp).zip(p) {
+            *ov += w * (pv - cv);
         }
     };
-    apply(&mut out.trunk, &g_ct.trunk, &g_cp.trunk, &g_p.trunk);
-    apply(&mut out.head_w, &g_ct.head_w, &g_cp.head_w, &g_p.head_w);
-    apply(&mut out.head_b, &g_ct.head_b, &g_cp.head_b, &g_p.head_b);
-    out
+    apply(&mut g.trunk, &g_cp.trunk, &g_p.trunk);
+    apply(&mut g.head_w, &g_cp.head_w, &g_p.head_w);
+    apply(&mut g.head_b, &g_cp.head_b, &g_p.head_b);
 }
 
 /// Split a micro-batch index list into (control, prediction) parts with
@@ -60,6 +72,25 @@ mod tests {
         let g = cv_combine(&ct, &z, &z, 0.25);
         // f·ct + (1-f)·(0 − (0 − ct)) = ct
         assert_eq!(g.trunk, ct.trunk);
+    }
+
+    #[test]
+    fn in_place_combine_matches_formula() {
+        let ct = fg(&[2.0, -3.0]);
+        let cp = fg(&[1.0, 1.0]);
+        let p = fg(&[5.0, 0.0]);
+        let f = 0.25f32;
+        let mut g = ct.clone();
+        cv_combine_into(&mut g, &cp, &p, f);
+        for i in 0..2 {
+            let want = f * ct.trunk[i] + (1.0 - f) * (p.trunk[i] - (cp.trunk[i] - ct.trunk[i]));
+            assert!((g.trunk[i] - want).abs() < 1e-6, "{} vs {want}", g.trunk[i]);
+        }
+        // and the allocating wrapper agrees with the in-place pass
+        let g2 = cv_combine(&ct, &cp, &p, f);
+        assert_eq!(g.trunk, g2.trunk);
+        assert_eq!(g.head_w, g2.head_w);
+        assert_eq!(g.head_b, g2.head_b);
     }
 
     #[test]

@@ -23,10 +23,10 @@ use crate::data::loader::DataPipeline;
 use crate::metrics::{accuracy, alignment_of, AlignmentMeter, Ema, LogRow};
 use crate::model::params::{FlatGrad, ParamStore};
 use crate::optim::{OptimConfig, Optimizer};
-use crate::predictor::fit::{fit_with, FitBuffer};
+use crate::predictor::fit::{fit_with_ws, FitBuffer};
 use crate::predictor::{residuals, Predictor};
 use crate::runtime::{DevicePredictor, Runtime, TrainOut};
-use crate::tensor::{backend, Backend, Tensor};
+use crate::tensor::{backend, Backend, Tensor, Workspace};
 use crate::util::{CsvWriter, Stopwatch};
 
 /// Where the control-variate combine runs.
@@ -50,6 +50,9 @@ pub struct Trainer {
     /// Host tensor backend selected at startup from `cfg.backend` (Auto →
     /// calibration probe); threaded through the fit and the optimizer.
     pub backend: Backend,
+    /// Long-lived scratch arena threaded through the predictor refit so
+    /// repeat fits reuse the same slabs (ADR-003).
+    ws: Workspace,
     dev_pred: Option<DevicePredictor>,
     /// Theorem-4 online controller (enabled by cfg.adaptive_f).
     pub adaptive: Option<adaptive::AdaptiveF>,
@@ -98,6 +101,7 @@ impl Trainer {
         Ok(Trainer {
             tracker: AlignmentMeter::default(),
             backend: be,
+            ws: Workspace::new(),
             fit_buf,
             adaptive,
             cfg,
@@ -220,7 +224,13 @@ impl Trainer {
         let g_p = FlatGrad { trunk: pp.g_trunk, head_w: pp.g_head_w, head_b: pp.g_head_b };
 
         let g = match self.combine_path {
-            CombinePath::Host => combine::cv_combine(&g_ct, &g_cp, &g_p, f_eff),
+            CombinePath::Host => {
+                // eq. (1) fused in place over the control-gradient buffers:
+                // one pass, no fresh allocation (ADR-003).
+                let mut g = g_ct;
+                combine::cv_combine_into(&mut g, &g_cp, &g_p, f_eff);
+                g
+            }
             CombinePath::Device => {
                 let v = self.rt.cv_combine(
                     &g_ct.concat(),
@@ -257,14 +267,17 @@ impl Trainer {
                 crate::theory::CostModel::default().cost_vanilla(n_chunk as f64);
             let resid = residuals(&probs, &y, man.classes, smoothing);
             let h = Predictor::backprop_features(&resid, &self.params.head_w, d);
-            for (j, g) in g_rows.into_iter().enumerate() {
-                let a_row = a[j * d..(j + 1) * d].to_vec();
-                let h_row = h.row(j).to_vec();
-                self.fit_buf.push(g, a_row, h_row);
+            for (j, g) in g_rows.iter().enumerate() {
+                self.fit_buf.push(g, &a[j * d..(j + 1) * d], h.row(j));
             }
         }
-        let report =
-            fit_with(self.backend, &mut self.pred, &self.fit_buf, self.cfg.ridge_lambda as f32)?;
+        let report = fit_with_ws(
+            self.backend,
+            &mut self.pred,
+            &self.fit_buf,
+            self.cfg.ridge_lambda as f32,
+            &mut self.ws,
+        )?;
         crate::log_debug!(
             "refit: n={} energy={:.3} rel_err={:.3}",
             report.n,
@@ -278,10 +291,10 @@ impl Trainer {
         if self.cfg.track_alignment {
             let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..self.fit_buf.len())
                 .map(|j| {
-                    let a_row = &self.fit_buf.a1[j][..d];
-                    let h_row = &self.fit_buf.h[j];
+                    let a_row = &self.fit_buf.a1(j)[..d];
+                    let h_row = self.fit_buf.h(j);
                     let pred_g = self.pred.predict_one_trunk(a_row, h_row);
-                    (self.fit_buf.grads[j].clone(), pred_g)
+                    (self.fit_buf.grad(j).to_vec(), pred_g)
                 })
                 .collect();
             self.tracker.update(alignment_of(&pairs));

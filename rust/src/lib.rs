@@ -9,6 +9,15 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
+// Debug-only allocation counter (feature `alloc-counter`): installing the
+// hook here makes every allocation in the process visible to
+// `util::alloc_track::alloc_count`, which the zero-allocation hot-path
+// test asserts against (ADR-003).
+#[cfg(feature = "alloc-counter")]
+#[global_allocator]
+static GLOBAL_ALLOC_COUNTER: util::alloc_track::CountingAllocator =
+    util::alloc_track::CountingAllocator;
+
 pub mod bench_support;
 pub mod coordinator;
 pub mod config;

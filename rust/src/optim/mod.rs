@@ -9,7 +9,7 @@
 
 use crate::model::manifest::Manifest;
 use crate::model::params::{FlatGrad, ParamStore};
-use crate::tensor::{backend, backend::Backend, linalg, Tensor};
+use crate::tensor::{backend, backend::Backend, linalg, Workspace};
 
 /// Hyperparameters shared across optimizers.
 #[derive(Clone, Debug)]
@@ -69,6 +69,9 @@ pub enum Optimizer {
         adam_m: FlatGrad,
         adam_v: FlatGrad,
         t: u64,
+        /// Scratch arena for the per-matrix Newton–Schulz iteration; after
+        /// the first step every update runs allocation-free (ADR-003).
+        ws: Workspace,
     },
 }
 
@@ -95,6 +98,7 @@ impl Optimizer {
                 adam_m: FlatGrad::zeros_like(params),
                 adam_v: FlatGrad::zeros_like(params),
                 t: 0,
+                ws: Workspace::new(),
             },
         }
     }
@@ -118,30 +122,33 @@ impl Optimizer {
                 adamw_update(&mut params.head_w, &grad.head_w, &mut m.head_w, &mut v.head_w, *t, cfg, cfg.lr);
                 adamw_update(&mut params.head_b, &grad.head_b, &mut m.head_b, &mut v.head_b, *t, cfg, cfg.lr);
             }
-            Optimizer::Muon { cfg, matrix_momentum, adam_m, adam_v, t } => {
+            Optimizer::Muon { cfg, matrix_momentum, adam_m, adam_v, t, ws } => {
                 *t += 1;
                 // Matrix params: momentum -> Newton-Schulz -> scaled step.
+                // All per-matrix temporaries come from the optimizer's own
+                // workspace arena, so a warmed step never allocates.
                 for (i, p) in manifest.trunk_layout.iter().enumerate() {
                     if let Some(buf) = &mut matrix_momentum[i] {
                         let g = &grad.trunk[p.offset..p.offset + p.len];
                         for (b, gv) in buf.iter_mut().zip(g) {
                             *b = cfg.momentum * *b + gv;
                         }
-                        // Nesterov-style blend as in the Muon reference.
-                        let blended: Vec<f32> = buf
-                            .iter()
-                            .zip(g)
-                            .map(|(b, gv)| cfg.momentum * *b + gv)
-                            .collect();
                         let (rows, cols) = (p.shape[0], p.shape[1]);
-                        let gm = Tensor::from_vec(blended, &[rows, cols]);
-                        let o = linalg::newton_schulz_with(cfg.backend, &gm, cfg.ns_steps);
+                        // Nesterov-style blend as in the Muon reference.
+                        let mut gm = ws.take_tensor(&[rows, cols]);
+                        for ((o, b), gv) in gm.data.iter_mut().zip(buf.iter()).zip(g) {
+                            *o = cfg.momentum * *b + gv;
+                        }
+                        let mut o = ws.take_tensor(&[rows, cols]);
+                        linalg::newton_schulz_into(cfg.backend, &gm, cfg.ns_steps, &mut o, ws);
                         // Muon's shape-aware scale: sqrt(max(1, rows/cols)).
                         let scale = (rows as f32 / cols as f32).max(1.0).sqrt();
                         let slice = &mut params.trunk[p.offset..p.offset + p.len];
                         for (w, u) in slice.iter_mut().zip(&o.data) {
                             *w -= cfg.lr * scale * u + cfg.lr * cfg.weight_decay * *w;
                         }
+                        ws.give_tensor(gm);
+                        ws.give_tensor(o);
                     }
                 }
                 // Non-matrix trunk params: AdamW at the auxiliary lr.

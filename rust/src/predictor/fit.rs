@@ -13,58 +13,141 @@
 //!    SVD), then B = Σ_j α_j ⊗ φ_j materialized as r rank-weighted
 //!    A1^T diag(α_i) H products.
 //!
+//! Storage is allocation-conscious (ADR-003): [`FitBuffer`] keeps its
+//! samples in flat contiguous ring storage (one slab per stream, sized
+//! once), and [`fit_with_ws`] draws every large intermediate from the
+//! caller's [`Workspace`] so repeat refits reuse the same slabs.
+//!
 //! The numpy mirror of this file is tested in
 //! `python/tests/test_predictor_fit.py`; the Rust tests reuse the same
 //! synthetic low-rank constructions.
 
 use super::Predictor;
-use crate::tensor::{backend, backend::Backend, linalg, stats, Tensor};
+use crate::tensor::{backend, backend::Backend, linalg, stats, Tensor, Workspace};
 
-/// Accumulates fit samples between refits.
+/// Accumulates fit samples between refits in flat contiguous ring storage:
+/// three slabs (gradients, biased activations, backprop features) of
+/// `capacity` fixed-width rows each, with a sliding window implemented as
+/// a ring head instead of `Vec::remove(0)` shifts. Row widths are fixed by
+/// the first push after construction or [`clear`](FitBuffer::clear); the
+/// slabs are sized once and every later push is two `memcpy`s — no
+/// steady-state heap traffic.
 pub struct FitBuffer {
-    /// Per-example trunk gradients, one row each (n, P_T).
-    pub grads: Vec<Vec<f32>>,
-    /// Activations with bias coordinate [a; 1], one row each (n, D+1).
-    pub a1: Vec<Vec<f32>>,
-    /// Backprop features h = W_a^T r, one row each (n, D).
-    pub h: Vec<Vec<f32>>,
+    grads: Vec<f32>,
+    a1: Vec<f32>,
+    h: Vec<f32>,
+    /// Physical slot of the oldest logical row.
+    head: usize,
+    len: usize,
     pub capacity: usize,
+    /// Trunk-gradient row width P_T (0 until the first push).
+    p_t: usize,
+    /// Feature width D; `a1` rows carry D+1 (bias appended at push).
+    d: usize,
 }
 
 impl FitBuffer {
     pub fn new(capacity: usize) -> FitBuffer {
-        FitBuffer { grads: Vec::new(), a1: Vec::new(), h: Vec::new(), capacity }
+        assert!(capacity >= 1, "FitBuffer capacity must be >= 1");
+        FitBuffer {
+            grads: Vec::new(),
+            a1: Vec::new(),
+            h: Vec::new(),
+            head: 0,
+            len: 0,
+            capacity,
+            p_t: 0,
+            d: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.grads.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.grads.is_empty()
+        self.len == 0
     }
 
     pub fn is_full(&self) -> bool {
-        self.len() >= self.capacity
+        self.len >= self.capacity
     }
 
+    /// Drop all rows. Slab storage (and its capacity) is retained, so the
+    /// next fill cycle allocates nothing unless the row widths change.
     pub fn clear(&mut self) {
-        self.grads.clear();
-        self.a1.clear();
-        self.h.clear();
+        self.len = 0;
+        self.head = 0;
     }
 
     /// Push one example (drops oldest beyond capacity — sliding window).
-    pub fn push(&mut self, grad: Vec<f32>, mut a: Vec<f32>, h: Vec<f32>) {
-        a.push(1.0); // append the bias coordinate once, at collection time
-        if self.len() >= self.capacity {
-            self.grads.remove(0);
-            self.a1.remove(0);
-            self.h.remove(0);
+    /// The bias coordinate is appended to `a` at collection time. Inputs
+    /// are copied into the ring; the caller keeps ownership.
+    pub fn push(&mut self, grad: &[f32], a: &[f32], h: &[f32]) {
+        if self.len == 0 {
+            // (Re)establish row widths and slab sizes — but only when the
+            // widths actually changed: re-zeroing capacity × P_T floats on
+            // every post-clear() refill would memset tens of MB per refit
+            // for nothing (every slot is overwritten by copy_from_slice).
+            let (p_t, d) = (grad.len(), h.len());
+            if p_t != self.p_t
+                || d != self.d
+                || self.grads.len() != self.capacity * p_t
+                || self.a1.len() != self.capacity * (d + 1)
+            {
+                self.p_t = p_t;
+                self.d = d;
+                self.grads.clear();
+                self.grads.resize(self.capacity * p_t, 0.0);
+                self.a1.clear();
+                self.a1.resize(self.capacity * (d + 1), 0.0);
+                self.h.clear();
+                self.h.resize(self.capacity * d, 0.0);
+            }
+            self.head = 0;
         }
-        self.grads.push(grad);
-        self.a1.push(a);
-        self.h.push(h);
+        assert_eq!(grad.len(), self.p_t, "gradient row width changed mid-fill");
+        assert_eq!(a.len(), self.d, "activation row width changed mid-fill");
+        assert_eq!(h.len(), self.d, "feature row width changed mid-fill");
+        let slot = if self.len < self.capacity {
+            let s = (self.head + self.len) % self.capacity;
+            self.len += 1;
+            s
+        } else {
+            let s = self.head;
+            self.head = (self.head + 1) % self.capacity;
+            s
+        };
+        self.grads[slot * self.p_t..(slot + 1) * self.p_t].copy_from_slice(grad);
+        let a1w = self.d + 1;
+        self.a1[slot * a1w..slot * a1w + self.d].copy_from_slice(a);
+        self.a1[slot * a1w + self.d] = 1.0;
+        self.h[slot * self.d..(slot + 1) * self.d].copy_from_slice(h);
+    }
+
+    #[inline]
+    fn slot(&self, i: usize) -> usize {
+        debug_assert!(i < self.len, "row {i} out of range (len {})", self.len);
+        (self.head + i) % self.capacity
+    }
+
+    /// Trunk-gradient row `i` (0 = oldest).
+    pub fn grad(&self, i: usize) -> &[f32] {
+        let s = self.slot(i);
+        &self.grads[s * self.p_t..(s + 1) * self.p_t]
+    }
+
+    /// Biased activation row `[a; 1]` for sample `i`.
+    pub fn a1(&self, i: usize) -> &[f32] {
+        let w = self.d + 1;
+        let s = self.slot(i);
+        &self.a1[s * w..(s + 1) * w]
+    }
+
+    /// Backprop-feature row `h = W_a^T r` for sample `i`.
+    pub fn h(&self, i: usize) -> &[f32] {
+        let s = self.slot(i);
+        &self.h[s * self.d..(s + 1) * self.d]
     }
 }
 
@@ -86,18 +169,33 @@ pub fn fit(pred: &mut Predictor, buf: &FitBuffer, lambda: f32) -> anyhow::Result
     fit_with(backend::active(), pred, buf, lambda)
 }
 
-/// [`fit`] with an explicit tensor backend (the coordinator threads its
-/// configured backend through here; equivalence tests pin each one).
+/// [`fit`] with an explicit tensor backend (equivalence tests pin each
+/// one). Cold-path convenience over [`fit_with_ws`].
 pub fn fit_with(
     be: Backend,
     pred: &mut Predictor,
     buf: &FitBuffer,
     lambda: f32,
 ) -> anyhow::Result<FitReport> {
+    let mut ws = Workspace::new();
+    fit_with_ws(be, pred, buf, lambda, &mut ws)
+}
+
+/// [`fit_with`] drawing every large intermediate (the two n×n Grams, the
+/// scaled eigenvector block, the U column build, the ridge targets) from
+/// the caller's [`Workspace`] — the coordinator threads one long-lived
+/// arena through here so repeat refits reuse the same slabs (ADR-003).
+pub fn fit_with_ws(
+    be: Backend,
+    pred: &mut Predictor,
+    buf: &FitBuffer,
+    lambda: f32,
+    ws: &mut Workspace,
+) -> anyhow::Result<FitReport> {
     let n = buf.len();
     let r = pred.rank;
     anyhow::ensure!(n >= 2 * r, "need at least 2r = {} fit samples, have {n}", 2 * r);
-    let p_t = buf.grads[0].len();
+    let p_t = buf.grad(0).len();
     let d = pred.width;
 
     // ---- 1. basis U via the Gram trick --------------------------------
@@ -105,15 +203,17 @@ pub fn fit_with(
     // 10^5..10^7 the relative error is ~1e-5·sqrt(P_T) of norm — far below
     // the fit's own noise — and 5-10x faster than the f64 path (perf pass,
     // EXPERIMENTS.md).
-    let mut k = Tensor::zeros(&[n, n]);
+    let mut k = ws.take_tensor(&[n, n]);
     for i in 0..n {
+        let gi = buf.grad(i);
         for j in i..n {
-            let dot = be.dot(&buf.grads[i], &buf.grads[j]);
+            let dot = be.dot(gi, buf.grad(j));
             k.set(i, j, dot);
             k.set(j, i, dot);
         }
     }
     let (evals, evecs) = linalg::eigh_jacobi(&k); // ascending
+    ws.give_tensor(k);
     let total_energy: f64 = evals.iter().map(|&e| e.max(0.0) as f64).sum();
     let top_energy: f64 = evals
         .iter()
@@ -125,7 +225,7 @@ pub fn fit_with(
     // U = G^T V_r Λ_r^{-1/2}, columns ordered by decreasing eigenvalue.
     // Built column-major first (contiguous axpy per sample), transposed
     // into the row-major U at the end — 10x over the strided write loop.
-    let mut scaled_v = Tensor::zeros(&[n, r]); // V_r Λ^{-1/2}
+    let mut scaled_v = ws.take_tensor(&[n, r]); // V_r Λ^{-1/2}
     for c in 0..r {
         let src = n - 1 - c; // descending order
         let lam = evals[src].max(1e-12);
@@ -134,7 +234,7 @@ pub fn fit_with(
             scaled_v.set(row, c, evecs.at(row, src) * inv_sqrt);
         }
     }
-    let mut u_cols = Tensor::zeros(&[r, p_t]); // column c is row c here
+    let mut u_cols = ws.take_tensor(&[r, p_t]); // column c is row c here
     for c in 0..r {
         let col = &mut u_cols.data[c * p_t..(c + 1) * p_t];
         for j in 0..n {
@@ -142,30 +242,34 @@ pub fn fit_with(
             if w == 0.0 {
                 continue;
             }
-            let g = &buf.grads[j];
+            let g = buf.grad(j);
             for (o, gv) in col.iter_mut().zip(g) {
                 *o += w * gv;
             }
         }
     }
+    ws.give_tensor(scaled_v);
 
     // ---- 2. targets C = G U  (contiguous f32 dots over u_cols) ---------
-    let mut targets = Tensor::zeros(&[n, r]);
+    let mut targets = ws.take_tensor(&[n, r]);
     for j in 0..n {
-        let g = &buf.grads[j];
+        let g = buf.grad(j);
         for c in 0..r {
             targets.set(j, c, be.dot(g, &u_cols.data[c * p_t..(c + 1) * p_t]));
         }
     }
-    let u = u_cols.t(); // (p_t, r) row-major
+    let u = u_cols.t(); // (p_t, r) row-major, owned by the predictor
+    ws.give_tensor(u_cols);
 
     // ---- 3. dual kernel ridge for B ------------------------------------
     // K_phi = (A1 A1^T) o (H H^T) + lambda I
-    let mut k_phi = Tensor::zeros(&[n, n]);
+    let mut k_phi = ws.take_tensor(&[n, n]);
     for i in 0..n {
+        let ai = buf.a1(i);
+        let hi = buf.h(i);
         for j in i..n {
-            let ka = stats::dot_f64(&buf.a1[i], &buf.a1[j]);
-            let kh = stats::dot_f64(&buf.h[i], &buf.h[j]);
+            let ka = stats::dot_f64(ai, buf.a1(j));
+            let kh = stats::dot_f64(hi, buf.h(j));
             let v = (ka * kh) as f32;
             k_phi.set(i, j, v);
             k_phi.set(j, i, v);
@@ -179,6 +283,8 @@ pub fn fit_with(
         k_phi.data[i * n + i] += ridge;
     }
     let alpha = linalg::cholesky_solve(&k_phi, &targets)?; // (n, r)
+    ws.give_tensor(k_phi);
+    ws.give_tensor(targets);
 
     // B[i] = sum_j alpha[j, i] * vec(a1_j h_j^T)  == A1^T diag(alpha_i) H
     let mut b = Tensor::zeros(&[r, (d + 1) * d]);
@@ -189,8 +295,8 @@ pub fn fit_with(
             if w == 0.0 {
                 continue;
             }
-            let a1 = &buf.a1[j];
-            let h = &buf.h[j];
+            let a1 = buf.a1(j);
+            let h = buf.h(j);
             for p in 0..=d {
                 // row p of vec([a1;_] h^T)
                 let coef = w * a1[p];
@@ -206,32 +312,33 @@ pub fn fit_with(
     }
 
     // ---- 4. training-set relative error (diagnostic) -------------------
+    // Evaluated through a temporary predictor that *owns* (U, B) and hands
+    // them to `install` afterwards — no defensive clones of the two
+    // largest tensors in the system.
     let mut err_num = 0.0f64;
     let mut err_den = 0.0f64;
-    {
-        let tmp = Predictor {
-            u: u.clone(),
-            b: b.clone(),
-            width: d,
-            rank: r,
-            fits: 0,
-            version: 0,
-        };
-        for j in 0..n {
-            let a_no_bias = &buf.a1[j][..d];
-            let pred_g = tmp.predict_one_trunk(a_no_bias, &buf.h[j]);
-            let g = &buf.grads[j];
-            let mut num = 0.0f64;
-            for p in 0..p_t {
-                let dlt = (pred_g[p] - g[p]) as f64;
-                num += dlt * dlt;
-            }
-            err_num += num;
-            err_den += stats::dot_f64(g, g);
+    let tmp = Predictor {
+        u,
+        b,
+        width: d,
+        rank: r,
+        fits: 0,
+        version: 0,
+    };
+    for j in 0..n {
+        let a_no_bias = &buf.a1(j)[..d];
+        let pred_g = tmp.predict_one_trunk(a_no_bias, buf.h(j));
+        let g = buf.grad(j);
+        let mut num = 0.0f64;
+        for p in 0..p_t {
+            let dlt = (pred_g[p] - g[p]) as f64;
+            num += dlt * dlt;
         }
+        err_num += num;
+        err_den += stats::dot_f64(g, g);
     }
 
-    pred.install(u, b);
+    pred.install(tmp.u, tmp.b);
     Ok(FitReport {
         n,
         rank: r,
@@ -292,7 +399,7 @@ mod tests {
         let mut buf = FitBuffer::new(64);
         for _ in 0..48 {
             let (g, a, h) = synth.sample(&mut rng);
-            buf.push(g, a, h);
+            buf.push(&g, &a, &h);
         }
         let mut pred = Predictor::new(p_t, d, r);
         let report = fit(&mut pred, &buf, 1e-7).unwrap();
@@ -325,13 +432,33 @@ mod tests {
     }
 
     #[test]
+    fn repeat_fits_reuse_workspace_slabs() {
+        let mut rng = Pcg64::seeded(44);
+        let synth = Synth::new(&mut rng, 120, 5, 2);
+        let mut buf = FitBuffer::new(24);
+        for _ in 0..24 {
+            let (g, a, h) = synth.sample(&mut rng);
+            buf.push(&g, &a, &h);
+        }
+        let mut pred = Predictor::new(120, 5, 2);
+        let mut ws = Workspace::new();
+        fit_with_ws(Backend::blocked(), &mut pred, &buf, 1e-7, &mut ws).unwrap();
+        let warm_misses = ws.misses();
+        for _ in 0..2 {
+            fit_with_ws(Backend::blocked(), &mut pred, &buf, 1e-7, &mut ws).unwrap();
+        }
+        assert_eq!(ws.misses(), warm_misses, "repeat refits must reuse slabs");
+        assert_eq!(pred.fits, 3);
+    }
+
+    #[test]
     fn fitted_u_columns_near_orthonormal() {
         let mut rng = Pcg64::seeded(41);
         let synth = Synth::new(&mut rng, 200, 5, 2);
         let mut buf = FitBuffer::new(32);
         for _ in 0..32 {
             let (g, a, h) = synth.sample(&mut rng);
-            buf.push(g, a, h);
+            buf.push(&g, &a, &h);
         }
         let mut pred = Predictor::new(200, 5, 2);
         fit(&mut pred, &buf, 1e-7).unwrap();
@@ -353,7 +480,7 @@ mod tests {
         let mut buf = FitBuffer::new(32);
         for _ in 0..32 {
             let (g, a, h) = synth.sample(&mut rng);
-            buf.push(g, a, h);
+            buf.push(&g, &a, &h);
         }
         let mut pred = Predictor::new(150, 5, 1);
         let report = fit(&mut pred, &buf, 1e-6).unwrap();
@@ -366,12 +493,31 @@ mod tests {
     fn buffer_sliding_window() {
         let mut buf = FitBuffer::new(4);
         for i in 0..10 {
-            buf.push(vec![i as f32; 3], vec![0.0; 2], vec![0.0; 2]);
+            buf.push(&[i as f32; 3], &[0.0; 2], &[0.0; 2]);
         }
         assert_eq!(buf.len(), 4);
-        assert_eq!(buf.grads[0][0], 6.0);
-        assert_eq!(buf.a1[0].len(), 3); // bias appended
+        assert_eq!(buf.grad(0)[0], 6.0);
+        assert_eq!(buf.grad(3)[0], 9.0);
+        assert_eq!(buf.a1(0).len(), 3); // bias appended
+        assert_eq!(buf.a1(0)[2], 1.0);
         buf.clear();
         assert!(buf.is_empty());
+        // Widths may change after clear (slabs are re-established).
+        buf.push(&[1.0; 5], &[0.0; 3], &[0.0; 3]);
+        assert_eq!(buf.grad(0).len(), 5);
+        assert_eq!(buf.a1(0).len(), 4);
+    }
+
+    #[test]
+    fn buffer_ring_order_is_oldest_first() {
+        let mut buf = FitBuffer::new(3);
+        for i in 0..5 {
+            buf.push(&[i as f32], &[0.0], &[0.0]);
+        }
+        // rows 2, 3, 4 survive, oldest first
+        assert_eq!(buf.grad(0), &[2.0]);
+        assert_eq!(buf.grad(1), &[3.0]);
+        assert_eq!(buf.grad(2), &[4.0]);
+        assert!(buf.is_full());
     }
 }

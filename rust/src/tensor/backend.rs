@@ -1,4 +1,4 @@
-//! Runtime-selectable tensor backends (DESIGN.md §2, ADR-001).
+//! Runtime-selectable tensor backends (DESIGN.md §2, ADR-001, ADR-003).
 //!
 //! Every dense hot path in the reproduction — the predictor-fit Gram
 //! matrices, the U materialization dots, Muon's Newton–Schulz matmuls —
@@ -10,28 +10,42 @@
 //!   backend is property-tested against it (`tests/backend_equivalence.rs`).
 //! - [`BlockedBackend`] — the cache-aware ikj / j-tiled kernels that were
 //!   previously the only implementation.
-//! - [`MicroBackend`] — register-tiled 4-row kernels: the inner loop keeps
-//!   four output-row accumulators live so each B row loaded from L1 is
-//!   reused four times, and the unrolled multiply–add chains are
-//!   FMA/auto-vectorization friendly.
+//! - [`MicroBackend`] — register-tiled 4-row kernels with B-panel packing:
+//!   the shared operand is transpose-packed once per j-tile into a
+//!   contiguous workspace panel, so the 4-row micro-kernel streams
+//!   contiguous memory instead of striding across B, and each panel row
+//!   loaded from L1 is reused four times.
+//!
+//! All kernels are **workspace-aware** (ADR-003): the trait entry points
+//! are `*_into` forms writing into caller-owned outputs, with a
+//! [`Workspace`] arena providing packing scratch, so steady-state hot
+//! loops run allocation-free. The allocating `matmul`/`gram_t`/`gram`
+//! conveniences remain on the [`Backend`] handle for cold paths and tests.
 //!
 //! Selection is by [`BackendKind`] (`--backend` CLI flag / `backend` config
 //! key); `Auto` runs a one-shot [`calibrate`] probe at startup and pins the
-//! fastest backend for the process. The chosen backend is held in a global
-//! the free functions in `tensor::matmul` dispatch through, and is also
-//! threaded explicitly (as a [`Backend`] handle) through the predictor fit,
-//! the Muon optimizer and the coordinator so call sites can pin a backend
+//! fastest backend for the process. The probe winner is also persisted to a
+//! small cache file (keyed by backend set + probe shape grid) so repeat
+//! process startups skip the warm-up probe; an explicit `--backend` never
+//! consults the cache. The chosen backend is held in a global the free
+//! functions in `tensor::matmul` dispatch through, and is also threaded
+//! explicitly (as a [`Backend`] handle) through the predictor fit, the Muon
+//! optimizer and the coordinator so call sites can pin a backend
 //! independently of the global (the equivalence tests and benches do).
 
-use super::Tensor;
+use super::{Tensor, Workspace};
+use crate::util::json::{obj, s, Json};
 use std::fmt;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
 /// The dense kernels the reproduction's hot paths need. Implementations
 /// may assume shape-checked inputs: the [`Backend`] handle validates before
-/// dispatching.
+/// dispatching. All entry points write into caller-owned outputs and draw
+/// any packing scratch from the caller's [`Workspace`], so a warmed hot
+/// loop never allocates.
 pub trait TensorBackend: Sync {
     /// Stable lowercase identifier (appears in bench JSON and logs).
     fn name(&self) -> &'static str;
@@ -40,27 +54,32 @@ pub trait TensorBackend: Sync {
     /// Gram matrices and `matvec`).
     fn dot(&self, a: &[f32], b: &[f32]) -> f32;
 
-    /// C = A @ B into a pre-allocated, zeroed-by-the-kernel output.
-    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor);
+    /// C = A @ B into a pre-allocated output (zeroed by the kernel).
+    /// `ws` supplies operand-packing scratch.
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, ws: &mut Workspace);
 
-    /// C = A^T @ A for A: (n, d) -> (d, d).
-    fn gram_t(&self, a: &Tensor) -> Tensor;
+    /// C = A^T @ A for A: (n, d) into a pre-allocated (d, d) output.
+    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, ws: &mut Workspace);
 
-    /// K = A @ A^T for A: (n, d) -> (n, n). Default: symmetric row-dot
-    /// fill using this backend's `dot`.
-    fn gram(&self, a: &Tensor) -> Tensor {
+    /// K = A @ A^T for A: (n, d) into a pre-allocated (n, n) output.
+    /// Default: symmetric row-dot fill using this backend's `dot`, with
+    /// both row borrows hoisted out of the inner loop (one `chunks_exact`
+    /// pass per row pair instead of re-slicing from the start of A for
+    /// every (i, j)).
+    fn gram_into(&self, a: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
         let (n, d) = (a.rows(), a.cols());
-        let mut k = Tensor::zeros(&[n, n]);
-        for i in 0..n {
-            let ri = &a.data[i * d..(i + 1) * d];
-            for j in i..n {
-                let rj = &a.data[j * d..(j + 1) * d];
+        if d == 0 {
+            c.data.fill(0.0);
+            return;
+        }
+        for (i, ri) in a.data.chunks_exact(d).enumerate() {
+            for (off, rj) in a.data[i * d..].chunks_exact(d).enumerate() {
+                let j = i + off;
                 let dot = self.dot(ri, rj);
-                k.data[i * n + j] = dot;
-                k.data[j * n + i] = dot;
+                c.data[i * n + j] = dot;
+                c.data[j * n + i] = dot;
             }
         }
-        k
     }
 }
 
@@ -86,7 +105,7 @@ impl TensorBackend for NaiveBackend {
         s
     }
 
-    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
         let (m, k) = (a.rows(), a.cols());
         let n = b.cols();
         for i in 0..m {
@@ -100,9 +119,8 @@ impl TensorBackend for NaiveBackend {
         }
     }
 
-    fn gram_t(&self, a: &Tensor) -> Tensor {
+    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
         let (n, d) = (a.rows(), a.cols());
-        let mut c = Tensor::zeros(&[d, d]);
         for i in 0..d {
             for j in 0..d {
                 let mut s = 0.0f32;
@@ -112,7 +130,6 @@ impl TensorBackend for NaiveBackend {
                 c.set(i, j, s);
             }
         }
-        c
     }
 }
 
@@ -126,8 +143,8 @@ pub struct BlockedBackend;
 
 const BLOCKED_JT: usize = 256;
 
-/// One ikj/j-tiled output row: c_row += a_row @ B. Shared by the blocked
-/// kernel and the micro kernel's remainder rows.
+/// One ikj/j-tiled output row: c_row += a_row @ B (B unpacked, strided by
+/// its full row width). Used by the blocked kernel.
 fn blocked_row(a_row: &[f32], b: &Tensor, c_row: &mut [f32], n: usize) {
     for j0 in (0..n).step_by(BLOCKED_JT) {
         let j1 = (j0 + BLOCKED_JT).min(n);
@@ -153,7 +170,7 @@ impl TensorBackend for BlockedBackend {
         super::stats::dot(a, b)
     }
 
-    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
         let (m, k) = (a.rows(), a.cols());
         let n = b.cols();
         c.data.fill(0.0);
@@ -164,9 +181,9 @@ impl TensorBackend for BlockedBackend {
         }
     }
 
-    fn gram_t(&self, a: &Tensor) -> Tensor {
+    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
         let (n, d) = (a.rows(), a.cols());
-        let mut c = Tensor::zeros(&[d, d]);
+        c.data.fill(0.0);
         for row in 0..n {
             let r = &a.data[row * d..(row + 1) * d];
             for i in 0..d {
@@ -180,8 +197,7 @@ impl TensorBackend for BlockedBackend {
                 }
             }
         }
-        mirror_upper(&mut c, d);
-        c
+        mirror_upper(c, d);
     }
 }
 
@@ -194,51 +210,63 @@ fn mirror_upper(c: &mut Tensor, d: usize) {
 }
 
 // ---------------------------------------------------------------------------
-// Register-tiled micro kernels (new)
+// Register-tiled micro kernels with B-panel packing
 // ---------------------------------------------------------------------------
 
 /// Register-tiled kernels: 4 output rows per pass with 4-wide accumulator
-/// chains. Each B row fetched from cache feeds four C rows, quartering B
-/// traffic versus the blocked kernel; the dense (no zero-skip) inner loop
+/// chains over a B panel packed once per j-tile into workspace scratch.
+/// Packing turns the kk-walk over B from an n-strided gather into a
+/// contiguous stream, and each packed row feeds four C rows (¼ the B
+/// traffic of the blocked kernel); the dense (no zero-skip) inner loop
 /// keeps the multiply–add chains straight-line for the vectorizer.
 pub struct MicroBackend;
 
 const MICRO_JT: usize = 512;
 const MICRO_MR: usize = 4;
 
-/// The 4-row register-tiled block: c[0..4] += a_rows[0..4] @ B over one
-/// j-tile at a time.
+/// The 4-row register-tiled block over one packed (k, w) panel:
+/// c[0..4][j0..j0+w] += a_rows[0..4] @ panel.
 #[allow(clippy::too_many_arguments)]
 fn micro_block4(
     ar0: &[f32],
     ar1: &[f32],
     ar2: &[f32],
     ar3: &[f32],
-    b: &Tensor,
+    panel: &[f32],
     c_block: &mut [f32],
     k: usize,
     n: usize,
+    j0: usize,
+    w: usize,
 ) {
     let (c0, rest) = c_block.split_at_mut(n);
     let (c1, rest) = rest.split_at_mut(n);
     let (c2, c3) = rest.split_at_mut(n);
-    for j0 in (0..n).step_by(MICRO_JT) {
-        let j1 = (j0 + MICRO_JT).min(n);
-        let w = j1 - j0;
-        let s0 = &mut c0[j0..j1];
-        let s1 = &mut c1[j0..j1];
-        let s2 = &mut c2[j0..j1];
-        let s3 = &mut c3[j0..j1];
-        for kk in 0..k {
-            let (a0, a1, a2, a3) = (ar0[kk], ar1[kk], ar2[kk], ar3[kk]);
-            let b_row = &b.data[kk * n + j0..kk * n + j1];
-            for idx in 0..w {
-                let bv = b_row[idx];
-                s0[idx] += a0 * bv;
-                s1[idx] += a1 * bv;
-                s2[idx] += a2 * bv;
-                s3[idx] += a3 * bv;
-            }
+    let s0 = &mut c0[j0..j0 + w];
+    let s1 = &mut c1[j0..j0 + w];
+    let s2 = &mut c2[j0..j0 + w];
+    let s3 = &mut c3[j0..j0 + w];
+    for kk in 0..k {
+        let (a0, a1, a2, a3) = (ar0[kk], ar1[kk], ar2[kk], ar3[kk]);
+        let b_row = &panel[kk * w..(kk + 1) * w];
+        for (idx, &bv) in b_row.iter().enumerate() {
+            s0[idx] += a0 * bv;
+            s1[idx] += a1 * bv;
+            s2[idx] += a2 * bv;
+            s3[idx] += a3 * bv;
+        }
+    }
+}
+
+/// Remainder rows (m % 4): one output-row axpy over the packed panel.
+fn micro_row(a_row: &[f32], panel: &[f32], c_seg: &mut [f32], w: usize) {
+    for (kk, &aik) in a_row.iter().enumerate() {
+        if aik == 0.0 {
+            continue;
+        }
+        let b_row = &panel[kk * w..(kk + 1) * w];
+        for (cv, &bv) in c_seg.iter_mut().zip(b_row) {
+            *cv += aik * bv;
         }
     }
 }
@@ -269,47 +297,75 @@ impl TensorBackend for MicroBackend {
         s
     }
 
-    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
         let (m, k) = (a.rows(), a.cols());
         let n = b.cols();
         c.data.fill(0.0);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
         let full_blocks = m / MICRO_MR;
-        for blk in 0..full_blocks {
-            let i0 = blk * MICRO_MR;
-            let ar0 = &a.data[i0 * k..(i0 + 1) * k];
-            let ar1 = &a.data[(i0 + 1) * k..(i0 + 2) * k];
-            let ar2 = &a.data[(i0 + 2) * k..(i0 + 3) * k];
-            let ar3 = &a.data[(i0 + 3) * k..(i0 + 4) * k];
-            let c_block = &mut c.data[i0 * n..(i0 + MICRO_MR) * n];
-            micro_block4(ar0, ar1, ar2, ar3, b, c_block, k, n);
+        // One panel buffer serves every j-tile; the last (narrower) tile
+        // just uses a shorter prefix.
+        let mut panel = ws.take(k * MICRO_JT.min(n));
+        for j0 in (0..n).step_by(MICRO_JT) {
+            let j1 = (j0 + MICRO_JT).min(n);
+            let w = j1 - j0;
+            // Pack B[:, j0..j1] once into a contiguous (k, w) panel; it is
+            // then reused by every 4-row block below, so the pack cost
+            // amortizes over m/4 passes.
+            for kk in 0..k {
+                panel[kk * w..(kk + 1) * w]
+                    .copy_from_slice(&b.data[kk * n + j0..kk * n + j1]);
+            }
+            let panel = &panel[..k * w];
+            for blk in 0..full_blocks {
+                let i0 = blk * MICRO_MR;
+                micro_block4(
+                    &a.data[i0 * k..(i0 + 1) * k],
+                    &a.data[(i0 + 1) * k..(i0 + 2) * k],
+                    &a.data[(i0 + 2) * k..(i0 + 3) * k],
+                    &a.data[(i0 + 3) * k..(i0 + 4) * k],
+                    panel,
+                    &mut c.data[i0 * n..(i0 + MICRO_MR) * n],
+                    k,
+                    n,
+                    j0,
+                    w,
+                );
+            }
+            for i in full_blocks * MICRO_MR..m {
+                let a_row = &a.data[i * k..(i + 1) * k];
+                let c_seg = &mut c.data[i * n + j0..i * n + j1];
+                micro_row(a_row, panel, c_seg, w);
+            }
         }
-        // Remainder rows (m % 4) fall back to the single-row axpy kernel.
-        for i in full_blocks * MICRO_MR..m {
-            let a_row = &a.data[i * k..(i + 1) * k];
-            let c_row = &mut c.data[i * n..(i + 1) * n];
-            blocked_row(a_row, b, c_row, n);
-        }
+        ws.give(panel);
     }
 
-    fn gram_t(&self, a: &Tensor) -> Tensor {
+    /// Fused symmetric rank-k update: four samples per pass over the upper
+    /// triangle only (skipping the redundant lower-triangle work), then one
+    /// mirror. Quarters the passes over C relative to the blocked kernel.
+    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
         let (n, d) = (a.rows(), a.cols());
-        let mut c = Tensor::zeros(&[d, d]);
-        // Two samples per pass: each upper-triangle row update pulls two
-        // A rows, halving passes over C relative to the blocked kernel.
-        let pairs = n / 2;
-        for p in 0..pairs {
-            let r0 = &a.data[2 * p * d..(2 * p + 1) * d];
-            let r1 = &a.data[(2 * p + 1) * d..(2 * p + 2) * d];
+        c.data.fill(0.0);
+        let quads = n / 4;
+        for q in 0..quads {
+            let base = 4 * q * d;
+            let r0 = &a.data[base..base + d];
+            let r1 = &a.data[base + d..base + 2 * d];
+            let r2 = &a.data[base + 2 * d..base + 3 * d];
+            let r3 = &a.data[base + 3 * d..base + 4 * d];
             for i in 0..d {
-                let (x0, x1) = (r0[i], r1[i]);
+                let (x0, x1, x2, x3) = (r0[i], r1[i], r2[i], r3[i]);
                 let c_row = &mut c.data[i * d..(i + 1) * d];
                 for j in i..d {
-                    c_row[j] += x0 * r0[j] + x1 * r1[j];
+                    c_row[j] += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
                 }
             }
         }
-        if n % 2 == 1 {
-            let r = &a.data[(n - 1) * d..n * d];
+        for row in 4 * quads..n {
+            let r = &a.data[row * d..(row + 1) * d];
             for i in 0..d {
                 let ri = r[i];
                 let c_row = &mut c.data[i * d..(i + 1) * d];
@@ -318,8 +374,7 @@ impl TensorBackend for MicroBackend {
                 }
             }
         }
-        mirror_upper(&mut c, d);
-        c
+        mirror_upper(c, d);
     }
 }
 
@@ -334,7 +389,7 @@ pub enum BackendKind {
     Blocked,
     Micro,
     /// One-shot calibration probe at startup picks among the concrete
-    /// kinds; resolves once per process.
+    /// kinds; resolves once per process (cache file skips repeat probes).
     Auto,
 }
 
@@ -369,7 +424,9 @@ static MICRO: MicroBackend = MicroBackend;
 
 /// Copyable handle to a backend implementation — the thing threaded through
 /// `fit_with`, `newton_schulz_with`, `OptimConfig` and the bench suites.
-/// Validates shapes once, then dispatches.
+/// Validates shapes once, then dispatches. Hot paths use the `*_into_ws`
+/// entry points with a caller-owned [`Workspace`]; the allocating forms
+/// remain for cold paths and tests.
 #[derive(Clone, Copy)]
 pub struct Backend {
     imp: &'static dyn TensorBackend,
@@ -420,32 +477,75 @@ impl Backend {
         self.imp.dot(a, b)
     }
 
-    /// C = A @ B. A: (m, k), B: (k, n) -> (m, n).
+    /// C = A @ B. A: (m, k), B: (k, n) -> (m, n). Allocating convenience.
     pub fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
         let mut c = Tensor::zeros(&[a.rows(), b.cols()]);
         self.matmul_into(a, b, &mut c);
         c
     }
 
-    /// C = A @ B into a pre-allocated output (hot path avoids allocation).
+    /// C = A @ B into a pre-allocated output; packing scratch comes from a
+    /// fresh throwaway workspace (cold-path convenience).
     pub fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+        let mut ws = Workspace::new();
+        self.matmul_into_ws(a, b, c, &mut ws);
+    }
+
+    /// C = A @ B into a pre-allocated output, drawing scratch from the
+    /// caller's workspace — the zero-allocation hot-path entry point.
+    pub fn matmul_into_ws(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
         let (m, k) = (a.rows(), a.cols());
         let (k2, n) = (b.rows(), b.cols());
         assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
-        assert_eq!(c.shape, vec![m, n], "matmul output shape mismatch");
-        self.imp.matmul_into(a, b, c);
+        // compared against a stack array: shape checks must not allocate
+        assert_eq!(c.shape, [m, n], "matmul output shape mismatch");
+        self.imp.matmul_into(a, b, c, ws);
     }
 
-    /// C = A^T @ A for A: (n, d) -> (d, d).
+    /// C = A^T @ A for A: (n, d) -> (d, d). Allocating convenience.
     pub fn gram_t(&self, a: &Tensor) -> Tensor {
-        assert_eq!(a.shape.len(), 2, "gram_t needs a matrix");
-        self.imp.gram_t(a)
+        let d = a.cols();
+        let mut c = Tensor::zeros(&[d, d]);
+        self.gram_t_into(a, &mut c);
+        c
     }
 
-    /// K = A @ A^T for A: (n, d) -> (n, n).
+    /// C = A^T @ A into a pre-allocated (d, d) output.
+    pub fn gram_t_into(&self, a: &Tensor, c: &mut Tensor) {
+        let mut ws = Workspace::new();
+        self.gram_t_into_ws(a, c, &mut ws);
+    }
+
+    /// C = A^T @ A into a pre-allocated output with caller scratch — the
+    /// zero-allocation hot-path entry point.
+    pub fn gram_t_into_ws(&self, a: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
+        assert_eq!(a.shape.len(), 2, "gram_t needs a matrix");
+        let d = a.cols();
+        assert_eq!(c.shape, [d, d], "gram_t output shape mismatch");
+        self.imp.gram_t_into(a, c, ws);
+    }
+
+    /// K = A @ A^T for A: (n, d) -> (n, n). Allocating convenience.
     pub fn gram(&self, a: &Tensor) -> Tensor {
+        let n = a.rows();
+        let mut c = Tensor::zeros(&[n, n]);
+        self.gram_into(a, &mut c);
+        c
+    }
+
+    /// K = A @ A^T into a pre-allocated (n, n) output.
+    pub fn gram_into(&self, a: &Tensor, c: &mut Tensor) {
+        let mut ws = Workspace::new();
+        self.gram_into_ws(a, c, &mut ws);
+    }
+
+    /// K = A @ A^T into a pre-allocated output with caller scratch — the
+    /// zero-allocation hot-path entry point.
+    pub fn gram_into_ws(&self, a: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
         assert_eq!(a.shape.len(), 2, "gram needs a matrix");
-        self.imp.gram(a)
+        let n = a.rows();
+        assert_eq!(c.shape, [n, n], "gram output shape mismatch");
+        self.imp.gram_into(a, c, ws);
     }
 }
 
@@ -517,17 +617,20 @@ pub fn calibrate() -> CalibrationReport {
     rng.fill_normal(&mut b.data, 1.0);
     rng.fill_normal(&mut g.data, 1.0);
     let mut c = Tensor::zeros(&[64, 80]);
+    let mut gt = Tensor::zeros(&[48, 48]);
+    let mut ws = Workspace::new();
 
     let mut timings = Vec::new();
     for kind in BackendKind::CONCRETE {
         let be = Backend::of(kind);
         // one unmeasured warmup, then best of three
-        be.matmul_into(&a, &b, &mut c);
+        be.matmul_into_ws(&a, &b, &mut c, &mut ws);
         let mut best = f64::INFINITY;
         for _ in 0..3 {
             let t0 = Instant::now();
-            be.matmul_into(&a, &b, &mut c);
-            std::hint::black_box(be.gram_t(&g));
+            be.matmul_into_ws(&a, &b, &mut c, &mut ws);
+            be.gram_t_into_ws(&g, &mut gt, &mut ws);
+            std::hint::black_box(&gt);
             best = best.min(t0.elapsed().as_secs_f64());
         }
         timings.push((kind, best));
@@ -540,11 +643,84 @@ pub fn calibrate() -> CalibrationReport {
     CalibrationReport { chosen, timings }
 }
 
+// ---------------------------------------------------------------------------
+// Calibration cache (skip the warm-up probe on repeat startups)
+// ---------------------------------------------------------------------------
+
+/// Schema id stamped into the calibration cache file.
+pub const CALIB_CACHE_SCHEMA: &str = "lgp.calib.v1";
+
+/// Cache key: crate version + the concrete backend set + the probe's
+/// shape grid. A new release (which may change kernel implementations and
+/// therefore the ranking), a new backend, or new probe shapes all
+/// invalidate stale cache files instead of pinning an outdated winner.
+pub fn calib_cache_key() -> String {
+    let names: Vec<&str> = BackendKind::CONCRETE.iter().map(|k| k.as_str()).collect();
+    format!(
+        "v{}|{}|matmul:64x96x80|gram_t:96x48",
+        env!("CARGO_PKG_VERSION"),
+        names.join(",")
+    )
+}
+
+/// Cache location: `LGP_CALIB_CACHE` overrides the path,
+/// `LGP_NO_CALIB_CACHE` disables caching entirely.
+fn calib_cache_path() -> Option<PathBuf> {
+    if std::env::var_os("LGP_NO_CALIB_CACHE").is_some() {
+        return None;
+    }
+    if let Some(p) = std::env::var_os("LGP_CALIB_CACHE") {
+        return Some(PathBuf::from(p));
+    }
+    Some(std::env::temp_dir().join("lgp_calib_cache_v1.json"))
+}
+
+/// Read a cached probe winner. Returns `None` (probe as usual) on a
+/// missing file, parse failure, schema/key mismatch, or a non-concrete
+/// cached kind — the cache can only ever skip work, never break startup.
+pub fn read_calib_cache(path: &Path, key: &str) -> Option<BackendKind> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.at(&["schema"]).as_str() != Some(CALIB_CACHE_SCHEMA)
+        || j.at(&["key"]).as_str() != Some(key)
+    {
+        return None;
+    }
+    let kind = BackendKind::parse(j.at(&["chosen"]).as_str()?).ok()?;
+    (kind != BackendKind::Auto).then_some(kind)
+}
+
+/// Best-effort cache write; IO errors are swallowed (the probe result is
+/// advisory and will simply be re-measured next startup).
+pub fn write_calib_cache(path: &Path, key: &str, chosen: BackendKind) {
+    let doc = obj(vec![
+        ("schema", s(CALIB_CACHE_SCHEMA)),
+        ("key", s(key)),
+        ("chosen", s(chosen.as_str())),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    let _ = std::fs::write(path, text);
+}
+
 static AUTO_CHOICE: OnceLock<BackendKind> = OnceLock::new();
 
-/// The calibrated backend, probing at most once per process.
+/// The calibrated backend, probing at most once per process. Consults the
+/// calibration cache file first; an explicit `--backend` (any concrete
+/// `BackendKind`) never reaches this path, so it always overrides.
 pub fn auto_select() -> Backend {
     let kind = *AUTO_CHOICE.get_or_init(|| {
+        let key = calib_cache_key();
+        if let Some(path) = calib_cache_path() {
+            if let Some(kind) = read_calib_cache(&path, &key) {
+                crate::log_debug!(
+                    "backend calibration: cache hit -> {} ({})",
+                    kind.as_str(),
+                    path.display()
+                );
+                return kind;
+            }
+        }
         let report = calibrate();
         crate::log_debug!(
             "backend calibration: chose {} ({:?})",
@@ -555,6 +731,9 @@ pub fn auto_select() -> Backend {
                 .map(|(k, s)| format!("{}={:.1}µs", k.as_str(), s * 1e6))
                 .collect::<Vec<_>>()
         );
+        if let Some(path) = calib_cache_path() {
+            write_calib_cache(&path, &key, report.chosen);
+        }
         report.chosen
     });
     Backend::of(kind)
@@ -611,6 +790,49 @@ mod tests {
     }
 
     #[test]
+    fn workspace_entry_points_match_and_reuse_scratch() {
+        // Dirty outputs + one shared workspace across shapes and backends:
+        // the _into_ws kernels must overwrite every stale cell and, after
+        // warm-up, stop allocating scratch.
+        let mut rng = Pcg64::seeded(90);
+        let oracle = Backend::naive();
+        let mut ws = Workspace::new();
+        let mut warm_misses = 0;
+        for round in 0..3 {
+            for &(m, k, n) in &[(5usize, 7usize, 3usize), (16, 16, 16), (9, 33, 5)] {
+                let a = rand_t(&mut rng, &[m, k]);
+                let b = rand_t(&mut rng, &[k, n]);
+                let want = oracle.matmul(&a, &b);
+                for be in Backend::all() {
+                    let mut c = Tensor::filled(&[m, n], f32::NAN);
+                    be.matmul_into_ws(&a, &b, &mut c, &mut ws);
+                    assert_close(&c, &want, be.name());
+                }
+                let want_gt = oracle.gram_t(&a);
+                let want_g = oracle.gram(&a);
+                for be in Backend::all() {
+                    let mut gt = Tensor::filled(&[k, k], f32::NAN);
+                    be.gram_t_into_ws(&a, &mut gt, &mut ws);
+                    assert_close(&gt, &want_gt, be.name());
+                    let mut g = Tensor::filled(&[m, m], f32::NAN);
+                    be.gram_into_ws(&a, &mut g, &mut ws);
+                    assert_close(&g, &want_g, be.name());
+                }
+            }
+            if round == 0 {
+                // Record the warm-up miss count; later rounds must be
+                // served entirely from the pool.
+                warm_misses = ws.misses();
+            }
+        }
+        assert_eq!(
+            ws.misses(),
+            warm_misses,
+            "steady-state rounds must not allocate"
+        );
+    }
+
+    #[test]
     fn dot_matches_across_backends() {
         let mut rng = Pcg64::seeded(79);
         for len in [0usize, 1, 3, 8, 9, 31, 1024] {
@@ -647,6 +869,32 @@ mod tests {
         assert_eq!(report.timings.len(), 3);
         assert!(report.timings.iter().all(|&(_, s)| s > 0.0 && s.is_finite()));
         assert_ne!(auto_select().kind(), BackendKind::Auto);
+    }
+
+    #[test]
+    fn calib_cache_round_trips() {
+        let dir = std::env::temp_dir().join("lgp_calib_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let key = calib_cache_key();
+        write_calib_cache(&path, &key, BackendKind::Micro);
+        assert_eq!(read_calib_cache(&path, &key), Some(BackendKind::Micro));
+        // A different key (new backend set / probe grid) misses.
+        assert_eq!(read_calib_cache(&path, "other-key"), None);
+        // Corrupt files miss instead of erroring.
+        std::fs::write(&path, "{not json").unwrap();
+        assert_eq!(read_calib_cache(&path, &key), None);
+        // Missing files miss.
+        assert_eq!(read_calib_cache(&dir.join("nope.json"), &key), None);
+        // A tampered "auto" entry is rejected (must be concrete).
+        std::fs::write(
+            &path,
+            format!(
+                r#"{{"schema":"{CALIB_CACHE_SCHEMA}","key":"{key}","chosen":"auto"}}"#
+            ),
+        )
+        .unwrap();
+        assert_eq!(read_calib_cache(&path, &key), None);
     }
 
     #[test]

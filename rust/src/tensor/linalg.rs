@@ -6,7 +6,7 @@
 //! - `newton_schulz`: the quintic orthogonalization iteration used by the
 //!   Muon optimizer (Jordan et al., 2024), the paper's training optimizer.
 
-use super::{backend, backend::Backend, Tensor};
+use super::{backend, backend::Backend, Tensor, Workspace};
 
 /// Symmetric eigendecomposition by cyclic Jacobi rotations.
 ///
@@ -138,37 +138,77 @@ pub fn newton_schulz(g: &Tensor, steps: usize) -> Tensor {
 }
 
 /// [`newton_schulz`] with an explicit tensor backend (Muon threads its
-/// configured backend through here; benches pin specific ones).
+/// configured backend through here; benches pin specific ones). Allocating
+/// convenience over [`newton_schulz_into`].
 pub fn newton_schulz_with(be: Backend, g: &Tensor, steps: usize) -> Tensor {
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(&[g.rows(), g.cols()]);
+    newton_schulz_into(be, g, steps, &mut out, &mut ws);
+    out
+}
+
+/// Newton–Schulz into a caller-owned output, with every intermediate drawn
+/// from the caller's [`Workspace`] — the zero-allocation form the Muon
+/// optimizer uses every update (ADR-003). `out` must match `g`'s shape.
+pub fn newton_schulz_into(
+    be: Backend,
+    g: &Tensor,
+    steps: usize,
+    out: &mut Tensor,
+    ws: &mut Workspace,
+) {
     let (m, n) = (g.rows(), g.cols());
+    // stack-array comparison: the hot path's shape check must not allocate
+    assert_eq!(out.shape, [m, n], "newton_schulz output shape mismatch");
     let transposed = m > n;
-    let mut x = if transposed { g.t() } else { g.clone() };
+    let (rows, cols) = if transposed { (n, m) } else { (m, n) };
+    // Operate on the smaller side: x is (rows, cols) with rows <= cols.
+    let mut x = ws.take_tensor(&[rows, cols]);
+    if transposed {
+        for i in 0..m {
+            for j in 0..n {
+                x.data[j * m + i] = g.data[i * n + j];
+            }
+        }
+    } else {
+        x.data.copy_from_slice(&g.data);
+    }
     // Normalize so singular values are <= 1 (required for convergence).
     let norm = x.frob_norm().max(1e-12);
     x.scale(1.0 / norm);
     const A: f32 = 3.4445;
     const B: f32 = -4.7750;
     const C: f32 = 2.0315;
-    let rows = x.rows();
+    let mut xxt = ws.take_tensor(&[rows, rows]);
+    let mut xxt2 = ws.take_tensor(&[rows, rows]);
+    let mut next = ws.take_tensor(&[rows, cols]);
     for _ in 0..steps {
         // aX + b(XX^T)X + c(XX^T)^2 X
-        let xxt = be.matmul(&x, &x.t()); // (rows, rows)
-        let xxt2 = be.matmul(&xxt, &xxt);
-        let mut combo = Tensor::zeros(&[rows, rows]);
-        for i in 0..rows * rows {
-            combo.data[i] = B * xxt.data[i] + C * xxt2.data[i];
+        be.gram_into_ws(&x, &mut xxt, ws); // XX^T, symmetric fill
+        be.matmul_into_ws(&xxt, &xxt, &mut xxt2, ws);
+        // combo = b·XX^T + c·(XX^T)², fused in place over xxt
+        for (xv, yv) in xxt.data.iter_mut().zip(&xxt2.data) {
+            *xv = B * *xv + C * yv;
         }
-        let mut next = be.matmul(&combo, &x);
-        for i in 0..next.data.len() {
-            next.data[i] += A * x.data[i];
+        be.matmul_into_ws(&xxt, &x, &mut next, ws);
+        for (nv, xv) in next.data.iter_mut().zip(&x.data) {
+            *nv += A * xv;
         }
-        x = next;
+        std::mem::swap(&mut x, &mut next);
     }
     if transposed {
-        x.t()
+        for i in 0..rows {
+            for j in 0..cols {
+                out.data[j * n + i] = x.data[i * cols + j];
+            }
+        }
     } else {
-        x
+        out.data.copy_from_slice(&x.data);
     }
+    ws.give_tensor(x);
+    ws.give_tensor(xxt);
+    ws.give_tensor(xxt2);
+    ws.give_tensor(next);
 }
 
 #[cfg(test)]
@@ -305,6 +345,31 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn newton_schulz_into_matches_allocating_form_and_reuses_scratch() {
+        // Pin one backend for both sides: the process-wide active backend
+        // can be flipped concurrently by other tests.
+        let be = Backend::blocked();
+        let mut rng = Pcg64::seeded(24);
+        let mut ws = Workspace::new();
+        let mut warm_misses = 0;
+        for round in 0..3 {
+            for &(m, n) in &[(6usize, 10usize), (10, 6), (8, 8)] {
+                let g = rand_t(&mut rng, &[m, n]);
+                let want = newton_schulz_with(be, &g, 5);
+                let mut out = Tensor::filled(&[m, n], f32::NAN);
+                newton_schulz_into(be, &g, 5, &mut out, &mut ws);
+                for (x, y) in out.data.iter().zip(&want.data) {
+                    assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+                }
+            }
+            if round == 0 {
+                warm_misses = ws.misses();
+            }
+        }
+        assert_eq!(ws.misses(), warm_misses, "steady-state NS must not allocate");
     }
 
     #[test]

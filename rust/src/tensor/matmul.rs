@@ -10,7 +10,7 @@
 //! fit (Gram matrices, U materialization) and Muon's Newton–Schulz
 //! iteration.
 
-use super::{backend, Tensor};
+use super::{backend, Tensor, Workspace};
 
 /// C = A @ B. A: (m, k), B: (k, n) -> (m, n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -22,14 +22,30 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     backend::active().matmul_into(a, b, c);
 }
 
+/// C = A @ B into a pre-allocated output with caller-owned scratch — the
+/// zero-allocation form (ADR-003).
+pub fn matmul_into_ws(a: &Tensor, b: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
+    backend::active().matmul_into_ws(a, b, c, ws);
+}
+
 /// C = A^T @ A for A: (n, d) -> (d, d).
 pub fn gram_t(a: &Tensor) -> Tensor {
     backend::active().gram_t(a)
 }
 
+/// C = A^T @ A into a pre-allocated (d, d) output with caller scratch.
+pub fn gram_t_into_ws(a: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
+    backend::active().gram_t_into_ws(a, c, ws);
+}
+
 /// K = A @ A^T for A: (n, d) -> (n, n). The predictor's example-Gram.
 pub fn gram(a: &Tensor) -> Tensor {
     backend::active().gram(a)
+}
+
+/// K = A @ A^T into a pre-allocated (n, n) output with caller scratch.
+pub fn gram_into_ws(a: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
+    backend::active().gram_into_ws(a, c, ws);
 }
 
 /// y = A @ x (matrix-vector).

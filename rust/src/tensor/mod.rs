@@ -15,8 +15,10 @@ pub mod backend;
 pub mod linalg;
 pub mod matmul;
 pub mod stats;
+pub mod workspace;
 
 pub use backend::{Backend, BackendKind};
+pub use workspace::Workspace;
 
 /// Row-major dense f32 tensor (rank 1 or 2 is all we need).
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,181 @@
+//! Workspace arena: caller-owned scratch buffers for the dense hot path
+//! (DESIGN.md ADR-003).
+//!
+//! Every workspace-aware kernel entry point (`matmul_into_ws`,
+//! `gram_t_into_ws`, `gram_into_ws`, `newton_schulz_into`, `fit_with_ws`)
+//! takes a `&mut Workspace` instead of allocating its own scratch. The
+//! arena is a best-fit free list of `Vec<f32>` buffers: `take(len)` hands
+//! out a zeroed buffer, reusing the smallest pooled allocation whose
+//! capacity suffices; `give` returns it for the next call. After one
+//! warm-up pass through a steady-state loop the pool holds every buffer
+//! the loop needs concurrently and `take` never touches the heap again —
+//! the property the `alloc-counter` feature's test asserts.
+//!
+//! Buffers are *owned* `Vec<f32>`s moved out of and back into the pool,
+//! so checked-out buffers carry no lifetime tie to the workspace and the
+//! workspace itself stays available for nested kernel calls (e.g. the
+//! micro backend's B-panel pack inside `newton_schulz_into`).
+
+use super::Tensor;
+
+/// Reusable scratch-buffer arena. Cheap to construct (`new` allocates
+/// nothing); hold one per long-lived hot loop and thread it down.
+#[derive(Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+    /// Recycled shape vectors for [`take_tensor`](Workspace::take_tensor),
+    /// so tensor checkout allocates nothing once warm (the shape `Vec` of
+    /// a `Tensor` is itself heap storage).
+    shapes: Vec<Vec<usize>>,
+    takes: usize,
+    misses: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements. Reuses the
+    /// smallest pooled buffer with sufficient capacity (best fit keeps a
+    /// warm pool matched to a repeating take sequence); allocates only on
+    /// a pool miss.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        self.takes += 1;
+        let mut best: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            if b.capacity() < len {
+                continue;
+            }
+            if best.map_or(true, |j| self.pool[j].capacity() > b.capacity()) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut v = self.pool.swap_remove(i);
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the pool for reuse. Zero-capacity buffers are
+    /// dropped (nothing to reuse).
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.pool.push(buf);
+        }
+    }
+
+    /// [`take`] wrapped in a shaped [`Tensor`] (zeroed). The shape vector
+    /// is recycled from returned tensors, so a warmed take/give cycle does
+    /// not touch the heap at all.
+    pub fn take_tensor(&mut self, shape: &[usize]) -> Tensor {
+        let len = shape.iter().product();
+        let mut sh = self.shapes.pop().unwrap_or_default();
+        sh.clear();
+        sh.extend_from_slice(shape);
+        Tensor { data: self.take(len), shape: sh }
+    }
+
+    /// Return a tensor's storage (data and shape vector) to the pool.
+    pub fn give_tensor(&mut self, t: Tensor) {
+        self.give(t.data);
+        if t.shape.capacity() > 0 {
+            self.shapes.push(t.shape);
+        }
+    }
+
+    /// Total `take` calls since construction.
+    pub fn takes(&self) -> usize {
+        self.takes
+    }
+
+    /// `take` calls that had to allocate (pool miss). In a warmed
+    /// steady-state loop this stops growing.
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_zeroed_buffers_even_after_reuse() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(8);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        ws.give(a);
+        let b = ws.take(8);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&v| v == 0.0), "reused buffer must be re-zeroed");
+        ws.give(b);
+    }
+
+    #[test]
+    fn steady_state_take_sequence_stops_missing() {
+        let mut ws = Workspace::new();
+        for round in 0..4 {
+            let x = ws.take(100);
+            let y = ws.take(200);
+            let z = ws.take(50);
+            ws.give(x);
+            ws.give(y);
+            ws.give(z);
+            if round == 0 {
+                assert_eq!(ws.misses(), 3);
+            }
+        }
+        // After warm-up every repeat of the same sequence is served from
+        // the pool.
+        assert_eq!(ws.misses(), 3, "steady-state takes must not allocate");
+        assert_eq!(ws.takes(), 12);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut ws = Workspace::new();
+        let big = ws.take(1000);
+        let small = ws.take(10);
+        ws.give(big);
+        ws.give(small);
+        let got = ws.take(10);
+        assert!(got.capacity() < 1000, "should reuse the small buffer");
+        ws.give(got);
+        assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
+    fn tensor_round_trip() {
+        let mut ws = Workspace::new();
+        let t = ws.take_tensor(&[3, 4]);
+        assert_eq!(t.shape, vec![3, 4]);
+        assert_eq!(t.data.len(), 12);
+        ws.give_tensor(t);
+        let t2 = ws.take_tensor(&[2, 6]);
+        assert_eq!(t2.data.len(), 12);
+        assert_eq!(ws.misses(), 1, "second tensor reuses the first's storage");
+    }
+
+    #[test]
+    fn zero_len_take_is_fine() {
+        let mut ws = Workspace::new();
+        let v = ws.take(0);
+        assert!(v.is_empty());
+        ws.give(v);
+        assert_eq!(ws.pooled(), 0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Debug-only allocation counter (feature `alloc-counter`).
+//!
+//! [`CountingAllocator`] wraps the system allocator and bumps a global
+//! atomic on every `alloc`/`alloc_zeroed`/`realloc`. `lib.rs` installs it
+//! as the `#[global_allocator]` when the feature is on, so *every* heap
+//! allocation in the process — including ones hidden inside std — is
+//! visible to [`alloc_count`].
+//!
+//! The point is the zero-allocation contract of ADR-003: the
+//! `alloc_free_hotpath` integration test brackets a warmed steady-state
+//! micro-batch + combine + optimizer step with two `alloc_count()` reads
+//! and asserts the difference is exactly zero. Run it with
+//!
+//! ```sh
+//! cargo test --features alloc-counter --test alloc_free_hotpath
+//! ```
+//!
+//! The feature is off by default (the atomic bump taxes every allocation
+//! in the process), so regular `cargo test` neither pays for nor runs it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// System-allocator wrapper that counts allocation events.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A realloc may move and always *may* touch the heap; count it as
+        // an allocation event for the zero-alloc contract.
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Total allocation events (alloc + alloc_zeroed + realloc) since process
+/// start. Only meaningful when the counting allocator is installed.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total deallocation events since process start.
+pub fn dealloc_count() -> u64 {
+    DEALLOCS.load(Ordering::Relaxed)
+}

@@ -4,6 +4,8 @@
 //! dependency closure — no rand/serde/clap — so the library carries its
 //! own small, tested implementations (DESIGN.md §10).
 
+#[cfg(feature = "alloc-counter")]
+pub mod alloc_track;
 pub mod cli;
 pub mod json;
 pub mod rng;

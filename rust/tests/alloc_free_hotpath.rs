@@ -1,0 +1,163 @@
+//! Zero-allocation contract of the steady-state hot path (ADR-003).
+//!
+//! Gated behind the `alloc-counter` feature, which installs a counting
+//! global allocator (`util::alloc_track`):
+//!
+//! ```sh
+//! cargo test --features alloc-counter --test alloc_free_hotpath
+//! ```
+//!
+//! The test drives the exact host-side work one GPR optimizer update does
+//! — per-example rows pushed into the (full) `FitBuffer` ring, the eq. 1
+//! control-variate combine fused in place over preallocated gradient
+//! slabs, and a Muon step (momentum blend + Newton–Schulz through the
+//! workspace-aware kernels) — warms it up, then asserts the allocation
+//! counter does not move across five further iterations.
+
+#![cfg(feature = "alloc-counter")]
+
+use lgp::config::OptimKind;
+use lgp::coordinator::combine::cv_combine_into;
+use lgp::model::manifest::{Manifest, TrunkParam};
+use lgp::model::params::{FlatGrad, ParamStore};
+use lgp::optim::{OptimConfig, Optimizer};
+use lgp::predictor::fit::FitBuffer;
+use lgp::tensor::Backend;
+use lgp::util::alloc_track;
+use lgp::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+const D: usize = 16;
+const CLASSES: usize = 4;
+
+/// Two Muon matrices (one needing the transposed Newton–Schulz path) plus
+/// a non-matrix bias slot, so the step exercises both NS orientations and
+/// the AdamW fallback.
+fn manifest_and_params() -> (Manifest, ParamStore) {
+    let layout = vec![
+        TrunkParam { name: "w0".into(), shape: vec![24, 16], offset: 0, len: 384, muon: true },
+        TrunkParam { name: "b0".into(), shape: vec![16], offset: 384, len: 16, muon: false },
+        TrunkParam { name: "w1".into(), shape: vec![16, 24], offset: 400, len: 384, muon: true },
+    ];
+    let trunk_params = 784;
+    let manifest = Manifest {
+        dir: ".".into(),
+        preset: "alloc-test".into(),
+        image: 8,
+        classes: CLASSES,
+        width: D,
+        label_smoothing: 0.0,
+        rank: 2,
+        n_chunk: 4,
+        n_fit: 8,
+        feat_dim: D,
+        trunk_params,
+        total_params: trunk_params + D * CLASSES + CLASSES,
+        micro_batch: 8,
+        fs: vec![0.25],
+        val_batch: 8,
+        trunk_layout: layout,
+        artifacts: BTreeMap::new(),
+        init_trunk: ".".into(),
+        init_head_w: ".".into(),
+        init_head_b: ".".into(),
+    };
+    let params = ParamStore {
+        trunk: (0..trunk_params).map(|i| (i % 7) as f32 * 0.01 - 0.02).collect(),
+        head_w: vec![0.05; D * CLASSES],
+        head_b: vec![0.0; CLASSES],
+        width: D,
+        classes: CLASSES,
+    };
+    (manifest, params)
+}
+
+struct Loop {
+    rng: Pcg64,
+    buf: FitBuffer,
+    grad_row: Vec<f32>,
+    a_row: Vec<f32>,
+    h_row: Vec<f32>,
+    g: FlatGrad,
+    g_cp: FlatGrad,
+    g_p: FlatGrad,
+    params: ParamStore,
+    opt: Optimizer,
+    manifest: Manifest,
+}
+
+impl Loop {
+    fn new() -> Loop {
+        let (manifest, params) = manifest_and_params();
+        let opt = Optimizer::new(
+            OptimKind::Muon,
+            OptimConfig { lr: 0.02, backend: Backend::micro(), ..OptimConfig::default() },
+            &params,
+            &manifest,
+        );
+        let mut rng = Pcg64::seeded(7);
+        let g = FlatGrad::zeros_like(&params);
+        let mut g_cp = FlatGrad::zeros_like(&params);
+        let mut g_p = FlatGrad::zeros_like(&params);
+        rng.fill_normal(&mut g_cp.trunk, 0.1);
+        rng.fill_normal(&mut g_p.trunk, 0.1);
+        Loop {
+            buf: FitBuffer::new(8),
+            grad_row: vec![0.0; manifest.trunk_params],
+            a_row: vec![0.0; D],
+            h_row: vec![0.0; D],
+            g,
+            g_cp,
+            g_p,
+            params,
+            opt,
+            manifest,
+            rng,
+        }
+    }
+
+    /// One steady-state "micro-batch + combine + optimizer step": exactly
+    /// the host-side work of one GPR update after warm-up.
+    fn iteration(&mut self) {
+        // micro-batch: per-example rows into the sliding-window ring
+        for _ in 0..4 {
+            self.rng.fill_normal(&mut self.grad_row, 1.0);
+            self.rng.fill_normal(&mut self.a_row, 1.0);
+            self.rng.fill_normal(&mut self.h_row, 1.0);
+            self.buf.push(&self.grad_row, &self.a_row, &self.h_row);
+        }
+        // control gradient refreshed in place, then eq. 1 fused combine
+        self.rng.fill_normal(&mut self.g.trunk, 0.1);
+        self.rng.fill_normal(&mut self.g.head_w, 0.1);
+        cv_combine_into(&mut self.g, &self.g_cp, &self.g_p, 0.25);
+        // one Muon update (momentum + Newton–Schulz + AdamW fallback)
+        self.opt.step(&mut self.params, &self.g, &self.manifest);
+    }
+}
+
+#[test]
+fn steady_state_hot_loop_is_allocation_free() {
+    let mut hot = Loop::new();
+    // Warm-up: fill the ring past capacity and let every arena (optimizer
+    // workspace, micro-kernel panels) reach its steady footprint.
+    for _ in 0..3 {
+        hot.iteration();
+    }
+    assert!(hot.buf.is_full(), "ring must be in sliding-window steady state");
+
+    let before = alloc_track::alloc_count();
+    for _ in 0..5 {
+        hot.iteration();
+    }
+    let after = alloc_track::alloc_count();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state micro-batch + combine + optimizer step allocated {} time(s)",
+        after - before
+    );
+
+    // Sanity: the loop did real work (params moved, counter is live).
+    assert!(alloc_track::alloc_count() > 0);
+    assert!(hot.params.trunk.iter().any(|&w| w != 0.0));
+}

@@ -1,15 +1,18 @@
 //! Property tests: every tensor backend agrees with the naive reference
 //! kernels to 1e-4 relative tolerance across rectangular and degenerate
 //! shapes (hand-rolled generator harness, same style as `proptests.rs` —
-//! no proptest crate in the offline set), the calibration probe picks a
-//! valid backend, and the bench JSON pipeline (kernel suite -> schema
-//! validation, the path `bench-report` exercises) works in fast mode.
+//! no proptest crate in the offline set) — including the workspace
+//! (`*_into_ws`) entry points on dirty outputs with a shared arena — the
+//! calibration probe picks a valid backend, the bench JSON pipeline
+//! (kernel suite -> schema validation, the path `bench-report` exercises)
+//! works in fast mode, and the perf-regression compare gate validates the
+//! committed kernel trajectory when present.
 
-use lgp::bench_support::json_out::{bench_doc, BenchRecord};
-use lgp::bench_support::{kernels, schema, Summary};
+use lgp::bench_support::json_out::{bench_doc, bench_out_dir, BenchRecord};
+use lgp::bench_support::{compare, kernels, schema, Summary};
 use lgp::predictor::fit::{fit_with, FitBuffer};
 use lgp::predictor::Predictor;
-use lgp::tensor::{backend, linalg, Backend, BackendKind, Tensor};
+use lgp::tensor::{backend, linalg, Backend, BackendKind, Tensor, Workspace};
 use lgp::util::json::Json;
 use lgp::util::rng::Pcg64;
 
@@ -56,6 +59,9 @@ const MATMUL_SHAPES: &[(usize, usize, usize)] = &[
 #[test]
 fn prop_matmul_all_backends_match_reference() {
     let oracle = Backend::naive();
+    // One arena across every seed/backend/shape: the workspace kernels
+    // must be correct with recycled (dirty) scratch, not just fresh.
+    let mut ws = Workspace::new();
     for seed in 0..CASES {
         let mut rng = Pcg64::new(seed, 200);
         let &(m, k, n) = &MATMUL_SHAPES[(seed as usize) % MATMUL_SHAPES.len()];
@@ -69,6 +75,15 @@ fn prop_matmul_all_backends_match_reference() {
             let mut c = Tensor::filled(&[m, n], f32::NAN);
             be.matmul_into(&a, &b, &mut c);
             assert_rel_close(&c, &want, 1e-4, &format!("seed {seed} matmul_into {}", be.name()));
+            // ...and the workspace entry point with shared scratch.
+            let mut c2 = Tensor::filled(&[m, n], f32::NAN);
+            be.matmul_into_ws(&a, &b, &mut c2, &mut ws);
+            assert_rel_close(
+                &c2,
+                &want,
+                1e-4,
+                &format!("seed {seed} matmul_into_ws {}", be.name()),
+            );
         }
     }
 }
@@ -88,6 +103,7 @@ fn prop_gram_all_backends_match_reference() {
         (64, 48),
     ];
     let oracle = Backend::naive();
+    let mut ws = Workspace::new();
     for seed in 0..CASES {
         let mut rng = Pcg64::new(seed, 201);
         let &(n, d) = &shapes[(seed as usize) % shapes.len()];
@@ -106,6 +122,24 @@ fn prop_gram_all_backends_match_reference() {
                 &want,
                 1e-4,
                 &format!("seed {seed} gram {}", be.name()),
+            );
+            // Workspace forms on dirty outputs: every stale cell must be
+            // overwritten on degenerate and non-tile-multiple shapes too.
+            let mut ct = Tensor::filled(&[d, d], f32::NAN);
+            be.gram_t_into_ws(&a, &mut ct, &mut ws);
+            assert_rel_close(
+                &ct,
+                &want_t,
+                1e-4,
+                &format!("seed {seed} gram_t_into_ws {}", be.name()),
+            );
+            let mut cg = Tensor::filled(&[n, n], f32::NAN);
+            be.gram_into_ws(&a, &mut cg, &mut ws);
+            assert_rel_close(
+                &cg,
+                &want,
+                1e-4,
+                &format!("seed {seed} gram_into_ws {}", be.name()),
             );
         }
     }
@@ -181,7 +215,7 @@ fn predictor_fit_agrees_across_backends() {
     for i in 0..36 {
         let (g, a, h) = sample(&mut rng);
         if i < 32 {
-            buf.push(g, a, h);
+            buf.push(&g, &a, &h);
         } else {
             probes.push((a, h));
         }
@@ -252,6 +286,74 @@ fn kernel_bench_fast_mode_emits_schema_valid_json() {
     std::fs::write(&path, doc.to_string()).unwrap();
     let file_report = schema::validate_file(&path).unwrap();
     assert_eq!(file_report.records, records.len());
+}
+
+/// Deep-copy a bench document with every record's `mean_ns` scaled — the
+/// synthetic-regression fixture generator for the gate tests.
+fn scaled_mean_ns(doc: &Json, factor: f64) -> Json {
+    let mut doc = doc.clone();
+    if let Json::Obj(m) = &mut doc {
+        if let Some(Json::Arr(records)) = m.get_mut("records") {
+            for rec in records {
+                if let Json::Obj(r) = rec {
+                    if let Some(Json::Num(v)) = r.get_mut("mean_ns") {
+                        *v *= factor;
+                    }
+                }
+            }
+        }
+    }
+    doc
+}
+
+/// Tier-1 wiring of the perf-regression gate: when both the committed
+/// baseline (`BENCH_kernels.baseline.json`) and the current trajectory
+/// (`BENCH_kernels.json`) exist at the repo root, the >10% ns/op gate must
+/// pass — and must demonstrably fail on a synthetic 20%-slower fixture.
+/// Skips (does not fail) when either file is absent, so fresh clones that
+/// have not run `cargo bench` are unaffected.
+#[test]
+fn perf_gate_validates_committed_kernel_trajectory() {
+    // Escape hatch for cross-host comparisons: absolute ns/op measured on
+    // a slower machine than the committed trajectory's host would trip
+    // the gate with no real regression. Set LGP_SKIP_PERF_GATE=1 there
+    // (or promote a new locally-measured baseline; EXPERIMENTS.md
+    // §Compare gate).
+    if std::env::var_os("LGP_SKIP_PERF_GATE").is_some() {
+        eprintln!("perf gate: skipped via LGP_SKIP_PERF_GATE");
+        return;
+    }
+    let root = bench_out_dir();
+    let base = root.join("BENCH_kernels.baseline.json");
+    let new = root.join("BENCH_kernels.json");
+    if !base.exists() || !new.exists() {
+        eprintln!(
+            "perf gate: skipping — need both {} and {} (run `cargo bench --bench hotpath`)",
+            base.display(),
+            new.display()
+        );
+        return;
+    }
+    let rep = compare::compare_files(&base, &new, compare::DEFAULT_THRESHOLD)
+        .expect("committed kernel trajectory must be comparable against its baseline");
+    assert!(
+        rep.passed(),
+        "perf gate failed vs committed baseline: regressed {:?}, missing {:?}",
+        rep.regressions().iter().map(|c| c.key.clone()).collect::<Vec<_>>(),
+        rep.missing
+    );
+
+    // The gate has teeth: a 20%-slower copy of the baseline trips it.
+    let text = std::fs::read_to_string(&base).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let slower = scaled_mean_ns(&doc, 1.2);
+    let rep = compare::compare_docs(&doc, &slower, compare::DEFAULT_THRESHOLD).unwrap();
+    assert!(!rep.passed(), "20%-slower fixture must trip the 10% gate");
+    assert_eq!(
+        rep.regressions().len(),
+        rep.cells.len(),
+        "every scaled cell should read as regressed"
+    );
 }
 
 #[test]
