@@ -155,9 +155,31 @@ fn main() -> anyhow::Result<()> {
 
     // --- backend × shape kernel comparison -> BENCH_kernels.json -------------
     let kcfg = kernels::KernelBenchConfig::from_env();
-    let records = kernels::run(&kcfg);
+    let mut records = kernels::run(&kcfg);
     println!("\n[KERNELS] backend x shape comparison ({} records)\n", records.len());
     kernels::table(&records).print();
+
+    // --- sharded update scatter/reduce (ADR-004) -> threads dimension --------
+    // One synthetic update = accum square-matmul micro-tasks through the
+    // real executor + fixed-topology reduction, swept over shard counts.
+    let scfg = kernels::ShardedBenchConfig::from_env();
+    let sharded = kernels::run_sharded(&scfg);
+    println!(
+        "\n[SHARDED] update throughput, accum={} n={} (micro backend)\n",
+        scfg.accum, scfg.n
+    );
+    kernels::table(&sharded).print();
+    if let (Some(t1), Some(tn)) = (sharded.first(), sharded.last()) {
+        if t1.threads == 1 && tn.threads > 1 && tn.mean_ns > 0.0 {
+            println!(
+                "\nspeedup at {} shards: {:.2}x updates/s over serial",
+                tn.threads,
+                t1.mean_ns / tn.mean_ns
+            );
+        }
+    }
+    records.extend(sharded);
+
     let doc = kernels::doc(&records);
     let path = write_bench_doc("BENCH_kernels.json", &doc)?;
     println!("\nwrote {}", path.display());

@@ -1,12 +1,15 @@
 //! Perf-regression gate: compare two `lgp.bench.v1` documents cell by
 //! cell and fail on slowdowns (EXPERIMENTS.md §Compare gate).
 //!
-//! A *cell* is one (kernel name, backend, shape) triple; the compared
-//! quantity is `mean_ns`. The gate fails when any cell present in both
-//! documents regresses by more than the threshold (default 10%), or when
-//! a baseline cell disappears from the new document (silent coverage loss
-//! reads as a pass otherwise). Cells that exist only in the new document
-//! are fine — shape grids may grow.
+//! A *cell* is one (kernel name, backend, shape, threads) tuple; the
+//! compared quantity is `mean_ns`. Records without a `threads` field (the
+//! pre-ADR-004 trajectory) key as `threads=1`, so old baselines stay
+//! comparable. The gate fails when any cell present in both documents
+//! regresses by more than the threshold (default 10%), or when a baseline
+//! cell disappears from the new document (silent coverage loss reads as a
+//! pass otherwise) — the failure text names every missing cell, not just
+//! a count. Cells that exist only in the new document are fine — shape
+//! grids may grow.
 //!
 //! Drivers: `bench_report --compare <baseline.json> <new.json>` at the
 //! command line, and the cargo-test smoke check in
@@ -26,7 +29,7 @@ pub const DEFAULT_THRESHOLD: f64 = 0.10;
 /// One compared cell.
 #[derive(Clone, Debug)]
 pub struct CellDelta {
-    /// "name backend m×k×n" — stable, human-readable cell id.
+    /// "name backend m×k×n tN" — stable, human-readable cell id.
     pub key: String,
     pub base_ns: f64,
     pub new_ns: f64,
@@ -65,6 +68,38 @@ impl CompareReport {
         self.regressions().is_empty() && self.missing.is_empty()
     }
 
+    /// Human-readable failure verdict naming every offending cell — the
+    /// `(kernel, backend, shape, threads)` tuples, not just counts, so a
+    /// gate failure in CI output is actionable without re-running locally.
+    /// `None` when the gate passed.
+    pub fn failure_message(&self) -> Option<String> {
+        if self.passed() {
+            return None;
+        }
+        let mut parts = Vec::new();
+        let regs = self.regressions();
+        if !regs.is_empty() {
+            let list: Vec<String> = regs
+                .iter()
+                .map(|c| format!("{} ({:.0} -> {:.0} ns, x{:.2})", c.key, c.base_ns, c.new_ns, c.ratio))
+                .collect();
+            parts.push(format!(
+                "{} cell(s) regressed past {:.0}%: {}",
+                list.len(),
+                self.threshold * 100.0,
+                list.join(", ")
+            ));
+        }
+        if !self.missing.is_empty() {
+            parts.push(format!(
+                "{} baseline cell(s) lost coverage (kernel backend shape threads): {}",
+                self.missing.len(),
+                self.missing.join(", ")
+            ));
+        }
+        Some(parts.join("; "))
+    }
+
     /// Fixed-width per-cell table for terminal output.
     pub fn table(&self) -> Table {
         let mut t = Table::new(&["cell", "base ns", "new ns", "ratio", "verdict"]);
@@ -101,7 +136,13 @@ fn cell_key(rec: &Json) -> Option<String> {
         .map(|d| d.as_f64().map(|v| format!("{}", v as u64)))
         .collect::<Option<Vec<_>>>()?
         .join("x");
-    Some(format!("{name} {backend} {shape}"))
+    // Absent threads keys as 1: pre-dimension baselines compare cleanly
+    // against refreshed documents that stamp `threads` everywhere.
+    let threads = match rec.get("threads") {
+        Some(t) => t.as_f64()? as u64,
+        None => 1,
+    };
+    Some(format!("{name} {backend} {shape} t{threads}"))
 }
 
 fn index_cells(doc: &Json, what: &str) -> Result<BTreeMap<String, f64>, String> {
@@ -230,7 +271,63 @@ mod tests {
         let new = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
         let rep = compare_docs(&base, &new, DEFAULT_THRESHOLD).unwrap();
         assert!(!rep.passed());
-        assert_eq!(rep.missing, vec!["gram_t micro 32x16".to_string()]);
+        assert_eq!(rep.missing, vec!["gram_t micro 32x16 t1".to_string()]);
+    }
+
+    #[test]
+    fn failure_message_lists_every_missing_cell() {
+        let base = doc(&[
+            ("matmul", "micro", &[8, 8, 8], 100.0),
+            ("gram_t", "micro", &[32, 16], 50.0),
+            ("dot", "naive", &[4096], 10.0),
+        ]);
+        let new = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
+        let rep = compare_docs(&base, &new, DEFAULT_THRESHOLD).unwrap();
+        let msg = rep.failure_message().expect("lost coverage must fail");
+        // Every lost (kernel, backend, shape, threads) cell is named.
+        assert!(msg.contains("gram_t micro 32x16 t1"), "{msg}");
+        assert!(msg.contains("dot naive 4096 t1"), "{msg}");
+        assert!(msg.contains("2 baseline cell(s) lost coverage"), "{msg}");
+        // A clean comparison has no failure message.
+        let rep = compare_docs(&base, &base, DEFAULT_THRESHOLD).unwrap();
+        assert!(rep.failure_message().is_none());
+    }
+
+    #[test]
+    fn failure_message_names_regressed_cells_with_ratio() {
+        let base = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
+        let slow = doc(&[("matmul", "micro", &[8, 8, 8], 150.0)]);
+        let rep = compare_docs(&base, &slow, DEFAULT_THRESHOLD).unwrap();
+        let msg = rep.failure_message().unwrap();
+        assert!(msg.contains("matmul micro 8x8x8 t1"), "{msg}");
+        assert!(msg.contains("x1.50"), "{msg}");
+    }
+
+    #[test]
+    fn threads_distinguishes_cells_and_defaults_to_one() {
+        // Same (name, backend, shape) at two thread counts are distinct
+        // cells; a record without `threads` keys identically to t1.
+        let base = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"custom","created_unix":1,"records":[
+                {"name":"sharded_update","backend":"micro","shape":[8,64,64],
+                 "iters":3,"mean_ns":100.0,"p50_ns":100.0,"p90_ns":100.0},
+                {"name":"sharded_update","backend":"micro","shape":[8,64,64],
+                 "threads":4,"iters":3,"mean_ns":30.0,"p50_ns":30.0,"p90_ns":30.0}]}"#,
+        )
+        .unwrap();
+        let new = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"custom","created_unix":2,"records":[
+                {"name":"sharded_update","backend":"micro","shape":[8,64,64],
+                 "threads":1,"iters":3,"mean_ns":100.0,"p50_ns":100.0,"p90_ns":100.0},
+                {"name":"sharded_update","backend":"micro","shape":[8,64,64],
+                 "threads":4,"iters":3,"mean_ns":30.0,"p50_ns":30.0,"p90_ns":30.0}]}"#,
+        )
+        .unwrap();
+        let rep = compare_docs(&base, &new, DEFAULT_THRESHOLD).unwrap();
+        assert!(rep.passed(), "{:?}", rep.failure_message());
+        assert_eq!(rep.cells.len(), 2);
+        assert!(rep.cells.iter().any(|c| c.key.ends_with("t1")));
+        assert!(rep.cells.iter().any(|c| c.key.ends_with("t4")));
     }
 
     #[test]

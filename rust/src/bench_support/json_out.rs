@@ -23,6 +23,10 @@ pub struct BenchRecord {
     pub backend: String,
     /// Problem shape, kernel-specific (matmul: `[m, k, n]`).
     pub shape: Vec<usize>,
+    /// Worker threads driving the measured region (ADR-004). Host kernels
+    /// are single-threaded (`1`); the sharded-update rows sweep it.
+    /// Documents written before the dimension existed read as `1`.
+    pub threads: usize,
     pub iters: usize,
     pub mean_ns: f64,
     pub p50_ns: f64,
@@ -45,6 +49,7 @@ impl BenchRecord {
             name: name.to_string(),
             backend: backend.to_string(),
             shape: shape.to_vec(),
+            threads: 1,
             iters: summary.iters,
             mean_ns: summary.mean * 1e9,
             p50_ns: summary.p50 * 1e9,
@@ -56,6 +61,13 @@ impl BenchRecord {
         }
     }
 
+    /// Builder: stamp the worker-thread dimension (sharded-update rows).
+    pub fn with_threads(mut self, threads: usize) -> BenchRecord {
+        assert!(threads >= 1, "threads dimension must be >= 1");
+        self.threads = threads;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("name", s(&self.name)),
@@ -64,6 +76,7 @@ impl BenchRecord {
                 "shape",
                 Json::Arr(self.shape.iter().map(|&d| num(d as f64)).collect()),
             ),
+            ("threads", num(self.threads as f64)),
             ("iters", num(self.iters as f64)),
             ("mean_ns", num(self.mean_ns)),
             ("p50_ns", num(self.p50_ns)),
@@ -140,9 +153,14 @@ mod tests {
     fn record_converts_units() {
         let r = BenchRecord::from_summary("matmul", "blocked", &[8, 8, 8], &summary(), Some(1024.0));
         assert_eq!(r.iters, 3);
+        assert_eq!(r.threads, 1, "threads dimension defaults to single-threaded");
         assert!((r.mean_ns - 2000.0).abs() < 1e-6);
         let g = r.gflops.unwrap();
         assert!((g - 1024.0 / 2e-6 / 1e9).abs() < 1e-9);
+        let r4 = r.with_threads(4);
+        assert_eq!(r4.threads, 4);
+        let j = r4.to_json();
+        assert_eq!(j.at(&["threads"]).as_f64(), Some(4.0));
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use super::json_out::{bench_doc, BenchRecord};
 use super::{bench, Table};
+use crate::coordinator::{exec, reduce};
 use crate::tensor::{Backend, Tensor, Workspace};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -134,6 +135,104 @@ pub fn run(cfg: &KernelBenchConfig) -> Vec<BenchRecord> {
     records
 }
 
+/// Sizing of the sharded-update throughput sweep (ADR-004).
+#[derive(Clone, Debug)]
+pub struct ShardedBenchConfig {
+    pub warmup: usize,
+    pub iters: usize,
+    /// Micro-batch slots per synthetic update (the paper's accum = 8).
+    pub accum: usize,
+    /// Square matmul side of the per-slot workload — the update is
+    /// square-matmul-dominated, like the device micro-batch it stands for.
+    pub n: usize,
+    pub shard_counts: Vec<usize>,
+}
+
+impl ShardedBenchConfig {
+    pub fn full() -> ShardedBenchConfig {
+        ShardedBenchConfig {
+            warmup: 2,
+            iters: 10,
+            accum: 8,
+            n: 192,
+            shard_counts: vec![1, 2, 4],
+        }
+    }
+
+    pub fn fast() -> ShardedBenchConfig {
+        ShardedBenchConfig {
+            warmup: 1,
+            iters: 3,
+            accum: 4,
+            n: 48,
+            shard_counts: vec![1, 2],
+        }
+    }
+
+    pub fn from_env() -> ShardedBenchConfig {
+        if std::env::var_os("LGP_BENCH_FAST").is_some() {
+            ShardedBenchConfig::fast()
+        } else {
+            ShardedBenchConfig::full()
+        }
+    }
+}
+
+/// Per-worker state of the synthetic sharded update: a pinned operand,
+/// an output slab and a private arena — the same ownership shape as the
+/// trainer's `ShardWorker`.
+struct ShardedBenchWorker {
+    a: Tensor,
+    c: Tensor,
+    ws: Workspace,
+}
+
+/// Sharded-update throughput sweep: one synthetic optimizer update =
+/// `accum` square-matmul micro-tasks scattered over the real executor
+/// (`coordinator::exec`) plus the fixed-topology reduction
+/// (`coordinator::reduce`) — timed per shard count and emitted with the
+/// `threads` dimension. Runs on the `micro` backend regardless of the
+/// calibration probe so the (kernel, backend, shape, threads) cell keys
+/// stay stable for the compare gate.
+pub fn run_sharded(cfg: &ShardedBenchConfig) -> Vec<BenchRecord> {
+    let be = Backend::micro();
+    let mut rng = Pcg64::seeded(0x5AAD);
+    let n = cfg.n;
+    let mut records = Vec::new();
+    for &shards in &cfg.shard_counts {
+        let mut workers: Vec<ShardedBenchWorker> = (0..shards.max(1))
+            .map(|_| {
+                let mut a = Tensor::zeros(&[n, n]);
+                rng.fill_normal(&mut a.data, 1.0);
+                ShardedBenchWorker { a, c: Tensor::zeros(&[n, n]), ws: Workspace::new() }
+            })
+            .collect();
+        let mut acc = vec![0.0f32; n * n];
+        let s = bench(cfg.warmup, cfg.iters, || {
+            let leaves = exec::scatter(&mut workers, cfg.accum, |w, _slot| {
+                be.matmul_into_ws(&w.a, &w.a, &mut w.c, &mut w.ws);
+                Ok(w.c.data.clone())
+            })
+            .expect("synthetic tasks cannot fail");
+            let refs: Vec<&[f32]> = leaves.iter().map(|l| l.as_slice()).collect();
+            reduce::tree_reduce_into(&mut acc, &refs);
+            std::hint::black_box(&acc);
+        });
+        let flops = cfg.accum as f64 * 2.0 * (n as f64).powi(3);
+        records.push(
+            BenchRecord::from_summary(
+                "sharded_update",
+                be.name(),
+                &[cfg.accum, n, n],
+                &s,
+                Some(flops),
+            )
+            .with_threads(shards),
+        );
+    }
+    records
+}
+
 /// Wrap the records in the `lgp.bench.v1` document for
 /// `BENCH_kernels.json`.
 pub fn doc(records: &[BenchRecord]) -> Json {
@@ -142,7 +241,7 @@ pub fn doc(records: &[BenchRecord]) -> Json {
 
 /// Fixed-width comparison table for terminal output.
 pub fn table(records: &[BenchRecord]) -> Table {
-    let mut t = Table::new(&["kernel", "shape", "backend", "mean", "p90", "GFLOP/s"]);
+    let mut t = Table::new(&["kernel", "shape", "backend", "thr", "mean", "p90", "GFLOP/s"]);
     for r in records {
         let shape = r
             .shape
@@ -154,6 +253,7 @@ pub fn table(records: &[BenchRecord]) -> Table {
             r.name.clone(),
             shape,
             r.backend.clone(),
+            r.threads.to_string(),
             super::fmt_time(r.mean_ns / 1e9),
             super::fmt_time(r.p90_ns / 1e9),
             r.gflops.map_or("-".into(), |g| format!("{g:.2}")),
@@ -178,6 +278,7 @@ mod tests {
             }
         }
         assert!(records.iter().all(|r| r.mean_ns >= 0.0 && r.mean_ns.is_finite()));
+        assert!(records.iter().all(|r| r.threads == 1), "kernel rows are single-threaded");
         // doc round-trips through the parser
         let d = doc(&records);
         let reparsed = Json::parse(&d.to_string()).unwrap();
@@ -186,5 +287,25 @@ mod tests {
             records.len()
         );
         table(&records).print();
+    }
+
+    #[test]
+    fn sharded_suite_sweeps_thread_counts() {
+        let cfg = ShardedBenchConfig::fast();
+        let records = run_sharded(&cfg);
+        assert_eq!(records.len(), cfg.shard_counts.len());
+        for (&shards, r) in cfg.shard_counts.iter().zip(&records) {
+            assert_eq!(r.name, "sharded_update");
+            assert_eq!(r.threads, shards);
+            assert_eq!(r.shape, vec![cfg.accum, cfg.n, cfg.n]);
+            assert!(r.mean_ns.is_finite() && r.mean_ns > 0.0);
+        }
+        // Mixed with the kernel rows, the combined document still passes
+        // schema validation (threads is a first-class dimension).
+        let mut all = run(&KernelBenchConfig::fast());
+        all.extend(records);
+        let d = doc(&all);
+        let rep = super::super::schema::validate(&d).unwrap();
+        assert_eq!(rep.records, all.len());
     }
 }

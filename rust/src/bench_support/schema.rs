@@ -86,6 +86,16 @@ pub fn validate(doc: &Json) -> Result<ValidationReport, String> {
         if iters < 1.0 || iters.fract() != 0.0 {
             return Err(format!("{what}: 'iters' must be a positive integer"));
         }
+        // Optional worker-thread dimension (ADR-004); absent reads as 1,
+        // so pre-dimension documents stay valid and comparable.
+        if let Some(t) = rec.get("threads") {
+            let v = t
+                .as_f64()
+                .ok_or_else(|| format!("{what}: 'threads' must be a number"))?;
+            if v < 1.0 || v.fract() != 0.0 {
+                return Err(format!("{what}: 'threads' must be a positive integer"));
+            }
+        }
         req_num(rec, "mean_ns", &what)?;
         req_num(rec, "p50_ns", &what)?;
         req_num(rec, "p90_ns", &what)?;
@@ -176,6 +186,24 @@ mod tests {
         )
         .unwrap();
         assert!(validate(&doc).unwrap_err().contains("shape[0]"));
+    }
+
+    #[test]
+    fn threads_dimension_optional_but_positive_integer() {
+        let ok = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"x","created_unix":1,
+                "records":[{"name":"sharded_update","backend":"micro","shape":[8,192,192],
+                            "threads":4,"iters":3,"mean_ns":1,"p50_ns":1,"p90_ns":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate(&ok).is_ok());
+        let zero = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"x","created_unix":1,
+                "records":[{"name":"m","backend":"naive","shape":[2],
+                            "threads":0,"iters":1,"mean_ns":1,"p50_ns":1,"p90_ns":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate(&zero).unwrap_err().contains("threads"));
     }
 
     #[test]

@@ -87,12 +87,17 @@ fn run_compare(rest: &[String]) -> i32 {
         imps,
         report.missing.len()
     );
-    if report.passed() {
-        println!("gate: PASS");
-        0
-    } else {
-        eprintln!("gate: FAIL (>{:.0}% ns/op regression or lost coverage)", threshold * 100.0);
-        1
+    match report.failure_message() {
+        None => {
+            println!("gate: PASS");
+            0
+        }
+        Some(msg) => {
+            // Name every offending (kernel, backend, shape, threads) cell
+            // so the failure is actionable straight from CI logs.
+            eprintln!("gate: FAIL — {msg}");
+            1
+        }
     }
 }
 

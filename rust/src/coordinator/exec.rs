@@ -1,0 +1,186 @@
+//! Sharded scatter executor (DESIGN.md ADR-004): run `slots` independent
+//! micro-tasks over a set of worker states on scoped threads, and hand the
+//! results back **in slot order** no matter which worker finished first.
+//!
+//! The executor deliberately knows nothing about gradients: a task is any
+//! `Fn(&mut W, slot) -> Result<T>`. The trainer drives it with micro-batch
+//! gradient tasks and refit chunk-collection tasks; the bench harness
+//! drives it with synthetic matmul tasks; the proptests drive it with
+//! arithmetic leaves. Determinism comes from the contract, not the caller:
+//!
+//! - slot assignment is a pure function of `(slot, worker_count)`
+//!   (round-robin, [`worker_of_slot`]), so the same worker state sees the
+//!   same slots every run;
+//! - results land in a slot-indexed array, so downstream reductions
+//!   (`coordinator::reduce`) see leaves in canonical order regardless of
+//!   thread scheduling;
+//! - with one worker (or one slot) no thread is spawned at all — the
+//!   serial path and the sharded path are the same code.
+//!
+//! Workers own their mutable state (`Workspace` arena, `FitBuffer`
+//! segment, data view, gather scratch), which is what makes the scatter
+//! data-race-free by construction: a worker's `&mut W` moves into exactly
+//! one scope thread.
+
+/// Worker index that owns `slot` among `workers` workers (round-robin).
+/// Pure and total: the proptests check the induced position ranges
+/// partition the stream.
+#[inline]
+pub fn worker_of_slot(slot: usize, workers: usize) -> usize {
+    debug_assert!(workers > 0);
+    slot % workers
+}
+
+/// How many threads a scatter over `slots` slots with `shards` configured
+/// shards actually uses (no point spawning idle workers).
+#[inline]
+pub fn effective_workers(shards: usize, slots: usize) -> usize {
+    shards.max(1).min(slots.max(1))
+}
+
+/// Scatter `slots` tasks across `workers`, gather results in slot order.
+///
+/// Each worker `w` processes its slots `{s : s % n == w}` in increasing
+/// order on its own scoped thread (`n = min(workers.len(), slots)`,
+/// capped so no thread starts with nothing to do). On failure the error
+/// of the lowest-indexed failing worker is returned (a deterministic
+/// choice — errors must not race either); worker panics propagate.
+pub fn scatter<W, T, F>(workers: &mut [W], slots: usize, task: F) -> anyhow::Result<Vec<T>>
+where
+    W: Send,
+    T: Send,
+    F: Fn(&mut W, usize) -> anyhow::Result<T> + Sync,
+{
+    assert!(!workers.is_empty(), "scatter needs at least one worker");
+    if slots == 0 {
+        return Ok(Vec::new());
+    }
+    // Single source of truth with the refit gather's segment index math,
+    // which reads chunk c from workers[c % n].fit_seg.
+    let n = effective_workers(workers.len(), slots);
+    if n == 1 {
+        // Serial fast path: same slot order, no thread overhead.
+        let w = &mut workers[0];
+        let mut out = Vec::with_capacity(slots);
+        for slot in 0..slots {
+            out.push(task(&mut *w, slot)?);
+        }
+        return Ok(out);
+    }
+
+    let task = &task;
+    let results: Vec<anyhow::Result<Vec<(usize, T)>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = workers[..n]
+            .iter_mut()
+            .enumerate()
+            .map(|(w, worker)| {
+                scope.spawn(move || -> anyhow::Result<Vec<(usize, T)>> {
+                    let mut mine = Vec::new();
+                    let mut slot = w;
+                    while slot < slots {
+                        mine.push((slot, task(&mut *worker, slot)?));
+                        slot += n;
+                    }
+                    Ok(mine)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(panic) => std::panic::resume_unwind(panic),
+            })
+            .collect()
+    });
+
+    // Gather into slot order; keep the lowest-indexed worker's error.
+    let mut out: Vec<Option<T>> = (0..slots).map(|_| None).collect();
+    let mut first_err: Option<anyhow::Error> = None;
+    for r in results {
+        match r {
+            Ok(pairs) => {
+                for (slot, v) in pairs {
+                    out[slot] = Some(v);
+                }
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(out
+        .into_iter()
+        .map(|o| o.expect("every slot filled by its round-robin owner"))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_assignment_round_robin() {
+        assert_eq!(worker_of_slot(0, 3), 0);
+        assert_eq!(worker_of_slot(4, 3), 1);
+        assert_eq!(worker_of_slot(5, 3), 2);
+        assert_eq!(effective_workers(4, 2), 2);
+        assert_eq!(effective_workers(0, 8), 1);
+        assert_eq!(effective_workers(2, 8), 2);
+    }
+
+    #[test]
+    fn serial_and_threaded_scatter_agree_in_slot_order() {
+        // Worker state is its index; the task value depends only on the
+        // slot, so any worker count must produce the identical vector.
+        let task = |_w: &mut usize, slot: usize| Ok(slot * slot + 1);
+        let mut one = vec![0usize];
+        let want = scatter(&mut one, 9, task).unwrap();
+        for shards in 2..=5 {
+            let mut workers: Vec<usize> = (0..shards).collect();
+            let got = scatter(&mut workers, 9, task).unwrap();
+            assert_eq!(got, want, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn workers_see_only_their_slots() {
+        let mut workers: Vec<Vec<usize>> = vec![Vec::new(), Vec::new(), Vec::new()];
+        scatter(&mut workers, 8, |w, slot| {
+            w.push(slot);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(workers[0], vec![0, 3, 6]);
+        assert_eq!(workers[1], vec![1, 4, 7]);
+        assert_eq!(workers[2], vec![2, 5]);
+    }
+
+    #[test]
+    fn zero_slots_and_excess_workers() {
+        let mut workers = vec![(), (), (), ()];
+        let out: Vec<usize> = scatter(&mut workers, 0, |_, s| Ok(s)).unwrap();
+        assert!(out.is_empty());
+        // more workers than slots: only `slots` threads do work
+        let out = scatter(&mut workers, 2, |_, s| Ok(s + 10)).unwrap();
+        assert_eq!(out, vec![10, 11]);
+    }
+
+    #[test]
+    fn task_errors_propagate() {
+        let mut workers = vec![(), ()];
+        let err = scatter(&mut workers, 4, |_, slot| {
+            if slot == 2 {
+                anyhow::bail!("boom at slot {slot}")
+            }
+            Ok(slot)
+        })
+        .unwrap_err();
+        assert!(format!("{err}").contains("boom"), "{err}");
+    }
+}

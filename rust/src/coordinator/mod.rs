@@ -14,18 +14,30 @@
 //! Micro-batches accumulate (paper: 8 per update) before one optimizer
 //! step; the predictor refits every `refit_every` updates from
 //! per-example gradients.
+//!
+//! Sharding (ADR-004): the micro-batches of one update are independent
+//! estimators (eq. 1 combines per micro-batch), so the update is a
+//! scatter/reduce: `--shards N` worker threads each own a [`ShardWorker`]
+//! (data view, `Workspace` arena, `FitBuffer` refit segment, gather
+//! scratch) and compute their round-robin share of the micro-batch slots
+//! against the shared `Runtime`; the coordinator reduces the slot-ordered
+//! gradients through the fixed-topology tree (`reduce`) and steps the
+//! optimizer serially. `shards=N` is bit-identical to `shards=1` — the
+//! determinism test (`rust/tests/shard_determinism.rs`) pins it.
 
 pub mod adaptive;
 pub mod combine;
+pub mod exec;
+pub mod reduce;
 
 use crate::config::{Algo, RunConfig};
-use crate::data::loader::DataPipeline;
+use crate::data::loader::{DataPipeline, ShardDataView};
 use crate::metrics::{accuracy, alignment_of, AlignmentMeter, Ema, LogRow};
 use crate::model::params::{FlatGrad, ParamStore};
 use crate::optim::{OptimConfig, Optimizer};
 use crate::predictor::fit::{fit_with_ws, FitBuffer};
 use crate::predictor::{residuals, Predictor};
-use crate::runtime::{DevicePredictor, Runtime, TrainOut};
+use crate::runtime::{DeviceParams, DevicePredictor, Runtime, TrainOut};
 use crate::tensor::{backend, Backend, Tensor, Workspace};
 use crate::util::{CsvWriter, Stopwatch};
 
@@ -36,6 +48,152 @@ pub enum CombinePath {
     Host,
     /// The `cv_combine` pallas artifact (exercises the full L1 path).
     Device,
+}
+
+/// Everything one worker thread owns (ADR-004). Nothing here is shared:
+/// the scatter hands each worker's `&mut ShardWorker` to exactly one
+/// scoped thread, which is what makes the update data-race-free without
+/// locks on the hot path.
+pub struct ShardWorker {
+    /// Position-addressed window onto the training stream (shared
+    /// `Arc<Dataset>`, private per-epoch permutation cache).
+    view: ShardDataView,
+    /// This worker's refit ring segment: its round-robin share of the
+    /// per-example gradient chunks lands here, then the coordinator
+    /// gathers segments in canonical chunk order.
+    fit_seg: FitBuffer,
+    /// Private scratch arena — per-worker reuse keeps the steady state
+    /// allocation-free with no cross-thread churn (the `alloc-counter`
+    /// test asserts this per thread).
+    ws: Workspace,
+    /// Gather scratch for the control batch (capacity retained).
+    x: Vec<f32>,
+    y: Vec<i32>,
+    /// Gather scratch for the prediction batch.
+    xp: Vec<f32>,
+    yp: Vec<i32>,
+}
+
+/// Per-update constants a micro-batch slot task needs — snapshotted by
+/// the coordinator before the scatter so worker threads share only
+/// immutable state.
+struct MicroCtx<'a> {
+    rt: &'a Runtime,
+    dev: &'a DeviceParams,
+    dev_pred: Option<&'a DevicePredictor>,
+    algo: Algo,
+    /// Full micro-batch size m, control/prediction split (mc, mp).
+    m: usize,
+    mc: usize,
+    mp: usize,
+    /// Effective control fraction mc/m (quantization-corrected).
+    f_eff: f32,
+    /// Whether the predictor participates this update (fitted and mp > 0)
+    /// — decided once per update, so every shard agrees.
+    use_pred: bool,
+    combine: CombinePath,
+    classes: usize,
+}
+
+impl MicroCtx<'_> {
+    /// Stream positions one micro-batch slot consumes. The prediction
+    /// batch is only drawn when the predictor runs — same consumption
+    /// rule on every shard count, so slot offsets are deterministic.
+    fn consumed_per_slot(&self) -> usize {
+        match self.algo {
+            Algo::Baseline => self.m,
+            Algo::Gpr => self.mc + if self.use_pred { self.mp } else { 0 },
+        }
+    }
+}
+
+/// One micro-batch slot's contribution: the gradient leaf plus the scalar
+/// traces, reduced by the coordinator in slot order.
+struct MicroOut {
+    grad: FlatGrad,
+    loss: f32,
+    acc: f64,
+    cost: f64,
+    examples: usize,
+}
+
+/// One micro-batch slot (either algorithm) at stream position `pos`,
+/// running entirely on the calling worker thread.
+fn run_micro(ctx: &MicroCtx, w: &mut ShardWorker, pos: usize) -> anyhow::Result<MicroOut> {
+    let cost = crate::theory::CostModel::default();
+    match ctx.algo {
+        // Algorithm 2 micro-batch: full Forward+Backward on all m examples.
+        Algo::Baseline => {
+            w.view.batch_at(pos, ctx.m, &mut w.x, &mut w.y);
+            let out = ctx.rt.train_grads(ctx.dev, &w.x, &w.y, ctx.m)?;
+            let acc = accuracy(&out.probs, &w.y, ctx.classes);
+            let TrainOut { loss, g_trunk, g_head_w, g_head_b, .. } = out;
+            Ok(MicroOut {
+                grad: FlatGrad { trunk: g_trunk, head_w: g_head_w, head_b: g_head_b },
+                loss,
+                acc,
+                cost: cost.cost_vanilla(ctx.m as f64),
+                examples: ctx.m,
+            })
+        }
+        // Algorithm 1 micro-batch: control + prediction and the
+        // control-variate combine.
+        Algo::Gpr => {
+            // -- control micro-batch: true gradient + activations --------
+            w.view.batch_at(pos, ctx.mc, &mut w.x, &mut w.y);
+            let ctrl = ctx.rt.train_grads(ctx.dev, &w.x, &w.y, ctx.mc)?;
+            let acc = accuracy(&ctrl.probs, &w.y, ctx.classes);
+            let mut g = FlatGrad {
+                trunk: ctrl.g_trunk,
+                head_w: ctrl.g_head_w,
+                head_b: ctrl.g_head_b,
+            };
+            let c_units =
+                cost.cost_vanilla(ctx.mc as f64) + cost.cheap_forward * ctx.mp as f64;
+            let examples = ctx.mc + ctx.mp;
+
+            // Until the first fit the predictor is identically zero;
+            // eq. (1) then reduces to g_ct (still unbiased). Skip the
+            // device calls — and the prediction draw (consumed_per_slot
+            // matches).
+            if !ctx.use_pred {
+                return Ok(MicroOut { grad: g, loss: ctrl.loss, acc, cost: c_units, examples });
+            }
+            let dev_pred = ctx
+                .dev_pred
+                .expect("coordinator uploads the predictor before a use_pred scatter");
+
+            // -- predictor on the control micro-batch (g_cp) --------------
+            let pc =
+                ctx.rt.predict_grad(&ctrl.a, &ctrl.probs, &w.y, ctx.dev, dev_pred, ctx.mc)?;
+
+            // -- prediction micro-batch: CheapForward + predictor (g_p) ---
+            w.view.batch_at(pos + ctx.mc, ctx.mp, &mut w.xp, &mut w.yp);
+            let (a_p, probs_p) = ctx.rt.cheap_fwd(ctx.dev, &w.xp, ctx.mp)?;
+            let pp = ctx.rt.predict_grad(&a_p, &probs_p, &w.yp, ctx.dev, dev_pred, ctx.mp)?;
+
+            let g_cp = FlatGrad { trunk: pc.g_trunk, head_w: pc.g_head_w, head_b: pc.g_head_b };
+            let g_p = FlatGrad { trunk: pp.g_trunk, head_w: pp.g_head_w, head_b: pp.g_head_b };
+
+            match ctx.combine {
+                CombinePath::Host => {
+                    // eq. (1) fused in place over the control-gradient
+                    // buffers: one pass, no fresh allocation (ADR-003).
+                    combine::cv_combine_into(&mut g, &g_cp, &g_p, ctx.f_eff);
+                }
+                CombinePath::Device => {
+                    let v = ctx.rt.cv_combine(
+                        &g.concat(),
+                        &g_cp.concat(),
+                        &g_p.concat(),
+                        ctx.f_eff,
+                    )?;
+                    g = FlatGrad::from_concat(&v, g.trunk.len(), g.head_w.len());
+                }
+            }
+            Ok(MicroOut { grad: g, loss: ctrl.loss, acc, cost: c_units, examples })
+        }
+    }
 }
 
 pub struct Trainer {
@@ -53,6 +211,9 @@ pub struct Trainer {
     /// Long-lived scratch arena threaded through the predictor refit so
     /// repeat fits reuse the same slabs (ADR-003).
     ws: Workspace,
+    /// One state bundle per configured shard (ADR-004); `workers[0]` is
+    /// the serial path's state when `shards = 1`.
+    workers: Vec<ShardWorker>,
     dev_pred: Option<DevicePredictor>,
     /// Theorem-4 online controller (enabled by cfg.adaptive_f).
     pub adaptive: Option<adaptive::AdaptiveF>,
@@ -95,6 +256,25 @@ impl Trainer {
             cfg.aug_multiplier,
             cfg.seed,
         );
+        let shards = cfg.shards.max(1);
+        if shards > 1 {
+            crate::log_info!("sharded executor: {shards} worker threads (ADR-004)");
+        }
+        let chunks = rt.manifest.n_fit.div_ceil(rt.manifest.n_chunk);
+        // Each worker's segment holds exactly its worst-case round-robin
+        // share of refit chunks — never more, so the ring cannot slide.
+        let seg_cap = chunks.div_ceil(shards) * rt.manifest.n_chunk;
+        let workers = (0..shards)
+            .map(|_| ShardWorker {
+                view: data.make_view(),
+                fit_seg: FitBuffer::new(seg_cap.max(1)),
+                ws: Workspace::new(),
+                x: Vec::new(),
+                y: Vec::new(),
+                xp: Vec::new(),
+                yp: Vec::new(),
+            })
+            .collect();
         let adaptive = cfg.adaptive_f.then(|| {
             adaptive::AdaptiveF::new(rt.manifest.fs.clone(), cfg.f)
         });
@@ -102,6 +282,7 @@ impl Trainer {
             tracker: AlignmentMeter::default(),
             backend: be,
             ws: Workspace::new(),
+            workers,
             fit_buf,
             adaptive,
             cfg,
@@ -153,124 +334,129 @@ impl Trainer {
         self.step
     }
 
-    // ---- single micro-batch gradients -----------------------------------
-
-    /// Algorithm 2 micro-batch: full Forward+Backward on all m examples.
-    fn micro_baseline(
-        &mut self,
-        dev: &crate::runtime::DeviceParams,
-    ) -> anyhow::Result<(FlatGrad, f32, f64)> {
-        let m = self.rt.manifest.micro_batch;
-        let (mut x, mut y) = (Vec::new(), Vec::new());
-        self.data.next_batch(m, &mut x, &mut y);
-        let out = self.rt.train_grads(dev, &x, &y, m)?;
-        let acc = accuracy(&out.probs, &y, self.rt.manifest.classes);
-        self.examples_seen += m;
-        self.cost_units += crate::theory::CostModel::default().cost_vanilla(m as f64);
-        let TrainOut { loss, g_trunk, g_head_w, g_head_b, .. } = out;
-        Ok((FlatGrad { trunk: g_trunk, head_w: g_head_w, head_b: g_head_b }, loss, acc))
+    /// Configured shard count (worker thread pool width).
+    pub fn shards(&self) -> usize {
+        self.workers.len()
     }
 
-    /// Algorithm 1 micro-batch: control + prediction micro-batches and the
-    /// control-variate combine.
-    fn micro_gpr(
+    // ---- one optimizer update (scatter/reduce over the shards) -----------
+
+    /// Accumulate `cfg.accum` micro-batch gradients across the shard
+    /// workers and return the reduced leaf sums in slot order — gradient
+    /// plus the (loss, acc, cost, examples) traces.
+    fn execute_update(
         &mut self,
-        dev: &crate::runtime::DeviceParams,
-    ) -> anyhow::Result<(FlatGrad, f32, f64)> {
-        let man = &self.rt.manifest;
-        let classes = man.classes;
-        let (mc, mp) = man.split_sizes(self.cfg.f);
-        let f_eff = mc as f32 / man.micro_batch as f32;
-
-        // -- control micro-batch: true gradient + activations ------------
-        let (mut xc, mut yc) = (Vec::new(), Vec::new());
-        self.data.next_batch(mc, &mut xc, &mut yc);
-        let ctrl = self.rt.train_grads(dev, &xc, &yc, mc)?;
-        let acc = accuracy(&ctrl.probs, &yc, classes);
-        let g_ct = FlatGrad {
-            trunk: ctrl.g_trunk,
-            head_w: ctrl.g_head_w,
-            head_b: ctrl.g_head_b,
-        };
-
-        let cost = crate::theory::CostModel::default();
-        self.cost_units += cost.cost_vanilla(mc as f64); // fwd+bwd on control
-        self.examples_seen += mc + mp;
-
-        // Until the first fit the predictor is identically zero; eq. (1)
-        // then reduces to g_ct (still unbiased). Skip the device calls.
-        if self.pred.fits == 0 || mp == 0 {
-            self.cost_units += cost.cheap_forward * mp as f64;
-            return Ok((g_ct, ctrl.loss, acc));
+        dev: &DeviceParams,
+    ) -> anyhow::Result<(FlatGrad, f64, f64)> {
+        let (mc, mp) = self.rt.manifest.split_sizes(self.cfg.f);
+        let m = self.rt.manifest.micro_batch;
+        let classes = self.rt.manifest.classes;
+        let use_pred = self.cfg.algo == Algo::Gpr && self.pred.fits > 0 && mp > 0;
+        if use_pred {
+            // Upload once per update (version-cached) and share read-only
+            // across the shards.
+            let up = self.rt.upload_predictor(&self.pred, self.dev_pred.take())?;
+            self.dev_pred = Some(up);
         }
-
-        let dev_pred = self
-            .rt
-            .upload_predictor(&self.pred, self.dev_pred.take())?;
-
-        // -- predictor on the control micro-batch (g_cp) ------------------
-        let pc = self.rt.predict_grad(&ctrl.a, &ctrl.probs, &yc, dev, &dev_pred, mc)?;
-
-        // -- prediction micro-batch: CheapForward + predictor (g_p) -------
-        let (mut xp, mut yp) = (Vec::new(), Vec::new());
-        self.data.next_batch(mp, &mut xp, &mut yp);
-        let (a_p, probs_p) = self.rt.cheap_fwd(dev, &xp, mp)?;
-        let pp = self.rt.predict_grad(&a_p, &probs_p, &yp, dev, &dev_pred, mp)?;
-        self.cost_units += cost.cheap_forward * mp as f64;
-
-        self.dev_pred = Some(dev_pred);
-
-        let g_cp = FlatGrad { trunk: pc.g_trunk, head_w: pc.g_head_w, head_b: pc.g_head_b };
-        let g_p = FlatGrad { trunk: pp.g_trunk, head_w: pp.g_head_w, head_b: pp.g_head_b };
-
-        let g = match self.combine_path {
-            CombinePath::Host => {
-                // eq. (1) fused in place over the control-gradient buffers:
-                // one pass, no fresh allocation (ADR-003).
-                let mut g = g_ct;
-                combine::cv_combine_into(&mut g, &g_cp, &g_p, f_eff);
-                g
-            }
-            CombinePath::Device => {
-                let v = self.rt.cv_combine(
-                    &g_ct.concat(),
-                    &g_cp.concat(),
-                    &g_p.concat(),
-                    f_eff,
-                )?;
-                FlatGrad::from_concat(&v, g_ct.trunk.len(), g_ct.head_w.len())
-            }
+        let ctx = MicroCtx {
+            rt: &self.rt,
+            dev,
+            dev_pred: if use_pred { self.dev_pred.as_ref() } else { None },
+            algo: self.cfg.algo,
+            m,
+            mc,
+            mp,
+            f_eff: mc as f32 / m as f32,
+            use_pred,
+            combine: self.combine_path,
+            classes,
         };
-        Ok((g, ctrl.loss, acc))
+        let per_slot = ctx.consumed_per_slot();
+        let base = self.data.cursor();
+        let slots = self.cfg.accum;
+        // Scatter: each worker thread computes its round-robin slots
+        // against disjoint stream ranges; gather is slot-ordered.
+        let outs = exec::scatter(&mut self.workers, slots, |w, slot| {
+            run_micro(&ctx, w, base + slot * per_slot)
+        })?;
+        self.data.advance(slots * per_slot);
+
+        // Reduce: fixed topology over slot order (ADR-004) for the
+        // gradient and every scalar trace.
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut cost_sum = 0.0f64;
+        let mut examples = 0usize;
+        let mut grads = Vec::with_capacity(outs.len());
+        for o in outs {
+            loss_sum += o.loss as f64;
+            acc_sum += o.acc;
+            cost_sum += o.cost;
+            examples += o.examples;
+            grads.push(o.grad);
+        }
+        let mut grad = reduce::tree_reduce_grads(grads)
+            .expect("accum >= 1 is enforced by RunConfig::validate");
+        grad.scale(1.0 / slots as f32);
+        self.cost_units += cost_sum;
+        self.examples_seen += examples;
+        Ok((grad, loss_sum, acc_sum))
     }
 
     // ---- predictor refit -------------------------------------------------
 
-    /// Collect per-example gradients and refit (U, B). Also feeds the
+    /// Collect per-example gradients (chunks scattered across the shards,
+    /// gathered in canonical chunk order) and refit (U, B). Also feeds the
     /// Sec. 5.3 alignment tracker with (g_j, ĝ_j) pairs.
     pub fn refit_predictor(
         &mut self,
         dev: &crate::runtime::DeviceParams,
     ) -> anyhow::Result<Option<crate::predictor::fit::FitReport>> {
-        let man = &self.rt.manifest;
-        let n_chunk = man.n_chunk;
-        let chunks = man.n_fit.div_ceil(n_chunk);
-        let d = man.width;
-        let smoothing = man.label_smoothing as f32;
-        self.fit_buf.clear();
-        for _ in 0..chunks {
-            let (mut x, mut y) = (Vec::new(), Vec::new());
-            self.data.next_batch(n_chunk, &mut x, &mut y);
-            let (g_rows, a, probs) = self.rt.per_example_grads(dev, &x, &y)?;
-            // fitting also costs compute: fwd+bwd per example
-            self.cost_units +=
-                crate::theory::CostModel::default().cost_vanilla(n_chunk as f64);
-            let resid = residuals(&probs, &y, man.classes, smoothing);
-            let h = Predictor::backprop_features(&resid, &self.params.head_w, d);
+        let (n_chunk, chunks, d, classes, smoothing) = {
+            let man = &self.rt.manifest;
+            (
+                man.n_chunk,
+                man.n_fit.div_ceil(man.n_chunk),
+                man.width,
+                man.classes,
+                man.label_smoothing as f32,
+            )
+        };
+        for w in &mut self.workers {
+            w.fit_seg.clear();
+        }
+        let base = self.data.cursor();
+        let rt = &self.rt;
+        let head_w = &self.params.head_w;
+        exec::scatter(&mut self.workers, chunks, |w, slot| {
+            w.view.batch_at(base + slot * n_chunk, n_chunk, &mut w.x, &mut w.y);
+            let (g_rows, a, probs) = rt.per_example_grads(dev, &w.x, &w.y)?;
+            let resid = residuals(&probs, &w.y, classes, smoothing);
+            let mut h = w.ws.take_tensor(&[n_chunk, d]);
+            Predictor::backprop_features_into(&resid, head_w, d, &mut h);
             for (j, g) in g_rows.iter().enumerate() {
-                self.fit_buf.push(g, &a[j * d..(j + 1) * d], h.row(j));
+                w.fit_seg.push(g, &a[j * d..(j + 1) * d], h.row(j));
+            }
+            w.ws.give_tensor(h);
+            Ok(())
+        })?;
+        self.data.advance(chunks * n_chunk);
+        // fitting also costs compute: fwd+bwd per example
+        self.cost_units +=
+            chunks as f64 * crate::theory::CostModel::default().cost_vanilla(n_chunk as f64);
+
+        // Gather the worker segments into the fit ring in canonical chunk
+        // order — bit-identical to a serial collection by construction.
+        let nw = exec::effective_workers(self.workers.len(), chunks);
+        self.fit_buf.clear();
+        for c in 0..chunks {
+            let seg = &self.workers[c % nw].fit_seg;
+            let first = (c / nw) * n_chunk;
+            for j in first..first + n_chunk {
+                self.fit_buf.push(seg.grad(j), &seg.a1(j)[..d], seg.h(j));
             }
         }
+
         let report = fit_with_ws(
             self.backend,
             &mut self.pred,
@@ -362,24 +548,8 @@ impl Trainer {
                 }
             }
 
-            // Accumulate micro-batch gradients.
-            let mut acc_grad: Option<FlatGrad> = None;
-            let mut loss_sum = 0.0f64;
-            let mut acc_sum = 0.0f64;
-            for _ in 0..self.cfg.accum {
-                let (g, loss, acc) = match self.cfg.algo {
-                    Algo::Baseline => self.micro_baseline(&dev)?,
-                    Algo::Gpr => self.micro_gpr(&dev)?,
-                };
-                loss_sum += loss as f64;
-                acc_sum += acc;
-                match &mut acc_grad {
-                    None => acc_grad = Some(g),
-                    Some(t) => t.axpy(1.0, &g),
-                }
-            }
-            let mut grad = acc_grad.unwrap();
-            grad.scale(1.0 / self.cfg.accum as f32);
+            // Scatter micro-batches over the shards, reduce, step.
+            let (grad, loss_sum, acc_sum) = self.execute_update(&dev)?;
             let manifest = self.rt.manifest.clone();
             self.opt.step(&mut self.params, &grad, &manifest);
             self.step += 1;

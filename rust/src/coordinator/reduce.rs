@@ -1,0 +1,104 @@
+//! Deterministic fixed-topology gradient reduction (DESIGN.md ADR-004).
+//!
+//! Floating-point addition is not associative, so a reduction whose shape
+//! depends on how many workers happened to finish first would make
+//! `--shards N` runs drift from serial runs in the low bits — and every
+//! downstream optimizer step amplifies the drift. The executor therefore
+//! separates *where a leaf is computed* from *how leaves are combined*:
+//! workers fill a slot-indexed leaf array (micro-batch slot = leaf index),
+//! and the combine walks a reduction tree whose topology is a function of
+//! the leaf count **only**. The topology chosen is the left-deep tree over
+//! slot order — the same shape as a serial accumulation fold — so
+//! `shards=N` is bit-identical to `shards=1` by construction. (A balanced
+//! binary tree would also be shard-count invariant, but would change the
+//! serial baseline's bits for zero accuracy gain at `accum`-sized leaf
+//! counts.) Note the equivalence is within the ADR-004 trainer: the
+//! positional data pipeline derives its epoch permutations differently
+//! from the pre-ADR-004 stateful shuffle, so same-seed runs across that
+//! boundary draw examples in a different order.
+//!
+//! The proptests (`rust/tests/proptests.rs`) pin the contract: the
+//! reduction equals the serial left fold exactly (bitwise) for arbitrary
+//! shard counts and gradient lengths. The scalar traces (loss, accuracy,
+//! cost units) are folded by the coordinator in the same fixed slot
+//! order.
+
+use crate::model::params::FlatGrad;
+
+/// Reduce slot-ordered gradient leaves into leaf 0 (left-deep topology).
+/// Returns `None` for an empty leaf list. Consumes the vector so leaf 0's
+/// slabs are reused as the accumulator — no allocation.
+pub fn tree_reduce_grads(leaves: Vec<FlatGrad>) -> Option<FlatGrad> {
+    let mut it = leaves.into_iter();
+    let mut acc = it.next()?;
+    for leaf in it {
+        acc.axpy(1.0, &leaf);
+    }
+    Some(acc)
+}
+
+/// Reduce slot-ordered raw slices into `out` (same topology as
+/// [`tree_reduce_grads`], exposed for the proptests and the bench
+/// harness, which carry plain buffers instead of `FlatGrad`s).
+pub fn tree_reduce_into(out: &mut [f32], leaves: &[&[f32]]) {
+    out.fill(0.0);
+    for leaf in leaves {
+        debug_assert_eq!(leaf.len(), out.len(), "leaf length mismatch");
+        for (o, v) in out.iter_mut().zip(*leaf) {
+            *o += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn leaf(rng: &mut Pcg64, n: usize) -> FlatGrad {
+        let mut g = FlatGrad {
+            trunk: vec![0.0; n],
+            head_w: vec![0.0; 3],
+            head_b: vec![0.0; 2],
+        };
+        rng.fill_normal(&mut g.trunk, 1.0);
+        rng.fill_normal(&mut g.head_w, 1.0);
+        rng.fill_normal(&mut g.head_b, 1.0);
+        g
+    }
+
+    #[test]
+    fn reduce_matches_manual_left_fold_bitwise() {
+        let mut rng = Pcg64::seeded(11);
+        let leaves: Vec<FlatGrad> = (0..7).map(|_| leaf(&mut rng, 33)).collect();
+        let mut want = leaves[0].clone();
+        for l in &leaves[1..] {
+            want.axpy(1.0, l);
+        }
+        let got = tree_reduce_grads(leaves).unwrap();
+        assert_eq!(got.trunk, want.trunk);
+        assert_eq!(got.head_w, want.head_w);
+        assert_eq!(got.head_b, want.head_b);
+    }
+
+    #[test]
+    fn empty_and_singleton_leaves() {
+        assert!(tree_reduce_grads(Vec::new()).is_none());
+        let mut rng = Pcg64::seeded(12);
+        let l = leaf(&mut rng, 5);
+        let got = tree_reduce_grads(vec![l.clone()]).unwrap();
+        assert_eq!(got.trunk, l.trunk);
+    }
+
+    #[test]
+    fn slice_reduce_overwrites_dirty_output() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [0.5f32, -2.0, 1.0];
+        let mut out = [f32::NAN; 3];
+        tree_reduce_into(&mut out, &[&a, &b]);
+        assert_eq!(out, [1.5, 0.0, 4.0]);
+        tree_reduce_into(&mut out, &[]);
+        assert_eq!(out, [0.0, 0.0, 0.0]);
+    }
+
+}

@@ -1,19 +1,116 @@
-//! Pre-augmented in-memory dataset + infinite shuffled iterator — exactly
+//! Pre-augmented in-memory dataset + infinite shuffled stream — exactly
 //! the paper's serving scheme (Sec. 7.1): "pre-apply the full augmentation
 //! pipeline to generate an effective dataset of size 100,000 ... served via
 //! an infinite iterator with per-epoch index shuffling."
+//!
+//! Sharding (DESIGN.md ADR-004): the stream is *positional*. Every example
+//! the trainer will ever consume has a global stream position `p`; epoch
+//! `p / n` is served through a permutation derived **statelessly** from
+//! `(seed, epoch)`, so any shard can materialize any slice of the stream
+//! without consuming shared mutable state. `DataPipeline` keeps a cursor
+//! for the serial convenience API (`next_batch`); workers get independent
+//! [`ShardDataView`]s over the same `Arc<Dataset>` and read disjoint
+//! position ranges. Identical positions yield identical examples no matter
+//! how many shards read the stream — the bit-determinism contract's data
+//! half.
 
 use super::{augment, synthetic, Dataset};
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// RNG stream namespace for the per-epoch permutations (kept away from the
+/// generation streams 23/31 used below).
+const PERM_STREAM_BASE: u64 = 0x51ed_0000;
+
+/// Stateless per-epoch permutation cache: maps a global stream position to
+/// a dataset index. Cheap to clone conceptually but owns its scratch, so
+/// every worker can hold one without sharing mutable state.
+#[derive(Clone, Debug)]
+pub struct EpochPerm {
+    seed: u64,
+    n: usize,
+    /// Epoch whose permutation is currently materialized (`usize::MAX`
+    /// means none yet).
+    cached: usize,
+    perm: Vec<usize>,
+}
+
+impl EpochPerm {
+    pub fn new(seed: u64, n: usize) -> EpochPerm {
+        assert!(n > 0, "empty dataset has no stream");
+        EpochPerm { seed, n, cached: usize::MAX, perm: Vec::new() }
+    }
+
+    /// The permutation of epoch `e`, derived from `(seed, e)` alone — the
+    /// property the shard proptests pin: every view of the stream
+    /// reshuffles identically per epoch regardless of shard count.
+    fn ensure_epoch(&mut self, e: usize) {
+        if self.cached == e {
+            return;
+        }
+        self.perm.clear();
+        self.perm.extend(0..self.n);
+        let mut rng = Pcg64::new(self.seed, PERM_STREAM_BASE + e as u64);
+        rng.shuffle(&mut self.perm);
+        self.cached = e;
+    }
+
+    /// Dataset index served at global stream position `p`.
+    pub fn index_at(&mut self, p: usize) -> usize {
+        self.ensure_epoch(p / self.n);
+        self.perm[p % self.n]
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+/// A worker-owned window onto the training stream: shared read-only data
+/// (`Arc<Dataset>`) plus a private permutation cache. Reading position
+/// ranges through a view never touches the pipeline's cursor.
+#[derive(Clone)]
+pub struct ShardDataView {
+    ds: Arc<Dataset>,
+    perm: EpochPerm,
+}
+
+impl ShardDataView {
+    /// Fill flat buffers with the `m` examples at stream positions
+    /// `[pos, pos + m)` (may span an epoch boundary). Buffers are cleared
+    /// and refilled. This inlines [`Dataset::gather`]'s layout rather
+    /// than delegating so the hot path never materializes an index
+    /// vector — with retained buffer capacity it is allocation-free once
+    /// warm (the per-worker property the `alloc-counter` suite pins).
+    pub fn batch_at(&mut self, pos: usize, m: usize, x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        for p in pos..pos + m {
+            let i = self.perm.index_at(p);
+            x.extend_from_slice(&self.ds.images[i].data);
+            y.push(self.ds.labels[i] as i32);
+        }
+    }
+
+    /// Dataset index at a stream position (proptest hook).
+    pub fn index_at(&mut self, pos: usize) -> usize {
+        self.perm.index_at(pos)
+    }
+}
 
 /// Training + validation stores for one run.
 pub struct DataPipeline {
-    pub train: Dataset,
-    pub val: Dataset,
-    order: Vec<usize>,
+    pub train: Arc<Dataset>,
+    pub val: Arc<Dataset>,
+    seed: u64,
+    /// Next unconsumed global stream position (the serial cursor; sharded
+    /// updates advance it in one jump via [`advance`](Self::advance)).
     cursor: usize,
-    epoch: usize,
-    rng: Pcg64,
+    serial: EpochPerm,
 }
 
 impl DataPipeline {
@@ -40,35 +137,52 @@ impl DataPipeline {
         }
         let n = train.len();
         DataPipeline {
-            train,
-            val,
-            order: (0..n).collect(),
+            train: Arc::new(train),
+            val: Arc::new(val),
+            seed,
             cursor: 0,
-            epoch: 0,
-            rng: Pcg64::new(seed, 31),
+            serial: EpochPerm::new(seed, n),
         }
     }
 
+    /// Epochs started so far (an epoch starts with its reshuffle, exactly
+    /// like the pre-ADR-004 stateful iterator).
     pub fn epoch(&self) -> usize {
-        self.epoch
+        self.cursor.div_ceil(self.serial.len())
     }
 
-    /// Next `m` indices, reshuffling at epoch boundaries (infinite stream).
-    pub fn next_indices(&mut self, m: usize) -> Vec<usize> {
-        let mut out = Vec::with_capacity(m);
-        while out.len() < m {
-            if self.cursor == 0 {
-                self.rng.shuffle(&mut self.order);
-                self.epoch += 1;
-            }
-            let take = (m - out.len()).min(self.order.len() - self.cursor);
-            out.extend_from_slice(&self.order[self.cursor..self.cursor + take]);
-            self.cursor = (self.cursor + take) % self.order.len();
+    /// Next unconsumed global stream position.
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Consume `count` stream positions without materializing them — the
+    /// coordinator calls this after a sharded scatter whose workers read
+    /// the positions directly through their views.
+    pub fn advance(&mut self, count: usize) {
+        self.cursor += count;
+    }
+
+    /// An independent worker view over the training stream (shared data,
+    /// private permutation cache).
+    pub fn make_view(&self) -> ShardDataView {
+        ShardDataView {
+            ds: self.train.clone(),
+            perm: EpochPerm::new(self.seed, self.train.len()),
         }
+    }
+
+    /// Next `m` indices of the infinite stream (reshuffles at epoch
+    /// boundaries), advancing the cursor.
+    pub fn next_indices(&mut self, m: usize) -> Vec<usize> {
+        let out = (self.cursor..self.cursor + m)
+            .map(|p| self.serial.index_at(p))
+            .collect();
+        self.cursor += m;
         out
     }
 
-    /// Fill flat buffers for the next training micro-batch.
+    /// Fill flat buffers for the next training micro-batch (serial path).
     pub fn next_batch(&mut self, m: usize, x: &mut Vec<f32>, y: &mut Vec<i32>) {
         let idx = self.next_indices(m);
         self.train.gather(&idx, x, y);
@@ -144,5 +258,37 @@ mod tests {
         assert_eq!(x.len(), 4 * 3 * 8 * 8);
         assert_eq!(y.len(), 4);
         assert!(y.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn views_agree_with_serial_stream_across_epochs() {
+        let mut p = DataPipeline::build(13, 5, 8, 4, 1, 9);
+        let serial: Vec<usize> = p.next_indices(40); // spans 4 epochs of 13
+        let mut v1 = p.make_view();
+        let mut v2 = p.make_view();
+        // Read the same positions interleaved and out of order: views are
+        // position-addressed, so access order cannot matter.
+        for pos in (0..40).rev() {
+            assert_eq!(v1.index_at(pos), serial[pos], "pos {pos}");
+        }
+        for pos in 0..40 {
+            assert_eq!(v2.index_at(pos), serial[pos], "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn view_batch_matches_serial_batch() {
+        let mut p = DataPipeline::build(10, 5, 8, 4, 1, 2);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        p.next_batch(6, &mut xs, &mut ys); // positions 0..6
+        let mut v = p.make_view();
+        let (mut xv, mut yv) = (Vec::new(), Vec::new());
+        v.batch_at(0, 6, &mut xv, &mut yv);
+        assert_eq!(xs, xv);
+        assert_eq!(ys, yv);
+        // advance() consumes positions without materializing them
+        let c = p.cursor();
+        p.advance(4);
+        assert_eq!(p.cursor(), c + 4);
     }
 }

@@ -52,6 +52,8 @@ SUBCOMMANDS
            [--steps N] [--budget SECS] [--accum K] [--optimizer muon|adamw|sgd|momentum]
            [--lr 0.02] [--refit-every N] [--seed S] [--csv out.csv]
            [--backend naive|blocked|micro|auto]   (host tensor kernels; auto = probe)
+           [--shards N]   (data-parallel worker threads per update;
+                           bit-identical to --shards 1, DESIGN.md ADR-004)
   theory   print Theorem 3/4 tables and the cost model
   sweep-f  --fs 0.125,0.25,0.5 plus the train flags
   data     --n 100 --side 32 [--seed S]  describe synthetic data
@@ -101,8 +103,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     let st = trainer.rt.stats_snapshot();
     println!(
-        "algo={algo:?} backend={} steps={} wall={dt:.1}s final_val_acc={:.4} examples={} cost_units={:.0}",
+        "algo={algo:?} backend={} shards={} steps={} wall={dt:.1}s final_val_acc={:.4} examples={} cost_units={:.0}",
         trainer.backend.name(),
+        trainer.shards(),
         trainer.step_count(),
         trainer.final_val_acc(),
         trainer.examples_seen,

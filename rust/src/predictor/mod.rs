@@ -109,9 +109,18 @@ impl Predictor {
     /// Backprop features H = R W_a, where `resid` is (m, C) and head_w is
     /// row-major (D, C): h_j = W_a^T r_j = head_w · r_j.
     pub fn backprop_features(resid: &Tensor, head_w: &[f32], d: usize) -> Tensor {
+        let mut h = Tensor::zeros(&[resid.rows(), d]);
+        Predictor::backprop_features_into(resid, head_w, d, &mut h);
+        h
+    }
+
+    /// [`backprop_features`](Self::backprop_features) into a caller-owned
+    /// (m, D) output — the sharded refit collectors draw it from their
+    /// per-worker `Workspace` (ADR-004). Every cell is overwritten.
+    pub fn backprop_features_into(resid: &Tensor, head_w: &[f32], d: usize, h: &mut Tensor) {
         let (m, c) = (resid.rows(), resid.cols());
         assert_eq!(head_w.len(), d * c);
-        let mut h = Tensor::zeros(&[m, d]);
+        assert_eq!(h.shape, [m, d], "backprop_features output shape mismatch");
         for j in 0..m {
             let r = resid.row(j);
             let out = &mut h.data[j * d..(j + 1) * d];
@@ -119,7 +128,6 @@ impl Predictor {
                 out[i] = crate::tensor::stats::dot(&head_w[i * c..(i + 1) * c], r);
             }
         }
-        h
     }
 
     /// Exact head gradients from activations + residuals (Sec. 4.3):

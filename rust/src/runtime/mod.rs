@@ -10,14 +10,22 @@
 //!   keyed by the predictor's version counter;
 //! - all entry points return plain host `Vec<f32>`s — the coordinator owns
 //!   scheduling, the runtime owns marshalling.
+//!
+//! Thread-safety (ADR-004): the sharded executor calls every entry point
+//! from worker threads against one shared `&Runtime`, so the executable
+//! cache is `Mutex<BTreeMap<_, Arc<_>>>` (locked only for the cache probe,
+//! never across an execute) and the stats are mutex-guarded. The vendored
+//! `xla` stub's handle types are plain `Send + Sync` structs; the real
+//! PJRT binding's buffer/executable handles wrap thread-safe C API objects
+//! the same way — revisit the `Send`/`Sync` bounds if a future binding
+//! says otherwise.
 
 use crate::model::manifest::Manifest;
 use crate::model::params::ParamStore;
 use crate::predictor::Predictor;
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Outputs of the `train_grads` entry point (Forward + Backward).
 pub struct TrainOut {
@@ -55,9 +63,10 @@ pub struct DevicePredictor {
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// Cumulative marshalling/compute timers for the perf report.
-    pub stats: RefCell<RuntimeStats>,
+    exes: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative marshalling/compute timers for the perf report
+    /// (mutex-guarded: worker threads report concurrently).
+    pub stats: Mutex<RuntimeStats>,
 }
 
 #[derive(Default, Debug, Clone)]
@@ -86,14 +95,18 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            exes: RefCell::new(BTreeMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            exes: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
-    /// Compile (or fetch cached) an executable by artifact name.
-    pub fn exe(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(name) {
+    /// Compile (or fetch cached) an executable by artifact name. The cache
+    /// lock is held only for the probe/insert; compilation runs unlocked,
+    /// so two shards racing on a cold artifact may both compile it — the
+    /// second insert wins and the duplicate is dropped (compiles are
+    /// warmup-path anyway; the trainer pre-compiles before scattering).
+    pub fn exe(&self, name: &str) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let meta = self.manifest.artifact(name)?;
@@ -106,11 +119,12 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling artifact {name}: {e:?}"))?;
         let dt = t0.elapsed().as_secs_f64();
-        self.stats.borrow_mut().compile_secs += dt;
+        self.stats.lock().unwrap().compile_secs += dt;
         crate::log_debug!("compiled {name} in {dt:.2}s");
-        let rc = Rc::new(exe);
-        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
-        Ok(rc)
+        let rc = Arc::new(exe);
+        let mut exes = self.exes.lock().unwrap();
+        let entry = exes.entry(name.to_string()).or_insert(rc);
+        Ok(entry.clone())
     }
 
     /// Pre-compile every artifact the run will need (avoids first-use
@@ -130,7 +144,7 @@ impl Runtime {
             .client
             .buffer_from_host_buffer::<f32>(data, dims, None)
             .map_err(|e| anyhow::anyhow!("uploading f32 buffer {dims:?}: {e:?}"))?;
-        self.stats.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+        self.stats.lock().unwrap().upload_secs += t0.elapsed().as_secs_f64();
         Ok(b)
     }
 
@@ -140,7 +154,7 @@ impl Runtime {
             .client
             .buffer_from_host_buffer::<i32>(data, dims, None)
             .map_err(|e| anyhow::anyhow!("uploading i32 buffer {dims:?}: {e:?}"))?;
-        self.stats.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+        self.stats.lock().unwrap().upload_secs += t0.elapsed().as_secs_f64();
         Ok(b)
     }
 
@@ -214,7 +228,7 @@ impl Runtime {
             );
             out.push(v);
         }
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.calls += 1;
         st.exec_secs += exec_dt;
         st.download_secs += t1.elapsed().as_secs_f64();
@@ -334,6 +348,6 @@ impl Runtime {
     }
 
     pub fn stats_snapshot(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 }

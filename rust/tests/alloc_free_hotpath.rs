@@ -13,6 +13,13 @@
 //! slabs, and a Muon step (momentum blend + Newton–Schulz through the
 //! workspace-aware kernels) — warms it up, then asserts the allocation
 //! counter does not move across five further iterations.
+//!
+//! The multi-worker variant (ADR-004) runs the same steady-state loop on
+//! several threads at once, each with its own per-shard state (`Workspace`
+//! arena, `FitBuffer` ring, optimizer), and asserts the *global* counter
+//! does not move while all workers iterate concurrently — per-worker
+//! arena reuse holds and sharding introduces no cross-thread allocation
+//! churn.
 
 #![cfg(feature = "alloc-counter")]
 
@@ -29,6 +36,11 @@ use std::collections::BTreeMap;
 
 const D: usize = 16;
 const CLASSES: usize = 4;
+
+/// The allocation counter is process-global, so the two steady-state
+/// tests must not overlap (libtest runs tests on parallel threads) — each
+/// takes this lock around its measured window.
+static COUNTER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 /// Two Muon matrices (one needing the transposed Newton–Schulz path) plus
 /// a non-matrix bias slot, so the step exercises both NS orientations and
@@ -137,6 +149,7 @@ impl Loop {
 
 #[test]
 fn steady_state_hot_loop_is_allocation_free() {
+    let _serial = COUNTER_LOCK.lock().unwrap();
     let mut hot = Loop::new();
     // Warm-up: fill the ring past capacity and let every arena (optimizer
     // workspace, micro-kernel panels) reach its steady footprint.
@@ -160,4 +173,54 @@ fn steady_state_hot_loop_is_allocation_free() {
     // Sanity: the loop did real work (params moved, counter is live).
     assert!(alloc_track::alloc_count() > 0);
     assert!(hot.params.trunk.iter().any(|&w| w != 0.0));
+}
+
+#[test]
+fn per_worker_steady_state_is_allocation_free_across_threads() {
+    use std::sync::Barrier;
+    let _serial = COUNTER_LOCK.lock().unwrap();
+    const WORKERS: usize = 2;
+    // Rendezvous points: A = all workers warmed (and the barrier's own
+    // sync machinery exercised), B = 'before' snapshot taken, C = measured
+    // window closed, D = 'after' snapshot taken (workers may only exit —
+    // and let the thread runtime touch the heap — after D).
+    let barrier = Barrier::new(WORKERS + 1);
+    let (before, after) = std::thread::scope(|s| {
+        let barrier = &barrier;
+        let handles: Vec<_> = (0..WORKERS)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut hot = Loop::new();
+                    for _ in 0..3 {
+                        hot.iteration();
+                    }
+                    assert!(hot.buf.is_full(), "ring must reach steady state");
+                    barrier.wait(); // A
+                    barrier.wait(); // B
+                    for _ in 0..5 {
+                        hot.iteration();
+                    }
+                    barrier.wait(); // C
+                    barrier.wait(); // D
+                    assert!(hot.params.trunk.iter().any(|&w| w != 0.0));
+                })
+            })
+            .collect();
+        barrier.wait(); // A — everyone warm, spawn allocations behind us
+        let before = alloc_track::alloc_count();
+        barrier.wait(); // B — open the measured window
+        barrier.wait(); // C — all workers done iterating
+        let after = alloc_track::alloc_count();
+        barrier.wait(); // D — release workers to exit
+        for h in handles {
+            h.join().unwrap();
+        }
+        (before, after)
+    });
+    assert_eq!(
+        after - before,
+        0,
+        "{WORKERS} concurrent worker loops allocated {} time(s) in steady state",
+        after - before
+    );
 }

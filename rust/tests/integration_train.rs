@@ -33,6 +33,10 @@ fn tiny_cfg() -> Option<RunConfig> {
         track_alignment: true,
         adaptive_f: false,
         backend: lgp::tensor::BackendKind::Blocked,
+        // `LGP_SHARDS=2 cargo test -q` runs this whole suite through the
+        // sharded executor (ADR-004) — bit-identical results, so every
+        // assertion below holds unchanged.
+        shards: lgp::config::shards_env_override().unwrap_or(1),
     })
 }
 
@@ -131,6 +135,24 @@ fn seeds_change_data_but_not_shapes() {
     b.train(None).unwrap();
     assert_eq!(a.params.trunk.len(), b.params.trunk.len());
     assert_ne!(a.params.trunk, b.params.trunk, "different seeds, same params?");
+}
+
+#[test]
+fn sharded_training_reduces_loss_like_serial() {
+    // The parallel path through the full Trainer: 2 shards, GPR with a
+    // refit inside the window. (Bitwise equality with serial is pinned by
+    // tests/shard_determinism.rs; this is the behavioral smoke.)
+    let Some(mut cfg) = tiny_cfg() else { return };
+    cfg.shards = 2;
+    cfg.accum = 4;
+    cfg.max_steps = 20;
+    let mut t = Trainer::new(cfg).unwrap();
+    assert_eq!(t.shards(), 2);
+    t.train(None).unwrap();
+    let first = t.log.first().unwrap().loss;
+    let last = t.log.last().unwrap().loss;
+    assert!(last < first + 0.02, "sharded GPR diverged: {first} -> {last}");
+    assert!(t.pred.fits >= 1, "refit must run through the sharded gather");
 }
 
 #[test]

@@ -3,6 +3,8 @@
 //! seeded PCG64; failures print the violating seed for reproduction.
 
 use lgp::coordinator::combine::{cv_combine, split_indices};
+use lgp::coordinator::{exec, reduce};
+use lgp::data::loader::DataPipeline;
 use lgp::model::params::FlatGrad;
 use lgp::tensor::{linalg, matmul, stats, Tensor};
 use lgp::theory::{self, CostModel};
@@ -109,6 +111,118 @@ fn prop_cv_estimator_unbiased() {
                 est_mean[i],
                 mu[i]
             );
+        }
+    }
+}
+
+/// Property (ADR-004): the fixed-topology tree reduction over leaves
+/// computed through the sharded executor equals the serial left-fold sum
+/// *exactly* (bitwise), for arbitrary shard counts, leaf counts and
+/// gradient lengths. The leaf is a pure function of its slot, so the only
+/// way shard count could leak into the result is through reduction order
+/// — which the fixed topology forbids.
+#[test]
+fn prop_tree_reduction_equals_serial_left_fold() {
+    for seed in 0..24 {
+        let mut rng = Pcg64::new(seed, 300);
+        let slots = 1 + rng.below(12) as usize;
+        let n = 1 + rng.below(80) as usize;
+        let leaf_of = |slot: usize| {
+            let mut r = Pcg64::new(seed ^ 0xABCD, 400 + slot as u64);
+            let mut g = FlatGrad {
+                trunk: vec![0.0; n],
+                head_w: vec![0.0; 4],
+                head_b: vec![0.0; 2],
+            };
+            r.fill_normal(&mut g.trunk, 1.0);
+            r.fill_normal(&mut g.head_w, 1.0);
+            r.fill_normal(&mut g.head_b, 1.0);
+            g
+        };
+        // Serial reference: plain left fold, no executor involved.
+        let mut want = leaf_of(0);
+        for s in 1..slots {
+            want.axpy(1.0, &leaf_of(s));
+        }
+        for shards in [1usize, 2, 3, 4, 7] {
+            let mut workers = vec![(); shards];
+            let leaves =
+                exec::scatter(&mut workers, slots, |_w, slot| Ok(leaf_of(slot))).unwrap();
+            let got = reduce::tree_reduce_grads(leaves).unwrap();
+            assert_eq!(got.trunk, want.trunk, "seed {seed} shards {shards}");
+            assert_eq!(got.head_w, want.head_w, "seed {seed} shards {shards}");
+            assert_eq!(got.head_b, want.head_b, "seed {seed} shards {shards}");
+        }
+        // The raw-slice form agrees with the FlatGrad form bitwise.
+        let leaves: Vec<FlatGrad> = (0..slots).map(leaf_of).collect();
+        let refs: Vec<&[f32]> = leaves.iter().map(|l| l.trunk.as_slice()).collect();
+        let mut out = vec![f32::NAN; n];
+        reduce::tree_reduce_into(&mut out, &refs);
+        assert_eq!(out, want.trunk, "seed {seed}");
+    }
+}
+
+/// Property (ADR-004): the round-robin slot assignment induces per-shard
+/// stream position ranges that are disjoint and exhaustive over one
+/// update's consumption window, for every (slots, per-slot size, shard
+/// count, base offset).
+#[test]
+fn prop_shard_position_ranges_partition_the_stream() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 301);
+        let slots = 1 + rng.below(16) as usize;
+        let m = 1 + rng.below(24) as usize;
+        let shards = 1 + rng.below(6) as usize;
+        let base = rng.below(10_000) as usize;
+        let nw = exec::effective_workers(shards, slots);
+        let mut covered = vec![0usize; slots * m];
+        for slot in 0..slots {
+            let w = exec::worker_of_slot(slot, nw);
+            assert!(w < nw, "seed {seed}");
+            for p in base + slot * m..base + (slot + 1) * m {
+                covered[p - base] += 1;
+            }
+        }
+        // Disjoint + exhaustive: every position in the window exactly once.
+        assert!(covered.iter().all(|&c| c == 1), "seed {seed}: {covered:?}");
+    }
+}
+
+/// Property (ADR-004): the sharded `DataPipeline` reshuffles identically
+/// per epoch regardless of shard count — every view, however many exist
+/// and in whatever order they read, serves the serial stream's index at
+/// every position, and each epoch's index set is a full permutation.
+#[test]
+fn prop_sharded_pipeline_reshuffles_identically_per_epoch() {
+    for seed in 0..12 {
+        let mut rng = Pcg64::new(seed, 302);
+        let n = 8 + rng.below(40) as usize;
+        let epochs = 3usize;
+        let mut p = DataPipeline::build(n.max(16), 8, 8, 4, 1, seed);
+        let n = p.train.len();
+        let serial: Vec<usize> = p.next_indices(epochs * n);
+        // Each epoch is a permutation of 0..n.
+        for e in 0..epochs {
+            let mut idx: Vec<usize> = serial[e * n..(e + 1) * n].to_vec();
+            idx.sort_unstable();
+            assert_eq!(idx, (0..n).collect::<Vec<_>>(), "seed {seed} epoch {e}");
+        }
+        // Consecutive epochs actually reshuffle (astronomically unlikely
+        // to collide for n >= 16).
+        assert_ne!(serial[..n], serial[n..2 * n], "seed {seed}");
+        for shards in [1usize, 2, 5] {
+            let mut views: Vec<_> = (0..shards).map(|_| p.make_view()).collect();
+            let m = 1 + (seed as usize % 7);
+            for pos in 0..epochs * n {
+                // The owner shard of this position's slot reads it.
+                let slot = pos / m;
+                let v = &mut views[exec::worker_of_slot(slot, shards)];
+                assert_eq!(
+                    v.index_at(pos),
+                    serial[pos],
+                    "seed {seed} shards {shards} pos {pos}"
+                );
+            }
         }
     }
 }

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 verification + the ADR-004 parallel-path smoke.
+#
+#   scripts/verify.sh            # build, tests, sharded smoke, alloc gate,
+#                                # bench-JSON validation
+#
+# The LGP_SHARDS=2 pass reruns the full integration suite through the
+# sharded executor: determinism (tests/shard_determinism.rs) guarantees
+# bit-identical results, so every assertion must hold unchanged.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+
+# ADR-004 smoke: the whole suite again, scattered over 2 worker shards.
+LGP_SHARDS=2 cargo test -q
+
+# Zero-allocation steady state (ADR-003), serial and per-worker-thread
+# (ADR-004).
+cargo test -q --features alloc-counter --test alloc_free_hotpath
+
+# Validate every committed BENCH_*.json against the lgp.bench.v1 schema.
+# (The perf compare gate against BENCH_kernels.baseline.json already runs
+# inside `cargo test -q`; regenerate + re-gate explicitly with
+#   cargo bench --bench hotpath
+#   cargo run --release --bin bench_report -- \
+#       --compare ../BENCH_kernels.baseline.json ../BENCH_kernels.json
+# — see EXPERIMENTS.md §Compare gate for the cross-host caveat.)
+cargo run --release --bin bench_report
