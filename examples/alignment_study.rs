@@ -6,84 +6,103 @@
 //! Also validates the predictor's low-rank premise: the fraction of
 //! per-example gradient energy captured by the top-r subspace.
 //!
+//! This example showcases the observer seam (DESIGN.md ADR-005): a custom
+//! `TrainObserver` captures each refit's `FitReport` into shared state
+//! while the stock training loop runs — no hand-rolled loop around the
+//! session's internals, as the pre-ADR-005 version of this file needed.
+//!
 //!   cargo run --release --example alignment_study -- \
 //!       [--preset tiny] [--steps 60] [--f 0.25]
 
 use lgp::bench_support::Table;
-use lgp::config::{Algo, RunConfig};
-use lgp::coordinator::Trainer;
-use lgp::theory::CostModel;
+use lgp::prelude::*;
 use lgp::util::cli::Args;
-use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Captures (step, energy_captured) at every predictor refit. The
+/// session owns the observer; the `Arc` hands the collected trace back
+/// to `main` after the run.
+struct EnergyProbe(Arc<Mutex<Vec<(usize, f64)>>>);
+
+impl TrainObserver for EnergyProbe {
+    fn on_refit(&mut self, ev: &RefitEvent) -> anyhow::Result<()> {
+        self.0.lock().unwrap().push((ev.step, ev.report.energy_captured));
+        Ok(())
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1)).map_err(|e| anyhow::anyhow!(e))?;
     let preset = args.str_or("preset", "tiny");
     let steps = args.usize_or("steps", 60);
     let f = args.f64_or("f", 0.25);
+    if !std::path::Path::new(&format!("artifacts/{preset}/manifest.json")).exists() {
+        println!("SKIP: artifacts/{preset} not built (run `make artifacts`)");
+        return Ok(());
+    }
 
-    let cfg = RunConfig {
-        artifacts_dir: PathBuf::from(format!("artifacts/{preset}")),
-        algo: Algo::Gpr,
-        f,
-        accum: 4,
-        max_steps: steps,
-        refit_every: 10,
-        eval_every: 10,
-        train_size: args.usize_or("train-size", 1500),
-        val_size: 300,
-        seed: args.u64_or("seed", 0),
-        ..RunConfig::default()
-    };
+    let energies = Arc::new(Mutex::new(Vec::new()));
+    let mut session = SessionBuilder::new()
+        .preset(&preset)
+        .algo(Algo::Gpr)
+        .f(f)
+        .accum(4)
+        .max_steps(steps)
+        .refit_every(10)
+        .eval_every(10)
+        .train_size(args.usize_or("train-size", 1500))
+        .val_size(300)
+        .seed(args.u64_or("seed", 0))
+        .observer(Box::new(EnergyProbe(energies.clone())))
+        .build()?;
+
+    println!("tracking alignment every refit ({steps} steps, refit every 10)...\n");
+    session.run()?;
+
     let cost = CostModel::default();
-    let mut tr = Trainer::new(cfg)?;
-    tr.warmup()?;
+    let energies = energies.lock().unwrap();
+    // Last refit energy at or before a given step.
+    let energy_at = |step: usize| -> String {
+        energies
+            .iter()
+            .rev()
+            .find(|(s, _)| *s <= step)
+            .map_or("-".into(), |(_, e)| format!("{e:.3}"))
+    };
 
-    println!("tracking alignment every refit ({} steps, refit every 10)...\n", steps);
     let mut table = Table::new(&[
         "step", "loss", "val_acc", "rho", "kappa", "phi(f)", "margin", "f*", "energy_r",
     ]);
-
-    // Manual loop so we can snapshot at each refit. We reuse the Trainer's
-    // public pieces rather than its packaged train() loop.
-    let mut last_energy = f64::NAN;
-    for step in 0..steps {
-        let dev = tr.rt.upload_params(&tr.params)?;
-        let due = tr.pred.fits == 0 && step >= 1
-            || tr.pred.fits > 0 && step % 10 == 0 && step > 0;
-        if due {
-            if let Some(report) = tr.refit_predictor(&dev)? {
-                last_energy = report.energy_captured;
-            }
-        }
-        // one update of accumulated GPR micro-batches through the public API
-        tr.cfg.max_steps = tr.step_count() + 1;
-        tr.cfg.eval_every = 0;
-        tr.train(None)?;
-        if step % 10 == 0 || step == steps - 1 {
-            let dev2 = tr.rt.upload_params(&tr.params)?;
-            let val = tr.evaluate(&dev2)?;
-            let row = tr.log.last().unwrap();
-            let a = tr.tracker.snapshot();
-            table.row(vec![
-                format!("{}", tr.step_count()),
-                format!("{:.4}", row.loss),
-                format!("{val:.3}"),
-                a.map_or("-".into(), |a| format!("{:.3}", a.rho)),
-                a.map_or("-".into(), |a| format!("{:.3}", a.kappa)),
-                a.map_or("-".into(), |a| format!("{:.3}", a.phi(f))),
-                a.map_or("-".into(), |a| format!("{:+.3}", a.break_even_margin(f, &cost))),
-                a.map_or("-".into(), |a| format!("{:.3}", a.f_star(&cost))),
-                if last_energy.is_nan() { "-".into() } else { format!("{last_energy:.3}") },
-            ]);
-        }
+    for row in session.log.iter().filter(|r| !r.val_acc.is_nan()) {
+        let have_align = row.rho.is_finite();
+        table.row(vec![
+            format!("{}", row.step),
+            format!("{:.4}", row.loss),
+            format!("{:.3}", row.val_acc),
+            if have_align { format!("{:.3}", row.rho) } else { "-".into() },
+            if have_align { format!("{:.3}", row.kappa) } else { "-".into() },
+            if have_align { format!("{:.3}", row.phi) } else { "-".into() },
+            if have_align {
+                format!("{:+.3}", 1.0 - lgp::theory::q_objective(f, row.rho, row.kappa, &cost))
+            } else {
+                "-".into()
+            },
+            if have_align {
+                format!("{:.3}", lgp::theory::f_star(row.rho, row.kappa, &cost))
+            } else {
+                "-".into()
+            },
+            energy_at(row.step),
+        ]);
     }
     table.print();
 
     println!("\nReading the table (paper Sec. 5.3):");
     println!(" - rho is the cosine alignment between true and predicted per-example");
-    println!("   gradients; Thm 3 break-even at f={f} needs rho >= {:.3} (kappa=1).",
-             lgp::theory::rho_star(f, 1.0, &cost));
+    println!(
+        "   gradients; Thm 3 break-even at f={f} needs rho >= {:.3} (kappa=1).",
+        lgp::theory::rho_star(f, 1.0, &cost)
+    );
     println!(" - margin = 1 - phi*gamma: positive means beating vanilla SGD per unit compute.");
     println!(" - energy_r: fraction of gradient energy in the top-r NTK subspace —");
     println!("   the empirical check of the paper's low-rank premise (Sec. 4).");

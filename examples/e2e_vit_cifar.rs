@@ -3,7 +3,9 @@
 //! Trains the ViT classifier on the synthetic CIFAR-10 substitute under an
 //! equal wall-clock budget with BOTH algorithms, over multiple seeds, and
 //! writes the validation-accuracy-vs-time series (mean ± standard error)
-//! that regenerates the shape of the paper's Figure 1.
+//! that regenerates the shape of the paper's Figure 1. Each run streams
+//! its per-step rows through a `CsvObserver` (DESIGN.md ADR-005) instead
+//! of a hand-wired CSV writer.
 //!
 //!   cargo run --release --example e2e_vit_cifar -- \
 //!       [--preset small] [--budget 120] [--seeds 3] [--f 0.25] [--out runs/fig1]
@@ -13,8 +15,7 @@
 //! per update, Muon lr 0.02, label smoothing 0.05, pre-augmented 2x
 //! dataset, wall-clock-boxed runs, 3 seeds with standard errors.
 
-use lgp::config::{Algo, RunConfig};
-use lgp::coordinator::Trainer;
+use lgp::prelude::*;
 use lgp::tensor::stats::mean_stderr;
 use lgp::util::cli::Args;
 use lgp::util::CsvWriter;
@@ -27,35 +28,39 @@ fn main() -> anyhow::Result<()> {
     let seeds = args.usize_or("seeds", 3);
     let f = args.f64_or("f", 0.25);
     let out_dir = PathBuf::from(args.str_or("out", "runs/fig1"));
+    if !PathBuf::from(format!("artifacts/{preset}/manifest.json")).exists() {
+        println!("SKIP: artifacts/{preset} not built (run `make artifacts`)");
+        return Ok(());
+    }
     std::fs::create_dir_all(&out_dir)?;
 
-    let base = RunConfig {
-        artifacts_dir: PathBuf::from(format!("artifacts/{preset}")),
-        f,
-        accum: 8, // paper: 8 micro-batches per update
-        budget_secs: budget,
-        max_steps: 0,
-        refit_every: 25,
-        eval_every: 5,
-        train_size: args.usize_or("train-size", 4000),
-        val_size: args.usize_or("val-size", 500),
-        aug_multiplier: 2, // paper: pre-applied 2x augmentation
-        ..RunConfig::default()
-    };
+    let base = SessionBuilder::new()
+        .preset(&preset)
+        .f(f)
+        .accum(8) // paper: 8 micro-batches per update
+        .budget_secs(budget)
+        .max_steps(0)
+        .refit_every(25)
+        .eval_every(5)
+        .train_size(args.usize_or("train-size", 4000))
+        .val_size(args.usize_or("val-size", 500))
+        .aug_multiplier(2) // paper: pre-applied 2x augmentation
+        .config()
+        .clone();
 
     // Collect per-run (time, val_acc) curves keyed by algorithm.
     let mut curves: Vec<(Algo, u64, Vec<(f64, f64)>)> = Vec::new();
     for algo in [Algo::Baseline, Algo::Gpr] {
         for seed in 0..seeds as u64 {
-            let mut cfg = base.clone();
-            cfg.algo = algo;
-            cfg.seed = seed;
             eprintln!("=== {algo:?} seed {seed} (budget {budget}s) ===");
-            let mut tr = Trainer::new(cfg)?;
             let csv_path = out_dir.join(format!("{algo:?}_seed{seed}.csv").to_lowercase());
-            let mut csv = CsvWriter::create(&csv_path, &lgp::metrics::LogRow::HEADER)?;
-            tr.train(Some(&mut csv))?;
-            let curve: Vec<(f64, f64)> = tr
+            let mut session = SessionBuilder::from_config(base.clone())
+                .algo(algo)
+                .seed(seed)
+                .observer(Box::new(CsvObserver::create(&csv_path)?))
+                .build()?;
+            session.run()?;
+            let curve: Vec<(f64, f64)> = session
                 .log
                 .iter()
                 .filter(|r| !r.val_acc.is_nan())
@@ -63,10 +68,10 @@ fn main() -> anyhow::Result<()> {
                 .collect();
             eprintln!(
                 "    steps={} final_val={:.3} cost_units={:.0} rho={:.3}",
-                tr.step_count(),
-                tr.final_val_acc(),
-                tr.cost_units,
-                tr.tracker.snapshot().map_or(f64::NAN, |a| a.rho)
+                session.step_count(),
+                session.final_val_acc(),
+                session.cost_units,
+                session.tracker.snapshot().map_or(f64::NAN, |a| a.rho)
             );
             curves.push((algo, seed, curve));
         }

@@ -2,43 +2,47 @@
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Loads the tiny preset's AOT artifacts, trains the ViT for 20 updates of
+//! Builds a [`TrainSession`] with the chainable `SessionBuilder` from
+//! `lgp::prelude` (DESIGN.md ADR-005), trains the ViT for 20 updates of
 //! predicted gradient descent (Algorithm 1, f = 1/4 like the paper's
 //! headline run), and prints the metrics a user cares about: loss,
 //! validation accuracy, the measured cosine alignment ρ̂, and where the
 //! run sits relative to the Theorem 3 break-even.
 
-use lgp::config::{Algo, RunConfig};
-use lgp::coordinator::Trainer;
-use lgp::theory::CostModel;
+use lgp::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = RunConfig::default();
-    cfg.artifacts_dir = std::path::PathBuf::from("artifacts/tiny");
-    cfg.algo = Algo::Gpr;
-    cfg.f = 0.25; // paper: prediction on 3/4 of the batch
-    cfg.max_steps = 20;
-    cfg.accum = 4;
-    cfg.refit_every = 8;
-    cfg.eval_every = 10;
-    cfg.train_size = 800;
-    cfg.val_size = 200;
-    cfg.seed = 0;
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        println!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return Ok(());
+    }
 
-    let mut trainer = Trainer::new(cfg)?;
-    trainer.train(None)?;
+    let mut session = SessionBuilder::new()
+        .preset("tiny")
+        .algo(Algo::Gpr)
+        .f(0.25) // paper: prediction on 3/4 of the batch
+        .max_steps(20)
+        .accum(4)
+        .refit_every(8)
+        .eval_every(10)
+        .train_size(800)
+        .val_size(200)
+        .seed(0)
+        .build()?;
+    session.run()?;
 
     println!("\n=== quickstart summary ===");
-    println!("steps:          {}", trainer.step_count());
-    println!("final loss:     {:.4}", trainer.log.last().unwrap().loss);
-    println!("val accuracy:   {:.3}", trainer.final_val_acc());
-    println!("examples seen:  {}", trainer.examples_seen);
+    println!("estimator:      {}", session.estimator().name());
+    println!("steps:          {}", session.step_count());
+    println!("final loss:     {:.4}", session.log.last().unwrap().loss);
+    println!("val accuracy:   {:.3}", session.final_val_acc());
+    println!("examples seen:  {}", session.examples_seen);
     println!(
         "analytic cost:  {:.0} units ({:.2} per example; vanilla would be 3.00)",
-        trainer.cost_units,
-        trainer.cost_units / trainer.examples_seen as f64
+        session.cost_units,
+        session.cost_units / session.examples_seen as f64
     );
-    if let Some(a) = trainer.tracker.snapshot() {
+    if let Some(a) = session.tracker.snapshot() {
         let cost = CostModel::default();
         println!(
             "alignment:      rho={:.3} kappa={:.3}  (Thm 3 break-even at f=0.25 needs rho >= {:.3})",

@@ -16,20 +16,15 @@
 //!   LGP_BENCH_PRESET=tiny LGP_BENCH_BUDGET=15 cargo bench --bench fig1_wallclock
 
 use lgp::bench_support::Table;
-use lgp::config::{Algo, RunConfig};
-use lgp::coordinator::Trainer;
+use lgp::prelude::*;
+use lgp::util::env_parse;
 use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     let preset = std::env::var("LGP_BENCH_PRESET").unwrap_or_else(|_| "small".into());
-    let budget: f64 = std::env::var("LGP_BENCH_BUDGET")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(if std::env::var("LGP_BENCH_PRESET").as_deref() == Ok("tiny") {
-            15.0
-        } else {
-            75.0
-        });
+    // Malformed override values are hard errors, not silent defaults.
+    let budget: f64 = env_parse::<f64>("LGP_BENCH_BUDGET")?
+        .unwrap_or(if preset == "tiny" { 15.0 } else { 75.0 });
     let dir = PathBuf::from(format!("artifacts/{preset}"));
     if !dir.join("manifest.json").exists() {
         println!("SKIP: artifacts/{preset} not built (run `make artifacts`)");
@@ -37,41 +32,39 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("[FIG1] equal wall-clock budget ({budget}s) — GPR (f=1/4) vs baseline, {preset} preset\n");
-    let base = RunConfig {
-        artifacts_dir: dir,
-        f: 0.25,
-        accum: 4,
-        budget_secs: budget,
-        max_steps: 0,
-        refit_every: 20,
-        eval_every: 5,
-        train_size: 1500,
-        val_size: 300,
-        aug_multiplier: 2,
-        seed: 0,
-        ..RunConfig::default()
-    };
+    let base = SessionBuilder::new()
+        .artifacts(dir)
+        .f(0.25)
+        .accum(4)
+        .budget_secs(budget)
+        .max_steps(0)
+        .refit_every(20)
+        .eval_every(5)
+        .train_size(1500)
+        .val_size(300)
+        .aug_multiplier(2)
+        .seed(0)
+        .config()
+        .clone();
 
     let mut rows: Vec<(Algo, usize, f64, f64, f64)> = Vec::new();
     let mut curves = Vec::new();
     for algo in [Algo::Baseline, Algo::Gpr] {
-        let mut cfg = base.clone();
-        cfg.algo = algo;
-        let mut tr = Trainer::new(cfg)?;
-        // compile outside the budget (the paper's runs don't count XLA
-        // compilation either)
-        tr.warmup()?;
-        tr.train(None)?;
+        let mut session = SessionBuilder::from_config(base.clone()).algo(algo).build()?;
+        // run() warms up before starting the budget stopwatch, so XLA
+        // compilation stays outside the budget (as in the paper's runs).
+        session.run()?;
         rows.push((
             algo,
-            tr.step_count(),
-            tr.final_val_acc(),
-            tr.cost_units,
-            tr.examples_seen as f64,
+            session.step_count(),
+            session.final_val_acc(),
+            session.cost_units,
+            session.examples_seen as f64,
         ));
         curves.push((
             algo,
-            tr.log
+            session
+                .log
                 .iter()
                 .filter(|r| !r.val_acc.is_nan())
                 .map(|r| (r.wall_secs, r.val_acc))

@@ -8,7 +8,7 @@
 
 use lgp::bench_support::json_out::write_bench_doc;
 use lgp::bench_support::{bench, fmt_time, kernels, Table};
-use lgp::coordinator::combine::cv_combine_into;
+use lgp::estimator::combine::cv_combine_into;
 use lgp::model::params::FlatGrad;
 use lgp::predictor::fit::{fit_with_ws, FitBuffer};
 use lgp::predictor::Predictor;

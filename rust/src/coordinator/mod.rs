@@ -1,629 +1,20 @@
-//! Layer-3 coordinator: the paper's training system.
+//! Layer-3 execution substrate: the deterministic scatter/reduce
+//! machinery the training session runs on (DESIGN.md ADR-004).
 //!
-//! `Trainer` drives both Algorithm 1 (predicted gradient descent, "GPR")
-//! and Algorithm 2 (vanilla) over the same runtime, data pipeline and
-//! optimizer so wall-clock comparisons are apples-to-apples (Figure 1).
+//! - [`exec`] — the sharded scatter executor: `slots` independent
+//!   micro-tasks over per-worker state on scoped threads, results handed
+//!   back in slot order regardless of thread scheduling.
+//! - [`reduce`] — fixed-topology (left-deep, slot-order) gradient
+//!   reduction, so `--shards N` is bit-identical to serial.
 //!
-//! One GPR micro-batch (DESIGN.md §6):
-//!   control:    train_grads  -> g_ct, a_c, p_c     (Forward + Backward)
-//!               predict_grad -> g_cp               (predictor on control)
-//!   prediction: cheap_fwd    -> a_p, p_p           (CheapForward)
-//!               predict_grad -> g_p
-//!   combine:    g = f·g_ct + (1−f)(g_p − (g_cp − g_ct))     (eq. 1)
-//!
-//! Micro-batches accumulate (paper: 8 per update) before one optimizer
-//! step; the predictor refits every `refit_every` updates from
-//! per-example gradients.
-//!
-//! Sharding (ADR-004): the micro-batches of one update are independent
-//! estimators (eq. 1 combines per micro-batch), so the update is a
-//! scatter/reduce: `--shards N` worker threads each own a [`ShardWorker`]
-//! (data view, `Workspace` arena, `FitBuffer` refit segment, gather
-//! scratch) and compute their round-robin share of the micro-batch slots
-//! against the shared `Runtime`; the coordinator reduces the slot-ordered
-//! gradients through the fixed-topology tree (`reduce`) and steps the
-//! optimizer serially. `shards=N` is bit-identical to `shards=1` — the
-//! determinism test (`rust/tests/shard_determinism.rs`) pins it.
+//! The training loop that used to live here (the monolithic `Trainer`)
+//! moved behind the library-first session API in ADR-005: configuration
+//! is `crate::session::SessionBuilder`, the loop is
+//! `crate::session::TrainSession`, the eq.-1 combine and the adaptive-f
+//! controller belong to `crate::estimator`, and metrics sinks are
+//! `crate::observer` implementations. This module deliberately knows
+//! nothing about gradients' meaning — only how to scatter work and
+//! reduce leaves deterministically.
 
-pub mod adaptive;
-pub mod combine;
 pub mod exec;
 pub mod reduce;
-
-use crate::config::{Algo, RunConfig};
-use crate::data::loader::{DataPipeline, ShardDataView};
-use crate::metrics::{accuracy, alignment_of, AlignmentMeter, Ema, LogRow};
-use crate::model::params::{FlatGrad, ParamStore};
-use crate::optim::{OptimConfig, Optimizer};
-use crate::predictor::fit::{fit_with_ws, FitBuffer};
-use crate::predictor::{residuals, Predictor};
-use crate::runtime::{DeviceParams, DevicePredictor, Runtime, TrainOut};
-use crate::tensor::{backend, Backend, Tensor, Workspace};
-use crate::util::{CsvWriter, Stopwatch};
-
-/// Where the control-variate combine runs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CombinePath {
-    /// Host loop (default — avoids 4 device round-trips; see §Perf).
-    Host,
-    /// The `cv_combine` pallas artifact (exercises the full L1 path).
-    Device,
-}
-
-/// Everything one worker thread owns (ADR-004). Nothing here is shared:
-/// the scatter hands each worker's `&mut ShardWorker` to exactly one
-/// scoped thread, which is what makes the update data-race-free without
-/// locks on the hot path.
-pub struct ShardWorker {
-    /// Position-addressed window onto the training stream (shared
-    /// `Arc<Dataset>`, private per-epoch permutation cache).
-    view: ShardDataView,
-    /// This worker's refit ring segment: its round-robin share of the
-    /// per-example gradient chunks lands here, then the coordinator
-    /// gathers segments in canonical chunk order.
-    fit_seg: FitBuffer,
-    /// Private scratch arena — per-worker reuse keeps the steady state
-    /// allocation-free with no cross-thread churn (the `alloc-counter`
-    /// test asserts this per thread).
-    ws: Workspace,
-    /// Gather scratch for the control batch (capacity retained).
-    x: Vec<f32>,
-    y: Vec<i32>,
-    /// Gather scratch for the prediction batch.
-    xp: Vec<f32>,
-    yp: Vec<i32>,
-}
-
-/// Per-update constants a micro-batch slot task needs — snapshotted by
-/// the coordinator before the scatter so worker threads share only
-/// immutable state.
-struct MicroCtx<'a> {
-    rt: &'a Runtime,
-    dev: &'a DeviceParams,
-    dev_pred: Option<&'a DevicePredictor>,
-    algo: Algo,
-    /// Full micro-batch size m, control/prediction split (mc, mp).
-    m: usize,
-    mc: usize,
-    mp: usize,
-    /// Effective control fraction mc/m (quantization-corrected).
-    f_eff: f32,
-    /// Whether the predictor participates this update (fitted and mp > 0)
-    /// — decided once per update, so every shard agrees.
-    use_pred: bool,
-    combine: CombinePath,
-    classes: usize,
-}
-
-impl MicroCtx<'_> {
-    /// Stream positions one micro-batch slot consumes. The prediction
-    /// batch is only drawn when the predictor runs — same consumption
-    /// rule on every shard count, so slot offsets are deterministic.
-    fn consumed_per_slot(&self) -> usize {
-        match self.algo {
-            Algo::Baseline => self.m,
-            Algo::Gpr => self.mc + if self.use_pred { self.mp } else { 0 },
-        }
-    }
-}
-
-/// One micro-batch slot's contribution: the gradient leaf plus the scalar
-/// traces, reduced by the coordinator in slot order.
-struct MicroOut {
-    grad: FlatGrad,
-    loss: f32,
-    acc: f64,
-    cost: f64,
-    examples: usize,
-}
-
-/// One micro-batch slot (either algorithm) at stream position `pos`,
-/// running entirely on the calling worker thread.
-fn run_micro(ctx: &MicroCtx, w: &mut ShardWorker, pos: usize) -> anyhow::Result<MicroOut> {
-    let cost = crate::theory::CostModel::default();
-    match ctx.algo {
-        // Algorithm 2 micro-batch: full Forward+Backward on all m examples.
-        Algo::Baseline => {
-            w.view.batch_at(pos, ctx.m, &mut w.x, &mut w.y);
-            let out = ctx.rt.train_grads(ctx.dev, &w.x, &w.y, ctx.m)?;
-            let acc = accuracy(&out.probs, &w.y, ctx.classes);
-            let TrainOut { loss, g_trunk, g_head_w, g_head_b, .. } = out;
-            Ok(MicroOut {
-                grad: FlatGrad { trunk: g_trunk, head_w: g_head_w, head_b: g_head_b },
-                loss,
-                acc,
-                cost: cost.cost_vanilla(ctx.m as f64),
-                examples: ctx.m,
-            })
-        }
-        // Algorithm 1 micro-batch: control + prediction and the
-        // control-variate combine.
-        Algo::Gpr => {
-            // -- control micro-batch: true gradient + activations --------
-            w.view.batch_at(pos, ctx.mc, &mut w.x, &mut w.y);
-            let ctrl = ctx.rt.train_grads(ctx.dev, &w.x, &w.y, ctx.mc)?;
-            let acc = accuracy(&ctrl.probs, &w.y, ctx.classes);
-            let mut g = FlatGrad {
-                trunk: ctrl.g_trunk,
-                head_w: ctrl.g_head_w,
-                head_b: ctrl.g_head_b,
-            };
-            let c_units =
-                cost.cost_vanilla(ctx.mc as f64) + cost.cheap_forward * ctx.mp as f64;
-            let examples = ctx.mc + ctx.mp;
-
-            // Until the first fit the predictor is identically zero;
-            // eq. (1) then reduces to g_ct (still unbiased). Skip the
-            // device calls — and the prediction draw (consumed_per_slot
-            // matches).
-            if !ctx.use_pred {
-                return Ok(MicroOut { grad: g, loss: ctrl.loss, acc, cost: c_units, examples });
-            }
-            let dev_pred = ctx
-                .dev_pred
-                .expect("coordinator uploads the predictor before a use_pred scatter");
-
-            // -- predictor on the control micro-batch (g_cp) --------------
-            let pc =
-                ctx.rt.predict_grad(&ctrl.a, &ctrl.probs, &w.y, ctx.dev, dev_pred, ctx.mc)?;
-
-            // -- prediction micro-batch: CheapForward + predictor (g_p) ---
-            w.view.batch_at(pos + ctx.mc, ctx.mp, &mut w.xp, &mut w.yp);
-            let (a_p, probs_p) = ctx.rt.cheap_fwd(ctx.dev, &w.xp, ctx.mp)?;
-            let pp = ctx.rt.predict_grad(&a_p, &probs_p, &w.yp, ctx.dev, dev_pred, ctx.mp)?;
-
-            let g_cp = FlatGrad { trunk: pc.g_trunk, head_w: pc.g_head_w, head_b: pc.g_head_b };
-            let g_p = FlatGrad { trunk: pp.g_trunk, head_w: pp.g_head_w, head_b: pp.g_head_b };
-
-            match ctx.combine {
-                CombinePath::Host => {
-                    // eq. (1) fused in place over the control-gradient
-                    // buffers: one pass, no fresh allocation (ADR-003).
-                    combine::cv_combine_into(&mut g, &g_cp, &g_p, ctx.f_eff);
-                }
-                CombinePath::Device => {
-                    let v = ctx.rt.cv_combine(
-                        &g.concat(),
-                        &g_cp.concat(),
-                        &g_p.concat(),
-                        ctx.f_eff,
-                    )?;
-                    g = FlatGrad::from_concat(&v, g.trunk.len(), g.head_w.len());
-                }
-            }
-            Ok(MicroOut { grad: g, loss: ctrl.loss, acc, cost: c_units, examples })
-        }
-    }
-}
-
-pub struct Trainer {
-    pub cfg: RunConfig,
-    pub rt: Runtime,
-    pub params: ParamStore,
-    pub opt: Optimizer,
-    pub pred: Predictor,
-    fit_buf: FitBuffer,
-    pub data: DataPipeline,
-    pub tracker: AlignmentMeter,
-    /// Host tensor backend selected at startup from `cfg.backend` (Auto →
-    /// calibration probe); threaded through the fit and the optimizer.
-    pub backend: Backend,
-    /// Long-lived scratch arena threaded through the predictor refit so
-    /// repeat fits reuse the same slabs (ADR-003).
-    ws: Workspace,
-    /// One state bundle per configured shard (ADR-004); `workers[0]` is
-    /// the serial path's state when `shards = 1`.
-    workers: Vec<ShardWorker>,
-    dev_pred: Option<DevicePredictor>,
-    /// Theorem-4 online controller (enabled by cfg.adaptive_f).
-    pub adaptive: Option<adaptive::AdaptiveF>,
-    pub combine_path: CombinePath,
-    pub log: Vec<LogRow>,
-    /// Analytic compute units consumed (paper cost model), for the
-    /// cost-model bench.
-    pub cost_units: f64,
-    pub examples_seen: usize,
-    step: usize,
-}
-
-impl Trainer {
-    pub fn new(cfg: RunConfig) -> anyhow::Result<Trainer> {
-        cfg.validate()?;
-        // Install the tensor backend first: every dense host path below
-        // (fit, Muon, diagnostics) dispatches through it.
-        let be = backend::set_active(cfg.backend);
-        crate::log_info!("tensor backend: {} (requested: {})", be.name(), cfg.backend.as_str());
-        let rt = Runtime::load(&cfg.artifacts_dir)?;
-        let params = ParamStore::load_init(&rt.manifest)?;
-        let opt = Optimizer::new(
-            cfg.optimizer,
-            OptimConfig {
-                lr: cfg.lr as f32,
-                weight_decay: cfg.weight_decay as f32,
-                backend: be,
-                ..OptimConfig::default()
-            },
-            &params,
-            &rt.manifest,
-        );
-        let pred = Predictor::new(rt.manifest.trunk_params, rt.manifest.width, rt.manifest.rank);
-        let fit_buf = FitBuffer::new(rt.manifest.n_fit);
-        let data = DataPipeline::build(
-            cfg.train_size,
-            cfg.val_size,
-            rt.manifest.image,
-            rt.manifest.classes,
-            cfg.aug_multiplier,
-            cfg.seed,
-        );
-        let shards = cfg.shards.max(1);
-        if shards > 1 {
-            crate::log_info!("sharded executor: {shards} worker threads (ADR-004)");
-        }
-        let chunks = rt.manifest.n_fit.div_ceil(rt.manifest.n_chunk);
-        // Each worker's segment holds exactly its worst-case round-robin
-        // share of refit chunks — never more, so the ring cannot slide.
-        let seg_cap = chunks.div_ceil(shards) * rt.manifest.n_chunk;
-        let workers = (0..shards)
-            .map(|_| ShardWorker {
-                view: data.make_view(),
-                fit_seg: FitBuffer::new(seg_cap.max(1)),
-                ws: Workspace::new(),
-                x: Vec::new(),
-                y: Vec::new(),
-                xp: Vec::new(),
-                yp: Vec::new(),
-            })
-            .collect();
-        let adaptive = cfg.adaptive_f.then(|| {
-            adaptive::AdaptiveF::new(rt.manifest.fs.clone(), cfg.f)
-        });
-        Ok(Trainer {
-            tracker: AlignmentMeter::default(),
-            backend: be,
-            ws: Workspace::new(),
-            workers,
-            fit_buf,
-            adaptive,
-            cfg,
-            rt,
-            params,
-            opt,
-            pred,
-            data,
-            dev_pred: None,
-            combine_path: CombinePath::Host,
-            log: Vec::new(),
-            cost_units: 0.0,
-            examples_seen: 0,
-            step: 0,
-        })
-    }
-
-    /// Pre-compile the artifacts this configuration will touch.
-    pub fn warmup(&self) -> anyhow::Result<()> {
-        let m = &self.rt.manifest;
-        let mut names = vec![m.per_example_grads_name(), "cv_combine".to_string()];
-        match self.cfg.algo {
-            Algo::Baseline => names.push(m.train_grads_name(m.micro_batch)),
-            Algo::Gpr => {
-                // adaptive-f may visit every lowered fraction
-                let fracs: Vec<f64> = if self.adaptive.is_some() {
-                    m.fs.clone()
-                } else {
-                    vec![self.cfg.f]
-                };
-                for f in fracs {
-                    let (mc, mp) = m.split_sizes(f);
-                    names.push(m.train_grads_name(mc));
-                    // predict artifacts are only touched when there is a
-                    // prediction micro-batch (f < 1)
-                    if mp > 0 {
-                        names.push(m.predict_grad_name(mc));
-                        names.push(m.cheap_fwd_name(mp));
-                        names.push(m.predict_grad_name(mp));
-                    }
-                }
-            }
-        }
-        names.push(m.cheap_fwd_name(m.val_batch));
-        self.rt.warmup(&names)
-    }
-
-    pub fn step_count(&self) -> usize {
-        self.step
-    }
-
-    /// Configured shard count (worker thread pool width).
-    pub fn shards(&self) -> usize {
-        self.workers.len()
-    }
-
-    // ---- one optimizer update (scatter/reduce over the shards) -----------
-
-    /// Accumulate `cfg.accum` micro-batch gradients across the shard
-    /// workers and return the reduced leaf sums in slot order — gradient
-    /// plus the (loss, acc, cost, examples) traces.
-    fn execute_update(
-        &mut self,
-        dev: &DeviceParams,
-    ) -> anyhow::Result<(FlatGrad, f64, f64)> {
-        let (mc, mp) = self.rt.manifest.split_sizes(self.cfg.f);
-        let m = self.rt.manifest.micro_batch;
-        let classes = self.rt.manifest.classes;
-        let use_pred = self.cfg.algo == Algo::Gpr && self.pred.fits > 0 && mp > 0;
-        if use_pred {
-            // Upload once per update (version-cached) and share read-only
-            // across the shards.
-            let up = self.rt.upload_predictor(&self.pred, self.dev_pred.take())?;
-            self.dev_pred = Some(up);
-        }
-        let ctx = MicroCtx {
-            rt: &self.rt,
-            dev,
-            dev_pred: if use_pred { self.dev_pred.as_ref() } else { None },
-            algo: self.cfg.algo,
-            m,
-            mc,
-            mp,
-            f_eff: mc as f32 / m as f32,
-            use_pred,
-            combine: self.combine_path,
-            classes,
-        };
-        let per_slot = ctx.consumed_per_slot();
-        let base = self.data.cursor();
-        let slots = self.cfg.accum;
-        // Scatter: each worker thread computes its round-robin slots
-        // against disjoint stream ranges; gather is slot-ordered.
-        let outs = exec::scatter(&mut self.workers, slots, |w, slot| {
-            run_micro(&ctx, w, base + slot * per_slot)
-        })?;
-        self.data.advance(slots * per_slot);
-
-        // Reduce: fixed topology over slot order (ADR-004) for the
-        // gradient and every scalar trace.
-        let mut loss_sum = 0.0f64;
-        let mut acc_sum = 0.0f64;
-        let mut cost_sum = 0.0f64;
-        let mut examples = 0usize;
-        let mut grads = Vec::with_capacity(outs.len());
-        for o in outs {
-            loss_sum += o.loss as f64;
-            acc_sum += o.acc;
-            cost_sum += o.cost;
-            examples += o.examples;
-            grads.push(o.grad);
-        }
-        let mut grad = reduce::tree_reduce_grads(grads)
-            .expect("accum >= 1 is enforced by RunConfig::validate");
-        grad.scale(1.0 / slots as f32);
-        self.cost_units += cost_sum;
-        self.examples_seen += examples;
-        Ok((grad, loss_sum, acc_sum))
-    }
-
-    // ---- predictor refit -------------------------------------------------
-
-    /// Collect per-example gradients (chunks scattered across the shards,
-    /// gathered in canonical chunk order) and refit (U, B). Also feeds the
-    /// Sec. 5.3 alignment tracker with (g_j, ĝ_j) pairs.
-    pub fn refit_predictor(
-        &mut self,
-        dev: &crate::runtime::DeviceParams,
-    ) -> anyhow::Result<Option<crate::predictor::fit::FitReport>> {
-        let (n_chunk, chunks, d, classes, smoothing) = {
-            let man = &self.rt.manifest;
-            (
-                man.n_chunk,
-                man.n_fit.div_ceil(man.n_chunk),
-                man.width,
-                man.classes,
-                man.label_smoothing as f32,
-            )
-        };
-        for w in &mut self.workers {
-            w.fit_seg.clear();
-        }
-        let base = self.data.cursor();
-        let rt = &self.rt;
-        let head_w = &self.params.head_w;
-        exec::scatter(&mut self.workers, chunks, |w, slot| {
-            w.view.batch_at(base + slot * n_chunk, n_chunk, &mut w.x, &mut w.y);
-            let (g_rows, a, probs) = rt.per_example_grads(dev, &w.x, &w.y)?;
-            let resid = residuals(&probs, &w.y, classes, smoothing);
-            let mut h = w.ws.take_tensor(&[n_chunk, d]);
-            Predictor::backprop_features_into(&resid, head_w, d, &mut h);
-            for (j, g) in g_rows.iter().enumerate() {
-                w.fit_seg.push(g, &a[j * d..(j + 1) * d], h.row(j));
-            }
-            w.ws.give_tensor(h);
-            Ok(())
-        })?;
-        self.data.advance(chunks * n_chunk);
-        // fitting also costs compute: fwd+bwd per example
-        self.cost_units +=
-            chunks as f64 * crate::theory::CostModel::default().cost_vanilla(n_chunk as f64);
-
-        // Gather the worker segments into the fit ring in canonical chunk
-        // order — bit-identical to a serial collection by construction.
-        let nw = exec::effective_workers(self.workers.len(), chunks);
-        self.fit_buf.clear();
-        for c in 0..chunks {
-            let seg = &self.workers[c % nw].fit_seg;
-            let first = (c / nw) * n_chunk;
-            for j in first..first + n_chunk {
-                self.fit_buf.push(seg.grad(j), &seg.a1(j)[..d], seg.h(j));
-            }
-        }
-
-        let report = fit_with_ws(
-            self.backend,
-            &mut self.pred,
-            &self.fit_buf,
-            self.cfg.ridge_lambda as f32,
-            &mut self.ws,
-        )?;
-        crate::log_debug!(
-            "refit: n={} energy={:.3} rel_err={:.3}",
-            report.n,
-            report.energy_captured,
-            report.rel_error
-        );
-        // Alignment diagnostics with the *new* predictor on the same
-        // samples (plug-in ρ̂/κ̂ of Sec. 5.3) — computed once per refit and
-        // cached (a per-step recomputation over n_fit × P_T floats was the
-        // top hot-path cost before the perf pass; see EXPERIMENTS.md §Perf).
-        if self.cfg.track_alignment {
-            let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..self.fit_buf.len())
-                .map(|j| {
-                    let a_row = &self.fit_buf.a1(j)[..d];
-                    let h_row = self.fit_buf.h(j);
-                    let pred_g = self.pred.predict_one_trunk(a_row, h_row);
-                    (self.fit_buf.grad(j).to_vec(), pred_g)
-                })
-                .collect();
-            self.tracker.update(alignment_of(&pairs));
-        }
-        Ok(Some(report))
-    }
-
-    // ---- evaluation --------------------------------------------------------
-
-    /// Validation accuracy over all full val batches (CheapForward path).
-    pub fn evaluate(&mut self, dev: &crate::runtime::DeviceParams) -> anyhow::Result<f64> {
-        let man = &self.rt.manifest;
-        let mut correct_weighted = 0.0;
-        let mut batches = 0usize;
-        for (x, y) in self.data.val_batches(man.val_batch) {
-            let (_, probs) = self.rt.cheap_fwd(dev, &x, man.val_batch)?;
-            correct_weighted += accuracy(&probs, &y, man.classes);
-            batches += 1;
-        }
-        Ok(if batches == 0 { 0.0 } else { correct_weighted / batches as f64 })
-    }
-
-    // ---- the budgeted training loop ---------------------------------------
-
-    /// Run until the wall-clock budget or step limit. Returns the log.
-    /// `csv` optionally streams rows for the Figure 1 series.
-    pub fn train(&mut self, mut csv: Option<&mut CsvWriter>) -> anyhow::Result<()> {
-        self.warmup()?;
-        let sw = Stopwatch::start();
-        let mut loss_ema = Ema::new(0.2);
-        loop {
-            if self.cfg.budget_secs > 0.0 && sw.seconds() >= self.cfg.budget_secs {
-                break;
-            }
-            if self.cfg.max_steps > 0 && self.step >= self.cfg.max_steps {
-                break;
-            }
-            // Refit schedule: first GPR fit happens after the first
-            // update (so early steps aren't all fit overhead), then every
-            // refit_every updates.
-            let dev = self.rt.upload_params(&self.params)?;
-            // Refit only when a prediction micro-batch exists (f < 1);
-            // at f = 1 Algorithm 1 degenerates to Algorithm 2 and the
-            // predictor is never consulted.
-            if self.cfg.algo == Algo::Gpr && self.rt.manifest.split_sizes(self.cfg.f).1 > 0 {
-                let due = if self.pred.fits == 0 {
-                    self.step >= 1
-                } else {
-                    self.cfg.refit_every > 0 && self.step % self.cfg.refit_every == 0
-                };
-                if due {
-                    self.refit_predictor(&dev)?;
-                    // Theorem 4 online: move f toward the quantized f*.
-                    if let Some(ctl) = &mut self.adaptive {
-                        let new_f = ctl.update(self.tracker.snapshot());
-                        if (new_f - self.cfg.f).abs() > 1e-12 {
-                            crate::log_info!(
-                                "adaptive-f: {:.3} -> {new_f:.3} (switch #{})",
-                                self.cfg.f,
-                                ctl.switches
-                            );
-                            self.cfg.f = new_f;
-                        }
-                    }
-                }
-            }
-
-            // Scatter micro-batches over the shards, reduce, step.
-            let (grad, loss_sum, acc_sum) = self.execute_update(&dev)?;
-            let manifest = self.rt.manifest.clone();
-            self.opt.step(&mut self.params, &grad, &manifest);
-            self.step += 1;
-
-            let loss = loss_ema.push(loss_sum / self.cfg.accum as f64);
-            let train_acc = acc_sum / self.cfg.accum as f64;
-
-            // periodic eval + log
-            let do_eval = self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0;
-            let val_acc = if do_eval {
-                let dev2 = self.rt.upload_params(&self.params)?;
-                self.evaluate(&dev2)?
-            } else {
-                f64::NAN
-            };
-            let align = self.tracker.snapshot();
-            let row = LogRow {
-                step: self.step,
-                wall_secs: sw.seconds(),
-                loss,
-                train_acc,
-                val_acc,
-                rho: align.map_or(f64::NAN, |a| a.rho),
-                kappa: align.map_or(f64::NAN, |a| a.kappa),
-                phi: align.map_or(f64::NAN, |a| a.phi(self.cfg.f)),
-                examples_seen: self.examples_seen,
-            };
-            if let Some(w) = csv.as_deref_mut() {
-                w.row(&row.values())?;
-            }
-            if do_eval {
-                crate::log_info!(
-                    "step {:>5} t={:>7.1}s loss={:.4} train_acc={:.3} val_acc={:.3} rho={:.3}",
-                    row.step,
-                    row.wall_secs,
-                    row.loss,
-                    row.train_acc,
-                    row.val_acc,
-                    row.rho
-                );
-            }
-            self.log.push(row);
-        }
-        // Final eval if the last step wasn't an eval step.
-        if self
-            .log
-            .last()
-            .map_or(true, |r| r.val_acc.is_nan())
-        {
-            let dev = self.rt.upload_params(&self.params)?;
-            let val = self.evaluate(&dev)?;
-            if let Some(r) = self.log.last_mut() {
-                r.val_acc = val;
-            }
-        }
-        Ok(())
-    }
-
-    /// Final validation accuracy from the log.
-    pub fn final_val_acc(&self) -> f64 {
-        self.log
-            .iter()
-            .rev()
-            .find(|r| !r.val_acc.is_nan())
-            .map_or(0.0, |r| r.val_acc)
-    }
-
-    /// Residual tensor helper exposed for diagnostics binaries.
-    pub fn residual_tensor(&self, probs: &[f32], y: &[i32]) -> Tensor {
-        residuals(
-            probs,
-            y,
-            self.rt.manifest.classes,
-            self.rt.manifest.label_smoothing as f32,
-        )
-    }
-}

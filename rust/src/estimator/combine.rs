@@ -1,6 +1,7 @@
-//! The control-variate combine (paper eq. 1) and the micro-batch split —
-//! the two pure functions at the heart of Algorithm 1, kept separate so
-//! property tests can hammer them without a runtime.
+//! The control-variate combine (paper eq. 1), the naive blend it is
+//! compared against, and the micro-batch split — the pure functions at
+//! the heart of the estimators, kept separate so property tests can
+//! hammer them without a runtime.
 
 use crate::model::params::FlatGrad;
 
@@ -31,6 +32,24 @@ pub fn cv_combine_into(g: &mut FlatGrad, g_cp: &FlatGrad, g_p: &FlatGrad, f: f32
     apply(&mut g.trunk, &g_cp.trunk, &g_p.trunk);
     apply(&mut g.head_w, &g_cp.head_w, &g_p.head_w);
     apply(&mut g.head_b, &g_cp.head_b, &g_p.head_b);
+}
+
+/// The naive blend WITHOUT the control-variate correction:
+/// g = f·g_ct + (1−f)·g_p, in place over the control-gradient buffers.
+/// Biased by exactly the predictor's bias — this is
+/// [`PredictedLgp`](super::PredictedLgp)'s combine, shipped as the
+/// ablation eq. (1) improves on (paper Sec. 3).
+pub fn blend_into(g: &mut FlatGrad, g_p: &FlatGrad, f: f32) {
+    let w = 1.0 - f;
+    let apply = |o: &mut [f32], p: &[f32]| {
+        debug_assert_eq!(o.len(), p.len());
+        for (ov, pv) in o.iter_mut().zip(p) {
+            *ov = f * *ov + w * pv;
+        }
+    };
+    apply(&mut g.trunk, &g_p.trunk);
+    apply(&mut g.head_w, &g_p.head_w);
+    apply(&mut g.head_b, &g_p.head_b);
 }
 
 /// Split a micro-batch index list into (control, prediction) parts with
@@ -91,6 +110,32 @@ mod tests {
         assert_eq!(g.trunk, g2.trunk);
         assert_eq!(g.head_w, g2.head_w);
         assert_eq!(g.head_b, g2.head_b);
+    }
+
+    #[test]
+    fn blend_matches_formula_and_drops_correction() {
+        let ct = fg(&[2.0, -3.0]);
+        let p = fg(&[5.0, 0.0]);
+        let f = 0.25f32;
+        let mut g = ct.clone();
+        blend_into(&mut g, &p, f);
+        for i in 0..2 {
+            let want = f * ct.trunk[i] + (1.0 - f) * p.trunk[i];
+            assert!((g.trunk[i] - want).abs() < 1e-6, "{} vs {want}", g.trunk[i]);
+        }
+        // When the predictor is exact on the control batch (g_cp == g_ct)
+        // the two estimators coincide — eq. (1)'s correction vanishes.
+        let g_cv = cv_combine(&ct, &ct, &p, f);
+        assert_eq!(g.trunk, g_cv.trunk);
+    }
+
+    #[test]
+    fn blend_at_f_one_is_the_control_gradient() {
+        let ct = fg(&[4.0, 7.0]);
+        let p = fg(&[-1.0, 2.0]);
+        let mut g = ct.clone();
+        blend_into(&mut g, &p, 1.0);
+        assert_eq!(g.trunk, ct.trunk);
     }
 
     #[test]

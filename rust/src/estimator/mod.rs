@@ -1,0 +1,485 @@
+//! Pluggable gradient estimators (DESIGN.md ADR-005).
+//!
+//! The paper's central object — an unbiased per-micro-batch gradient
+//! estimate built from a cheap predicted gradient and an occasional true
+//! gradient (eq. 1) — is a *policy*, not a training loop. This module
+//! makes that policy a first-class seam: [`GradientEstimator`] decides,
+//! per optimizer update, how a micro-batch slot splits into control and
+//! prediction parts ([`UpdatePlan`]), whether the predictor participates,
+//! and how the slot's gradients combine. The session
+//! (`crate::session::TrainSession`) stays estimator-agnostic: it
+//! scatters slots over the shard workers, reduces them in fixed order
+//! (ADR-004), and steps the optimizer.
+//!
+//! Three estimators ship:
+//!
+//! - [`TrueBackprop`] — Algorithm 2: full Forward+Backward on every
+//!   example; the vanilla baseline.
+//! - [`ControlVariate`] — Algorithm 1 (GPR): eq. (1),
+//!   `g = f·g_ct + (1−f)(g_p − (g_cp − g_ct))`, unbiased for any
+//!   predictor quality (Lemma 1). Optionally retunes f online via the
+//!   Theorem-4 controller ([`adaptive::AdaptiveF`]) and can route the
+//!   combine through the `cv_combine` device artifact.
+//! - [`PredictedLgp`] — the naive blend `f·g_ct + (1−f)·g_p` *without*
+//!   the control-variate correction: biased whenever the predictor is,
+//!   shipped as the ablation the paper argues against (Sec. 3).
+//!
+//! New estimator families (multi-tangent forward gradients, approximate
+//! VJPs — see PAPERS.md) implement the same trait without touching the
+//! training loop.
+
+pub mod adaptive;
+pub mod combine;
+
+use crate::metrics::Alignment;
+use crate::model::manifest::Manifest;
+use crate::model::params::FlatGrad;
+use crate::runtime::Runtime;
+
+pub use adaptive::AdaptiveF;
+
+/// Per-update execution plan an estimator hands the executor: how each
+/// micro-batch slot splits and whether the predictor runs. Snapshotted
+/// once per optimizer update, so every shard agrees (ADR-004).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UpdatePlan {
+    /// Examples per slot taking the true Forward+Backward (control part).
+    pub mc: usize,
+    /// Examples per slot taking CheapForward + predictor (prediction part).
+    pub mp: usize,
+    /// Whether the predictor participates this update (requires a fitted
+    /// predictor and `mp > 0`); when false the slot degenerates to the
+    /// control gradient — still unbiased.
+    pub use_pred: bool,
+    /// Effective control fraction `mc / (mc + mp)` used by the combine
+    /// (quantization-corrected).
+    pub f_eff: f32,
+}
+
+impl UpdatePlan {
+    /// Stream positions one micro-batch slot consumes. The prediction
+    /// batch is only drawn when the predictor runs — the same consumption
+    /// rule on every shard count, so slot offsets are deterministic.
+    pub fn consumed_per_slot(&self) -> usize {
+        self.mc + if self.use_pred { self.mp } else { 0 }
+    }
+
+    /// Full micro-batch size `m = mc + mp`.
+    pub fn micro_batch(&self) -> usize {
+        self.mc + self.mp
+    }
+}
+
+/// Context a combine may use: host combines ignore it, device combines
+/// route through the runtime's `cv_combine` artifact.
+pub struct CombineCx<'a> {
+    pub rt: &'a Runtime,
+}
+
+/// A pluggable gradient-estimation policy (ADR-005).
+///
+/// Implementations must be `Send + Sync`: [`combine`](Self::combine) is
+/// called concurrently from shard worker threads through a shared `&dyn`
+/// reference. All mutation (adaptive retuning) happens through
+/// [`observe_alignment`](Self::observe_alignment), which the session
+/// calls serially between updates.
+pub trait GradientEstimator: Send + Sync {
+    /// Short stable identifier, e.g. for logs and bench labels.
+    fn name(&self) -> &'static str;
+
+    /// Control fraction f ∈ (0, 1] currently in effect (1.0 when every
+    /// example takes the true backward pass). Drives artifact selection
+    /// and the φ(f) column of the log.
+    fn f(&self) -> f64;
+
+    /// Whether this estimator ever consults the linear gradient
+    /// predictor. Gates refit scheduling and predictor uploads.
+    fn uses_predictor(&self) -> bool;
+
+    /// One-time hook after the runtime manifest is loaded: validate
+    /// parameters and capture manifest facts (e.g. the admissible control
+    /// fractions for the adaptive controller).
+    fn bind(&mut self, man: &Manifest) -> anyhow::Result<()> {
+        let _ = man;
+        Ok(())
+    }
+
+    /// Build this update's plan. `predictor_fitted` reports whether at
+    /// least one refit has installed predictor state.
+    fn plan(&self, man: &Manifest, predictor_fitted: bool) -> UpdatePlan;
+
+    /// Combine one slot's gradients. `g` holds the control gradient
+    /// `g_ct` on entry and the estimate on return; `g_cp`/`g_p` are the
+    /// predictor's outputs on the control and prediction parts. Called
+    /// once per slot when `plan.use_pred`; must be deterministic and —
+    /// on the host path — allocation-free (ADR-003).
+    fn combine(
+        &self,
+        cx: &CombineCx,
+        g: &mut FlatGrad,
+        g_cp: &FlatGrad,
+        g_p: &FlatGrad,
+        f_eff: f32,
+    ) -> anyhow::Result<()>;
+
+    /// Alignment feedback after each predictor refit. Returns
+    /// `Some(new_f)` when the estimator retuned its control fraction.
+    fn observe_alignment(&mut self, align: Option<Alignment>) -> Option<f64> {
+        let _ = align;
+        None
+    }
+
+    /// Control fractions whose artifacts should be pre-compiled by
+    /// warm-up (an adaptive estimator may visit every lowered fraction).
+    fn warmup_fractions(&self, man: &Manifest) -> Vec<f64> {
+        let _ = man;
+        vec![self.f()]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TrueBackprop — Algorithm 2
+// ---------------------------------------------------------------------------
+
+/// The vanilla baseline: every example takes the full Forward+Backward;
+/// the predictor never runs. Equivalent to [`ControlVariate`] at f = 1
+/// (eq. 1 collapses to the true gradient), but skips the predictor
+/// machinery entirely.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrueBackprop;
+
+impl GradientEstimator for TrueBackprop {
+    fn name(&self) -> &'static str {
+        "true-backprop"
+    }
+
+    fn f(&self) -> f64 {
+        1.0
+    }
+
+    fn uses_predictor(&self) -> bool {
+        false
+    }
+
+    fn plan(&self, man: &Manifest, _predictor_fitted: bool) -> UpdatePlan {
+        UpdatePlan { mc: man.micro_batch, mp: 0, use_pred: false, f_eff: 1.0 }
+    }
+
+    fn combine(
+        &self,
+        _cx: &CombineCx,
+        _g: &mut FlatGrad,
+        _g_cp: &FlatGrad,
+        _g_p: &FlatGrad,
+        _f_eff: f32,
+    ) -> anyhow::Result<()> {
+        // Never reached: plan().use_pred is always false.
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ControlVariate — Algorithm 1 (GPR)
+// ---------------------------------------------------------------------------
+
+/// The paper's estimator: eq. (1) over a (control, prediction) split of
+/// each micro-batch. Unbiased for any predictor (Lemma 1); the variance
+/// inflation φ(f, ρ, κ) and the compute ratio γ(f) govern when it beats
+/// vanilla (Theorem 3).
+#[derive(Clone, Debug)]
+pub struct ControlVariate {
+    f: f64,
+    device_combine: bool,
+    adaptive_requested: bool,
+    adaptive: Option<AdaptiveF>,
+}
+
+impl ControlVariate {
+    /// Estimator with control fraction `f` (paper headline: 1/4),
+    /// host-side combine, no adaptive retuning.
+    pub fn new(f: f64) -> ControlVariate {
+        ControlVariate { f, device_combine: false, adaptive_requested: false, adaptive: None }
+    }
+
+    /// Enable the Theorem-4 online controller: after each refit, steer f
+    /// toward the quantized f*(ρ̂, κ̂) among the manifest's lowered
+    /// fractions.
+    pub fn with_adaptive(mut self, on: bool) -> ControlVariate {
+        self.adaptive_requested = on;
+        self
+    }
+
+    /// Route eq. (1) through the `cv_combine` pallas artifact instead of
+    /// the fused host loop (4 extra device round-trips; exercises the
+    /// full L1 path).
+    pub fn with_device_combine(mut self, on: bool) -> ControlVariate {
+        self.device_combine = on;
+        self
+    }
+
+    /// Whether the adaptive controller is active.
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive.is_some() || self.adaptive_requested
+    }
+}
+
+impl GradientEstimator for ControlVariate {
+    fn name(&self) -> &'static str {
+        "control-variate"
+    }
+
+    fn f(&self) -> f64 {
+        self.f
+    }
+
+    fn uses_predictor(&self) -> bool {
+        true
+    }
+
+    fn bind(&mut self, man: &Manifest) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.f > 0.0 && self.f <= 1.0,
+            "control fraction f must be in (0,1], got {}",
+            self.f
+        );
+        if self.adaptive_requested && self.adaptive.is_none() {
+            self.adaptive = Some(AdaptiveF::new(man.fs.clone(), self.f));
+        }
+        Ok(())
+    }
+
+    fn plan(&self, man: &Manifest, predictor_fitted: bool) -> UpdatePlan {
+        let (mc, mp) = man.split_sizes(self.f);
+        UpdatePlan {
+            mc,
+            mp,
+            use_pred: predictor_fitted && mp > 0,
+            f_eff: mc as f32 / man.micro_batch as f32,
+        }
+    }
+
+    fn combine(
+        &self,
+        cx: &CombineCx,
+        g: &mut FlatGrad,
+        g_cp: &FlatGrad,
+        g_p: &FlatGrad,
+        f_eff: f32,
+    ) -> anyhow::Result<()> {
+        if self.device_combine {
+            let v = cx.rt.cv_combine(&g.concat(), &g_cp.concat(), &g_p.concat(), f_eff)?;
+            *g = FlatGrad::from_concat(&v, g.trunk.len(), g.head_w.len());
+        } else {
+            // eq. (1) fused in place over the control-gradient buffers:
+            // one pass, no fresh allocation (ADR-003).
+            combine::cv_combine_into(g, g_cp, g_p, f_eff);
+        }
+        Ok(())
+    }
+
+    fn observe_alignment(&mut self, align: Option<Alignment>) -> Option<f64> {
+        let ctl = self.adaptive.as_mut()?;
+        let new_f = ctl.update(align);
+        if (new_f - self.f).abs() > 1e-12 {
+            self.f = new_f;
+            Some(new_f)
+        } else {
+            None
+        }
+    }
+
+    fn warmup_fractions(&self, man: &Manifest) -> Vec<f64> {
+        if self.is_adaptive() {
+            // The controller may visit every lowered fraction.
+            man.fs.clone()
+        } else {
+            vec![self.f]
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PredictedLgp — the no-control-variate ablation
+// ---------------------------------------------------------------------------
+
+/// Linear gradient prediction *without* the control-variate correction:
+/// `g = f·g_ct + (1−f)·g_p`. Biased whenever `E[g_p] ≠ ∇F` — this is the
+/// estimator the paper's Section 3 argues against, shipped so the bias
+/// is measurable on this testbed rather than asserted.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictedLgp {
+    f: f64,
+}
+
+impl PredictedLgp {
+    pub fn new(f: f64) -> PredictedLgp {
+        PredictedLgp { f }
+    }
+}
+
+impl GradientEstimator for PredictedLgp {
+    fn name(&self) -> &'static str {
+        "predicted-lgp"
+    }
+
+    fn f(&self) -> f64 {
+        self.f
+    }
+
+    fn uses_predictor(&self) -> bool {
+        true
+    }
+
+    fn bind(&mut self, _man: &Manifest) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.f > 0.0 && self.f <= 1.0,
+            "control fraction f must be in (0,1], got {}",
+            self.f
+        );
+        Ok(())
+    }
+
+    fn plan(&self, man: &Manifest, predictor_fitted: bool) -> UpdatePlan {
+        let (mc, mp) = man.split_sizes(self.f);
+        UpdatePlan {
+            mc,
+            mp,
+            use_pred: predictor_fitted && mp > 0,
+            f_eff: mc as f32 / man.micro_batch as f32,
+        }
+    }
+
+    fn combine(
+        &self,
+        _cx: &CombineCx,
+        g: &mut FlatGrad,
+        _g_cp: &FlatGrad,
+        g_p: &FlatGrad,
+        f_eff: f32,
+    ) -> anyhow::Result<()> {
+        combine::blend_into(g, g_p, f_eff);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{Manifest, TrunkParam};
+    use std::collections::BTreeMap;
+
+    fn manifest(micro_batch: usize, fs: Vec<f64>) -> Manifest {
+        let trunk_params = 24;
+        Manifest {
+            dir: ".".into(),
+            preset: "estimator-test".into(),
+            image: 4,
+            classes: 3,
+            width: 4,
+            label_smoothing: 0.0,
+            rank: 2,
+            n_chunk: 4,
+            n_fit: 8,
+            feat_dim: 4,
+            trunk_params,
+            total_params: trunk_params + 4 * 3 + 3,
+            micro_batch,
+            fs,
+            val_batch: 8,
+            trunk_layout: vec![TrunkParam {
+                name: "w".into(),
+                shape: vec![6, 4],
+                offset: 0,
+                len: trunk_params,
+                muon: true,
+            }],
+            artifacts: BTreeMap::new(),
+            init_trunk: ".".into(),
+            init_head_w: ".".into(),
+            init_head_b: ".".into(),
+        }
+    }
+
+    #[test]
+    fn true_backprop_plans_full_control() {
+        let man = manifest(8, vec![0.25]);
+        let plan = TrueBackprop.plan(&man, true);
+        assert_eq!(plan, UpdatePlan { mc: 8, mp: 0, use_pred: false, f_eff: 1.0 });
+        assert_eq!(plan.consumed_per_slot(), 8);
+        assert_eq!(plan.micro_batch(), 8);
+    }
+
+    #[test]
+    fn control_variate_plan_gates_on_fit_and_split() {
+        let man = manifest(8, vec![0.25]);
+        let est = ControlVariate::new(0.25);
+        let unfitted = est.plan(&man, false);
+        assert_eq!((unfitted.mc, unfitted.mp), (2, 6));
+        assert!(!unfitted.use_pred);
+        // prediction draw only happens when the predictor runs
+        assert_eq!(unfitted.consumed_per_slot(), 2);
+        let fitted = est.plan(&man, true);
+        assert!(fitted.use_pred);
+        assert_eq!(fitted.consumed_per_slot(), 8);
+        assert!((fitted.f_eff - 0.25).abs() < 1e-6);
+        // f = 1 never uses the predictor even when fitted
+        let full = ControlVariate::new(1.0).plan(&man, true);
+        assert!(!full.use_pred);
+        assert_eq!(full.mc, 8);
+    }
+
+    #[test]
+    fn bind_rejects_out_of_range_f() {
+        let man = manifest(8, vec![0.25]);
+        assert!(ControlVariate::new(0.0).bind(&man).is_err());
+        assert!(ControlVariate::new(1.5).bind(&man).is_err());
+        assert!(PredictedLgp::new(-0.1).bind(&man).is_err());
+        assert!(ControlVariate::new(0.25).bind(&man).is_ok());
+    }
+
+    #[test]
+    fn adaptive_bind_captures_manifest_fractions() {
+        let man = manifest(8, vec![0.125, 0.25, 0.5]);
+        let mut est = ControlVariate::new(0.25).with_adaptive(true);
+        est.bind(&man).unwrap();
+        assert_eq!(est.warmup_fractions(&man), vec![0.125, 0.25, 0.5]);
+        // Strong alignment: the controller must not raise f, and a change
+        // is reported back so the session can log it.
+        let good = Alignment { rho: 0.97, kappa: 1.0, sigma_g: 1.0, sigma_h: 1.0, n: 64 };
+        if let Some(new_f) = est.observe_alignment(Some(good)) {
+            assert!(new_f <= 0.25);
+            assert_eq!(est.f(), new_f);
+        } else {
+            assert_eq!(est.f(), 0.25);
+        }
+    }
+
+    #[test]
+    fn non_adaptive_never_retunes() {
+        let man = manifest(8, vec![0.125, 0.25]);
+        let mut est = ControlVariate::new(0.25);
+        est.bind(&man).unwrap();
+        let a = Alignment { rho: 0.99, kappa: 1.0, sigma_g: 1.0, sigma_h: 1.0, n: 64 };
+        assert_eq!(est.observe_alignment(Some(a)), None);
+        assert_eq!(est.f(), 0.25);
+        assert_eq!(est.warmup_fractions(&man), vec![0.25]);
+    }
+
+    #[test]
+    fn predicted_lgp_blends_without_correction() {
+        let g_ct = FlatGrad { trunk: vec![2.0, 4.0], head_w: vec![2.0], head_b: vec![2.0] };
+        let g_cp = FlatGrad { trunk: vec![9.0, 9.0], head_w: vec![9.0], head_b: vec![9.0] };
+        let g_p = FlatGrad { trunk: vec![6.0, 8.0], head_w: vec![6.0], head_b: vec![6.0] };
+        let mut g = g_ct.clone();
+        // CombineCx is only consulted by device combines; PredictedLgp is
+        // host-only, so a runtime is not needed here — call blend directly
+        // through the trait-free path.
+        combine::blend_into(&mut g, &g_p, 0.25);
+        assert_eq!(g.trunk, vec![0.25 * 2.0 + 0.75 * 6.0, 0.25 * 4.0 + 0.75 * 8.0]);
+        // Unlike eq. (1), g_cp plays no role — the estimator is biased by
+        // exactly the predictor's bias.
+        let mut g2 = g_ct.clone();
+        combine::cv_combine_into(&mut g2, &g_cp, &g_p, 0.25);
+        assert_ne!(g.trunk, g2.trunk);
+    }
+}

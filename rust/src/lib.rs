@@ -6,6 +6,22 @@
 //! predicted-gradient-descent algorithm, NTK-inspired linear gradient
 //! predictor, control-variate debiasing, and the Section 5 theory.
 //!
+//! The public API is library-first (DESIGN.md ADR-005): configure a run
+//! with [`session::SessionBuilder`], pick a [`estimator::GradientEstimator`]
+//! (or let `algo`/`f` pick one), attach [`observer::TrainObserver`] sinks,
+//! and drive the immutable [`session::TrainSession`]. Everything the CLI
+//! does goes through the same builder. Start with [`prelude`]:
+//!
+//! ```no_run
+//! use lgp::prelude::*;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = SessionBuilder::new().preset("tiny").max_steps(10).build()?;
+//! session.run()?;
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
@@ -19,14 +35,34 @@ static GLOBAL_ALLOC_COUNTER: util::alloc_track::CountingAllocator =
     util::alloc_track::CountingAllocator;
 
 pub mod bench_support;
-pub mod coordinator;
 pub mod config;
+pub mod coordinator;
 pub mod data;
+pub mod estimator;
 pub mod metrics;
-pub mod runtime;
 pub mod model;
+pub mod observer;
 pub mod optim;
 pub mod predictor;
+pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod theory;
 pub mod util;
+
+/// One-stop imports for the library-first API (ADR-005): the session
+/// builder, the shipped estimators and observers, and the config enums
+/// their setters take.
+pub mod prelude {
+    pub use crate::config::{Algo, OptimKind, RunConfig};
+    pub use crate::estimator::{
+        ControlVariate, GradientEstimator, PredictedLgp, TrueBackprop, UpdatePlan,
+    };
+    pub use crate::metrics::{Alignment, LogRow};
+    pub use crate::observer::{
+        CsvObserver, JsonlObserver, Multicast, RefitEvent, RunSummary, TrainObserver,
+    };
+    pub use crate::session::{SessionBuilder, TrainSession};
+    pub use crate::tensor::BackendKind;
+    pub use crate::theory::CostModel;
+}

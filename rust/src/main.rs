@@ -1,4 +1,7 @@
-//! lgp — leader entrypoint.
+//! lgp — leader entrypoint: a thin adapter from CLI flags to the
+//! library-first session API (`lgp::session`, DESIGN.md ADR-005). All
+//! configuration goes through `session::cli::builder_from_args`; this
+//! file only wires observers, prints summaries, and formats tables.
 //!
 //! Subcommands:
 //!   train      run Algorithm 1 (GPR) or Algorithm 2 (baseline)
@@ -14,11 +17,13 @@
 //!   lgp sweep-f --preset small --fs 0.125,0.25,0.5 --steps 20
 
 use lgp::bench_support::Table;
-use lgp::config::RunConfig;
-use lgp::coordinator::Trainer;
+use lgp::config::{Algo, OptimKind};
+use lgp::observer::{CsvObserver, JsonlObserver};
+use lgp::session::cli::builder_from_args;
+use lgp::session::SessionBuilder;
+use lgp::tensor::BackendKind;
 use lgp::theory::{self, CostModel};
-use lgp::util::cli::Args;
-use lgp::util::CsvWriter;
+use lgp::util::cli::{options, Args};
 
 fn main() {
     let args = match Args::from_env() {
@@ -35,23 +40,27 @@ fn main() {
         Some("data") => run(cmd_data(&args)),
         Some("info") => run(cmd_info(&args)),
         _ => {
-            eprint!("{}", HELP);
+            eprint!("{}", help());
             2
         }
     };
     std::process::exit(code);
 }
 
-const HELP: &str = "\
+/// Help text with the enum option lists generated from the same
+/// `EnumSpec` tables the parsers use — the lists cannot drift.
+fn help() -> String {
+    format!(
+        "\
 lgp — Linear Gradient Prediction with Control Variates (paper reproduction)
 
 USAGE: lgp <subcommand> [--key value]...
 
 SUBCOMMANDS
-  train    --preset tiny|small|paper --algo gpr|baseline [--f 0.25]
-           [--steps N] [--budget SECS] [--accum K] [--optimizer muon|adamw|sgd|momentum]
-           [--lr 0.02] [--refit-every N] [--seed S] [--csv out.csv]
-           [--backend naive|blocked|micro|auto]   (host tensor kernels; auto = probe)
+  train    --preset tiny|small|paper --algo {algo} [--f 0.25]
+           [--steps N] [--budget SECS] [--accum K] [--optimizer {optim}]
+           [--lr 0.02] [--refit-every N] [--seed S] [--csv out.csv] [--jsonl out.jsonl]
+           [--backend {backend}]   (host tensor kernels; auto = probe)
            [--shards N]   (data-parallel worker threads per update;
                            bit-identical to --shards 1, DESIGN.md ADR-004)
   theory   print Theorem 3/4 tables and the cost model
@@ -61,7 +70,12 @@ SUBCOMMANDS
 
 See also: `bench_report` (validates the BENCH_*.json bench trajectory,
 EXPERIMENTS.md) and DESIGN.md for the architecture.
-";
+",
+        algo = options(Algo::SPECS),
+        optim = options(OptimKind::SPECS),
+        backend = options(BackendKind::SPECS),
+    )
+}
 
 fn run(r: anyhow::Result<()>) -> i32 {
     match r {
@@ -73,43 +87,40 @@ fn run(r: anyhow::Result<()>) -> i32 {
     }
 }
 
-fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
-    let mut cfg = RunConfig::default();
-    if let Some(path) = args.str_opt("config") {
-        let j = RunConfig::load_json_file(std::path::Path::new(&path))?;
-        cfg.apply_json(&j)?;
-    }
-    cfg.apply_args(args)?;
+/// Builder from flags, with the typo guard applied after every train
+/// flag has been consumed.
+fn checked_builder(args: &Args) -> anyhow::Result<SessionBuilder> {
+    let b = builder_from_args(args)?;
     let unknown = args.unknown_keys();
     anyhow::ensure!(unknown.is_empty(), "unknown flags: {unknown:?}");
-    Ok(cfg)
+    Ok(b)
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let csv_path = args.str_opt("csv");
+    let jsonl_path = args.str_opt("jsonl");
     let show_artifact_times = args.flag("artifact-times");
-    let cfg = build_config(args)?;
-    let algo = cfg.algo;
-    let mut trainer = Trainer::new(cfg)?;
-    let mut csv = match &csv_path {
-        Some(p) => Some(CsvWriter::create(
-            std::path::Path::new(p),
-            &lgp::metrics::LogRow::HEADER,
-        )?),
-        None => None,
-    };
+    let mut b = checked_builder(args)?;
+    if let Some(p) = &csv_path {
+        b = b.observer(Box::new(CsvObserver::create(std::path::Path::new(p))?));
+    }
+    if let Some(p) = &jsonl_path {
+        b = b.observer(Box::new(JsonlObserver::create(std::path::Path::new(p))?));
+    }
+    let algo = b.config().algo;
+    let mut session = b.build()?;
     let t0 = std::time::Instant::now();
-    trainer.train(csv.as_mut())?;
+    session.run()?;
     let dt = t0.elapsed().as_secs_f64();
-    let st = trainer.rt.stats_snapshot();
+    let st = session.rt.stats_snapshot();
     println!(
         "algo={algo:?} backend={} shards={} steps={} wall={dt:.1}s final_val_acc={:.4} examples={} cost_units={:.0}",
-        trainer.backend.name(),
-        trainer.shards(),
-        trainer.step_count(),
-        trainer.final_val_acc(),
-        trainer.examples_seen,
-        trainer.cost_units,
+        session.backend.name(),
+        session.shards(),
+        session.step_count(),
+        session.final_val_acc(),
+        session.examples_seen,
+        session.cost_units,
     );
     println!(
         "runtime: calls={} exec={:.2}s upload={:.2}s download={:.2}s compile={:.2}s",
@@ -120,14 +131,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             println!("  {name:<28} calls={n:<4} total={secs:.2}s avg={:.1}ms", secs / *n as f64 * 1e3);
         }
     }
-    if let Some(a) = trainer.tracker.snapshot() {
+    if let Some(a) = session.tracker.snapshot() {
         let cost = CostModel::default();
+        let f = session.control_fraction();
         println!(
             "alignment: rho={:.3} kappa={:.3} phi(f)={:.3} break_even_margin={:+.3} f*={:.3}",
             a.rho,
             a.kappa,
-            a.phi(trainer.cfg.f),
-            a.break_even_margin(trainer.cfg.f, &cost),
+            a.phi(f),
+            a.break_even_margin(f, &cost),
             a.f_star(&cost)
         );
     }
@@ -168,23 +180,23 @@ fn cmd_theory(_args: &Args) -> anyhow::Result<()> {
 
 fn cmd_sweep_f(args: &Args) -> anyhow::Result<()> {
     let fs = args.f64_list("fs", &[0.125, 0.25, 0.5]);
-    let base = build_config(args)?;
+    // Parse flags (and read any --config file) exactly once; each sweep
+    // point builds from a clone of the resolved configuration.
+    let base = checked_builder(args)?.config().clone();
     let mut t = Table::new(&["f", "steps", "wall_s", "val_acc", "rho", "cost_units"]);
     for &f in &fs {
-        let mut cfg = base.clone();
-        cfg.f = f;
-        cfg.algo = lgp::config::Algo::Gpr;
-        let mut trainer = Trainer::new(cfg)?;
+        let mut session =
+            SessionBuilder::from_config(base.clone()).algo(Algo::Gpr).f(f).build()?;
         let t0 = std::time::Instant::now();
-        trainer.train(None)?;
-        let rho = trainer.tracker.snapshot().map_or(f64::NAN, |a| a.rho);
+        session.run()?;
+        let rho = session.tracker.snapshot().map_or(f64::NAN, |a| a.rho);
         t.row(vec![
             format!("{f:.3}"),
-            format!("{}", trainer.step_count()),
+            format!("{}", session.step_count()),
             format!("{:.1}", t0.elapsed().as_secs_f64()),
-            format!("{:.4}", trainer.final_val_acc()),
+            format!("{:.4}", session.final_val_acc()),
             format!("{rho:.3}"),
-            format!("{:.0}", trainer.cost_units),
+            format!("{:.0}", session.cost_units),
         ]);
     }
     t.print();
@@ -214,8 +226,8 @@ fn cmd_data(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
-    let cfg = build_config(args)?;
-    let m = lgp::model::Manifest::load(&cfg.artifacts_dir)?;
+    let dir = checked_builder(args)?.config().artifacts_dir.clone();
+    let m = lgp::model::Manifest::load(&dir)?;
     println!("preset={} image={} width={} classes={}", m.preset, m.image, m.width, m.classes);
     println!(
         "trunk_params={} total_params={} rank={} n_fit={} micro_batch={} fs={:?}",

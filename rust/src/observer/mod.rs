@@ -1,0 +1,384 @@
+//! Training observers (DESIGN.md ADR-005): an event-sink seam between
+//! the training loop and everything that wants to watch it.
+//!
+//! The session (`crate::session::TrainSession`) narrates its run through
+//! [`TrainObserver`] callbacks — one per optimizer step, evaluation, and
+//! predictor refit, plus a final summary — instead of hard-wiring a CSV
+//! writer and ad-hoc printlns into the loop. Observers are owned by the
+//! session (`SessionBuilder::observer`), called serially in registration
+//! order, and may fail: an observer error aborts the run like any other
+//! I/O error (a half-written metrics file is a broken experiment).
+//!
+//! Shipped sinks:
+//! - [`CsvObserver`] — the Figure-1 CSV series (one row per step, the
+//!   exact format the old `Trainer::train(Some(csv))` produced);
+//! - [`JsonlObserver`] — one JSON object per event (step/refit/end),
+//!   NaN-safe (`null`), for programmatic consumers;
+//! - [`Multicast`] — composes any number of observers into one.
+//!
+//! Custom observers implement whichever callbacks they need — every
+//! method defaults to a no-op. See `examples/alignment_study.rs` for an
+//! observer that captures refit diagnostics into shared state.
+
+use crate::metrics::{Alignment, LogRow};
+use crate::predictor::fit::FitReport;
+use crate::util::CsvWriter;
+use std::io::Write;
+use std::path::Path;
+
+/// One predictor refit, as seen by observers.
+#[derive(Clone, Copy, Debug)]
+pub struct RefitEvent {
+    /// Optimizer updates completed when the refit ran.
+    pub step: usize,
+    /// Fit diagnostics (sample count, rank, energy captured, rel. error).
+    pub report: FitReport,
+    /// Alignment snapshot (ρ̂, κ̂) measured with the freshly fitted
+    /// predictor, when tracking is enabled.
+    pub alignment: Option<Alignment>,
+    /// Control fraction in effect after the refit (the adaptive
+    /// controller may have just retuned it).
+    pub f: f64,
+}
+
+/// End-of-run summary, emitted exactly once.
+#[derive(Clone, Copy, Debug)]
+pub struct RunSummary {
+    pub steps: usize,
+    pub final_val_acc: f64,
+    pub examples_seen: usize,
+    /// Analytic compute units consumed (paper cost model).
+    pub cost_units: f64,
+    pub wall_secs: f64,
+}
+
+/// Event sink for a training run. All methods default to no-ops so an
+/// implementation only writes the callbacks it cares about.
+pub trait TrainObserver: Send {
+    /// After every optimizer update, with the full log row (val_acc is
+    /// NaN on non-eval steps).
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        let _ = row;
+        Ok(())
+    }
+
+    /// After each validation evaluation (periodic and final).
+    fn on_eval(&mut self, step: usize, val_acc: f64) -> anyhow::Result<()> {
+        let _ = (step, val_acc);
+        Ok(())
+    }
+
+    /// After each predictor refit.
+    fn on_refit(&mut self, ev: &RefitEvent) -> anyhow::Result<()> {
+        let _ = ev;
+        Ok(())
+    }
+
+    /// Once, when the run completes.
+    fn on_end(&mut self, summary: &RunSummary) -> anyhow::Result<()> {
+        let _ = summary;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CsvObserver
+// ---------------------------------------------------------------------------
+
+/// Streams every step row to a CSV file with the [`LogRow::HEADER`]
+/// schema — the Figure-1 series format.
+pub struct CsvObserver {
+    w: CsvWriter,
+}
+
+impl CsvObserver {
+    pub fn create(path: &Path) -> anyhow::Result<CsvObserver> {
+        Ok(CsvObserver { w: CsvWriter::create(path, &LogRow::HEADER)? })
+    }
+}
+
+impl TrainObserver for CsvObserver {
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        self.w.row(&row.values())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JsonlObserver
+// ---------------------------------------------------------------------------
+
+/// Streams one JSON object per event to a `.jsonl` file. Non-finite
+/// numbers (the NaN val_acc of non-eval steps) are written as `null`,
+/// keeping every line standard-JSON parseable.
+pub struct JsonlObserver {
+    file: std::fs::File,
+}
+
+impl JsonlObserver {
+    pub fn create(path: &Path) -> anyhow::Result<JsonlObserver> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlObserver { file: std::fs::File::create(path)? })
+    }
+}
+
+/// JSON number or `null` for non-finite values.
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl TrainObserver for JsonlObserver {
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        writeln!(
+            self.file,
+            r#"{{"event":"step","step":{},"wall_secs":{},"loss":{},"train_acc":{},"val_acc":{},"rho":{},"kappa":{},"phi":{},"examples_seen":{}}}"#,
+            row.step,
+            jnum(row.wall_secs),
+            jnum(row.loss),
+            jnum(row.train_acc),
+            jnum(row.val_acc),
+            jnum(row.rho),
+            jnum(row.kappa),
+            jnum(row.phi),
+            row.examples_seen,
+        )?;
+        Ok(())
+    }
+
+    fn on_refit(&mut self, ev: &RefitEvent) -> anyhow::Result<()> {
+        let (rho, kappa) = ev
+            .alignment
+            .map_or((f64::NAN, f64::NAN), |a| (a.rho, a.kappa));
+        writeln!(
+            self.file,
+            r#"{{"event":"refit","step":{},"n":{},"rank":{},"energy_captured":{},"rel_error":{},"rho":{},"kappa":{},"f":{}}}"#,
+            ev.step,
+            ev.report.n,
+            ev.report.rank,
+            jnum(ev.report.energy_captured),
+            jnum(ev.report.rel_error),
+            jnum(rho),
+            jnum(kappa),
+            jnum(ev.f),
+        )?;
+        Ok(())
+    }
+
+    fn on_end(&mut self, s: &RunSummary) -> anyhow::Result<()> {
+        writeln!(
+            self.file,
+            r#"{{"event":"end","steps":{},"final_val_acc":{},"examples_seen":{},"cost_units":{},"wall_secs":{}}}"#,
+            s.steps,
+            jnum(s.final_val_acc),
+            s.examples_seen,
+            jnum(s.cost_units),
+            jnum(s.wall_secs),
+        )?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multicast
+// ---------------------------------------------------------------------------
+
+/// Composes observers: forwards every event to each sink in order. The
+/// first error aborts the fan-out (later sinks do not see the event).
+#[derive(Default)]
+pub struct Multicast {
+    sinks: Vec<Box<dyn TrainObserver>>,
+}
+
+impl Multicast {
+    pub fn new() -> Multicast {
+        Multicast::default()
+    }
+
+    /// Chainable sink registration.
+    pub fn with(mut self, sink: Box<dyn TrainObserver>) -> Multicast {
+        self.sinks.push(sink);
+        self
+    }
+
+    pub fn push(&mut self, sink: Box<dyn TrainObserver>) {
+        self.sinks.push(sink);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sinks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sinks.is_empty()
+    }
+}
+
+impl TrainObserver for Multicast {
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.on_step(row)?;
+        }
+        Ok(())
+    }
+
+    fn on_eval(&mut self, step: usize, val_acc: f64) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.on_eval(step, val_acc)?;
+        }
+        Ok(())
+    }
+
+    fn on_refit(&mut self, ev: &RefitEvent) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.on_refit(ev)?;
+        }
+        Ok(())
+    }
+
+    fn on_end(&mut self, summary: &RunSummary) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.on_end(summary)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::sync::{Arc, Mutex};
+
+    fn row(step: usize, val_acc: f64) -> LogRow {
+        LogRow {
+            step,
+            wall_secs: 0.5,
+            loss: 1.25,
+            train_acc: 0.5,
+            val_acc,
+            rho: f64::NAN,
+            kappa: f64::NAN,
+            phi: f64::NAN,
+            examples_seen: 64,
+        }
+    }
+
+    fn refit_event(step: usize) -> RefitEvent {
+        RefitEvent {
+            step,
+            report: FitReport { n: 8, rank: 2, energy_captured: 0.9, rel_error: 0.1 },
+            alignment: None,
+            f: 0.25,
+        }
+    }
+
+    /// Counts events into shared state (the pattern custom observers use
+    /// to hand results back out of the session).
+    #[derive(Clone, Default)]
+    struct Counter(Arc<Mutex<(usize, usize, usize, usize)>>);
+
+    impl TrainObserver for Counter {
+        fn on_step(&mut self, _row: &LogRow) -> anyhow::Result<()> {
+            self.0.lock().unwrap().0 += 1;
+            Ok(())
+        }
+        fn on_eval(&mut self, _step: usize, _val: f64) -> anyhow::Result<()> {
+            self.0.lock().unwrap().1 += 1;
+            Ok(())
+        }
+        fn on_refit(&mut self, _ev: &RefitEvent) -> anyhow::Result<()> {
+            self.0.lock().unwrap().2 += 1;
+            Ok(())
+        }
+        fn on_end(&mut self, _s: &RunSummary) -> anyhow::Result<()> {
+            self.0.lock().unwrap().3 += 1;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn multicast_forwards_every_event_to_every_sink() {
+        let a = Counter::default();
+        let b = Counter::default();
+        let mut m = Multicast::new().with(Box::new(a.clone())).with(Box::new(b.clone()));
+        assert_eq!(m.len(), 2);
+        m.on_step(&row(1, f64::NAN)).unwrap();
+        m.on_step(&row(2, 0.5)).unwrap();
+        m.on_eval(2, 0.5).unwrap();
+        m.on_refit(&refit_event(2)).unwrap();
+        m.on_end(&RunSummary {
+            steps: 2,
+            final_val_acc: 0.5,
+            examples_seen: 64,
+            cost_units: 10.0,
+            wall_secs: 1.0,
+        })
+        .unwrap();
+        for c in [a, b] {
+            assert_eq!(*c.0.lock().unwrap(), (2, 1, 1, 1));
+        }
+    }
+
+    #[test]
+    fn multicast_stops_at_first_error() {
+        struct Failing;
+        impl TrainObserver for Failing {
+            fn on_step(&mut self, _row: &LogRow) -> anyhow::Result<()> {
+                anyhow::bail!("sink broke")
+            }
+        }
+        let after = Counter::default();
+        let mut m = Multicast::new().with(Box::new(Failing)).with(Box::new(after.clone()));
+        assert!(m.on_step(&row(1, f64::NAN)).is_err());
+        assert_eq!(after.0.lock().unwrap().0, 0, "later sinks must not see the event");
+    }
+
+    #[test]
+    fn csv_observer_writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("lgp_observer_test");
+        let path = dir.join("steps.csv");
+        let mut o = CsvObserver::create(&path).unwrap();
+        o.on_step(&row(1, f64::NAN)).unwrap();
+        o.on_step(&row(2, 0.75)).unwrap();
+        drop(o);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], LogRow::HEADER.join(","));
+        assert!(lines[2].starts_with("2,"), "{}", lines[2]);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_even_with_nan_fields() {
+        let dir = std::env::temp_dir().join("lgp_observer_test");
+        let path = dir.join("steps.jsonl");
+        let mut o = JsonlObserver::create(&path).unwrap();
+        o.on_step(&row(1, f64::NAN)).unwrap();
+        o.on_refit(&refit_event(1)).unwrap();
+        o.on_end(&RunSummary {
+            steps: 1,
+            final_val_acc: 0.5,
+            examples_seen: 64,
+            cost_units: 10.0,
+            wall_secs: 1.0,
+        })
+        .unwrap();
+        drop(o);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("bad jsonl line {line}: {e}"));
+            assert!(j.get("event").and_then(Json::as_str).is_some());
+        }
+        // NaN val_acc must surface as null, not a bare NaN token.
+        let step = Json::parse(lines[0]).unwrap();
+        assert!(step.get("val_acc").map_or(false, |v| v.as_f64().is_none()));
+        assert_eq!(step.get("step").and_then(Json::as_usize), Some(1));
+    }
+}

@@ -1,0 +1,164 @@
+//! CLI → [`SessionBuilder`] adapter.
+//!
+//! `main.rs` stays a thin shell: every `lgp train` / `lgp sweep-f` flag
+//! maps onto a typed builder setter here, inside the library, so the CLI
+//! path and the programmatic path are the *same* path — the golden test
+//! in `rust/tests/session_api.rs` pins that a flag string and the
+//! equivalent setter chain produce bit-identical runs.
+//!
+//! Precedence (unchanged from the old `RunConfig::apply_*` scheme):
+//! defaults < `--config file.json` < explicit flags.
+
+use crate::config::RunConfig;
+use crate::session::SessionBuilder;
+use crate::util::cli::Args;
+use std::path::PathBuf;
+
+/// Build a [`SessionBuilder`] from parsed CLI arguments. Enum-valued
+/// flags (`--algo`, `--optimizer`, `--backend`) fail here with the same
+/// messages as the JSON path; range validation happens at
+/// [`SessionBuilder::build`].
+pub fn builder_from_args(args: &Args) -> anyhow::Result<SessionBuilder> {
+    let mut b = SessionBuilder::new();
+    if let Some(path) = args.str_opt("config") {
+        let j = RunConfig::load_json_file(std::path::Path::new(&path))?;
+        b = b.apply_json(&j)?;
+    }
+    if let Some(v) = args.str_opt("artifacts") {
+        b = b.artifacts(PathBuf::from(v));
+    } else if let Some(p) = args.str_opt("preset") {
+        b = b.preset(&p);
+    }
+    if let Some(v) = args.str_opt("algo") {
+        b = b.algo(v.parse()?);
+    }
+    if let Some(v) = args.str_opt("optimizer") {
+        b = b.optimizer(v.parse()?);
+    }
+    if let Some(v) = args.str_opt("out") {
+        b = b.out_dir(PathBuf::from(v));
+    }
+    if let Some(v) = args.str_opt("backend") {
+        b = b.backend(v.parse()?);
+    }
+    // Numeric flags: absent keeps the builder's current value (default <
+    // json < cli precedence); present-but-malformed is a hard error, the
+    // same contract as the env overrides (`util::env_parse`) — explicit
+    // user input must never silently fall back.
+    if let Some(v) = args.parsed::<f64>("f")? {
+        b = b.f(v);
+    }
+    if let Some(v) = args.parsed::<usize>("accum")? {
+        b = b.accum(v);
+    }
+    if let Some(v) = args.parsed::<f64>("lr")? {
+        b = b.lr(v);
+    }
+    if let Some(v) = args.parsed::<f64>("weight-decay")? {
+        b = b.weight_decay(v);
+    }
+    if let Some(v) = args.parsed::<f64>("budget")? {
+        b = b.budget_secs(v);
+    }
+    if let Some(v) = args.parsed::<usize>("steps")? {
+        b = b.max_steps(v);
+    }
+    if let Some(v) = args.parsed::<usize>("refit-every")? {
+        b = b.refit_every(v);
+    }
+    if let Some(v) = args.parsed::<f64>("ridge")? {
+        b = b.ridge_lambda(v);
+    }
+    if let Some(v) = args.parsed::<usize>("train-size")? {
+        b = b.train_size(v);
+    }
+    if let Some(v) = args.parsed::<usize>("val-size")? {
+        b = b.val_size(v);
+    }
+    if let Some(v) = args.parsed::<usize>("aug-mult")? {
+        b = b.aug_multiplier(v);
+    }
+    if let Some(v) = args.parsed::<u64>("seed")? {
+        b = b.seed(v);
+    }
+    if let Some(v) = args.parsed::<usize>("eval-every")? {
+        b = b.eval_every(v);
+    }
+    if let Some(v) = args.parsed::<usize>("shards")? {
+        b = b.shards(v);
+    }
+    if args.flag("no-alignment") {
+        b = b.track_alignment(false);
+    }
+    if args.flag("adaptive-f") {
+        b = b.adaptive_f(true);
+    }
+    Ok(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algo, OptimKind};
+    use crate::tensor::BackendKind;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn flags_map_onto_builder_setters() {
+        let a = parse(
+            "train --preset small --algo gpr --f 0.125 --steps 3 --seed 9 \
+             --backend blocked --shards 2 --optimizer adamw --no-alignment",
+        );
+        let b = builder_from_args(&a).unwrap();
+        let c = b.config();
+        assert_eq!(c.artifacts_dir, PathBuf::from("artifacts/small"));
+        assert_eq!(c.algo, Algo::Gpr);
+        assert_eq!(c.optimizer, OptimKind::AdamW);
+        assert_eq!(c.backend, BackendKind::Blocked);
+        assert_eq!(c.max_steps, 3);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.shards, 2);
+        assert!(!c.track_alignment);
+        assert!((c.f - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn artifacts_flag_beats_preset_shorthand() {
+        let a = parse("train --artifacts custom/dir --preset tiny");
+        let b = builder_from_args(&a).unwrap();
+        assert_eq!(b.config().artifacts_dir, PathBuf::from("custom/dir"));
+    }
+
+    #[test]
+    fn bad_enum_flags_error_with_option_list() {
+        let a = parse("train --algo nope");
+        let err = builder_from_args(&a).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown algo 'nope'"), "{msg}");
+        assert!(msg.contains("baseline|gpr"), "{msg}");
+        let a = parse("train --backend gpu");
+        assert!(builder_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn unset_flags_keep_defaults() {
+        let a = parse("train");
+        let b = builder_from_args(&a).unwrap();
+        assert_eq!(b.config(), &RunConfig::default());
+    }
+
+    #[test]
+    fn malformed_numeric_flags_error_instead_of_defaulting() {
+        // `--steps 3O` (letter O) must not silently train with the
+        // default step count — same contract as the env overrides.
+        let a = parse("train --steps 3O");
+        let err = builder_from_args(&a).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--steps") && msg.contains("3O"), "{msg}");
+        let a = parse("train --f 0.2x");
+        assert!(builder_from_args(&a).is_err());
+    }
+}

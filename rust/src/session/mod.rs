@@ -1,0 +1,832 @@
+//! Library-first training sessions (DESIGN.md ADR-005).
+//!
+//! This module is the public face of the training system:
+//! [`SessionBuilder`] — typed, chainable, validated configuration —
+//! produces an immutable [`TrainSession`] that drives the paper's
+//! algorithms over the sharded executor (ADR-004) with a pluggable
+//! [`GradientEstimator`](crate::estimator::GradientEstimator) and any
+//! number of [`TrainObserver`](crate::observer::TrainObserver) sinks:
+//!
+//! ```no_run
+//! use lgp::prelude::*;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let csv = CsvObserver::create(std::path::Path::new("runs/curve.csv"))?;
+//! let mut session = SessionBuilder::new()
+//!     .preset("tiny")
+//!     .algo(Algo::Gpr)
+//!     .f(0.25)
+//!     .max_steps(20)
+//!     .observer(Box::new(csv))
+//!     .build()?;
+//! session.run()?;
+//! println!("val acc {:.3}", session.final_val_acc());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! One GPR micro-batch slot and the scatter/reduce update are documented
+//! in [`worker`] and DESIGN.md §6; the determinism contract (`--shards N`
+//! bit-identical to serial) and the zero-allocation steady state carry
+//! over from the `Trainer` this API replaces — the same tests now pin
+//! them through `TrainSession`.
+
+pub mod cli;
+mod worker;
+
+pub use worker::{ShardWorker, SlotCtx};
+
+use crate::config::{Algo, OptimKind, RunConfig};
+use crate::coordinator::{exec, reduce};
+use crate::data::loader::DataPipeline;
+use crate::estimator::{ControlVariate, GradientEstimator, TrueBackprop};
+use crate::metrics::{alignment_of, AlignmentMeter, Ema, LogRow};
+use crate::model::params::{FlatGrad, ParamStore};
+use crate::observer::{RefitEvent, RunSummary, TrainObserver};
+use crate::optim::{OptimConfig, Optimizer};
+use crate::predictor::fit::{fit_with_ws, FitBuffer, FitReport};
+use crate::predictor::{residuals, Predictor};
+use crate::runtime::{DeviceParams, Runtime};
+use crate::tensor::{backend, Backend, BackendKind, Workspace};
+use crate::util::json::Json;
+use crate::util::Stopwatch;
+use std::path::PathBuf;
+
+// ---------------------------------------------------------------------------
+// SessionBuilder
+// ---------------------------------------------------------------------------
+
+/// Typed, chainable configuration for a [`TrainSession`].
+///
+/// Setters never fail; [`build`](SessionBuilder::build) validates the
+/// whole configuration at once (control fraction in (0, 1], `shards >= 1`,
+/// `accum >= 1`, a wall-clock budget or a step limit present) *before*
+/// touching the artifact directory, then loads the runtime and assembles
+/// the immutable session.
+///
+/// The estimator defaults from [`algo`](SessionBuilder::algo) /
+/// [`f`](SessionBuilder::f) / [`adaptive_f`](SessionBuilder::adaptive_f);
+/// an explicit [`estimator`](SessionBuilder::estimator) overrides all
+/// three.
+pub struct SessionBuilder {
+    cfg: RunConfig,
+    estimator: Option<Box<dyn GradientEstimator>>,
+    observers: Vec<Box<dyn TrainObserver>>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionBuilder {
+    /// Builder over [`RunConfig::default`] (tiny preset, GPR, f = 1/4).
+    pub fn new() -> SessionBuilder {
+        SessionBuilder::from_config(RunConfig::default())
+    }
+
+    /// Builder starting from an existing configuration (sweeps, tests).
+    pub fn from_config(cfg: RunConfig) -> SessionBuilder {
+        SessionBuilder { cfg, estimator: None, observers: Vec::new() }
+    }
+
+    /// The configuration as currently accumulated (inspection/tests).
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Artifact directory holding `manifest.json` + the AOT HLO files.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Shorthand for `.artifacts(format!("artifacts/{name}"))`.
+    pub fn preset(mut self, name: &str) -> Self {
+        self.cfg.artifacts_dir = PathBuf::from(format!("artifacts/{name}"));
+        self
+    }
+
+    /// Algorithm selection; ignored when an explicit estimator is set.
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.cfg.algo = algo;
+        self
+    }
+
+    /// Explicit gradient estimator (overrides `algo`/`f`/`adaptive_f`).
+    pub fn estimator(mut self, est: Box<dyn GradientEstimator>) -> Self {
+        self.estimator = Some(est);
+        self
+    }
+
+    /// Register an event sink; may be called repeatedly (sinks fire in
+    /// registration order).
+    pub fn observer(mut self, obs: Box<dyn TrainObserver>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Control fraction f ∈ (0, 1] for the default estimator.
+    pub fn f(mut self, f: f64) -> Self {
+        self.cfg.f = f;
+        self
+    }
+
+    /// Gradient-accumulation micro-batches per optimizer update.
+    pub fn accum(mut self, accum: usize) -> Self {
+        self.cfg.accum = accum;
+        self
+    }
+
+    pub fn optimizer(mut self, kind: OptimKind) -> Self {
+        self.cfg.optimizer = kind;
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.cfg.lr = lr;
+        self
+    }
+
+    pub fn weight_decay(mut self, wd: f64) -> Self {
+        self.cfg.weight_decay = wd;
+        self
+    }
+
+    /// Wall-clock budget in seconds; 0 disables the budget (a step limit
+    /// must then be set).
+    pub fn budget_secs(mut self, secs: f64) -> Self {
+        self.cfg.budget_secs = secs;
+        self
+    }
+
+    /// Maximum optimizer updates; 0 = unlimited (budget governs).
+    pub fn max_steps(mut self, steps: usize) -> Self {
+        self.cfg.max_steps = steps;
+        self
+    }
+
+    /// Predictor refit period in optimizer updates.
+    pub fn refit_every(mut self, every: usize) -> Self {
+        self.cfg.refit_every = every;
+        self
+    }
+
+    pub fn ridge_lambda(mut self, lambda: f64) -> Self {
+        self.cfg.ridge_lambda = lambda;
+        self
+    }
+
+    pub fn train_size(mut self, n: usize) -> Self {
+        self.cfg.train_size = n;
+        self
+    }
+
+    pub fn val_size(mut self, n: usize) -> Self {
+        self.cfg.val_size = n;
+        self
+    }
+
+    /// Pre-augmentation multiplier (paper: 2x).
+    pub fn aug_multiplier(mut self, mult: usize) -> Self {
+        self.cfg.aug_multiplier = mult;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Evaluate validation accuracy every N updates (0 = only at end).
+    pub fn eval_every(mut self, every: usize) -> Self {
+        self.cfg.eval_every = every;
+        self
+    }
+
+    pub fn out_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.out_dir = dir.into();
+        self
+    }
+
+    /// Track ρ̂/κ̂ alignment diagnostics at each refit.
+    pub fn track_alignment(mut self, on: bool) -> Self {
+        self.cfg.track_alignment = on;
+        self
+    }
+
+    /// Theorem-4 online control-fraction tuning for the default
+    /// estimator.
+    pub fn adaptive_f(mut self, on: bool) -> Self {
+        self.cfg.adaptive_f = on;
+        self
+    }
+
+    /// Host tensor backend (`Auto` = one-shot calibration probe).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.cfg.backend = kind;
+        self
+    }
+
+    /// Data-parallel worker shards per optimizer update (ADR-004); any
+    /// value is bit-identical to 1.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.cfg.shards = shards;
+        self
+    }
+
+    /// Apply a JSON config document (same keys as the CLI flags). Enum
+    /// strings fail immediately; range validation happens at `build`.
+    pub fn apply_json(mut self, j: &Json) -> anyhow::Result<Self> {
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            self.cfg.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("algo").and_then(Json::as_str) {
+            self.cfg.algo = v.parse()?;
+        }
+        if let Some(v) = j.get("optimizer").and_then(Json::as_str) {
+            self.cfg.optimizer = v.parse()?;
+        }
+        if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
+            self.cfg.out_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("backend").and_then(Json::as_str) {
+            self.cfg.backend = v.parse()?;
+        }
+        macro_rules! num {
+            ($key:literal, $field:expr, $ty:ty) => {
+                if let Some(v) = j.get($key).and_then(Json::as_f64) {
+                    $field = v as $ty;
+                }
+            };
+        }
+        num!("f", self.cfg.f, f64);
+        num!("accum", self.cfg.accum, usize);
+        num!("lr", self.cfg.lr, f64);
+        num!("weight_decay", self.cfg.weight_decay, f64);
+        num!("budget_secs", self.cfg.budget_secs, f64);
+        num!("max_steps", self.cfg.max_steps, usize);
+        num!("refit_every", self.cfg.refit_every, usize);
+        num!("ridge_lambda", self.cfg.ridge_lambda, f64);
+        num!("train_size", self.cfg.train_size, usize);
+        num!("val_size", self.cfg.val_size, usize);
+        num!("aug_multiplier", self.cfg.aug_multiplier, usize);
+        num!("seed", self.cfg.seed, u64);
+        num!("eval_every", self.cfg.eval_every, usize);
+        num!("shards", self.cfg.shards, usize);
+        if let Some(v) = j.get("track_alignment").and_then(Json::as_bool) {
+            self.cfg.track_alignment = v;
+        }
+        if let Some(v) = j.get("adaptive_f").and_then(Json::as_bool) {
+            self.cfg.adaptive_f = v;
+        }
+        Ok(self)
+    }
+
+    /// Validate the configuration, load the runtime, and assemble the
+    /// session. Validation runs before any filesystem access, so
+    /// misconfiguration errors are not masked by missing artifacts.
+    pub fn build(self) -> anyhow::Result<TrainSession> {
+        let SessionBuilder { cfg, estimator, observers } = self;
+        cfg.validate()?;
+        // The Theorem-4 controller is driven by the alignment snapshots
+        // the refit produces; without tracking it would silently hold f
+        // forever — reject the dead combination instead.
+        anyhow::ensure!(
+            !(cfg.adaptive_f && !cfg.track_alignment),
+            "adaptive_f requires track_alignment (the controller consumes ρ̂/κ̂ snapshots)"
+        );
+        let mut est = match estimator {
+            Some(e) => e,
+            None => match cfg.algo {
+                Algo::Baseline => Box::new(TrueBackprop) as Box<dyn GradientEstimator>,
+                Algo::Gpr => Box::new(ControlVariate::new(cfg.f).with_adaptive(cfg.adaptive_f)),
+            },
+        };
+        anyhow::ensure!(
+            est.f() > 0.0 && est.f() <= 1.0,
+            "estimator '{}': control fraction f must be in (0,1], got {}",
+            est.name(),
+            est.f()
+        );
+
+        // Install the tensor backend first: every dense host path below
+        // (fit, Muon, diagnostics) dispatches through it.
+        let be = backend::set_active(cfg.backend);
+        crate::log_info!("tensor backend: {} (requested: {})", be.name(), cfg.backend.as_str());
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        est.bind(&rt.manifest)?;
+        let params = ParamStore::load_init(&rt.manifest)?;
+        let opt = Optimizer::new(
+            cfg.optimizer,
+            OptimConfig {
+                lr: cfg.lr as f32,
+                weight_decay: cfg.weight_decay as f32,
+                backend: be,
+                ..OptimConfig::default()
+            },
+            &params,
+            &rt.manifest,
+        );
+        let pred = Predictor::new(rt.manifest.trunk_params, rt.manifest.width, rt.manifest.rank);
+        let fit_buf = FitBuffer::new(rt.manifest.n_fit);
+        let data = DataPipeline::build(
+            cfg.train_size,
+            cfg.val_size,
+            rt.manifest.image,
+            rt.manifest.classes,
+            cfg.aug_multiplier,
+            cfg.seed,
+        );
+        let shards = cfg.shards.max(1);
+        if shards > 1 {
+            crate::log_info!("sharded executor: {shards} worker threads (ADR-004)");
+        }
+        let chunks = rt.manifest.n_fit.div_ceil(rt.manifest.n_chunk);
+        // Each worker's segment holds exactly its worst-case round-robin
+        // share of refit chunks — never more, so the ring cannot slide.
+        let seg_cap = chunks.div_ceil(shards) * rt.manifest.n_chunk;
+        let workers = (0..shards)
+            .map(|_| ShardWorker::new(data.make_view(), seg_cap.max(1)))
+            .collect();
+        Ok(TrainSession {
+            tracker: AlignmentMeter::default(),
+            backend: be,
+            ws: Workspace::new(),
+            workers,
+            fit_buf,
+            est,
+            observers,
+            cfg,
+            rt,
+            params,
+            opt,
+            pred,
+            data,
+            dev_pred: None,
+            log: Vec::new(),
+            cost_units: 0.0,
+            examples_seen: 0,
+            step: 0,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TrainSession
+// ---------------------------------------------------------------------------
+
+/// An assembled training run: immutable configuration, the runtime and
+/// parameter state it drives, the estimator policy, and the observer
+/// pipeline. Produced by [`SessionBuilder::build`]; consumed by
+/// [`run`](TrainSession::run).
+pub struct TrainSession {
+    /// The validated configuration (read-only after build).
+    pub cfg: RunConfig,
+    pub rt: Runtime,
+    pub params: ParamStore,
+    pub opt: Optimizer,
+    pub pred: Predictor,
+    fit_buf: FitBuffer,
+    pub data: DataPipeline,
+    pub tracker: AlignmentMeter,
+    /// Host tensor backend selected at build from `cfg.backend` (Auto →
+    /// calibration probe); threaded through the fit and the optimizer.
+    pub backend: Backend,
+    /// Long-lived scratch arena threaded through the predictor refit so
+    /// repeat fits reuse the same slabs (ADR-003).
+    ws: Workspace,
+    /// One state bundle per configured shard (ADR-004); `workers[0]` is
+    /// the serial path's state when `shards = 1`.
+    workers: Vec<ShardWorker>,
+    dev_pred: Option<crate::runtime::DevicePredictor>,
+    /// The gradient-estimation policy (ADR-005).
+    est: Box<dyn GradientEstimator>,
+    observers: Vec<Box<dyn TrainObserver>>,
+    pub log: Vec<LogRow>,
+    /// Analytic compute units consumed (paper cost model), for the
+    /// cost-model bench.
+    pub cost_units: f64,
+    pub examples_seen: usize,
+    step: usize,
+}
+
+impl TrainSession {
+    /// Pre-compile the artifacts this configuration will touch.
+    pub fn warmup(&self) -> anyhow::Result<()> {
+        let m = &self.rt.manifest;
+        let mut names = vec![m.per_example_grads_name(), "cv_combine".to_string()];
+        for f in self.est.warmup_fractions(m) {
+            let (mc, mp) = m.split_sizes(f);
+            names.push(m.train_grads_name(mc));
+            // predict artifacts are only touched when there is a
+            // prediction micro-batch (f < 1)
+            if mp > 0 && self.est.uses_predictor() {
+                names.push(m.predict_grad_name(mc));
+                names.push(m.cheap_fwd_name(mp));
+                names.push(m.predict_grad_name(mp));
+            }
+        }
+        names.push(m.cheap_fwd_name(m.val_batch));
+        self.rt.warmup(&names)
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// Configured shard count (worker thread pool width).
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The estimation policy driving this session.
+    pub fn estimator(&self) -> &dyn GradientEstimator {
+        &*self.est
+    }
+
+    /// Control fraction currently in effect (the adaptive controller may
+    /// move it between updates).
+    pub fn control_fraction(&self) -> f64 {
+        self.est.f()
+    }
+
+    // ---- one optimizer update (scatter/reduce over the shards) -----------
+
+    /// Accumulate `cfg.accum` micro-batch gradients across the shard
+    /// workers and return the reduced leaf sums in slot order — gradient
+    /// plus the (loss, acc) traces.
+    fn execute_update(&mut self, dev: &DeviceParams) -> anyhow::Result<(FlatGrad, f64, f64)> {
+        let plan = self.est.plan(&self.rt.manifest, self.pred.fits > 0);
+        if plan.use_pred {
+            // Upload once per update (version-cached) and share read-only
+            // across the shards.
+            let up = self.rt.upload_predictor(&self.pred, self.dev_pred.take())?;
+            self.dev_pred = Some(up);
+        }
+        let ctx = SlotCtx {
+            rt: &self.rt,
+            dev,
+            dev_pred: if plan.use_pred { self.dev_pred.as_ref() } else { None },
+            est: &*self.est,
+            plan,
+            classes: self.rt.manifest.classes,
+        };
+        let per_slot = plan.consumed_per_slot();
+        let base = self.data.cursor();
+        let slots = self.cfg.accum;
+        // Scatter: each worker thread computes its round-robin slots
+        // against disjoint stream ranges; gather is slot-ordered.
+        let outs = exec::scatter(&mut self.workers, slots, |w, slot| {
+            worker::run_micro(&ctx, w, base + slot * per_slot)
+        })?;
+        self.data.advance(slots * per_slot);
+
+        // Reduce: fixed topology over slot order (ADR-004) for the
+        // gradient and every scalar trace.
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut cost_sum = 0.0f64;
+        let mut examples = 0usize;
+        let mut grads = Vec::with_capacity(outs.len());
+        for o in outs {
+            loss_sum += o.loss as f64;
+            acc_sum += o.acc;
+            cost_sum += o.cost;
+            examples += o.examples;
+            grads.push(o.grad);
+        }
+        let mut grad = reduce::tree_reduce_grads(grads)
+            .expect("accum >= 1 is enforced by RunConfig::validate");
+        grad.scale(1.0 / slots as f32);
+        self.cost_units += cost_sum;
+        self.examples_seen += examples;
+        Ok((grad, loss_sum, acc_sum))
+    }
+
+    // ---- predictor refit -------------------------------------------------
+
+    /// Collect per-example gradients (chunks scattered across the shards,
+    /// gathered in canonical chunk order) and refit (U, B). Also feeds the
+    /// Sec. 5.3 alignment tracker with (g_j, ĝ_j) pairs.
+    pub fn refit_predictor(&mut self, dev: &DeviceParams) -> anyhow::Result<Option<FitReport>> {
+        let (n_chunk, chunks, d, classes, smoothing) = {
+            let man = &self.rt.manifest;
+            (
+                man.n_chunk,
+                man.n_fit.div_ceil(man.n_chunk),
+                man.width,
+                man.classes,
+                man.label_smoothing as f32,
+            )
+        };
+        for w in &mut self.workers {
+            w.fit_seg.clear();
+        }
+        let base = self.data.cursor();
+        let rt = &self.rt;
+        let head_w = &self.params.head_w;
+        exec::scatter(&mut self.workers, chunks, |w, slot| {
+            w.view.batch_at(base + slot * n_chunk, n_chunk, &mut w.x, &mut w.y);
+            let (g_rows, a, probs) = rt.per_example_grads(dev, &w.x, &w.y)?;
+            let resid = residuals(&probs, &w.y, classes, smoothing);
+            let mut h = w.ws.take_tensor(&[n_chunk, d]);
+            Predictor::backprop_features_into(&resid, head_w, d, &mut h);
+            for (j, g) in g_rows.iter().enumerate() {
+                w.fit_seg.push(g, &a[j * d..(j + 1) * d], h.row(j));
+            }
+            w.ws.give_tensor(h);
+            Ok(())
+        })?;
+        self.data.advance(chunks * n_chunk);
+        // fitting also costs compute: fwd+bwd per example
+        self.cost_units +=
+            chunks as f64 * crate::theory::CostModel::default().cost_vanilla(n_chunk as f64);
+
+        // Gather the worker segments into the fit ring in canonical chunk
+        // order — bit-identical to a serial collection by construction.
+        let nw = exec::effective_workers(self.workers.len(), chunks);
+        self.fit_buf.clear();
+        for c in 0..chunks {
+            let seg = &self.workers[c % nw].fit_seg;
+            let first = (c / nw) * n_chunk;
+            for j in first..first + n_chunk {
+                self.fit_buf.push(seg.grad(j), &seg.a1(j)[..d], seg.h(j));
+            }
+        }
+
+        let report = fit_with_ws(
+            self.backend,
+            &mut self.pred,
+            &self.fit_buf,
+            self.cfg.ridge_lambda as f32,
+            &mut self.ws,
+        )?;
+        crate::log_debug!(
+            "refit: n={} energy={:.3} rel_err={:.3}",
+            report.n,
+            report.energy_captured,
+            report.rel_error
+        );
+        // Alignment diagnostics with the *new* predictor on the same
+        // samples (plug-in ρ̂/κ̂ of Sec. 5.3) — computed once per refit and
+        // cached (a per-step recomputation over n_fit × P_T floats was the
+        // top hot-path cost before the perf pass; see EXPERIMENTS.md §Perf).
+        if self.cfg.track_alignment {
+            let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..self.fit_buf.len())
+                .map(|j| {
+                    let a_row = &self.fit_buf.a1(j)[..d];
+                    let h_row = self.fit_buf.h(j);
+                    let pred_g = self.pred.predict_one_trunk(a_row, h_row);
+                    (self.fit_buf.grad(j).to_vec(), pred_g)
+                })
+                .collect();
+            self.tracker.update(alignment_of(&pairs));
+        }
+        Ok(Some(report))
+    }
+
+    // ---- evaluation --------------------------------------------------------
+
+    /// Validation accuracy over all full val batches (CheapForward path).
+    pub fn evaluate(&mut self, dev: &DeviceParams) -> anyhow::Result<f64> {
+        let man = &self.rt.manifest;
+        let mut correct_weighted = 0.0;
+        let mut batches = 0usize;
+        for (x, y) in self.data.val_batches(man.val_batch) {
+            let (_, probs) = self.rt.cheap_fwd(dev, &x, man.val_batch)?;
+            correct_weighted += crate::metrics::accuracy(&probs, &y, man.classes);
+            batches += 1;
+        }
+        Ok(if batches == 0 { 0.0 } else { correct_weighted / batches as f64 })
+    }
+
+    // ---- the budgeted training loop ---------------------------------------
+
+    /// Run until the wall-clock budget or step limit, notifying observers
+    /// at each step/eval/refit and once at the end.
+    pub fn run(&mut self) -> anyhow::Result<()> {
+        self.warmup()?;
+        let sw = Stopwatch::start();
+        let mut loss_ema = Ema::new(0.2);
+        loop {
+            if self.cfg.budget_secs > 0.0 && sw.seconds() >= self.cfg.budget_secs {
+                break;
+            }
+            if self.cfg.max_steps > 0 && self.step >= self.cfg.max_steps {
+                break;
+            }
+            let dev = self.rt.upload_params(&self.params)?;
+            // Refit schedule: first fit happens after the first update (so
+            // early steps aren't all fit overhead), then every refit_every
+            // updates — and only when the estimator would actually run a
+            // prediction micro-batch once fitted (mp > 0; at f = 1 eq. (1)
+            // degenerates to Algorithm 2 and the predictor is never
+            // consulted). Asking the plan — not re-deriving the split —
+            // keeps custom estimators' split rules authoritative.
+            if self.est.uses_predictor()
+                && self.est.plan(&self.rt.manifest, true).mp > 0
+            {
+                let due = if self.pred.fits == 0 {
+                    self.step >= 1
+                } else {
+                    self.cfg.refit_every > 0 && self.step % self.cfg.refit_every == 0
+                };
+                if due {
+                    if let Some(report) = self.refit_predictor(&dev)? {
+                        let align = self.tracker.snapshot();
+                        // Theorem 4 online: the estimator may retune f.
+                        if let Some(new_f) = self.est.observe_alignment(align) {
+                            crate::log_info!(
+                                "adaptive-f: control fraction -> {new_f:.3}"
+                            );
+                        }
+                        let ev = RefitEvent {
+                            step: self.step,
+                            report,
+                            alignment: align,
+                            f: self.est.f(),
+                        };
+                        for o in &mut self.observers {
+                            o.on_refit(&ev)?;
+                        }
+                    }
+                }
+            }
+
+            // Scatter micro-batches over the shards, reduce, step.
+            let (grad, loss_sum, acc_sum) = self.execute_update(&dev)?;
+            self.opt.step(&mut self.params, &grad, &self.rt.manifest);
+            self.step += 1;
+
+            let loss = loss_ema.push(loss_sum / self.cfg.accum as f64);
+            let train_acc = acc_sum / self.cfg.accum as f64;
+
+            // periodic eval + log
+            let do_eval = self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0;
+            let val_acc = if do_eval {
+                let dev2 = self.rt.upload_params(&self.params)?;
+                self.evaluate(&dev2)?
+            } else {
+                f64::NAN
+            };
+            let align = self.tracker.snapshot();
+            let row = LogRow {
+                step: self.step,
+                wall_secs: sw.seconds(),
+                loss,
+                train_acc,
+                val_acc,
+                rho: align.map_or(f64::NAN, |a| a.rho),
+                kappa: align.map_or(f64::NAN, |a| a.kappa),
+                phi: align.map_or(f64::NAN, |a| a.phi(self.est.f())),
+                examples_seen: self.examples_seen,
+            };
+            for o in &mut self.observers {
+                o.on_step(&row)?;
+            }
+            if do_eval {
+                for o in &mut self.observers {
+                    o.on_eval(row.step, val_acc)?;
+                }
+                crate::log_info!(
+                    "step {:>5} t={:>7.1}s loss={:.4} train_acc={:.3} val_acc={:.3} rho={:.3}",
+                    row.step,
+                    row.wall_secs,
+                    row.loss,
+                    row.train_acc,
+                    row.val_acc,
+                    row.rho
+                );
+            }
+            self.log.push(row);
+        }
+        // Final eval if the last step wasn't an eval step.
+        if self.log.last().map_or(true, |r| r.val_acc.is_nan()) {
+            let dev = self.rt.upload_params(&self.params)?;
+            let val = self.evaluate(&dev)?;
+            if let Some(r) = self.log.last_mut() {
+                r.val_acc = val;
+            }
+            let step = self.step;
+            for o in &mut self.observers {
+                o.on_eval(step, val)?;
+            }
+        }
+        let summary = RunSummary {
+            steps: self.step,
+            final_val_acc: self.final_val_acc(),
+            examples_seen: self.examples_seen,
+            cost_units: self.cost_units,
+            wall_secs: sw.seconds(),
+        };
+        for o in &mut self.observers {
+            o.on_end(&summary)?;
+        }
+        Ok(())
+    }
+
+    /// Final validation accuracy from the log.
+    pub fn final_val_acc(&self) -> f64 {
+        self.log
+            .iter()
+            .rev()
+            .find(|r| !r.val_acc.is_nan())
+            .map_or(0.0, |r| r.val_acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::PredictedLgp;
+
+    #[test]
+    fn builder_accumulates_typed_settings() {
+        let b = SessionBuilder::new()
+            .preset("small")
+            .algo(Algo::Baseline)
+            .f(0.5)
+            .accum(4)
+            .optimizer(OptimKind::AdamW)
+            .lr(0.003)
+            .max_steps(7)
+            .seed(9)
+            .shards(2)
+            .backend(BackendKind::Micro)
+            .track_alignment(false);
+        let c = b.config();
+        assert_eq!(c.artifacts_dir, PathBuf::from("artifacts/small"));
+        assert_eq!(c.algo, Algo::Baseline);
+        assert_eq!(c.optimizer, OptimKind::AdamW);
+        assert_eq!(c.max_steps, 7);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.backend, BackendKind::Micro);
+        assert!(!c.track_alignment);
+        assert!((c.f - 0.5).abs() < 1e-12);
+        assert!((c.lr - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_document_maps_onto_builder() {
+        let j = Json::parse(
+            r#"{"algo":"baseline","f":0.5,"lr":0.1,"optimizer":"adamw",
+                "max_steps":7,"track_alignment":false,"backend":"micro","shards":4}"#,
+        )
+        .unwrap();
+        let b = SessionBuilder::new().apply_json(&j).unwrap();
+        let c = b.config();
+        assert_eq!(c.algo, Algo::Baseline);
+        assert_eq!(c.optimizer, OptimKind::AdamW);
+        assert_eq!(c.max_steps, 7);
+        assert_eq!(c.shards, 4);
+        assert!(!c.track_alignment);
+        assert!((c.f - 0.5).abs() < 1e-12);
+        assert_eq!(c.backend, BackendKind::Micro);
+    }
+
+    #[test]
+    fn bad_enum_strings_fail_at_apply_time() {
+        let j = Json::parse(r#"{"backend":"gpu"}"#).unwrap();
+        assert!(SessionBuilder::new().apply_json(&j).is_err());
+        let j = Json::parse(r#"{"algo":"nope"}"#).unwrap();
+        assert!(SessionBuilder::new().apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn build_validates_before_touching_artifacts() {
+        // Invalid settings must surface their own message, not a missing-
+        // artifacts error, even though the artifacts_dir does not exist.
+        let err = SessionBuilder::new().f(1.5).build().unwrap_err();
+        assert!(format!("{err}").contains("f must be in (0,1]"), "{err}");
+        let err = SessionBuilder::new().shards(0).build().unwrap_err();
+        assert!(format!("{err}").contains("shards must be >= 1"), "{err}");
+        let err = SessionBuilder::new().max_steps(0).budget_secs(0.0).build().unwrap_err();
+        assert!(format!("{err}").contains("budget or a step limit"), "{err}");
+        let err = SessionBuilder::new().accum(0).build().unwrap_err();
+        assert!(format!("{err}").contains("accum"), "{err}");
+    }
+
+    #[test]
+    fn adaptive_f_without_alignment_tracking_is_rejected() {
+        // The controller consumes ρ̂/κ̂ snapshots; without tracking it
+        // would silently never adapt — a dead configuration.
+        let err = SessionBuilder::new()
+            .adaptive_f(true)
+            .track_alignment(false)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("track_alignment"), "{err}");
+    }
+
+    #[test]
+    fn explicit_estimator_is_validated_too() {
+        let err = SessionBuilder::new()
+            .estimator(Box::new(PredictedLgp::new(0.0)))
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("control fraction"), "{err}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Per-shard worker state and the micro-batch slot task (ADR-004 +
+//! ADR-005).
+//!
+//! One slot of one optimizer update runs entirely on the calling worker
+//! thread: gather the control batch, true Forward+Backward, then — when
+//! the estimator's plan says so — the predictor passes and the
+//! estimator's combine. The estimator is shared read-only across the
+//! scatter (`&dyn GradientEstimator`); all mutable state lives in the
+//! worker.
+
+use crate::data::loader::ShardDataView;
+use crate::estimator::{CombineCx, GradientEstimator, UpdatePlan};
+use crate::metrics::accuracy;
+use crate::model::params::FlatGrad;
+use crate::predictor::fit::FitBuffer;
+use crate::runtime::{DeviceParams, DevicePredictor, Runtime, TrainOut};
+use crate::tensor::Workspace;
+use crate::theory::CostModel;
+
+/// Everything one worker thread owns (ADR-004). Nothing here is shared:
+/// the scatter hands each worker's `&mut ShardWorker` to exactly one
+/// scoped thread, which is what makes the update data-race-free without
+/// locks on the hot path.
+pub struct ShardWorker {
+    /// Position-addressed window onto the training stream (shared
+    /// `Arc<Dataset>`, private per-epoch permutation cache).
+    pub(crate) view: ShardDataView,
+    /// This worker's refit ring segment: its round-robin share of the
+    /// per-example gradient chunks lands here, then the session gathers
+    /// segments in canonical chunk order.
+    pub(crate) fit_seg: FitBuffer,
+    /// Private scratch arena — per-worker reuse keeps the steady state
+    /// allocation-free with no cross-thread churn (the `alloc-counter`
+    /// test asserts this per thread).
+    pub(crate) ws: Workspace,
+    /// Gather scratch for the control batch (capacity retained).
+    pub(crate) x: Vec<f32>,
+    pub(crate) y: Vec<i32>,
+    /// Gather scratch for the prediction batch.
+    pub(crate) xp: Vec<f32>,
+    pub(crate) yp: Vec<i32>,
+}
+
+impl ShardWorker {
+    pub(crate) fn new(view: ShardDataView, fit_seg_capacity: usize) -> ShardWorker {
+        ShardWorker {
+            view,
+            fit_seg: FitBuffer::new(fit_seg_capacity),
+            ws: Workspace::new(),
+            x: Vec::new(),
+            y: Vec::new(),
+            xp: Vec::new(),
+            yp: Vec::new(),
+        }
+    }
+}
+
+/// Per-update constants a micro-batch slot task needs — snapshotted by
+/// the session before the scatter so worker threads share only immutable
+/// state.
+pub struct SlotCtx<'a> {
+    pub rt: &'a Runtime,
+    pub dev: &'a DeviceParams,
+    pub dev_pred: Option<&'a DevicePredictor>,
+    /// The estimation policy: split plan + combine (ADR-005).
+    pub est: &'a dyn GradientEstimator,
+    pub plan: UpdatePlan,
+    pub classes: usize,
+}
+
+/// One micro-batch slot's contribution: the gradient leaf plus the scalar
+/// traces, reduced by the session in slot order.
+pub(crate) struct MicroOut {
+    pub grad: FlatGrad,
+    pub loss: f32,
+    pub acc: f64,
+    pub cost: f64,
+    pub examples: usize,
+}
+
+/// One micro-batch slot (any estimator) at stream position `pos`, running
+/// entirely on the calling worker thread (DESIGN.md §6):
+///
+///   control:    train_grads  -> g_ct, a_c, p_c     (Forward + Backward)
+///               predict_grad -> g_cp               (predictor on control)
+///   prediction: cheap_fwd    -> a_p, p_p           (CheapForward)
+///               predict_grad -> g_p
+///   combine:    estimator-owned (eq. 1 for ControlVariate)
+///
+/// With `mp = 0` (TrueBackprop, or ControlVariate at f = 1) only the
+/// control pass runs — Algorithm 2 is the degenerate plan, not a second
+/// code path.
+pub(crate) fn run_micro(
+    ctx: &SlotCtx,
+    w: &mut ShardWorker,
+    pos: usize,
+) -> anyhow::Result<MicroOut> {
+    let cost = CostModel::default();
+    let plan = ctx.plan;
+
+    // -- control micro-batch: true gradient + activations ----------------
+    w.view.batch_at(pos, plan.mc, &mut w.x, &mut w.y);
+    let ctrl = ctx.rt.train_grads(ctx.dev, &w.x, &w.y, plan.mc)?;
+    let acc = accuracy(&ctrl.probs, &w.y, ctx.classes);
+    let c_units = cost.cost_vanilla(plan.mc as f64) + cost.cheap_forward * plan.mp as f64;
+    let examples = plan.mc + plan.mp;
+
+    // Until the first fit the predictor is identically zero; eq. (1) then
+    // reduces to g_ct (still unbiased). Skip the device calls — and the
+    // prediction draw (consumed_per_slot matches).
+    if !plan.use_pred {
+        let TrainOut { loss, g_trunk, g_head_w, g_head_b, .. } = ctrl;
+        return Ok(MicroOut {
+            grad: FlatGrad { trunk: g_trunk, head_w: g_head_w, head_b: g_head_b },
+            loss,
+            acc,
+            cost: c_units,
+            examples,
+        });
+    }
+    let dev_pred = ctx
+        .dev_pred
+        .expect("session uploads the predictor before a use_pred scatter");
+
+    // -- predictor on the control micro-batch (g_cp) ----------------------
+    let pc = ctx
+        .rt
+        .predict_grad(&ctrl.a, &ctrl.probs, &w.y, ctx.dev, dev_pred, plan.mc)?;
+
+    // -- prediction micro-batch: CheapForward + predictor (g_p) -----------
+    w.view.batch_at(pos + plan.mc, plan.mp, &mut w.xp, &mut w.yp);
+    let (a_p, probs_p) = ctx.rt.cheap_fwd(ctx.dev, &w.xp, plan.mp)?;
+    let pp = ctx
+        .rt
+        .predict_grad(&a_p, &probs_p, &w.yp, ctx.dev, dev_pred, plan.mp)?;
+
+    let g_cp = FlatGrad { trunk: pc.g_trunk, head_w: pc.g_head_w, head_b: pc.g_head_b };
+    let g_p = FlatGrad { trunk: pp.g_trunk, head_w: pp.g_head_w, head_b: pp.g_head_b };
+
+    // -- estimator-owned combine (ADR-005) --------------------------------
+    let mut g = FlatGrad { trunk: ctrl.g_trunk, head_w: ctrl.g_head_w, head_b: ctrl.g_head_b };
+    ctx.est.combine(&CombineCx { rt: ctx.rt }, &mut g, &g_cp, &g_p, plan.f_eff)?;
+    Ok(MicroOut { grad: g, loss: ctrl.loss, acc, cost: c_units, examples })
+}

@@ -398,14 +398,25 @@ impl BackendKind {
     pub const CONCRETE: [BackendKind; 3] =
         [BackendKind::Naive, BackendKind::Blocked, BackendKind::Micro];
 
+    /// Single source of truth for the parser and the `--help` option
+    /// list (`util::cli::options(BackendKind::SPECS)`).
+    pub const SPECS: &'static [crate::util::cli::EnumSpec<BackendKind>] = &[
+        crate::util::cli::EnumSpec {
+            name: "naive",
+            aliases: &["reference"],
+            value: BackendKind::Naive,
+        },
+        crate::util::cli::EnumSpec { name: "blocked", aliases: &[], value: BackendKind::Blocked },
+        crate::util::cli::EnumSpec {
+            name: "micro",
+            aliases: &["microkernel"],
+            value: BackendKind::Micro,
+        },
+        crate::util::cli::EnumSpec { name: "auto", aliases: &[], value: BackendKind::Auto },
+    ];
+
     pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
-        match s {
-            "naive" | "reference" => Ok(BackendKind::Naive),
-            "blocked" => Ok(BackendKind::Blocked),
-            "micro" | "microkernel" => Ok(BackendKind::Micro),
-            "auto" => Ok(BackendKind::Auto),
-            other => anyhow::bail!("unknown backend '{other}' (want naive|blocked|micro|auto)"),
-        }
+        s.parse()
     }
 
     pub fn as_str(&self) -> &'static str {
@@ -415,6 +426,14 @@ impl BackendKind {
             BackendKind::Micro => "micro",
             BackendKind::Auto => "auto",
         }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<BackendKind> {
+        crate::util::cli::parse_enum(BackendKind::SPECS, "backend", s)
     }
 }
 

@@ -2,8 +2,39 @@
 //!
 //! Grammar: `lgp <subcommand> [--flag] [--key value]...`. Typed accessors
 //! with defaults; unknown keys are reported so typos fail loudly.
+//!
+//! Also home to the shared enum-flag machinery: each string-valued enum
+//! flag (`--algo`, `--optimizer`, `--backend`) declares one
+//! [`EnumSpec`] table that drives its `FromStr` parser, its error
+//! message, *and* the `--help` option list ([`options`]) — a single
+//! source of truth, so help text cannot drift from what the parsers
+//! accept.
 
 use std::collections::BTreeMap;
+
+/// One selectable value of an enum-valued CLI flag: the canonical name
+/// (shown in help), accepted aliases, and the value itself.
+pub struct EnumSpec<T: 'static> {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub value: T,
+}
+
+/// Parse `s` against a spec table; the error lists the canonical options
+/// exactly as [`options`] renders them for `--help`.
+pub fn parse_enum<T: Copy>(specs: &[EnumSpec<T>], what: &str, s: &str) -> anyhow::Result<T> {
+    for spec in specs {
+        if spec.name == s || spec.aliases.contains(&s) {
+            return Ok(spec.value);
+        }
+    }
+    anyhow::bail!("unknown {what} '{s}' (want {})", options(specs))
+}
+
+/// The canonical `a|b|c` option list of a spec table (help text).
+pub fn options<T>(specs: &[EnumSpec<T>]) -> String {
+    specs.iter().map(|s| s.name).collect::<Vec<_>>().join("|")
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -57,6 +88,25 @@ impl Args {
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Strictly-parsed typed accessor: `None` when the flag is absent, a
+    /// hard error naming the flag and the offending text when it is
+    /// present but malformed. The `*_or` accessors below silently fall
+    /// back to the default on a parse failure — acceptable for ad-hoc
+    /// bench/example knobs, wrong for explicit user input (a typo like
+    /// `--steps 3O` must not quietly train with the default step count).
+    pub fn parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.str_opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("invalid --{key} '{v}': {e}")),
+        }
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
@@ -147,5 +197,36 @@ mod tests {
         let a = parse("--help");
         assert_eq!(a.subcommand, None);
         assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn parsed_is_strict_where_or_accessors_default() {
+        let a = parse("train --steps 3O --f 0.25");
+        // The lenient accessor silently falls back...
+        assert_eq!(a.usize_or("steps", 7), 7);
+        // ...the strict one reports the malformed value.
+        let err = a.parsed::<usize>("steps").unwrap_err();
+        assert!(format!("{err}").contains("'3O'"), "{err}");
+        assert_eq!(a.parsed::<f64>("f").unwrap(), Some(0.25));
+        assert_eq!(a.parsed::<f64>("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn enum_specs_parse_names_aliases_and_report_options() {
+        #[derive(Clone, Copy, Debug, PartialEq)]
+        enum Fruit {
+            Apple,
+            Pear,
+        }
+        const SPECS: &[EnumSpec<Fruit>] = &[
+            EnumSpec { name: "apple", aliases: &["pomme"], value: Fruit::Apple },
+            EnumSpec { name: "pear", aliases: &[], value: Fruit::Pear },
+        ];
+        assert_eq!(parse_enum(SPECS, "fruit", "apple").unwrap(), Fruit::Apple);
+        assert_eq!(parse_enum(SPECS, "fruit", "pomme").unwrap(), Fruit::Apple);
+        assert_eq!(parse_enum(SPECS, "fruit", "pear").unwrap(), Fruit::Pear);
+        let err = parse_enum(SPECS, "fruit", "mango").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown fruit 'mango' (want apple|pear)");
+        assert_eq!(options(SPECS), "apple|pear");
     }
 }

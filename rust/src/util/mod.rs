@@ -83,6 +83,26 @@ impl CsvWriter {
     }
 }
 
+/// Parse an optional environment-variable override. `Ok(None)` when the
+/// variable is unset; a malformed value is a hard error naming the
+/// variable and the offending text — env overrides must never silently
+/// fall back to a default the caller didn't ask for (they exist
+/// precisely because someone set them on purpose).
+pub fn env_parse<T: std::str::FromStr>(name: &str) -> anyhow::Result<Option<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    match std::env::var(name) {
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            Err(anyhow::anyhow!("env var {name} is not valid unicode"))
+        }
+        Ok(raw) => raw.trim().parse::<T>().map(Some).map_err(|e| {
+            anyhow::anyhow!("invalid {name}='{raw}': {e} (unset it or pass a valid value)")
+        }),
+    }
+}
+
 /// Leveled stderr logger; verbosity from LGP_LOG (error|warn|info|debug).
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
 pub enum Level {
@@ -96,8 +116,22 @@ pub fn log_level() -> Level {
     match std::env::var("LGP_LOG").as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
-        _ => Level::Info,
+        Ok(other) => {
+            // Not a hard error (logging must not abort a run), but never
+            // silent either: say it once, then use the default. The
+            // format work stays inside the Once so the steady state pays
+            // nothing (log_level runs on every log-macro evaluation).
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "[warn] LGP_LOG='{other}' is not a level (want error|warn|info|debug); using info"
+                )
+            });
+            Level::Info
+        }
+        Err(_) => Level::Info,
     }
 }
 
@@ -149,6 +183,24 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, [0u8; 7]).unwrap();
         assert!(read_f32_file(&path).is_err());
+    }
+
+    #[test]
+    fn env_parse_reports_malformed_values() {
+        // A test-private name: nothing else in the process reads it, so
+        // set/remove cannot race the LGP_SHARDS consumers.
+        const VAR: &str = "LGP_UTIL_ENV_PARSE_TEST";
+        std::env::remove_var(VAR);
+        assert!(env_parse::<usize>(VAR).unwrap().is_none());
+        std::env::set_var(VAR, "4");
+        assert_eq!(env_parse::<usize>(VAR).unwrap(), Some(4));
+        std::env::set_var(VAR, " 8 ");
+        assert_eq!(env_parse::<usize>(VAR).unwrap(), Some(8), "whitespace is trimmed");
+        std::env::set_var(VAR, "abc");
+        let err = env_parse::<usize>(VAR).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains(VAR) && msg.contains("abc"), "{msg}");
+        std::env::remove_var(VAR);
     }
 
     #[test]

@@ -24,7 +24,7 @@
 #![cfg(feature = "alloc-counter")]
 
 use lgp::config::OptimKind;
-use lgp::coordinator::combine::cv_combine_into;
+use lgp::estimator::combine::cv_combine_into;
 use lgp::model::manifest::{Manifest, TrunkParam};
 use lgp::model::params::{FlatGrad, ParamStore};
 use lgp::optim::{OptimConfig, Optimizer};

@@ -1,9 +1,10 @@
-//! Integration: full Trainer runs (Algorithm 1 and 2) on tiny artifacts —
-//! losses decrease, the predictor fits, alignment is tracked, GPR with
-//! f=1 degenerates to the baseline update, checkpoints round-trip.
+//! Integration: full TrainSession runs (Algorithm 1 and 2) on tiny
+//! artifacts — losses decrease, the predictor fits, alignment is tracked,
+//! GPR with f=1 degenerates to the baseline update, checkpoints
+//! round-trip. All runs go through the ADR-005 session API.
 
 use lgp::config::{Algo, OptimKind, RunConfig};
-use lgp::coordinator::Trainer;
+use lgp::session::{SessionBuilder, TrainSession};
 use std::path::PathBuf;
 
 fn tiny_cfg() -> Option<RunConfig> {
@@ -35,9 +36,14 @@ fn tiny_cfg() -> Option<RunConfig> {
         backend: lgp::tensor::BackendKind::Blocked,
         // `LGP_SHARDS=2 cargo test -q` runs this whole suite through the
         // sharded executor (ADR-004) — bit-identical results, so every
-        // assertion below holds unchanged.
-        shards: lgp::config::shards_env_override().unwrap_or(1),
+        // assertion below holds unchanged. A malformed LGP_SHARDS is a
+        // hard error, never a silent serial fallback.
+        shards: lgp::config::shards_env_override().expect("LGP_SHARDS").unwrap_or(1),
     })
+}
+
+fn session(cfg: RunConfig) -> TrainSession {
+    SessionBuilder::from_config(cfg).build().unwrap()
 }
 
 #[test]
@@ -45,8 +51,8 @@ fn baseline_training_reduces_loss() {
     let Some(mut cfg) = tiny_cfg() else { return };
     cfg.algo = Algo::Baseline;
     cfg.max_steps = 40;
-    let mut t = Trainer::new(cfg).unwrap();
-    t.train(None).unwrap();
+    let mut t = session(cfg);
+    t.run().unwrap();
     let first = t.log.first().unwrap().loss;
     let last = t.log.last().unwrap().loss;
     assert!(last < first - 0.05, "loss did not decrease: {first} -> {last}");
@@ -56,8 +62,8 @@ fn baseline_training_reduces_loss() {
 #[test]
 fn gpr_training_reduces_loss_and_tracks_alignment() {
     let Some(cfg) = tiny_cfg() else { return };
-    let mut t = Trainer::new(cfg).unwrap();
-    t.train(None).unwrap();
+    let mut t = session(cfg);
+    t.run().unwrap();
     let first = t.log.first().unwrap().loss;
     let last = t.log.last().unwrap().loss;
     assert!(last < first + 0.02, "GPR diverged: {first} -> {last}");
@@ -79,11 +85,11 @@ fn gpr_with_f_one_matches_baseline_updates() {
     cfg.max_steps = 3;
     cfg.refit_every = 0; // fit still happens once; harmless at f=1
     cfg.track_alignment = false;
-    let mut gpr = Trainer::new(cfg.clone()).unwrap();
-    gpr.train(None).unwrap();
+    let mut gpr = session(cfg.clone());
+    gpr.run().unwrap();
     cfg.algo = Algo::Baseline;
-    let mut base = Trainer::new(cfg).unwrap();
-    base.train(None).unwrap();
+    let mut base = session(cfg);
+    base.run().unwrap();
     let diff: f32 = gpr
         .params
         .trunk
@@ -95,12 +101,12 @@ fn gpr_with_f_one_matches_baseline_updates() {
 }
 
 #[test]
-fn checkpoint_round_trip_through_trainer() {
+fn checkpoint_round_trip_through_session() {
     let Some(mut cfg) = tiny_cfg() else { return };
     cfg.max_steps = 2;
     let dir = std::env::temp_dir().join("lgp_ckpt_test");
-    let mut t = Trainer::new(cfg).unwrap();
-    t.train(None).unwrap();
+    let mut t = session(cfg);
+    t.run().unwrap();
     t.params.save(&dir).unwrap();
     let mut copy = t.params.clone();
     copy.trunk.iter_mut().for_each(|v| *v = 0.0);
@@ -114,9 +120,9 @@ fn wall_clock_budget_stops_training() {
     cfg.max_steps = 0;
     cfg.budget_secs = 2.0;
     cfg.eval_every = 0;
-    let mut t = Trainer::new(cfg).unwrap();
+    let mut t = session(cfg);
     let t0 = std::time::Instant::now();
-    t.train(None).unwrap();
+    t.run().unwrap();
     let dt = t0.elapsed().as_secs_f64();
     assert!(t.step_count() > 0, "no steps completed");
     // budget (2s) + at most one step of overshoot + final eval slack
@@ -128,27 +134,27 @@ fn seeds_change_data_but_not_shapes() {
     let Some(mut cfg) = tiny_cfg() else { return };
     cfg.max_steps = 2;
     cfg.track_alignment = false;
-    let mut a = Trainer::new(cfg.clone()).unwrap();
-    a.train(None).unwrap();
+    let mut a = session(cfg.clone());
+    a.run().unwrap();
     cfg.seed = 8;
-    let mut b = Trainer::new(cfg).unwrap();
-    b.train(None).unwrap();
+    let mut b = session(cfg);
+    b.run().unwrap();
     assert_eq!(a.params.trunk.len(), b.params.trunk.len());
     assert_ne!(a.params.trunk, b.params.trunk, "different seeds, same params?");
 }
 
 #[test]
 fn sharded_training_reduces_loss_like_serial() {
-    // The parallel path through the full Trainer: 2 shards, GPR with a
+    // The parallel path through the full session: 2 shards, GPR with a
     // refit inside the window. (Bitwise equality with serial is pinned by
     // tests/shard_determinism.rs; this is the behavioral smoke.)
     let Some(mut cfg) = tiny_cfg() else { return };
     cfg.shards = 2;
     cfg.accum = 4;
     cfg.max_steps = 20;
-    let mut t = Trainer::new(cfg).unwrap();
+    let mut t = session(cfg);
     assert_eq!(t.shards(), 2);
-    t.train(None).unwrap();
+    t.run().unwrap();
     let first = t.log.first().unwrap().loss;
     let last = t.log.last().unwrap().loss;
     assert!(last < first + 0.02, "sharded GPR diverged: {first} -> {last}");
@@ -168,8 +174,8 @@ fn sgd_and_adamw_also_train() {
             _ => 0.05,
         };
         cfg.max_steps = 20;
-        let mut t = Trainer::new(cfg).unwrap();
-        t.train(None).unwrap();
+        let mut t = session(cfg);
+        t.run().unwrap();
         let first = t.log.first().unwrap().loss;
         let last = t.log.last().unwrap().loss;
         assert!(

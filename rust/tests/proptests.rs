@@ -2,7 +2,7 @@
 //! in the offline set). Each property runs CASES randomized trials from a
 //! seeded PCG64; failures print the violating seed for reproduction.
 
-use lgp::coordinator::combine::{cv_combine, split_indices};
+use lgp::estimator::combine::{cv_combine, split_indices};
 use lgp::coordinator::{exec, reduce};
 use lgp::data::loader::DataPipeline;
 use lgp::model::params::FlatGrad;

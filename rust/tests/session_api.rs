@@ -1,0 +1,239 @@
+//! ADR-005 public-API contract: `SessionBuilder` validation and the
+//! CLI ↔ builder golden equivalence.
+//!
+//! Two layers:
+//!
+//! 1. **Validation (always runs).** Misconfigurations — `f` outside
+//!    (0, 1], `shards == 0`, `accum == 0`, conflicting budget/steps
+//!    (neither set: the run would never terminate) — must fail at
+//!    `build()` with their own message, *before* the artifact directory
+//!    is touched, on both the builder path and the CLI-flag path.
+//!
+//! 2. **Golden run (artifact-gated).** The same tiny-preset run
+//!    configured once through CLI flags (`session::cli::builder_from_args`,
+//!    the exact path `lgp train` takes) and once through chainable
+//!    setters must produce bit-identical parameters and loss traces —
+//!    the CLI is a thin adapter, not a second code path.
+
+use lgp::observer::{RefitEvent, RunSummary, TrainObserver};
+use lgp::prelude::*;
+use lgp::session::cli::builder_from_args;
+use lgp::session::SessionBuilder;
+use lgp::util::cli::Args;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+fn parse(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from)).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Layer 1: validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_rejects_f_outside_unit_interval() {
+    for f in [0.0, -0.25, 1.5] {
+        let err = SessionBuilder::new().f(f).build().unwrap_err();
+        assert!(format!("{err}").contains("f must be in (0,1]"), "f={f}: {err}");
+    }
+    // f = 1 is the valid boundary: validation passes and the failure (if
+    // any) comes from the missing artifacts, not the range check.
+    let err = SessionBuilder::new().f(1.0).artifacts("no/such/dir").build().unwrap_err();
+    assert!(!format!("{err}").contains("f must be"), "{err}");
+}
+
+#[test]
+fn builder_rejects_zero_shards_and_zero_accum() {
+    let err = SessionBuilder::new().shards(0).build().unwrap_err();
+    assert!(format!("{err}").contains("shards must be >= 1"), "{err}");
+    let err = SessionBuilder::new().accum(0).build().unwrap_err();
+    assert!(format!("{err}").contains("accum must be >= 1"), "{err}");
+}
+
+#[test]
+fn builder_rejects_conflicting_budget_and_steps() {
+    // Neither a budget nor a step limit: the loop would never terminate.
+    let err = SessionBuilder::new().max_steps(0).budget_secs(0.0).build().unwrap_err();
+    assert!(format!("{err}").contains("budget or a step limit"), "{err}");
+    // Either one alone satisfies the constraint (validation passes; any
+    // error past that point is about the artifact directory).
+    for b in [
+        SessionBuilder::new().max_steps(1).budget_secs(0.0).artifacts("no/such/dir"),
+        SessionBuilder::new().max_steps(0).budget_secs(1.0).artifacts("no/such/dir"),
+    ] {
+        let err = b.build().unwrap_err();
+        assert!(!format!("{err}").contains("budget or a step limit"), "{err}");
+    }
+}
+
+#[test]
+fn cli_path_applies_the_same_validation() {
+    let err = builder_from_args(&parse("train --f 1.5")).unwrap().build().unwrap_err();
+    assert!(format!("{err}").contains("f must be in (0,1]"), "{err}");
+    let err = builder_from_args(&parse("train --shards 0")).unwrap().build().unwrap_err();
+    assert!(format!("{err}").contains("shards must be >= 1"), "{err}");
+}
+
+#[test]
+fn explicit_estimator_f_is_validated() {
+    let err = SessionBuilder::new()
+        .estimator(Box::new(ControlVariate::new(2.0)))
+        .build()
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("control fraction") && msg.contains("control-variate"), "{msg}");
+}
+
+#[test]
+fn cli_and_builder_accumulate_identical_configs() {
+    let args = parse(
+        "train --preset small --algo baseline --f 0.5 --steps 7 --seed 9 \
+         --backend blocked --shards 2 --accum 4 --lr 0.05 --refit-every 5 \
+         --train-size 640 --val-size 160 --aug-mult 1 --eval-every 0 --no-alignment",
+    );
+    let from_cli = builder_from_args(&args).unwrap();
+    let by_hand = SessionBuilder::new()
+        .preset("small")
+        .algo(Algo::Baseline)
+        .f(0.5)
+        .max_steps(7)
+        .seed(9)
+        .backend(BackendKind::Blocked)
+        .shards(2)
+        .accum(4)
+        .lr(0.05)
+        .refit_every(5)
+        .train_size(640)
+        .val_size(160)
+        .aug_multiplier(1)
+        .eval_every(0)
+        .track_alignment(false);
+    assert_eq!(from_cli.config(), by_hand.config());
+}
+
+// ---------------------------------------------------------------------------
+// Layer 2: golden run, artifact-gated
+// ---------------------------------------------------------------------------
+
+fn tiny_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: tiny artifacts not built");
+        return None;
+    }
+    Some(dir)
+}
+
+#[test]
+fn cli_and_builder_tiny_runs_are_bit_identical() {
+    let Some(dir) = tiny_dir() else { return };
+    let flags = format!(
+        "train --artifacts {} --algo gpr --f 0.25 --steps 4 --accum 2 --seed 7 \
+         --train-size 600 --val-size 150 --aug-mult 1 --refit-every 2 \
+         --eval-every 0 --backend blocked",
+        dir.display()
+    );
+    let mut via_cli = builder_from_args(&parse(&flags)).unwrap().build().unwrap();
+    via_cli.run().unwrap();
+
+    let mut via_builder = SessionBuilder::new()
+        .artifacts(dir)
+        .algo(Algo::Gpr)
+        .f(0.25)
+        .max_steps(4)
+        .accum(2)
+        .seed(7)
+        .train_size(600)
+        .val_size(150)
+        .aug_multiplier(1)
+        .refit_every(2)
+        .eval_every(0)
+        .backend(BackendKind::Blocked)
+        .build()
+        .unwrap();
+    via_builder.run().unwrap();
+
+    assert_eq!(via_cli.params.trunk, via_builder.params.trunk, "trunk differs (bitwise)");
+    assert_eq!(via_cli.params.head_w, via_builder.params.head_w);
+    assert_eq!(via_cli.params.head_b, via_builder.params.head_b);
+    let loss_cli: Vec<u64> = via_cli.log.iter().map(|r| r.loss.to_bits()).collect();
+    let loss_bld: Vec<u64> = via_builder.log.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(loss_cli, loss_bld, "loss traces differ (bitwise)");
+}
+
+#[test]
+fn observers_see_the_whole_run() {
+    let Some(dir) = tiny_dir() else { return };
+    #[derive(Clone, Default)]
+    struct Probe(Arc<Mutex<(usize, usize, usize, Option<RunSummary>)>>);
+    impl TrainObserver for Probe {
+        fn on_step(&mut self, _row: &LogRow) -> anyhow::Result<()> {
+            self.0.lock().unwrap().0 += 1;
+            Ok(())
+        }
+        fn on_eval(&mut self, _step: usize, _val: f64) -> anyhow::Result<()> {
+            self.0.lock().unwrap().1 += 1;
+            Ok(())
+        }
+        fn on_refit(&mut self, _ev: &RefitEvent) -> anyhow::Result<()> {
+            self.0.lock().unwrap().2 += 1;
+            Ok(())
+        }
+        fn on_end(&mut self, s: &RunSummary) -> anyhow::Result<()> {
+            self.0.lock().unwrap().3 = Some(*s);
+            Ok(())
+        }
+    }
+    let probe = Probe::default();
+    let mut session = SessionBuilder::new()
+        .artifacts(dir)
+        .algo(Algo::Gpr)
+        .f(0.25)
+        .max_steps(4)
+        .accum(2)
+        .seed(7)
+        .train_size(600)
+        .val_size(150)
+        .aug_multiplier(1)
+        .refit_every(2)
+        .eval_every(0)
+        .backend(BackendKind::Blocked)
+        .observer(Box::new(probe.clone()))
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    let (steps, evals, refits, summary) = probe.0.lock().unwrap().clone();
+    assert_eq!(steps, 4, "one on_step per optimizer update");
+    assert!(evals >= 1, "the final eval must be observed");
+    assert!(refits >= 1, "the refit inside the window must be observed");
+    let s = summary.expect("on_end fired");
+    assert_eq!(s.steps, 4);
+    assert_eq!(s.examples_seen, session.examples_seen);
+}
+
+#[test]
+fn predicted_lgp_estimator_runs_end_to_end() {
+    // The ablation estimator trains through the same session machinery —
+    // the estimator seam is real, not a ControlVariate special case.
+    let Some(dir) = tiny_dir() else { return };
+    let mut session = SessionBuilder::new()
+        .artifacts(dir)
+        .estimator(Box::new(PredictedLgp::new(0.25)))
+        .max_steps(6)
+        .accum(2)
+        .seed(7)
+        .train_size(600)
+        .val_size(150)
+        .aug_multiplier(1)
+        .refit_every(2)
+        .eval_every(0)
+        .backend(BackendKind::Blocked)
+        .build()
+        .unwrap();
+    assert_eq!(session.estimator().name(), "predicted-lgp");
+    session.run().unwrap();
+    assert_eq!(session.step_count(), 6);
+    assert!(session.pred.fits >= 1, "the biased blend still refits the predictor");
+    assert!(session.log.iter().all(|r| r.loss.is_finite()));
+}

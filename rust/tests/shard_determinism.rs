@@ -10,21 +10,23 @@
 //!    steps on the synthetic dataset at shards = 1, 2, 4 must produce
 //!    bit-identical parameter vectors and loss traces.
 //!
-//! 2. **Full-Trainer path (artifact-gated).** When the AOT artifacts are
-//!    built, the same assertion runs through `Trainer::train` itself —
-//!    GPR with a refit inside the window, so the sharded chunk collection
-//!    is exercised too. Skips cleanly on stub builds, like every other
-//!    artifact-gated integration test.
+//! 2. **Full-session path (artifact-gated).** When the AOT artifacts are
+//!    built, the same assertion runs through `TrainSession::run` itself
+//!    (the ADR-005 API replacing the old `Trainer`) — GPR with a refit
+//!    inside the window, so the sharded chunk collection is exercised
+//!    too. Skips cleanly on stub builds, like every other artifact-gated
+//!    integration test.
 //!
 //! `LGP_SHARDS=K cargo test -q` adds K to the sweep in both layers, so
 //! the tier-1 smoke invocation exercises the requested width.
 
 use lgp::config::{shards_env_override, Algo, OptimKind, RunConfig};
-use lgp::coordinator::{exec, reduce, Trainer};
+use lgp::coordinator::{exec, reduce};
 use lgp::data::loader::{DataPipeline, ShardDataView};
 use lgp::model::manifest::{Manifest, TrunkParam};
 use lgp::model::params::{FlatGrad, ParamStore};
 use lgp::optim::{OptimConfig, Optimizer};
+use lgp::session::SessionBuilder;
 use lgp::tensor::Backend;
 use lgp::util::rng::Pcg64;
 use std::collections::BTreeMap;
@@ -34,7 +36,7 @@ use std::path::PathBuf;
 /// override from the harness.
 fn shard_sweep() -> Vec<usize> {
     let mut counts = vec![1, 2, 4];
-    if let Some(s) = shards_env_override() {
+    if let Some(s) = shards_env_override().expect("LGP_SHARDS") {
         if !counts.contains(&s) {
             counts.push(s);
         }
@@ -219,7 +221,7 @@ fn host_model_sharding_is_repeatable() {
 }
 
 // ---------------------------------------------------------------------------
-// Layer 2: the full Trainer, when artifacts exist
+// Layer 2: the full TrainSession, when artifacts exist
 // ---------------------------------------------------------------------------
 
 fn tiny_cfg(shards: usize) -> Option<RunConfig> {
@@ -254,17 +256,17 @@ fn tiny_cfg(shards: usize) -> Option<RunConfig> {
 }
 
 #[test]
-fn trainer_shards_are_bit_identical_to_serial() {
+fn session_shards_are_bit_identical_to_serial() {
     let Some(cfg1) = tiny_cfg(1) else { return };
-    let mut serial = Trainer::new(cfg1).unwrap();
-    serial.train(None).unwrap();
+    let mut serial = SessionBuilder::from_config(cfg1).build().unwrap();
+    serial.run().unwrap();
     let loss1: Vec<u64> = serial.log.iter().map(|r| r.loss.to_bits()).collect();
 
     for shards in shard_sweep() {
         let Some(cfg) = tiny_cfg(shards) else { return };
-        let mut t = Trainer::new(cfg).unwrap();
+        let mut t = SessionBuilder::from_config(cfg).build().unwrap();
         assert_eq!(t.shards(), shards);
-        t.train(None).unwrap();
+        t.run().unwrap();
         assert_eq!(t.params.trunk, serial.params.trunk, "shards={shards}: trunk differs");
         assert_eq!(t.params.head_w, serial.params.head_w, "shards={shards}: head_w differs");
         assert_eq!(t.params.head_b, serial.params.head_b, "shards={shards}: head_b differs");

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 verification + the ADR-004 parallel-path smoke.
+# Tier-1 verification + the ADR-004 parallel-path smoke + the ADR-005
+# public-API drift gate.
 #
 #   scripts/verify.sh            # build, tests, sharded smoke, alloc gate,
+#                                # examples against the public API, fmt,
 #                                # bench-JSON validation
 #
 # The LGP_SHARDS=2 pass reruns the full integration suite through the
@@ -19,6 +21,25 @@ LGP_SHARDS=2 cargo test -q
 # Zero-allocation steady state (ADR-003), serial and per-worker-thread
 # (ADR-004).
 cargo test -q --features alloc-counter --test alloc_free_hotpath
+
+# ADR-005 public-API drift gate: every example must build AND run against
+# lgp::prelude, so an example that falls behind the session/estimator/
+# observer API fails tier-1 here. Examples exit 0 with a SKIP message
+# when the AOT artifacts are not built, so this also passes on stub-only
+# hosts (artifact-gated, like the integration tests).
+cargo build --release --examples
+cargo run --release --example theory_tables > /dev/null
+cargo run --release --example quickstart
+cargo run --release --example alignment_study -- --steps 12
+cargo run --release --example e2e_vit_cifar -- --budget 5 --seeds 1
+
+# Formatting gate: rustfmt differences are API-surface noise in review.
+# Skipped only where the toolchain lacks the rustfmt component.
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "WARN: rustfmt not installed; skipping cargo fmt --check"
+fi
 
 # Validate every committed BENCH_*.json against the lgp.bench.v1 schema.
 # (The perf compare gate against BENCH_kernels.baseline.json already runs
