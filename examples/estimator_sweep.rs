@@ -1,0 +1,298 @@
+//! estimator_sweep — head-to-head comparison of the full estimator zoo
+//! (DESIGN.md ADR-006) on one seeded workload.
+//!
+//! Runs all five [`GradientEstimator`] implementations — true-backprop,
+//! control-variate, predicted-lgp, multi-tangent and neural-cv — on the
+//! same seeded [`Testbed`] population, through the same sharded
+//! scatter/reduce executor the real session uses (ADR-004), and reports
+//! the paper's variance/cost trade-off per estimator:
+//!
+//! - **final loss** after a fixed SGD budget,
+//! - **gradient-estimate variance** (Monte Carlo over slots at the shared
+//!   initial parameters — the φ(f) axis of Theorem 3),
+//! - **updates/s** and mean ms/update,
+//! - **backward fraction** (the cost axis: what share of examples take a
+//!   true backward pass).
+//!
+//! The numbers land in `BENCH_estimators.json` (`lgp.bench.v1`, with the
+//! ADR-006 `estimator` record dimension), validated in-process before
+//! writing so a zoo member can never silently drop out of the table.
+//!
+//!   cargo run --release --example estimator_sweep
+//!   LGP_BENCH_BUDGET=10 cargo run --release --example estimator_sweep -- \
+//!       [--updates 60] [--accum 4] [--shards 2] [--f 0.25] [--seed 0]
+//!
+//! Runs entirely on the host — no PJRT artifacts needed.
+
+use lgp::bench_support::json_out::{bench_doc, write_bench_doc, BenchRecord};
+use lgp::bench_support::{schema, Summary, Table};
+use lgp::config::EstimatorKind;
+use lgp::coordinator::{exec, reduce};
+use lgp::estimator::testbed::Testbed;
+use lgp::estimator::{
+    ControlVariate, GradientEstimator, MultiTangentForward, NeuralControlVariate, PredictedLgp,
+    TrueBackprop,
+};
+use lgp::predictor::fit::{fit_with, FitBuffer};
+use lgp::predictor::Predictor;
+use lgp::tensor::Backend;
+use lgp::tensor::Workspace;
+use lgp::util::cli::Args;
+use lgp::util::json::{num, obj, Json};
+use lgp::util::rng::Pcg64;
+use lgp::util::{env_parse, Stopwatch};
+
+/// Sweep configuration: one seeded workload shared by every estimator.
+struct SweepCfg {
+    seed: u64,
+    n: usize,
+    feat: usize,
+    width: usize,
+    classes: usize,
+    micro: usize,
+    rank: usize,
+    f: f64,
+    tangents: usize,
+    updates: usize,
+    accum: usize,
+    shards: usize,
+    refit_every: usize,
+    trials: usize,
+    lr: f32,
+    /// Wall-clock budget for one estimator's training loop (seconds).
+    budget_each: f64,
+}
+
+/// Measured outcome for one zoo member.
+struct SweepResult {
+    kind: EstimatorKind,
+    final_loss: f64,
+    grad_variance: f64,
+    updates_done: usize,
+    updates_per_s: f64,
+    backward_fraction: f64,
+    summary: Summary,
+}
+
+/// Construct a zoo member by kind — the same wiring as
+/// `SessionBuilder::build`, minus the runtime.
+fn make(kind: EstimatorKind, cfg: &SweepCfg) -> Box<dyn GradientEstimator> {
+    match kind {
+        EstimatorKind::TrueBackprop => Box::new(TrueBackprop),
+        EstimatorKind::ControlVariate => Box::new(ControlVariate::new(cfg.f)),
+        EstimatorKind::PredictedLgp => Box::new(PredictedLgp::new(cfg.f)),
+        EstimatorKind::MultiTangent => {
+            Box::new(MultiTangentForward::new(cfg.tangents, cfg.seed))
+        }
+        EstimatorKind::NeuralCv => Box::new(NeuralControlVariate::new(cfg.f).with_seed(cfg.seed)),
+    }
+}
+
+fn run_one(kind: EstimatorKind, cfg: &SweepCfg) -> anyhow::Result<SweepResult> {
+    let mut tb = Testbed::new(cfg.seed, cfg.n, cfg.feat, cfg.width, cfg.classes);
+    let man = tb.manifest(cfg.micro, cfg.rank);
+    let mut est = make(kind, cfg);
+    est.bind(&man)?;
+
+    let be = Backend::blocked();
+    let mut ws = Workspace::new();
+    let mut pred = Predictor::new(tb.trunk_params(), tb.width, cfg.rank);
+    let mut buf = FitBuffer::new(man.n_fit);
+    let mut linear_fits = 0usize;
+
+    // Index streams, seeded independently of the estimator so every zoo
+    // member sees the identical example sequence.
+    let mut fit_rng = Pcg64::new(cfg.seed, 0x5346); // fit-set draws
+    let stream_len = (cfg.trials + cfg.updates * cfg.accum + cfg.accum) * cfg.micro;
+    let mut data_rng = Pcg64::new(cfg.seed, 0x5357); // slot draws
+    let stream: Vec<usize> =
+        (0..stream_len).map(|_| data_rng.below(tb.n as u64) as usize).collect();
+
+    let mut refit = |est: &mut Box<dyn GradientEstimator>,
+                     pred: &mut Predictor,
+                     tb: &Testbed,
+                     buf: &mut FitBuffer,
+                     fit_rng: &mut Pcg64,
+                     ws: &mut Workspace,
+                     linear_fits: &mut usize|
+     -> anyhow::Result<()> {
+        let idxs: Vec<usize> =
+            (0..man.n_fit).map(|_| fit_rng.below(tb.n as u64) as usize).collect();
+        tb.fill_fit_buffer(buf, &idxs);
+        if est.owns_predictor_fit() {
+            est.fit_own(be, buf, 1e-4, ws)?;
+        } else {
+            fit_with(be, pred, buf, 1e-4)?;
+            *linear_fits += 1;
+        }
+        Ok(())
+    };
+
+    if est.uses_predictor() {
+        refit(&mut est, &mut pred, &tb, &mut buf, &mut fit_rng, &mut ws, &mut linear_fits)?;
+    }
+
+    // Gradient-estimate variance at the shared initial parameters: the
+    // per-slot estimates are i.i.d. across disjoint stream windows, so
+    // the summed per-coordinate sample variance is the Monte Carlo
+    // estimate of tr Cov(ĝ) — the quantity φ(f) inflates (Thm 3).
+    let plan0 = est.plan(&man, est.predictor_ready(linear_fits));
+    let mut trial_grads: Vec<Vec<f32>> = Vec::with_capacity(cfg.trials);
+    for t in 0..cfg.trials {
+        let pos = t * plan0.consumed_per_slot();
+        let (g, _) = tb.slot_estimate(&*est, &plan0, &pred, &stream, pos)?;
+        trial_grads.push(g.concat());
+    }
+    let grad_variance = {
+        let t = trial_grads.len();
+        let p = trial_grads[0].len();
+        let mut mean = vec![0.0f64; p];
+        for g in &trial_grads {
+            for (m, v) in mean.iter_mut().zip(g) {
+                *m += *v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= t as f64;
+        }
+        let mut ss = 0.0f64;
+        for g in &trial_grads {
+            for (m, v) in mean.iter().zip(g) {
+                let d = *v as f64 - m;
+                ss += d * d;
+            }
+        }
+        ss / (t as f64 - 1.0).max(1.0)
+    };
+
+    // Training loop: the session's scatter → fixed-order tree reduction →
+    // optimizer step, against the host testbed.
+    let mut workers: Vec<()> = vec![(); cfg.shards.max(1)];
+    let mut cursor = cfg.trials * plan0.consumed_per_slot();
+    let mut samples: Vec<f64> = Vec::with_capacity(cfg.updates);
+    let sw = Stopwatch::start();
+    let mut updates_done = 0usize;
+    for u in 0..cfg.updates {
+        if u > 0 && sw.seconds() > cfg.budget_each {
+            break;
+        }
+        if est.uses_predictor() && cfg.refit_every > 0 && u > 0 && u % cfg.refit_every == 0 {
+            refit(&mut est, &mut pred, &tb, &mut buf, &mut fit_rng, &mut ws, &mut linear_fits)?;
+        }
+        let plan = est.plan(&man, est.predictor_ready(linear_fits));
+        let consumed = plan.consumed_per_slot();
+        let base = cursor;
+        let upd = Stopwatch::start();
+        let outs = {
+            let (tbr, predr, streamr) = (&tb, &pred, &stream);
+            let est_ref: &dyn GradientEstimator = &*est;
+            exec::scatter(&mut workers, cfg.accum, |_w, slot| {
+                tbr.slot_estimate(est_ref, &plan, predr, streamr, base + slot * consumed)
+            })?
+        };
+        let mut g = reduce::tree_reduce_grads(outs.into_iter().map(|(g, _)| g).collect())
+            .expect("accum >= 1 slots");
+        g.scale(1.0 / cfg.accum as f32);
+        tb.sgd_step(&g, cfg.lr);
+        samples.push(upd.seconds());
+        cursor += cfg.accum * consumed;
+        updates_done += 1;
+    }
+    let elapsed = sw.seconds();
+
+    Ok(SweepResult {
+        kind,
+        final_loss: tb.population_loss() as f64,
+        grad_variance,
+        updates_done,
+        updates_per_s: if elapsed > 0.0 { updates_done as f64 / elapsed } else { 0.0 },
+        backward_fraction: est.backward_fraction(),
+        summary: Summary::from_samples(samples),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(|e| anyhow::anyhow!(e))?;
+    let budget: f64 = env_parse::<f64>("LGP_BENCH_BUDGET")?.unwrap_or(60.0);
+    let shards = match args.parsed::<usize>("shards")? {
+        Some(v) => v,
+        None => env_parse::<usize>("LGP_SHARDS")?.unwrap_or(1),
+    };
+    let cfg = SweepCfg {
+        seed: args.u64_or("seed", 0),
+        n: args.usize_or("n", 256),
+        feat: args.usize_or("feat", 16),
+        width: args.usize_or("width", 8),
+        classes: args.usize_or("classes", 5),
+        micro: args.usize_or("micro", 8),
+        rank: args.usize_or("rank", 2),
+        f: args.f64_or("f", 0.25),
+        tangents: args.usize_or("tangents", 8),
+        updates: args.usize_or("updates", 60),
+        accum: args.usize_or("accum", 4),
+        shards: shards.max(1),
+        refit_every: args.usize_or("refit-every", 10),
+        trials: args.usize_or("trials", 24),
+        lr: args.f64_or("lr", 0.05) as f32,
+        budget_each: budget / EstimatorKind::ALL.len() as f64,
+    };
+    println!(
+        "estimator sweep: {} updates x {} slots, shards={}, f={}, seed={} (budget {budget:.0}s)\n",
+        cfg.updates, cfg.accum, cfg.shards, cfg.f, cfg.seed
+    );
+
+    let mut results: Vec<SweepResult> = Vec::new();
+    for &kind in EstimatorKind::ALL {
+        results.push(run_one(kind, &cfg)?);
+    }
+
+    let mut table = Table::new(&[
+        "estimator", "final loss", "grad var", "updates/s", "bwd frac", "ms/update",
+    ]);
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut derived_rows: Vec<(&str, Json)> = Vec::new();
+    for r in &results {
+        table.row(vec![
+            r.kind.as_str().into(),
+            format!("{:.4}", r.final_loss),
+            format!("{:.3e}", r.grad_variance),
+            format!("{:.1}", r.updates_per_s),
+            format!("{:.3}", r.backward_fraction),
+            format!("{:.3}", r.summary.mean_ms()),
+        ]);
+        records.push(
+            BenchRecord::from_summary(
+                "update",
+                "host",
+                &[cfg.micro, cfg.feat, cfg.width],
+                &r.summary,
+                None,
+            )
+            .with_threads(cfg.shards)
+            .with_estimator(r.kind.as_str()),
+        );
+        derived_rows.push((
+            r.kind.as_str(),
+            obj(vec![
+                ("final_loss", num(r.final_loss)),
+                ("grad_variance", num(r.grad_variance)),
+                ("updates_per_s", num(r.updates_per_s)),
+                ("backward_fraction", num(r.backward_fraction)),
+                ("updates", num(r.updates_done as f64)),
+            ]),
+        ));
+    }
+    table.print();
+    println!("\nReading the table (paper Thm 3 / EXPERIMENTS.md §Claim map):");
+    println!(" - grad var is tr Cov(ĝ) at shared initial params — predicted-lgp's low");
+    println!("   variance is bought with bias (see tests/estimator_unbiasedness.rs);");
+    println!("   the unbiased rows trade variance against the bwd-frac cost axis.");
+
+    let doc = bench_doc("estimators", &records, Some(obj(derived_rows)));
+    // Self-validate before writing: a zoo member silently missing from
+    // the table is exactly the failure the schema rule exists to catch.
+    schema::validate(&doc).map_err(|e| anyhow::anyhow!("emitted document invalid: {e}"))?;
+    let path = write_bench_doc("BENCH_estimators.json", &doc)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

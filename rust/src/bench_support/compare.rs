@@ -1,10 +1,12 @@
 //! Perf-regression gate: compare two `lgp.bench.v1` documents cell by
 //! cell and fail on slowdowns (EXPERIMENTS.md §Compare gate).
 //!
-//! A *cell* is one (kernel name, backend, shape, threads) tuple; the
-//! compared quantity is `mean_ns`. Records without a `threads` field (the
-//! pre-ADR-004 trajectory) key as `threads=1`, so old baselines stay
-//! comparable. The gate fails when any cell present in both documents
+//! A *cell* is one (kernel name, backend, shape, threads, estimator)
+//! tuple; the compared quantity is `mean_ns`. Records without a `threads`
+//! field (the pre-ADR-004 trajectory) key as `threads=1`, and records
+//! without an `estimator` field (every bench but `estimator_sweep`) key
+//! without the suffix, so old baselines stay comparable byte for byte.
+//! The gate fails when any cell present in both documents
 //! regresses by more than the threshold (default 10%), or when a baseline
 //! cell disappears from the new document (silent coverage loss reads as a
 //! pass otherwise) — the failure text names every missing cell, not just
@@ -29,7 +31,8 @@ pub const DEFAULT_THRESHOLD: f64 = 0.10;
 /// One compared cell.
 #[derive(Clone, Debug)]
 pub struct CellDelta {
-    /// "name backend m×k×n tN" — stable, human-readable cell id.
+    /// "name backend m×k×n tN [estimator]" — stable, human-readable
+    /// cell id; the estimator suffix appears only on estimator-sweep rows.
     pub key: String,
     pub base_ns: f64,
     pub new_ns: f64,
@@ -69,9 +72,9 @@ impl CompareReport {
     }
 
     /// Human-readable failure verdict naming every offending cell — the
-    /// `(kernel, backend, shape, threads)` tuples, not just counts, so a
-    /// gate failure in CI output is actionable without re-running locally.
-    /// `None` when the gate passed.
+    /// `(kernel, backend, shape, threads, estimator)` tuples, not just
+    /// counts, so a gate failure in CI output is actionable without
+    /// re-running locally. `None` when the gate passed.
     pub fn failure_message(&self) -> Option<String> {
         if self.passed() {
             return None;
@@ -92,7 +95,7 @@ impl CompareReport {
         }
         if !self.missing.is_empty() {
             parts.push(format!(
-                "{} baseline cell(s) lost coverage (kernel backend shape threads): {}",
+                "{} baseline cell(s) lost coverage (kernel backend shape threads estimator): {}",
                 self.missing.len(),
                 self.missing.join(", ")
             ));
@@ -142,7 +145,14 @@ fn cell_key(rec: &Json) -> Option<String> {
         Some(t) => t.as_f64()? as u64,
         None => 1,
     };
-    Some(format!("{name} {backend} {shape} t{threads}"))
+    // The estimator dimension (ADR-006) suffixes the key only when
+    // present, keeping every pre-dimension baseline key byte-identical.
+    let mut key = format!("{name} {backend} {shape} t{threads}");
+    if let Some(e) = rec.get("estimator") {
+        key.push(' ');
+        key.push_str(e.as_str()?);
+    }
+    Some(key)
 }
 
 fn index_cells(doc: &Json, what: &str) -> Result<BTreeMap<String, f64>, String> {
@@ -328,6 +338,49 @@ mod tests {
         assert_eq!(rep.cells.len(), 2);
         assert!(rep.cells.iter().any(|c| c.key.ends_with("t1")));
         assert!(rep.cells.iter().any(|c| c.key.ends_with("t4")));
+    }
+
+    #[test]
+    fn estimator_distinguishes_cells_and_missing_cells_name_it() {
+        // Same (name, backend, shape, threads) under two estimators are
+        // distinct cells; dropping one must be reported by its full key,
+        // estimator included — and plain cells keep their suffix-free key.
+        let base = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"custom","created_unix":1,"records":[
+                {"name":"slot_estimate","backend":"micro","shape":[8],
+                 "estimator":"control-variate",
+                 "iters":3,"mean_ns":40.0,"p50_ns":40.0,"p90_ns":40.0},
+                {"name":"slot_estimate","backend":"micro","shape":[8],
+                 "estimator":"multi-tangent",
+                 "iters":3,"mean_ns":25.0,"p50_ns":25.0,"p90_ns":25.0},
+                {"name":"gram_t","backend":"micro","shape":[32,16],
+                 "iters":3,"mean_ns":50.0,"p50_ns":50.0,"p90_ns":50.0}]}"#,
+        )
+        .unwrap();
+        let new = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"custom","created_unix":2,"records":[
+                {"name":"slot_estimate","backend":"micro","shape":[8],
+                 "estimator":"control-variate",
+                 "iters":3,"mean_ns":40.0,"p50_ns":40.0,"p90_ns":40.0},
+                {"name":"gram_t","backend":"micro","shape":[32,16],
+                 "iters":3,"mean_ns":50.0,"p50_ns":50.0,"p90_ns":50.0}]}"#,
+        )
+        .unwrap();
+        let rep = compare_docs(&base, &new, DEFAULT_THRESHOLD).unwrap();
+        assert!(!rep.passed());
+        assert_eq!(
+            rep.missing,
+            vec!["slot_estimate micro 8 t1 multi-tangent".to_string()]
+        );
+        let msg = rep.failure_message().unwrap();
+        assert!(msg.contains("(kernel backend shape threads estimator)"), "{msg}");
+        assert!(msg.contains("slot_estimate micro 8 t1 multi-tangent"), "{msg}");
+        // Estimator-free rows keep the historical key shape.
+        assert!(rep.cells.iter().any(|c| c.key == "gram_t micro 32x16 t1"));
+        assert!(rep
+            .cells
+            .iter()
+            .any(|c| c.key == "slot_estimate micro 8 t1 control-variate"));
     }
 
     #[test]

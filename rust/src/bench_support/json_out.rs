@@ -33,6 +33,11 @@ pub struct BenchRecord {
     pub p90_ns: f64,
     /// Throughput where a flop count is defined.
     pub gflops: Option<f64>,
+    /// Gradient-estimator dimension (ADR-006): the zoo member that
+    /// produced this row (`estimator_sweep` rows), absent for plain
+    /// kernel benches. Like `threads`, documents written before the
+    /// dimension existed simply omit it.
+    pub estimator: Option<String>,
 }
 
 impl BenchRecord {
@@ -58,6 +63,7 @@ impl BenchRecord {
                 let g = fl / summary.mean / 1e9;
                 g.is_finite().then_some(g)
             }),
+            estimator: None,
         }
     }
 
@@ -65,6 +71,13 @@ impl BenchRecord {
     pub fn with_threads(mut self, threads: usize) -> BenchRecord {
         assert!(threads >= 1, "threads dimension must be >= 1");
         self.threads = threads;
+        self
+    }
+
+    /// Builder: stamp the estimator dimension (`estimator_sweep` rows).
+    pub fn with_estimator(mut self, name: &str) -> BenchRecord {
+        assert!(!name.is_empty(), "estimator dimension must be non-empty");
+        self.estimator = Some(name.to_string());
         self
     }
 
@@ -84,6 +97,9 @@ impl BenchRecord {
         ];
         if let Some(g) = self.gflops {
             pairs.push(("gflops", num(g)));
+        }
+        if let Some(est) = &self.estimator {
+            pairs.push(("estimator", s(est)));
         }
         obj(pairs)
     }
@@ -161,6 +177,11 @@ mod tests {
         assert_eq!(r4.threads, 4);
         let j = r4.to_json();
         assert_eq!(j.at(&["threads"]).as_f64(), Some(4.0));
+        // Estimator dimension: absent unless stamped.
+        assert!(j.get("estimator").is_none());
+        let re = r4.with_estimator("control-variate");
+        let j = re.to_json();
+        assert_eq!(j.at(&["estimator"]).as_str(), Some("control-variate"));
     }
 
     #[test]

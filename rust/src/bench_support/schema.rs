@@ -15,6 +15,9 @@ pub struct ValidationReport {
     pub records: usize,
     /// Distinct backend names seen across records.
     pub backends: Vec<String>,
+    /// Distinct estimator names seen across records (ADR-006); empty for
+    /// documents without the dimension.
+    pub estimators: Vec<String>,
 }
 
 fn field<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
@@ -61,6 +64,7 @@ pub fn validate(doc: &Json) -> Result<ValidationReport, String> {
     }
 
     let mut backends: Vec<String> = Vec::new();
+    let mut estimators: Vec<String> = Vec::new();
     for (i, rec) in records.iter().enumerate() {
         let what = format!("records[{i}]");
         if rec.as_obj().is_none() {
@@ -96,6 +100,19 @@ pub fn validate(doc: &Json) -> Result<ValidationReport, String> {
                 return Err(format!("{what}: 'threads' must be a positive integer"));
             }
         }
+        // Optional gradient-estimator dimension (ADR-006); absent means
+        // the row is estimator-agnostic (plain kernel benches).
+        if let Some(e) = rec.get("estimator") {
+            let v = e
+                .as_str()
+                .ok_or_else(|| format!("{what}: 'estimator' must be a string"))?;
+            if v.is_empty() {
+                return Err(format!("{what}: 'estimator' must be non-empty"));
+            }
+            if !estimators.contains(&v.to_string()) {
+                estimators.push(v.to_string());
+            }
+        }
         req_num(rec, "mean_ns", &what)?;
         req_num(rec, "p50_ns", &what)?;
         req_num(rec, "p90_ns", &what)?;
@@ -119,7 +136,23 @@ pub fn validate(doc: &Json) -> Result<ValidationReport, String> {
         }
     }
 
-    Ok(ValidationReport { bench, records: records.len(), backends })
+    // Same invariant for the estimator sweep: every zoo member must be
+    // present, or the head-to-head table silently loses a row.
+    if bench == "estimators" {
+        for required in [
+            "true-backprop",
+            "control-variate",
+            "predicted-lgp",
+            "multi-tangent",
+            "neural-cv",
+        ] {
+            if !estimators.iter().any(|e| e == required) {
+                return Err(format!("estimators document missing estimator '{required}'"));
+            }
+        }
+    }
+
+    Ok(ValidationReport { bench, records: records.len(), backends, estimators })
 }
 
 /// Read, parse and validate a `BENCH_*.json` file.
@@ -204,6 +237,70 @@ mod tests {
         )
         .unwrap();
         assert!(validate(&zero).unwrap_err().contains("threads"));
+    }
+
+    #[test]
+    fn estimator_dimension_optional_but_non_empty_string() {
+        let ok = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"x","created_unix":1,
+                "records":[{"name":"slot_estimate","backend":"micro","shape":[8],
+                            "estimator":"control-variate",
+                            "iters":3,"mean_ns":1,"p50_ns":1,"p90_ns":1}]}"#,
+        )
+        .unwrap();
+        let rep = validate(&ok).unwrap();
+        assert_eq!(rep.estimators, vec!["control-variate".to_string()]);
+        let empty = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"x","created_unix":1,
+                "records":[{"name":"m","backend":"naive","shape":[2],
+                            "estimator":"",
+                            "iters":1,"mean_ns":1,"p50_ns":1,"p90_ns":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate(&empty).unwrap_err().contains("estimator"));
+        let non_str = Json::parse(
+            r#"{"schema":"lgp.bench.v1","bench":"x","created_unix":1,
+                "records":[{"name":"m","backend":"naive","shape":[2],
+                            "estimator":7,
+                            "iters":1,"mean_ns":1,"p50_ns":1,"p90_ns":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate(&non_str).unwrap_err().contains("must be a string"));
+    }
+
+    #[test]
+    fn estimators_bench_requires_full_zoo_coverage() {
+        let zoo = [
+            "true-backprop",
+            "control-variate",
+            "predicted-lgp",
+            "multi-tangent",
+            "neural-cv",
+        ];
+        let doc_for = |names: &[&str]| {
+            let records: Vec<String> = names
+                .iter()
+                .map(|e| {
+                    format!(
+                        r#"{{"name":"slot_estimate","backend":"micro","shape":[8],
+                            "estimator":"{e}","iters":1,"mean_ns":1,"p50_ns":1,"p90_ns":1}}"#
+                    )
+                })
+                .collect();
+            format!(
+                r#"{{"schema":"lgp.bench.v1","bench":"estimators","created_unix":1,
+                    "records":[{}]}}"#,
+                records.join(",")
+            )
+        };
+        let full = Json::parse(&doc_for(&zoo)).unwrap();
+        let rep = validate(&full).unwrap();
+        assert_eq!(rep.bench, "estimators");
+        assert_eq!(rep.estimators.len(), 5);
+        // Dropping any one zoo member invalidates the document.
+        let partial = Json::parse(&doc_for(&zoo[..4])).unwrap();
+        let err = validate(&partial).unwrap_err();
+        assert!(err.contains("neural-cv"), "{err}");
     }
 
     #[test]

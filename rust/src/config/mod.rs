@@ -48,6 +48,82 @@ impl FromStr for Algo {
     }
 }
 
+/// Gradient-estimator zoo selection (DESIGN.md ADR-006). `None` in
+/// [`RunConfig::estimator`] keeps the legacy [`Algo`] mapping
+/// (baseline → true-backprop, gpr → control-variate); setting a kind —
+/// via `SessionBuilder::estimator_kind`, the `estimator` JSON key, or
+/// `--estimator` — picks a zoo member explicitly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EstimatorKind {
+    /// Algorithm 2: full Forward+Backward on every example.
+    TrueBackprop,
+    /// Algorithm 1 (GPR): eq. (1) with the linear NTK predictor.
+    ControlVariate,
+    /// The biased no-correction blend (the Sec. 3 ablation).
+    PredictedLgp,
+    /// K-tangent forward gradients (arXiv 2410.17764).
+    MultiTangent,
+    /// Learned MLP control-variate predictor (arXiv 1806.00159).
+    NeuralCv,
+}
+
+impl EstimatorKind {
+    /// Single source of truth for the parser and the `--help` option
+    /// list. Names match `GradientEstimator::name()` so bench labels,
+    /// logs and flags agree.
+    pub const SPECS: &'static [EnumSpec<EstimatorKind>] = &[
+        EnumSpec {
+            name: "true-backprop",
+            aliases: &["backprop"],
+            value: EstimatorKind::TrueBackprop,
+        },
+        EnumSpec {
+            name: "control-variate",
+            aliases: &["cv", "gpr"],
+            value: EstimatorKind::ControlVariate,
+        },
+        EnumSpec { name: "predicted-lgp", aliases: &["lgp"], value: EstimatorKind::PredictedLgp },
+        EnumSpec {
+            name: "multi-tangent",
+            aliases: &["mtf", "forward"],
+            value: EstimatorKind::MultiTangent,
+        },
+        EnumSpec { name: "neural-cv", aliases: &["ncv"], value: EstimatorKind::NeuralCv },
+    ];
+
+    /// Every zoo member, in canonical sweep order.
+    pub const ALL: &'static [EstimatorKind] = &[
+        EstimatorKind::TrueBackprop,
+        EstimatorKind::ControlVariate,
+        EstimatorKind::PredictedLgp,
+        EstimatorKind::MultiTangent,
+        EstimatorKind::NeuralCv,
+    ];
+
+    /// Canonical name (the `GradientEstimator::name()` string).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EstimatorKind::TrueBackprop => "true-backprop",
+            EstimatorKind::ControlVariate => "control-variate",
+            EstimatorKind::PredictedLgp => "predicted-lgp",
+            EstimatorKind::MultiTangent => "multi-tangent",
+            EstimatorKind::NeuralCv => "neural-cv",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<EstimatorKind> {
+        s.parse()
+    }
+}
+
+impl FromStr for EstimatorKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<EstimatorKind> {
+        parse_enum(EstimatorKind::SPECS, "estimator", s)
+    }
+}
+
 /// Optimizer selection (paper trains with Muon, lr 0.02).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptimKind {
@@ -86,6 +162,11 @@ pub struct RunConfig {
     /// Directory holding manifest.json + *.hlo.txt for the chosen preset.
     pub artifacts_dir: PathBuf,
     pub algo: Algo,
+    /// Explicit estimator-zoo selection (ADR-006); `None` derives the
+    /// estimator from `algo`.
+    pub estimator: Option<EstimatorKind>,
+    /// Tangent-direction count K for the multi-tangent estimator.
+    pub tangents: usize,
     /// Control fraction f ∈ (0, 1]; the paper's headline run uses 1/4.
     pub f: f64,
     /// Gradient-accumulation micro-batches per optimizer update (paper: 8).
@@ -132,6 +213,8 @@ impl Default for RunConfig {
         RunConfig {
             artifacts_dir: PathBuf::from("artifacts/tiny"),
             algo: Algo::Gpr,
+            estimator: None,
+            tangents: 8,
             f: 0.25,
             accum: 8,
             optimizer: OptimKind::Muon,
@@ -183,6 +266,7 @@ impl RunConfig {
         );
         anyhow::ensure!(self.train_size >= 16, "train_size too small");
         anyhow::ensure!(self.shards >= 1, "shards must be >= 1, got {}", self.shards);
+        anyhow::ensure!(self.tangents >= 1, "tangents must be >= 1, got {}", self.tangents);
         Ok(())
     }
 
@@ -258,6 +342,33 @@ mod tests {
     fn unknown_enum_error_names_the_options() {
         let err = "nope".parse::<Algo>().unwrap_err();
         assert_eq!(format!("{err}"), "unknown algo 'nope' (want baseline|gpr)");
+    }
+
+    #[test]
+    fn estimator_zoo_table_round_trips() {
+        assert_eq!(
+            options(EstimatorKind::SPECS),
+            "true-backprop|control-variate|predicted-lgp|multi-tangent|neural-cv"
+        );
+        for spec in EstimatorKind::SPECS {
+            assert_eq!(spec.name.parse::<EstimatorKind>().unwrap(), spec.value);
+            // name == as_str == GradientEstimator::name() — one label
+            // everywhere (flags, logs, bench records).
+            assert_eq!(spec.name, spec.value.as_str());
+        }
+        assert_eq!("cv".parse::<EstimatorKind>().unwrap(), EstimatorKind::ControlVariate);
+        assert_eq!("mtf".parse::<EstimatorKind>().unwrap(), EstimatorKind::MultiTangent);
+        assert_eq!("ncv".parse::<EstimatorKind>().unwrap(), EstimatorKind::NeuralCv);
+        assert!(EstimatorKind::parse("nope").is_err());
+        assert_eq!(EstimatorKind::ALL.len(), EstimatorKind::SPECS.len());
+    }
+
+    #[test]
+    fn zero_tangents_rejected() {
+        let mut c = RunConfig::default();
+        c.tangents = 0;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("tangents"), "{err}");
     }
 
     // shards_env_override itself is exercised by the integration suites

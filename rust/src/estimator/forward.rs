@@ -1,0 +1,232 @@
+//! Multi-tangent forward-gradient estimator (PAPERS.md, arXiv 2410.17764).
+//!
+//! Forward-mode AD yields directional derivatives `v·g` without a
+//! backward pass; projecting onto K random tangents and averaging,
+//!
+//! ```text
+//! ĝ = (1/K) Σ_k (v_k · g) v_k ,   v_k ~ N(0, I) iid,
+//! ```
+//!
+//! gives an unbiased estimate of `g` because `E[v vᵀ] = I`. The testbed
+//! computes the exact per-slot gradient first (this repo has no
+//! forward-mode runtime artifact), then *projects it* through
+//! [`GradientEstimator::transform_control`] — statistically identical to
+//! the JVP formulation, since `v·g` is exactly the JVP the forward pass
+//! would have produced.
+//!
+//! Determinism contract (ADR-004): tangent seeds are a pure function of
+//! `(estimator seed, slot stream position, tangent index)`, so the
+//! projected estimate is bit-identical at every shard count, and sorting
+//! the seeds before accumulation makes the result bitwise invariant to
+//! tangent order.
+
+use super::{CombineCx, GradientEstimator, UpdatePlan};
+use crate::model::manifest::Manifest;
+use crate::model::params::FlatGrad;
+use crate::util::rng::Pcg64;
+
+/// Dedicated PCG stream for tangent draws so they can never collide with
+/// data-pipeline or init streams that share a seed.
+const TANGENT_STREAM: u64 = 0x7467; // "tg"
+
+/// Derive the per-tangent seed for tangent `i` of the slot at stream
+/// position `slot_seed`. SplitMix64-style finalizer over the packed
+/// inputs: adjacent slots/tangents land far apart in seed space.
+fn tangent_seed(seed: u64, slot_seed: u64, i: u64) -> u64 {
+    let mut z = seed
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(slot_seed.wrapping_mul(0xbf58_476d_1ce4_e5b9))
+        .wrapping_add(i.wrapping_add(1).wrapping_mul(0x94d0_49bb_1331_11eb));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Replace `g` with its K-tangent projection `(1/K) Σ (v_k·g) v_k`, one
+/// N(0,1) tangent per seed. Seeds are sorted first, so the result is a
+/// bitwise-pure function of the seed *set* — permutation-invariant in
+/// tangent order (a property the proptests pin).
+pub fn multi_tangent_project(g: &mut FlatGrad, seeds: &[u64]) {
+    assert!(!seeds.is_empty(), "need at least one tangent");
+    let mut order: Vec<u64> = seeds.to_vec();
+    order.sort_unstable();
+    let n = g.trunk.len() + g.head_w.len() + g.head_b.len();
+    let inv_k = 1.0f32 / order.len() as f32;
+    let mut v = vec![0.0f32; n];
+    let mut acc = vec![0.0f32; n];
+    for &s in &order {
+        Pcg64::new(s, TANGENT_STREAM).fill_normal(&mut v, 1.0);
+        // v·g in fixed segment order (trunk, head_w, head_b).
+        let mut dot = 0.0f32;
+        let mut off = 0;
+        for seg in [&g.trunk[..], &g.head_w[..], &g.head_b[..]] {
+            for (gv, vv) in seg.iter().zip(&v[off..off + seg.len()]) {
+                dot += gv * vv;
+            }
+            off += seg.len();
+        }
+        let w = dot * inv_k;
+        for (a, vv) in acc.iter_mut().zip(&v) {
+            *a += w * vv;
+        }
+    }
+    let mut off = 0;
+    for seg in [&mut g.trunk[..], &mut g.head_w[..], &mut g.head_b[..]] {
+        seg.copy_from_slice(&acc[off..off + seg.len()]);
+        off += seg.len();
+    }
+}
+
+/// Forward-gradient estimator: every slot takes the (cheapest available)
+/// control pass, and the gradient is replaced by its projection onto K
+/// seeded random tangents. Backward-free and unbiased; variance scales
+/// like `O(P/K)` in the parameter count, which is exactly the trade-off
+/// the sweep harness measures.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiTangentForward {
+    k: usize,
+    seed: u64,
+}
+
+impl MultiTangentForward {
+    /// Estimator with `k` tangent directions drawn from streams derived
+    /// from `seed`.
+    pub fn new(k: usize, seed: u64) -> MultiTangentForward {
+        MultiTangentForward { k, seed }
+    }
+
+    /// Number of tangent directions.
+    pub fn tangents(&self) -> usize {
+        self.k
+    }
+}
+
+impl GradientEstimator for MultiTangentForward {
+    fn name(&self) -> &'static str {
+        "multi-tangent"
+    }
+
+    fn f(&self) -> f64 {
+        1.0
+    }
+
+    fn uses_predictor(&self) -> bool {
+        false
+    }
+
+    fn bind(&mut self, _man: &Manifest) -> anyhow::Result<()> {
+        anyhow::ensure!(self.k >= 1, "multi-tangent needs at least 1 tangent, got {}", self.k);
+        Ok(())
+    }
+
+    fn plan(&self, man: &Manifest, _predictor_fitted: bool) -> UpdatePlan {
+        UpdatePlan { mc: man.micro_batch, mp: 0, use_pred: false, f_eff: 1.0 }
+    }
+
+    fn combine(
+        &self,
+        _cx: &CombineCx,
+        _g: &mut FlatGrad,
+        _g_cp: &FlatGrad,
+        _g_p: &FlatGrad,
+        _f_eff: f32,
+    ) -> anyhow::Result<()> {
+        // Never reached: plan().use_pred is always false.
+        Ok(())
+    }
+
+    fn transform_control(&self, g: &mut FlatGrad, slot_seed: u64) {
+        let seeds: Vec<u64> =
+            (0..self.k as u64).map(|i| tangent_seed(self.seed, slot_seed, i)).collect();
+        multi_tangent_project(g, &seeds);
+    }
+
+    fn backward_fraction(&self) -> f64 {
+        // Forward gradients never run a backward pass.
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad() -> FlatGrad {
+        let mut g = FlatGrad {
+            trunk: vec![0.0; 24],
+            head_w: vec![0.0; 8],
+            head_b: vec![0.0; 2],
+        };
+        let mut rng = Pcg64::seeded(11);
+        rng.fill_normal(&mut g.trunk, 1.0);
+        rng.fill_normal(&mut g.head_w, 1.0);
+        rng.fill_normal(&mut g.head_b, 1.0);
+        g
+    }
+
+    #[test]
+    fn projection_is_deterministic_and_moves_the_gradient() {
+        let base = grad();
+        let seeds = [3u64, 9, 27];
+        let mut a = base.clone();
+        multi_tangent_project(&mut a, &seeds);
+        let mut b = base.clone();
+        multi_tangent_project(&mut b, &seeds);
+        assert_eq!(a.trunk, b.trunk);
+        assert_eq!(a.head_w, b.head_w);
+        assert_eq!(a.head_b, b.head_b);
+        assert_ne!(a.trunk, base.trunk, "K=3 projection must differ from the exact gradient");
+    }
+
+    #[test]
+    fn projection_is_permutation_invariant() {
+        let base = grad();
+        let mut a = base.clone();
+        multi_tangent_project(&mut a, &[1, 2, 3, 4]);
+        let mut b = base.clone();
+        multi_tangent_project(&mut b, &[4, 2, 1, 3]);
+        assert_eq!(a.trunk.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   b.trunk.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        assert_eq!(a.head_w, b.head_w);
+        assert_eq!(a.head_b, b.head_b);
+    }
+
+    #[test]
+    fn many_tangents_concentrate_toward_the_true_gradient() {
+        // ĝ is unbiased with variance O(P/K): at K ≫ P the projection
+        // should land close to g in cosine similarity.
+        let base = grad();
+        let n = base.trunk.len() + base.head_w.len() + base.head_b.len();
+        let mut proj = base.clone();
+        let seeds: Vec<u64> = (0..64 * n as u64).map(|i| tangent_seed(5, 0, i)).collect();
+        multi_tangent_project(&mut proj, &seeds);
+        let flat = |g: &FlatGrad| {
+            let mut v = g.trunk.clone();
+            v.extend_from_slice(&g.head_w);
+            v.extend_from_slice(&g.head_b);
+            v
+        };
+        let (a, b) = (flat(&base), flat(&proj));
+        let dot: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let cos = dot / (na * nb);
+        assert!(cos > 0.9, "cos={cos}");
+    }
+
+    #[test]
+    fn estimator_surface() {
+        let mut est = MultiTangentForward::new(8, 42);
+        assert_eq!(est.name(), "multi-tangent");
+        assert_eq!(est.f(), 1.0);
+        assert_eq!(est.backward_fraction(), 0.0);
+        assert!(!est.uses_predictor());
+        assert!(est.bind(&crate::estimator::tests_manifest(8, vec![0.25])).is_ok());
+        assert!(MultiTangentForward::new(0, 1)
+            .bind(&crate::estimator::tests_manifest(8, vec![0.25]))
+            .is_err());
+        let plan = est.plan(&crate::estimator::tests_manifest(8, vec![0.25]), true);
+        assert!(!plan.use_pred);
+        assert_eq!(plan.mc, 8);
+    }
+}

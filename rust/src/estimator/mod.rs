@@ -24,19 +24,36 @@
 //!   the control-variate correction: biased whenever the predictor is,
 //!   shipped as the ablation the paper argues against (Sec. 3).
 //!
-//! New estimator families (multi-tangent forward gradients, approximate
-//! VJPs — see PAPERS.md) implement the same trait without touching the
-//! training loop.
+//! Two related-work estimators complete the zoo (ADR-006):
+//!
+//! - [`MultiTangentForward`] — forward-gradient estimation (PAPERS.md,
+//!   arXiv 2410.17764): project the true gradient onto K seeded tangent
+//!   directions and average, `ĝ = (1/K) Σ_k (v_k·g) v_k` with
+//!   `v_k ~ N(0, I)`. Unbiased because `E[v vᵀ] = I`; backward-free.
+//! - [`NeuralControlVariate`] — a small learned predictor (PAPERS.md,
+//!   arXiv 1806.00159) fit on the same `FitBuffer` stream as the linear
+//!   one, combined through the *same* eq.-(1) correction — Lemma 1 makes
+//!   the estimate unbiased regardless of the network's quality.
+//!
+//! Further estimator families implement the same trait without touching
+//! the training loop.
 
 pub mod adaptive;
 pub mod combine;
+pub mod forward;
+pub mod neural;
+pub mod testbed;
 
 use crate::metrics::Alignment;
 use crate::model::manifest::Manifest;
 use crate::model::params::FlatGrad;
+use crate::predictor::fit::{FitBuffer, FitReport};
 use crate::runtime::Runtime;
+use crate::tensor::{Backend, Workspace};
 
 pub use adaptive::AdaptiveF;
+pub use forward::MultiTangentForward;
+pub use neural::NeuralControlVariate;
 
 /// Per-update execution plan an estimator hands the executor: how each
 /// micro-batch slot splits and whether the predictor runs. Snapshotted
@@ -71,9 +88,27 @@ impl UpdatePlan {
 }
 
 /// Context a combine may use: host combines ignore it, device combines
-/// route through the runtime's `cv_combine` artifact.
+/// route through the runtime's `cv_combine` artifact. Host-only harnesses
+/// (the estimator testbed, unbiasedness tests) pass `rt: None`; a device
+/// combine invoked without a runtime fails loudly instead of silently
+/// degrading.
 pub struct CombineCx<'a> {
-    pub rt: &'a Runtime,
+    pub rt: Option<&'a Runtime>,
+}
+
+/// One micro-batch of host-side activations a host predictor consumes:
+/// trunk outputs `a` (m, width), softmax probabilities (m, classes),
+/// labels, and the current head weights (width, classes row-major) needed
+/// to backpropagate residuals into the NTK feature `h`.
+pub struct PredictInput<'a> {
+    pub a: &'a [f32],
+    pub probs: &'a [f32],
+    pub y: &'a [i32],
+    pub head_w: &'a [f32],
+    pub m: usize,
+    pub width: usize,
+    pub classes: usize,
+    pub smoothing: f32,
 }
 
 /// A pluggable gradient-estimation policy (ADR-005).
@@ -134,6 +169,65 @@ pub trait GradientEstimator: Send + Sync {
     fn warmup_fractions(&self, man: &Manifest) -> Vec<f64> {
         let _ = man;
         vec![self.f()]
+    }
+
+    /// Post-process a slot's *control-only* gradient (called when
+    /// `plan.use_pred` is false, before reduction). `slot_seed` is the
+    /// slot's stream position — a pure function of the data cursor, so the
+    /// transform is bit-identical at every shard count (ADR-004). The
+    /// default is the identity; [`MultiTangentForward`] replaces the exact
+    /// gradient with its tangent-projected estimate here.
+    fn transform_control(&self, g: &mut FlatGrad, slot_seed: u64) {
+        let _ = (g, slot_seed);
+    }
+
+    /// Fraction of examples that take a true backward pass — the cost
+    /// axis of the paper's variance/cost trade-off. Defaults to `f()`;
+    /// backward-free estimators report 0.
+    fn backward_fraction(&self) -> f64 {
+        self.f()
+    }
+
+    /// Whether predictions come from [`host_predict`](Self::host_predict)
+    /// instead of the device predictor artifact. Host predictors skip the
+    /// predictor upload and the device `predict_grad` calls.
+    fn host_predictor(&self) -> bool {
+        false
+    }
+
+    /// Predict one micro-batch's mean gradient on the host, writing into
+    /// `out`. Only called when [`host_predictor`](Self::host_predictor)
+    /// is true; must be deterministic.
+    fn host_predict(&self, input: &PredictInput, out: &mut FlatGrad) -> anyhow::Result<()> {
+        let _ = (input, out);
+        anyhow::bail!("estimator '{}' has no host predictor", self.name())
+    }
+
+    /// Whether this estimator fits its *own* predictor state from the
+    /// FitBuffer instead of sharing the session's linear predictor.
+    fn owns_predictor_fit(&self) -> bool {
+        false
+    }
+
+    /// Fit the estimator's own predictor from the collected (gradient,
+    /// activation) stream. Only called when
+    /// [`owns_predictor_fit`](Self::owns_predictor_fit) is true.
+    fn fit_own(
+        &mut self,
+        be: Backend,
+        buf: &FitBuffer,
+        lambda: f32,
+        ws: &mut Workspace,
+    ) -> anyhow::Result<FitReport> {
+        let _ = (be, buf, lambda, ws);
+        anyhow::bail!("estimator '{}' does not fit its own predictor", self.name())
+    }
+
+    /// Whether the predictor this estimator consults is ready.
+    /// `linear_fits` is the session's shared linear-predictor fit count;
+    /// estimators owning their fit override this with their own state.
+    fn predictor_ready(&self, linear_fits: usize) -> bool {
+        linear_fits > 0
     }
 }
 
@@ -267,7 +361,10 @@ impl GradientEstimator for ControlVariate {
         f_eff: f32,
     ) -> anyhow::Result<()> {
         if self.device_combine {
-            let v = cx.rt.cv_combine(&g.concat(), &g_cp.concat(), &g_p.concat(), f_eff)?;
+            let rt = cx
+                .rt
+                .ok_or_else(|| anyhow::anyhow!("device combine requires a runtime in CombineCx"))?;
+            let v = rt.cv_combine(&g.concat(), &g_cp.concat(), &g_p.concat(), f_eff)?;
             *g = FlatGrad::from_concat(&v, g.trunk.len(), g.head_w.len());
         } else {
             // eq. (1) fused in place over the control-gradient buffers:
@@ -362,42 +459,48 @@ impl GradientEstimator for PredictedLgp {
     }
 }
 
+/// Test-only manifest literal shared by the estimator submodule tests.
+#[cfg(test)]
+pub(crate) fn tests_manifest(micro_batch: usize, fs: Vec<f64>) -> Manifest {
+    use crate::model::manifest::TrunkParam;
+    use std::collections::BTreeMap;
+    let trunk_params = 24;
+    Manifest {
+        dir: ".".into(),
+        preset: "estimator-test".into(),
+        image: 4,
+        classes: 3,
+        width: 4,
+        label_smoothing: 0.0,
+        rank: 2,
+        n_chunk: 4,
+        n_fit: 8,
+        feat_dim: 4,
+        trunk_params,
+        total_params: trunk_params + 4 * 3 + 3,
+        micro_batch,
+        fs,
+        val_batch: 8,
+        trunk_layout: vec![TrunkParam {
+            name: "w".into(),
+            shape: vec![6, 4],
+            offset: 0,
+            len: trunk_params,
+            muon: true,
+        }],
+        artifacts: BTreeMap::new(),
+        init_trunk: ".".into(),
+        init_head_w: ".".into(),
+        init_head_b: ".".into(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::manifest::{Manifest, TrunkParam};
-    use std::collections::BTreeMap;
 
     fn manifest(micro_batch: usize, fs: Vec<f64>) -> Manifest {
-        let trunk_params = 24;
-        Manifest {
-            dir: ".".into(),
-            preset: "estimator-test".into(),
-            image: 4,
-            classes: 3,
-            width: 4,
-            label_smoothing: 0.0,
-            rank: 2,
-            n_chunk: 4,
-            n_fit: 8,
-            feat_dim: 4,
-            trunk_params,
-            total_params: trunk_params + 4 * 3 + 3,
-            micro_batch,
-            fs,
-            val_batch: 8,
-            trunk_layout: vec![TrunkParam {
-                name: "w".into(),
-                shape: vec![6, 4],
-                offset: 0,
-                len: trunk_params,
-                muon: true,
-            }],
-            artifacts: BTreeMap::new(),
-            init_trunk: ".".into(),
-            init_head_w: ".".into(),
-            init_head_b: ".".into(),
-        }
+        tests_manifest(micro_batch, fs)
     }
 
     #[test]

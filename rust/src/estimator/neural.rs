@@ -1,0 +1,504 @@
+//! Learned (neural) control-variate predictor (PAPERS.md, arXiv
+//! 1806.00159).
+//!
+//! The paper's predictor is *linear* in the bilinear feature
+//! `vec([a;1] hᵀ)`; the neural-control-variates literature argues the
+//! same variance-reduction identity works for *any* learned predictor —
+//! eq. (1) is unbiased regardless of predictor quality (Lemma 1), so the
+//! predictor family is a pure variance knob. [`NeuralControlVariate`]
+//! swaps the linear coefficient map for a small tanh MLP:
+//!
+//! ```text
+//! ĝ_trunk(x) = U · mlp([a(x); h(x)]),    h = W_aᵀ r_cls,
+//! ```
+//!
+//! keeping the same rank-r Gram-trick basis U as the linear fit
+//! ([`crate::predictor::fit::gram_basis`]) and the same [`FitBuffer`]
+//! sample stream, so the two predictors are head-to-head comparable on
+//! identical data. Head gradients are exact (closed form from the
+//! residuals), exactly as in the device predictor.
+//!
+//! The MLP trains by deterministic full-batch gradient descent with a
+//! fixed seed, step count and learning rate — refits are a pure function
+//! of the buffer contents, preserving the ADR-004 bitwise-determinism
+//! contract.
+
+use super::{combine, CombineCx, GradientEstimator, PredictInput, UpdatePlan};
+use crate::model::manifest::Manifest;
+use crate::model::params::FlatGrad;
+use crate::predictor::fit::{gram_basis, FitBuffer, FitReport};
+use crate::predictor::{residuals, Predictor};
+use crate::tensor::{Backend, Tensor, Workspace};
+use crate::util::rng::Pcg64;
+
+/// Dedicated PCG stream for MLP weight init.
+const NCV_STREAM: u64 = 0x6e63; // "nc"
+
+/// Fitted state: the shared rank-r basis plus the MLP coefficient map.
+struct NcvState {
+    /// Basis in transposed layout: r contiguous rows of length p_t
+    /// (row c = column c of U), so ĝ = Σ_c c[c]·u_row_c is r axpys.
+    u_rows: Vec<f32>,
+    p_t: usize,
+    r: usize,
+    /// Activation/feature width D; MLP input is [a; h] of length 2D.
+    d: usize,
+    hidden: usize,
+    w1: Vec<f32>, // (hidden, 2d) row-major
+    b1: Vec<f32>, // (hidden)
+    w2: Vec<f32>, // (r, hidden) row-major
+    b2: Vec<f32>, // (r)
+}
+
+impl NcvState {
+    /// MLP forward: coefficients c = W2 tanh(W1 φ + b1) + b2.
+    fn coeffs(&self, phi: &[f32], hid: &mut [f32], out: &mut [f32]) {
+        debug_assert_eq!(phi.len(), 2 * self.d);
+        debug_assert_eq!(hid.len(), self.hidden);
+        debug_assert_eq!(out.len(), self.r);
+        for (i, hv) in hid.iter_mut().enumerate() {
+            let row = &self.w1[i * 2 * self.d..(i + 1) * 2 * self.d];
+            let mut s = self.b1[i];
+            for (wv, pv) in row.iter().zip(phi) {
+                s += wv * pv;
+            }
+            *hv = s.tanh();
+        }
+        for (j, ov) in out.iter_mut().enumerate() {
+            let row = &self.w2[j * self.hidden..(j + 1) * self.hidden];
+            let mut s = self.b2[j];
+            for (wv, hv) in row.iter().zip(hid.iter()) {
+                s += wv * hv;
+            }
+            *ov = s;
+        }
+    }
+}
+
+/// Control-variate estimator with a learned MLP predictor. Same update
+/// plan and eq.-(1) combine as [`super::ControlVariate`]; the predictor
+/// runs on the host ([`GradientEstimator::host_predict`]) and fits its
+/// own state from the session's FitBuffer
+/// ([`GradientEstimator::fit_own`]).
+pub struct NeuralControlVariate {
+    f: f64,
+    rank: usize,
+    hidden: usize,
+    train_steps: usize,
+    lr: f32,
+    seed: u64,
+    fits: usize,
+    state: Option<NcvState>,
+}
+
+impl NeuralControlVariate {
+    /// Estimator with control fraction `f` and default MLP
+    /// hyper-parameters (16 hidden units, 200 GD steps, lr 0.05, seed 0).
+    pub fn new(f: f64) -> NeuralControlVariate {
+        NeuralControlVariate {
+            f,
+            rank: 0,
+            hidden: 16,
+            train_steps: 200,
+            lr: 0.05,
+            seed: 0,
+            fits: 0,
+            state: None,
+        }
+    }
+
+    /// Override the MLP hyper-parameters (hidden width, GD steps, lr).
+    pub fn with_mlp(mut self, hidden: usize, train_steps: usize, lr: f32) -> NeuralControlVariate {
+        self.hidden = hidden;
+        self.train_steps = train_steps;
+        self.lr = lr;
+        self
+    }
+
+    /// Override the weight-init seed.
+    pub fn with_seed(mut self, seed: u64) -> NeuralControlVariate {
+        self.seed = seed;
+        self
+    }
+
+    /// Number of completed own fits.
+    pub fn fits(&self) -> usize {
+        self.fits
+    }
+}
+
+impl GradientEstimator for NeuralControlVariate {
+    fn name(&self) -> &'static str {
+        "neural-cv"
+    }
+
+    fn f(&self) -> f64 {
+        self.f
+    }
+
+    fn uses_predictor(&self) -> bool {
+        true
+    }
+
+    fn bind(&mut self, man: &Manifest) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.f > 0.0 && self.f <= 1.0,
+            "control fraction f must be in (0,1], got {}",
+            self.f
+        );
+        anyhow::ensure!(self.hidden >= 1, "neural-cv needs at least 1 hidden unit");
+        anyhow::ensure!(man.rank >= 1, "neural-cv needs manifest rank >= 1");
+        self.rank = man.rank;
+        Ok(())
+    }
+
+    fn plan(&self, man: &Manifest, predictor_fitted: bool) -> UpdatePlan {
+        let (mc, mp) = man.split_sizes(self.f);
+        UpdatePlan {
+            mc,
+            mp,
+            use_pred: predictor_fitted && mp > 0,
+            f_eff: mc as f32 / man.micro_batch as f32,
+        }
+    }
+
+    fn combine(
+        &self,
+        _cx: &CombineCx,
+        g: &mut FlatGrad,
+        g_cp: &FlatGrad,
+        g_p: &FlatGrad,
+        f_eff: f32,
+    ) -> anyhow::Result<()> {
+        // The same eq.-(1) correction as ControlVariate: Lemma 1 keeps
+        // the estimate unbiased no matter what the MLP predicts.
+        combine::cv_combine_into(g, g_cp, g_p, f_eff);
+        Ok(())
+    }
+
+    fn host_predictor(&self) -> bool {
+        true
+    }
+
+    fn owns_predictor_fit(&self) -> bool {
+        true
+    }
+
+    fn predictor_ready(&self, _linear_fits: usize) -> bool {
+        self.fits > 0
+    }
+
+    fn fit_own(
+        &mut self,
+        be: Backend,
+        buf: &FitBuffer,
+        _lambda: f32,
+        ws: &mut Workspace,
+    ) -> anyhow::Result<FitReport> {
+        let r = self.rank.max(1);
+        let (u_cols, energy_captured) = gram_basis(be, buf, r, ws)?;
+        let n = buf.len();
+        let p_t = buf.grad(0).len();
+        let d = buf.h(0).len();
+        let in_dim = 2 * d;
+
+        // Training set: inputs φ_j = [a_j; h_j], targets c_j = U^T g_j
+        // (contiguous dots against the transposed basis rows).
+        let mut phis = vec![0.0f32; n * in_dim];
+        let mut targets = vec![0.0f32; n * r];
+        for j in 0..n {
+            let phi = &mut phis[j * in_dim..(j + 1) * in_dim];
+            phi[..d].copy_from_slice(&buf.a1(j)[..d]);
+            phi[d..].copy_from_slice(buf.h(j));
+            let g = buf.grad(j);
+            for c in 0..r {
+                targets[j * r + c] = be.dot(g, &u_cols.data[c * p_t..(c + 1) * p_t]);
+            }
+        }
+
+        // Seeded init; scale 1/sqrt(fan_in) keeps tanh pre-activations
+        // in-range regardless of D.
+        let hidden = self.hidden;
+        let mut rng = Pcg64::new(self.seed, NCV_STREAM);
+        let mut st = NcvState {
+            u_rows: u_cols.data.clone(),
+            p_t,
+            r,
+            d,
+            hidden,
+            w1: vec![0.0; hidden * in_dim],
+            b1: vec![0.0; hidden],
+            w2: vec![0.0; r * hidden],
+            b2: vec![0.0; r],
+        };
+        ws.give_tensor(u_cols);
+        rng.fill_normal(&mut st.w1, 1.0 / (in_dim as f32).sqrt());
+        rng.fill_normal(&mut st.w2, 1.0 / (hidden as f32).sqrt());
+
+        // Deterministic full-batch GD on the mean-squared coefficient
+        // error — fixed loop order, fixed step count, no early exit.
+        let mut hid = vec![0.0f32; hidden];
+        let mut out = vec![0.0f32; r];
+        let mut gw1 = vec![0.0f32; hidden * in_dim];
+        let mut gb1 = vec![0.0f32; hidden];
+        let mut gw2 = vec![0.0f32; r * hidden];
+        let mut gb2 = vec![0.0f32; r];
+        let inv_n = 1.0 / n as f32;
+        for _ in 0..self.train_steps {
+            for v in gw1.iter_mut().chain(gb1.iter_mut()) {
+                *v = 0.0;
+            }
+            for v in gw2.iter_mut().chain(gb2.iter_mut()) {
+                *v = 0.0;
+            }
+            for j in 0..n {
+                let phi = &phis[j * in_dim..(j + 1) * in_dim];
+                st.coeffs(phi, &mut hid, &mut out);
+                let tgt = &targets[j * r..(j + 1) * r];
+                // dL/dc = 2/n (c − t); backprop through the two layers.
+                for c in 0..r {
+                    let dc = 2.0 * inv_n * (out[c] - tgt[c]);
+                    gb2[c] += dc;
+                    let grow = &mut gw2[c * hidden..(c + 1) * hidden];
+                    for (gv, hv) in grow.iter_mut().zip(&hid) {
+                        *gv += dc * hv;
+                    }
+                }
+                for i in 0..hidden {
+                    let mut dh = 0.0f32;
+                    for c in 0..r {
+                        dh += 2.0 * inv_n * (out[c] - tgt[c]) * st.w2[c * hidden + i];
+                    }
+                    let dpre = dh * (1.0 - hid[i] * hid[i]);
+                    gb1[i] += dpre;
+                    let grow = &mut gw1[i * in_dim..(i + 1) * in_dim];
+                    for (gv, pv) in grow.iter_mut().zip(phi) {
+                        *gv += dpre * pv;
+                    }
+                }
+            }
+            let lr = self.lr;
+            for (w, g) in st.w1.iter_mut().zip(&gw1) {
+                *w -= lr * g;
+            }
+            for (w, g) in st.b1.iter_mut().zip(&gb1) {
+                *w -= lr * g;
+            }
+            for (w, g) in st.w2.iter_mut().zip(&gw2) {
+                *w -= lr * g;
+            }
+            for (w, g) in st.b2.iter_mut().zip(&gb2) {
+                *w -= lr * g;
+            }
+        }
+
+        // Training-set relative error in trunk-gradient space.
+        let mut err_num = 0.0f64;
+        let mut err_den = 0.0f64;
+        let mut ghat = vec![0.0f32; p_t];
+        for j in 0..n {
+            st.coeffs(&phis[j * in_dim..(j + 1) * in_dim], &mut hid, &mut out);
+            for v in ghat.iter_mut() {
+                *v = 0.0;
+            }
+            for c in 0..r {
+                let w = out[c];
+                let urow = &st.u_rows[c * p_t..(c + 1) * p_t];
+                for (o, uv) in ghat.iter_mut().zip(urow) {
+                    *o += w * uv;
+                }
+            }
+            let g = buf.grad(j);
+            for p in 0..p_t {
+                let dlt = (ghat[p] - g[p]) as f64;
+                err_num += dlt * dlt;
+                err_den += (g[p] as f64) * (g[p] as f64);
+            }
+        }
+
+        self.state = Some(st);
+        self.fits += 1;
+        Ok(FitReport {
+            n,
+            rank: r,
+            energy_captured,
+            rel_error: (err_num / err_den.max(1e-30)).sqrt(),
+        })
+    }
+
+    fn host_predict(&self, input: &PredictInput, out: &mut FlatGrad) -> anyhow::Result<()> {
+        let st = self
+            .state
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("neural-cv consulted before its first fit"))?;
+        let (m, d, classes) = (input.m, input.width, input.classes);
+        anyhow::ensure!(d == st.d, "feature width changed since fit: {d} vs {}", st.d);
+        anyhow::ensure!(out.trunk.len() == st.p_t, "trunk length mismatch");
+        let resid = residuals(input.probs, input.y, classes, input.smoothing);
+        let h = Predictor::backprop_features(&resid, input.head_w, d);
+
+        // Mean MLP coefficient over the batch, then one basis expansion.
+        let mut hid = vec![0.0f32; st.hidden];
+        let mut c_one = vec![0.0f32; st.r];
+        let mut c_mean = vec![0.0f32; st.r];
+        let mut phi = vec![0.0f32; 2 * d];
+        for j in 0..m {
+            phi[..d].copy_from_slice(&input.a[j * d..(j + 1) * d]);
+            phi[d..].copy_from_slice(h.row(j));
+            st.coeffs(&phi, &mut hid, &mut c_one);
+            for (acc, v) in c_mean.iter_mut().zip(&c_one) {
+                *acc += v;
+            }
+        }
+        let inv_m = 1.0 / m as f32;
+        for v in c_mean.iter_mut() {
+            *v *= inv_m;
+        }
+        for v in out.trunk.iter_mut() {
+            *v = 0.0;
+        }
+        for c in 0..st.r {
+            let w = c_mean[c];
+            let urow = &st.u_rows[c * st.p_t..(c + 1) * st.p_t];
+            for (o, uv) in out.trunk.iter_mut().zip(urow) {
+                *o += w * uv;
+            }
+        }
+
+        // Head gradients are exact (closed form), as in the device
+        // predictor — the MLP only models the trunk part.
+        let a_t = Tensor::from_vec(input.a.to_vec(), &[m, d]);
+        let (gw, gb) = Predictor::head_grads(&a_t, &resid);
+        out.head_w.copy_from_slice(&gw);
+        out.head_b.copy_from_slice(&gb);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::tests_manifest;
+
+    /// Low-rank synthetic stream: g_j = U* c(a_j, h_j) with a nonlinear
+    /// coefficient map, so the MLP has signal the linear fit lacks.
+    fn filled_buffer(rng: &mut Pcg64, p_t: usize, d: usize, n: usize) -> FitBuffer {
+        let mut u = vec![0.0f32; 2 * p_t];
+        rng.fill_normal(&mut u, (1.0 / p_t as f32).sqrt());
+        let mut buf = FitBuffer::new(n);
+        for _ in 0..n {
+            let mut a = vec![0.0f32; d];
+            let mut h = vec![0.0f32; d];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut h, 1.0);
+            let c0 = (a[0] * h[0]).tanh() + 0.5 * a[1];
+            let c1 = (a[1] * h[1]).tanh() - 0.5 * h[0];
+            let g: Vec<f32> =
+                (0..p_t).map(|p| c0 * u[p] + c1 * u[p_t + p]).collect();
+            buf.push(&g, &a, &h);
+        }
+        buf
+    }
+
+    #[test]
+    fn fit_is_deterministic_and_reports_sane_numbers() {
+        let mut rng = Pcg64::seeded(9);
+        let buf = filled_buffer(&mut rng, 60, 4, 24);
+        let man = tests_manifest(8, vec![0.25]);
+        let mut ws = Workspace::new();
+        let mut est = NeuralControlVariate::new(0.25).with_mlp(8, 120, 0.05);
+        est.bind(&man).unwrap();
+        let rep = est.fit_own(Backend::blocked(), &buf, 1e-4, &mut ws).unwrap();
+        assert_eq!(rep.n, 24);
+        assert_eq!(rep.rank, man.rank);
+        assert!(rep.energy_captured > 0.99, "{rep:?}"); // exactly rank-2 data
+        assert!(rep.rel_error.is_finite() && rep.rel_error < 1.0, "{rep:?}");
+        assert!(est.predictor_ready(0));
+
+        let mut est2 = NeuralControlVariate::new(0.25).with_mlp(8, 120, 0.05);
+        est2.bind(&man).unwrap();
+        let rep2 = est2.fit_own(Backend::blocked(), &buf, 1e-4, &mut ws).unwrap();
+        assert_eq!(rep.rel_error.to_bits(), rep2.rel_error.to_bits(), "fit must be deterministic");
+    }
+
+    #[test]
+    fn host_predict_fills_all_segments_deterministically() {
+        let mut rng = Pcg64::seeded(10);
+        let (p_t, d, classes, m) = (60usize, 4usize, 3usize, 5usize);
+        let buf = filled_buffer(&mut rng, p_t, d, 24);
+        let man = tests_manifest(8, vec![0.25]);
+        let mut ws = Workspace::new();
+        let mut est = NeuralControlVariate::new(0.25).with_mlp(8, 80, 0.05);
+        est.bind(&man).unwrap();
+        est.fit_own(Backend::blocked(), &buf, 1e-4, &mut ws).unwrap();
+
+        let mut a = vec![0.0f32; m * d];
+        rng.fill_normal(&mut a, 1.0);
+        let mut probs = vec![0.0f32; m * classes];
+        for j in 0..m {
+            let row = &mut probs[j * classes..(j + 1) * classes];
+            let mut z = 0.0f32;
+            for v in row.iter_mut() {
+                *v = rng.next_f32() + 0.1;
+                z += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= z;
+            }
+        }
+        let y: Vec<i32> = (0..m).map(|j| (j % classes) as i32).collect();
+        let mut head_w = vec![0.0f32; d * classes];
+        rng.fill_normal(&mut head_w, 0.5);
+        let input = PredictInput {
+            a: &a,
+            probs: &probs,
+            y: &y,
+            head_w: &head_w,
+            m,
+            width: d,
+            classes,
+            smoothing: 0.0,
+        };
+        let zero = || FlatGrad {
+            trunk: vec![0.0; p_t],
+            head_w: vec![0.0; d * classes],
+            head_b: vec![0.0; classes],
+        };
+        let mut g1 = zero();
+        est.host_predict(&input, &mut g1).unwrap();
+        let mut g2 = zero();
+        est.host_predict(&input, &mut g2).unwrap();
+        assert_eq!(g1.trunk, g2.trunk);
+        assert_eq!(g1.head_w, g2.head_w);
+        assert_eq!(g1.head_b, g2.head_b);
+        assert!(g1.trunk.iter().any(|v| *v != 0.0), "fitted predictor must predict");
+        assert!(g1.head_b.iter().all(|v| v.is_finite()));
+        // Head part is the exact closed form.
+        let resid = residuals(&probs, &y, classes, 0.0);
+        let a_t = Tensor::from_vec(a.clone(), &[m, d]);
+        let (gw, gb) = Predictor::head_grads(&a_t, &resid);
+        assert_eq!(g1.head_w, gw);
+        assert_eq!(g1.head_b, gb);
+    }
+
+    #[test]
+    fn unfitted_predict_and_bad_bind_fail_loudly() {
+        let man = tests_manifest(8, vec![0.25]);
+        let est = NeuralControlVariate::new(0.25);
+        let mut g = FlatGrad { trunk: vec![0.0; 4], head_w: vec![0.0; 2], head_b: vec![0.0; 1] };
+        let input = PredictInput {
+            a: &[],
+            probs: &[],
+            y: &[],
+            head_w: &[],
+            m: 0,
+            width: 0,
+            classes: 1,
+            smoothing: 0.0,
+        };
+        assert!(est.host_predict(&input, &mut g).is_err());
+        assert!(NeuralControlVariate::new(0.0).bind(&man).is_err());
+        assert!(NeuralControlVariate::new(1.5).bind(&man).is_err());
+        assert!(NeuralControlVariate::new(0.25).bind(&man).is_ok());
+    }
+}

@@ -1,0 +1,472 @@
+//! Host estimator testbed: a seeded two-layer linear-softmax workload
+//! every [`GradientEstimator`] can run end-to-end *without* the PJRT
+//! runtime or AOT artifacts.
+//!
+//! The model mirrors the real session's structure exactly where the
+//! estimator seam cares:
+//!
+//! - trunk `a = W_t x` with `W_t` (width, feat) row-major — the trunk
+//!   gradient `h xᵀ` lands in the same layout a `TrunkParam` describes;
+//! - linear head `logits = W_aᵀ a + b` with `head_w` (width, classes)
+//!   row-major — residual backprop `h = W_a r` is bit-for-bit the
+//!   [`Predictor::backprop_features`] feature, so the NTK predictor fits
+//!   this model natively;
+//! - softmax cross-entropy with the same fixed accumulation order as the
+//!   `shard_determinism` host model, so every quantity is a pure bitwise
+//!   function of (parameters, example index).
+//!
+//! [`Testbed::slot_estimate`] mirrors the shard worker's `run_micro`
+//! (control grad → `transform_control` / predictor split → eq.-(1)
+//! combine) against this host model, which is what lets the
+//! `estimator_sweep` example, the statistical unbiasedness suite and the
+//! zoo-wide shard-determinism test drive all five estimators on stub-only
+//! hosts.
+
+use super::{CombineCx, GradientEstimator, PredictInput, UpdatePlan};
+use crate::model::manifest::{Manifest, TrunkParam};
+use crate::model::params::FlatGrad;
+use crate::predictor::fit::FitBuffer;
+use crate::predictor::{residuals, Predictor};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+/// Seeded population + model parameters for the host workload.
+pub struct Testbed {
+    pub feat: usize,
+    pub width: usize,
+    pub classes: usize,
+    /// Population size; batches sample indices in `[0, n)`.
+    pub n: usize,
+    /// Inputs, (n, feat) row-major.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    /// Trunk weights W_t, (width, feat) row-major.
+    pub trunk: Vec<f32>,
+    /// Head weights W_a, (width, classes) row-major.
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+impl Testbed {
+    /// Build a seeded population and initialize the model.
+    pub fn new(seed: u64, n: usize, feat: usize, width: usize, classes: usize) -> Testbed {
+        let mut rng = Pcg64::seeded(seed);
+        let mut x = vec![0.0f32; n * feat];
+        rng.fill_normal(&mut x, 1.0);
+        let y: Vec<i32> = (0..n).map(|_| rng.below(classes as u64) as i32).collect();
+        let mut trunk = vec![0.0f32; width * feat];
+        rng.fill_normal(&mut trunk, (1.0 / feat as f32).sqrt());
+        let mut head_w = vec![0.0f32; width * classes];
+        rng.fill_normal(&mut head_w, (1.0 / width as f32).sqrt());
+        let mut head_b = vec![0.0f32; classes];
+        rng.fill_normal(&mut head_b, 0.01);
+        Testbed { feat, width, classes, n, x, y, trunk, head_w, head_b }
+    }
+
+    /// Trunk parameter count P_T = width × feat.
+    pub fn trunk_params(&self) -> usize {
+        self.width * self.feat
+    }
+
+    /// A manifest describing this model, shaped like the estimator-test
+    /// literal: enough for `bind`/`plan` and the predictor dimensions.
+    pub fn manifest(&self, micro_batch: usize, rank: usize) -> Manifest {
+        let trunk_params = self.trunk_params();
+        Manifest {
+            dir: ".".into(),
+            preset: "estimator-testbed".into(),
+            image: 4,
+            classes: self.classes,
+            width: self.width,
+            label_smoothing: 0.0,
+            rank,
+            n_chunk: 4,
+            n_fit: 64,
+            feat_dim: self.feat,
+            trunk_params,
+            total_params: trunk_params + self.width * self.classes + self.classes,
+            micro_batch,
+            fs: vec![0.25],
+            val_batch: 8,
+            trunk_layout: vec![TrunkParam {
+                name: "w".into(),
+                shape: vec![self.width, self.feat],
+                offset: 0,
+                len: trunk_params,
+                muon: true,
+            }],
+            artifacts: BTreeMap::new(),
+            init_trunk: ".".into(),
+            init_head_w: ".".into(),
+            init_head_b: ".".into(),
+        }
+    }
+
+    /// Zero gradient with this model's segment sizes.
+    pub fn zero_grad(&self) -> FlatGrad {
+        FlatGrad {
+            trunk: vec![0.0; self.trunk_params()],
+            head_w: vec![0.0; self.width * self.classes],
+            head_b: vec![0.0; self.classes],
+        }
+    }
+
+    /// Forward one example: trunk activations (width) and softmax
+    /// probabilities (classes). Fixed accumulation order.
+    pub fn forward(&self, idx: usize, a: &mut [f32], probs: &mut [f32]) -> f32 {
+        let xj = &self.x[idx * self.feat..(idx + 1) * self.feat];
+        for i in 0..self.width {
+            let row = &self.trunk[i * self.feat..(i + 1) * self.feat];
+            let mut s = 0.0f32;
+            for (w, xv) in row.iter().zip(xj) {
+                s += w * xv;
+            }
+            a[i] = s;
+        }
+        let c = self.classes;
+        for k in 0..c {
+            let mut s = self.head_b[k];
+            for i in 0..self.width {
+                s += self.head_w[i * c + k] * a[i];
+            }
+            probs[k] = s;
+        }
+        let mx = probs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0f32;
+        for v in probs.iter_mut() {
+            *v = (*v - mx).exp();
+            z += *v;
+        }
+        for v in probs.iter_mut() {
+            *v /= z;
+        }
+        let yj = self.y[idx] as usize;
+        -(probs[yj].max(1e-30)).ln()
+    }
+
+    /// Exact per-example gradient and loss. `grad` is fully overwritten.
+    pub fn example_grad(&self, idx: usize, grad: &mut FlatGrad) -> f32 {
+        let (w, c) = (self.width, self.classes);
+        let mut a = vec![0.0f32; w];
+        let mut probs = vec![0.0f32; c];
+        let loss = self.forward(idx, &mut a, &mut probs);
+        let yj = self.y[idx] as usize;
+        // residual r = p − onehot(y)
+        let mut r = probs;
+        r[yj] -= 1.0;
+        // h = W_a r — the same feature the NTK predictor backprops.
+        let xj = &self.x[idx * self.feat..(idx + 1) * self.feat];
+        for i in 0..w {
+            let mut h = 0.0f32;
+            for (wv, rv) in self.head_w[i * c..(i + 1) * c].iter().zip(&r) {
+                h += wv * rv;
+            }
+            let gr = &mut grad.trunk[i * self.feat..(i + 1) * self.feat];
+            for (g, xv) in gr.iter_mut().zip(xj) {
+                *g = h * xv;
+            }
+            let gw = &mut grad.head_w[i * c..(i + 1) * c];
+            for (g, rv) in gw.iter_mut().zip(&r) {
+                *g = a[i] * rv;
+            }
+        }
+        grad.head_b.copy_from_slice(&r);
+        loss
+    }
+
+    /// Mean gradient + mean loss over a batch of example indices, plus
+    /// the batch activations/probabilities the predictors consume.
+    pub fn batch_grad(&self, idxs: &[usize]) -> BatchOut {
+        let m = idxs.len();
+        let (w, c) = (self.width, self.classes);
+        let mut out = BatchOut {
+            grad: self.zero_grad(),
+            loss: 0.0,
+            a: vec![0.0; m * w],
+            probs: vec![0.0; m * c],
+            y: Vec::with_capacity(m),
+        };
+        let mut g = self.zero_grad();
+        for (j, &idx) in idxs.iter().enumerate() {
+            out.loss += self.example_grad(idx, &mut g);
+            self.forward(idx, &mut out.a[j * w..(j + 1) * w], &mut out.probs[j * c..(j + 1) * c]);
+            out.y.push(self.y[idx]);
+            for (o, v) in out.grad.trunk.iter_mut().zip(&g.trunk) {
+                *o += v;
+            }
+            for (o, v) in out.grad.head_w.iter_mut().zip(&g.head_w) {
+                *o += v;
+            }
+            for (o, v) in out.grad.head_b.iter_mut().zip(&g.head_b) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / m as f32;
+        out.grad.scale(inv);
+        out.loss *= inv;
+        out
+    }
+
+    /// Cheap forward of a batch (no gradients): activations, probs,
+    /// labels — what the prediction split of a slot sees.
+    pub fn batch_inputs(&self, idxs: &[usize]) -> BatchOut {
+        let m = idxs.len();
+        let (w, c) = (self.width, self.classes);
+        let mut out = BatchOut {
+            grad: FlatGrad { trunk: Vec::new(), head_w: Vec::new(), head_b: Vec::new() },
+            loss: 0.0,
+            a: vec![0.0; m * w],
+            probs: vec![0.0; m * c],
+            y: Vec::with_capacity(m),
+        };
+        for (j, &idx) in idxs.iter().enumerate() {
+            out.loss +=
+                self.forward(idx, &mut out.a[j * w..(j + 1) * w], &mut out.probs[j * c..(j + 1) * c]);
+            out.y.push(self.y[idx]);
+        }
+        out.loss /= m as f32;
+        out
+    }
+
+    /// Push each example's (trunk grad, a, h) onto the fit buffer — the
+    /// same triple the session's refit collectors gather.
+    pub fn fill_fit_buffer(&self, buf: &mut FitBuffer, idxs: &[usize]) {
+        let (w, c) = (self.width, self.classes);
+        let mut g = self.zero_grad();
+        let mut a = vec![0.0f32; w];
+        let mut probs = vec![0.0f32; c];
+        let mut h = vec![0.0f32; w];
+        for &idx in idxs {
+            self.example_grad(idx, &mut g);
+            self.forward(idx, &mut a, &mut probs);
+            let yj = self.y[idx] as usize;
+            let mut r = probs.clone();
+            r[yj] -= 1.0;
+            for i in 0..w {
+                let mut s = 0.0f32;
+                for (wv, rv) in self.head_w[i * c..(i + 1) * c].iter().zip(&r) {
+                    s += wv * rv;
+                }
+                h[i] = s;
+            }
+            buf.push(&g.trunk, &a, &h);
+        }
+    }
+
+    /// Host mirror of the device linear predictor on one batch: trunk
+    /// from `predict_mean_trunk`, head from the exact closed form.
+    pub fn linear_predict(&self, pred: &Predictor, batch: &BatchOut, out: &mut FlatGrad) {
+        let m = batch.y.len();
+        let (w, c) = (self.width, self.classes);
+        let resid = residuals(&batch.probs, &batch.y, c, 0.0);
+        let h = Predictor::backprop_features(&resid, &self.head_w, w);
+        let a_t = Tensor::from_vec(batch.a.clone(), &[m, w]);
+        out.trunk.copy_from_slice(&pred.predict_mean_trunk(&a_t, &h));
+        let (gw, gb) = Predictor::head_grads(&a_t, &resid);
+        out.head_w.copy_from_slice(&gw);
+        out.head_b.copy_from_slice(&gb);
+    }
+
+    /// One slot's gradient estimate — the host mirror of the shard
+    /// worker's `run_micro`: control gradient, then either the
+    /// control-only transform or the (g_cp, g_p) predictor split and the
+    /// estimator's combine. Pure function of (model, stream, pos), so it
+    /// is bit-identical on every shard count.
+    pub fn slot_estimate(
+        &self,
+        est: &dyn GradientEstimator,
+        plan: &UpdatePlan,
+        pred: &Predictor,
+        stream: &[usize],
+        pos: usize,
+    ) -> anyhow::Result<(FlatGrad, f32)> {
+        let ctrl_idx = &stream[pos..pos + plan.mc];
+        let ctrl = self.batch_grad(ctrl_idx);
+        let mut g = ctrl.grad;
+        if !plan.use_pred {
+            est.transform_control(&mut g, pos as u64);
+            return Ok((g, ctrl.loss));
+        }
+        let pred_idx = &stream[pos + plan.mc..pos + plan.mc + plan.mp];
+        let pbatch = self.batch_inputs(pred_idx);
+        let mut g_cp = self.zero_grad();
+        let mut g_p = self.zero_grad();
+        if est.host_predictor() {
+            est.host_predict(
+                &PredictInput {
+                    a: &ctrl.a,
+                    probs: &ctrl.probs,
+                    y: &ctrl.y,
+                    head_w: &self.head_w,
+                    m: plan.mc,
+                    width: self.width,
+                    classes: self.classes,
+                    smoothing: 0.0,
+                },
+                &mut g_cp,
+            )?;
+            est.host_predict(
+                &PredictInput {
+                    a: &pbatch.a,
+                    probs: &pbatch.probs,
+                    y: &pbatch.y,
+                    head_w: &self.head_w,
+                    m: plan.mp,
+                    width: self.width,
+                    classes: self.classes,
+                    smoothing: 0.0,
+                },
+                &mut g_p,
+            )?;
+        } else {
+            self.linear_predict(pred, &ctrl, &mut g_cp);
+            self.linear_predict(pred, &pbatch, &mut g_p);
+        }
+        est.combine(&CombineCx { rt: None }, &mut g, &g_cp, &g_p, plan.f_eff)?;
+        Ok((g, ctrl.loss))
+    }
+
+    /// Plain SGD step over all three segments.
+    pub fn sgd_step(&mut self, grad: &FlatGrad, lr: f32) {
+        for (w, g) in self.trunk.iter_mut().zip(&grad.trunk) {
+            *w -= lr * g;
+        }
+        for (w, g) in self.head_w.iter_mut().zip(&grad.head_w) {
+            *w -= lr * g;
+        }
+        for (w, g) in self.head_b.iter_mut().zip(&grad.head_b) {
+            *w -= lr * g;
+        }
+    }
+
+    /// Exact population mean gradient — the ground truth μ = ∇F the
+    /// unbiasedness suite tests against.
+    pub fn population_grad(&self) -> FlatGrad {
+        let idxs: Vec<usize> = (0..self.n).collect();
+        self.batch_grad(&idxs).grad
+    }
+
+    /// Mean loss over the whole population.
+    pub fn population_loss(&self) -> f32 {
+        let mut a = vec![0.0f32; self.width];
+        let mut p = vec![0.0f32; self.classes];
+        let mut s = 0.0f32;
+        for idx in 0..self.n {
+            s += self.forward(idx, &mut a, &mut p);
+        }
+        s / self.n as f32
+    }
+}
+
+/// One batch's outputs: mean gradient (empty for cheap forwards), mean
+/// loss, and the flattened activations/probabilities/labels.
+pub struct BatchOut {
+    pub grad: FlatGrad,
+    pub loss: f32,
+    pub a: Vec<f32>,
+    pub probs: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::{ControlVariate, TrueBackprop};
+    use crate::predictor::fit::fit;
+
+    #[test]
+    fn example_grad_matches_finite_differences() {
+        let tb = Testbed::new(3, 8, 6, 4, 3);
+        let mut g = tb.zero_grad();
+        tb.example_grad(2, &mut g);
+        let eps = 1e-3f32;
+        let mut a = vec![0.0f32; tb.width];
+        let mut p = vec![0.0f32; tb.classes];
+        // trunk coordinate
+        for &k in &[0usize, 7, 13] {
+            let mut tb2 = Testbed { trunk: tb.trunk.clone(), ..clone_light(&tb) };
+            tb2.trunk[k] += eps;
+            let up = tb2.forward(2, &mut a, &mut p);
+            tb2.trunk[k] -= 2.0 * eps;
+            let dn = tb2.forward(2, &mut a, &mut p);
+            let fd = (up - dn) / (2.0 * eps);
+            assert!((fd - g.trunk[k]).abs() < 2e-2, "trunk[{k}]: fd={fd} an={}", g.trunk[k]);
+        }
+        // head coordinate
+        for &k in &[0usize, 5] {
+            let mut tb2 = clone_light(&tb);
+            tb2.head_w[k] += eps;
+            let up = tb2.forward(2, &mut a, &mut p);
+            tb2.head_w[k] -= 2.0 * eps;
+            let dn = tb2.forward(2, &mut a, &mut p);
+            let fd = (up - dn) / (2.0 * eps);
+            assert!((fd - g.head_w[k]).abs() < 2e-2, "head_w[{k}]: fd={fd} an={}", g.head_w[k]);
+        }
+    }
+
+    fn clone_light(tb: &Testbed) -> Testbed {
+        Testbed {
+            feat: tb.feat,
+            width: tb.width,
+            classes: tb.classes,
+            n: tb.n,
+            x: tb.x.clone(),
+            y: tb.y.clone(),
+            trunk: tb.trunk.clone(),
+            head_w: tb.head_w.clone(),
+            head_b: tb.head_b.clone(),
+        }
+    }
+
+    #[test]
+    fn slot_estimate_true_backprop_equals_batch_grad() {
+        let tb = Testbed::new(5, 32, 8, 4, 3);
+        let man = tb.manifest(8, 2);
+        let est = TrueBackprop;
+        let plan = est.plan(&man, true);
+        let stream: Vec<usize> = (0..16).map(|i| (i * 3) % tb.n).collect();
+        let (g, loss) = tb.slot_estimate(&est, &plan, &Predictor::new(tb.trunk_params(), 4, 2), &stream, 0).unwrap();
+        let want = tb.batch_grad(&stream[0..8]);
+        assert_eq!(g.trunk, want.grad.trunk);
+        assert_eq!(loss, want.loss);
+    }
+
+    #[test]
+    fn cv_slot_estimate_runs_through_the_fitted_linear_predictor() {
+        let tb = Testbed::new(6, 64, 8, 4, 3);
+        let man = tb.manifest(8, 2);
+        let mut est = ControlVariate::new(0.25);
+        est.bind(&man).unwrap();
+        let mut buf = FitBuffer::new(24);
+        tb.fill_fit_buffer(&mut buf, &(0..24).collect::<Vec<_>>());
+        let mut pred = Predictor::new(tb.trunk_params(), tb.width, 2);
+        fit(&mut pred, &buf, 1e-4).unwrap();
+        let plan = est.plan(&man, true);
+        assert!(plan.use_pred);
+        let stream: Vec<usize> = (0..32).map(|i| (i * 5) % tb.n).collect();
+        let (g, _) = tb.slot_estimate(&est, &plan, &pred, &stream, 0).unwrap();
+        assert!(g.trunk.iter().all(|v| v.is_finite()));
+        // The combine moved the estimate off the pure control gradient.
+        let ctrl = tb.batch_grad(&stream[0..plan.mc]);
+        assert_ne!(g.trunk, ctrl.grad.trunk);
+    }
+
+    #[test]
+    fn fit_buffer_features_match_predictor_contract() {
+        // h pushed by fill_fit_buffer must equal backprop_features of the
+        // residuals — that equality is what makes the NTK fit native here.
+        let tb = Testbed::new(7, 16, 6, 4, 3);
+        let mut buf = FitBuffer::new(4);
+        tb.fill_fit_buffer(&mut buf, &[1, 2, 3, 4]);
+        let b = tb.batch_inputs(&[1, 2, 3, 4]);
+        let resid = residuals(&b.probs, &b.y, tb.classes, 0.0);
+        let h = Predictor::backprop_features(&resid, &tb.head_w, tb.width);
+        for j in 0..4 {
+            let hrow = h.row(j);
+            for (x, y) in buf.h(j).iter().zip(hrow) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+}

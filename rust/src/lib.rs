@@ -54,9 +54,10 @@ pub mod util;
 /// builder, the shipped estimators and observers, and the config enums
 /// their setters take.
 pub mod prelude {
-    pub use crate::config::{Algo, OptimKind, RunConfig};
+    pub use crate::config::{Algo, EstimatorKind, OptimKind, RunConfig};
     pub use crate::estimator::{
-        ControlVariate, GradientEstimator, PredictedLgp, TrueBackprop, UpdatePlan,
+        ControlVariate, GradientEstimator, MultiTangentForward, NeuralControlVariate,
+        PredictedLgp, TrueBackprop, UpdatePlan,
     };
     pub use crate::metrics::{Alignment, LogRow};
     pub use crate::observer::{

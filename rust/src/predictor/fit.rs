@@ -181,24 +181,22 @@ pub fn fit_with(
     fit_with_ws(be, pred, buf, lambda, &mut ws)
 }
 
-/// [`fit_with`] drawing every large intermediate (the two n×n Grams, the
-/// scaled eigenvector block, the U column build, the ridge targets) from
-/// the caller's [`Workspace`] — the coordinator threads one long-lived
-/// arena through here so repeat refits reuse the same slabs (ADR-003).
-pub fn fit_with_ws(
+/// Step 1 of the fit, shared with estimators that learn their own
+/// coefficient map over the same basis (ADR-006): the rank-r Gram-trick
+/// basis of the buffered gradients. Returns U in *transposed* layout —
+/// an (r, p_t) tensor whose row c is column c of U (contiguous, so
+/// projections are plain dots) — plus the captured-energy fraction.
+/// The tensor is drawn from `ws`; the caller must `give_tensor` it back.
+pub fn gram_basis(
     be: Backend,
-    pred: &mut Predictor,
     buf: &FitBuffer,
-    lambda: f32,
+    r: usize,
     ws: &mut Workspace,
-) -> anyhow::Result<FitReport> {
+) -> anyhow::Result<(Tensor, f64)> {
     let n = buf.len();
-    let r = pred.rank;
     anyhow::ensure!(n >= 2 * r, "need at least 2r = {} fit samples, have {n}", 2 * r);
     let p_t = buf.grad(0).len();
-    let d = pred.width;
 
-    // ---- 1. basis U via the Gram trick --------------------------------
     // K = G G^T (n, n). f32 unrolled dot via the backend: at P_T ~
     // 10^5..10^7 the relative error is ~1e-5·sqrt(P_T) of norm — far below
     // the fit's own noise — and 5-10x faster than the f64 path (perf pass,
@@ -249,6 +247,28 @@ pub fn fit_with_ws(
         }
     }
     ws.give_tensor(scaled_v);
+    let energy = if total_energy > 0.0 { top_energy / total_energy } else { 0.0 };
+    Ok((u_cols, energy))
+}
+
+/// [`fit_with`] drawing every large intermediate (the two n×n Grams, the
+/// scaled eigenvector block, the U column build, the ridge targets) from
+/// the caller's [`Workspace`] — the coordinator threads one long-lived
+/// arena through here so repeat refits reuse the same slabs (ADR-003).
+pub fn fit_with_ws(
+    be: Backend,
+    pred: &mut Predictor,
+    buf: &FitBuffer,
+    lambda: f32,
+    ws: &mut Workspace,
+) -> anyhow::Result<FitReport> {
+    let r = pred.rank;
+    let d = pred.width;
+
+    // ---- 1. basis U via the Gram trick --------------------------------
+    let (u_cols, energy_captured) = gram_basis(be, buf, r, ws)?;
+    let n = buf.len();
+    let p_t = buf.grad(0).len();
 
     // ---- 2. targets C = G U  (contiguous f32 dots over u_cols) ---------
     let mut targets = ws.take_tensor(&[n, r]);
@@ -342,7 +362,7 @@ pub fn fit_with_ws(
     Ok(FitReport {
         n,
         rank: r,
-        energy_captured: if total_energy > 0.0 { top_energy / total_energy } else { 0.0 },
+        energy_captured,
         rel_error: (err_num / err_den.max(1e-30)).sqrt(),
     })
 }

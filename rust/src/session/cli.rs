@@ -41,6 +41,9 @@ pub fn builder_from_args(args: &Args) -> anyhow::Result<SessionBuilder> {
     if let Some(v) = args.str_opt("backend") {
         b = b.backend(v.parse()?);
     }
+    if let Some(v) = args.str_opt("estimator") {
+        b = b.estimator_kind(v.parse()?);
+    }
     // Numeric flags: absent keeps the builder's current value (default <
     // json < cli precedence); present-but-malformed is a hard error, the
     // same contract as the env overrides (`util::env_parse`) — explicit
@@ -87,6 +90,9 @@ pub fn builder_from_args(args: &Args) -> anyhow::Result<SessionBuilder> {
     if let Some(v) = args.parsed::<usize>("shards")? {
         b = b.shards(v);
     }
+    if let Some(v) = args.parsed::<usize>("tangents")? {
+        b = b.tangents(v);
+    }
     if args.flag("no-alignment") {
         b = b.track_alignment(false);
     }
@@ -123,6 +129,18 @@ mod tests {
         assert_eq!(c.shards, 2);
         assert!(!c.track_alignment);
         assert!((c.f - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimator_flags_map_onto_builder() {
+        use crate::config::EstimatorKind;
+        let a = parse("train --estimator mtf --tangents 32");
+        let b = builder_from_args(&a).unwrap();
+        assert_eq!(b.config().estimator, Some(EstimatorKind::MultiTangent));
+        assert_eq!(b.config().tangents, 32);
+        let a = parse("train --estimator nope");
+        let err = builder_from_args(&a).unwrap_err();
+        assert!(format!("{err}").contains("unknown estimator 'nope'"), "{err}");
     }
 
     #[test]

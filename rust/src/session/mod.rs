@@ -36,10 +36,13 @@ mod worker;
 
 pub use worker::{ShardWorker, SlotCtx};
 
-use crate::config::{Algo, OptimKind, RunConfig};
+use crate::config::{Algo, EstimatorKind, OptimKind, RunConfig};
 use crate::coordinator::{exec, reduce};
 use crate::data::loader::DataPipeline;
-use crate::estimator::{ControlVariate, GradientEstimator, TrueBackprop};
+use crate::estimator::{
+    ControlVariate, GradientEstimator, MultiTangentForward, NeuralControlVariate, PredictedLgp,
+    TrueBackprop,
+};
 use crate::metrics::{alignment_of, AlignmentMeter, Ema, LogRow};
 use crate::model::params::{FlatGrad, ParamStore};
 use crate::observer::{RefitEvent, RunSummary, TrainObserver};
@@ -117,6 +120,21 @@ impl SessionBuilder {
     /// Explicit gradient estimator (overrides `algo`/`f`/`adaptive_f`).
     pub fn estimator(mut self, est: Box<dyn GradientEstimator>) -> Self {
         self.estimator = Some(est);
+        self
+    }
+
+    /// Pick a zoo member by kind (ADR-006) — the enum form of
+    /// [`estimator`](Self::estimator), shared with the `--estimator` CLI
+    /// flag. Overrides `algo`; `f`/`seed`/`tangents` still parameterize
+    /// the constructed estimator.
+    pub fn estimator_kind(mut self, kind: EstimatorKind) -> Self {
+        self.cfg.estimator = Some(kind);
+        self
+    }
+
+    /// Tangent-direction count K for [`MultiTangentForward`].
+    pub fn tangents(mut self, k: usize) -> Self {
+        self.cfg.tangents = k;
         self
     }
 
@@ -254,6 +272,9 @@ impl SessionBuilder {
         if let Some(v) = j.get("backend").and_then(Json::as_str) {
             self.cfg.backend = v.parse()?;
         }
+        if let Some(v) = j.get("estimator").and_then(Json::as_str) {
+            self.cfg.estimator = Some(v.parse()?);
+        }
         macro_rules! num {
             ($key:literal, $field:expr, $ty:ty) => {
                 if let Some(v) = j.get($key).and_then(Json::as_f64) {
@@ -275,6 +296,7 @@ impl SessionBuilder {
         num!("seed", self.cfg.seed, u64);
         num!("eval_every", self.cfg.eval_every, usize);
         num!("shards", self.cfg.shards, usize);
+        num!("tangents", self.cfg.tangents, usize);
         if let Some(v) = j.get("track_alignment").and_then(Json::as_bool) {
             self.cfg.track_alignment = v;
         }
@@ -299,10 +321,36 @@ impl SessionBuilder {
         );
         let mut est = match estimator {
             Some(e) => e,
-            None => match cfg.algo {
-                Algo::Baseline => Box::new(TrueBackprop) as Box<dyn GradientEstimator>,
-                Algo::Gpr => Box::new(ControlVariate::new(cfg.f).with_adaptive(cfg.adaptive_f)),
-            },
+            None => {
+                // Zoo selection (ADR-006): an explicit kind wins, else the
+                // legacy algo mapping (baseline → true-backprop,
+                // gpr → control-variate).
+                let kind = cfg.estimator.unwrap_or(match cfg.algo {
+                    Algo::Baseline => EstimatorKind::TrueBackprop,
+                    Algo::Gpr => EstimatorKind::ControlVariate,
+                });
+                anyhow::ensure!(
+                    !cfg.adaptive_f || kind == EstimatorKind::ControlVariate,
+                    "adaptive_f is only supported by the control-variate estimator \
+                     (requested '{}')",
+                    kind.as_str()
+                );
+                match kind {
+                    EstimatorKind::TrueBackprop => {
+                        Box::new(TrueBackprop) as Box<dyn GradientEstimator>
+                    }
+                    EstimatorKind::ControlVariate => {
+                        Box::new(ControlVariate::new(cfg.f).with_adaptive(cfg.adaptive_f))
+                    }
+                    EstimatorKind::PredictedLgp => Box::new(PredictedLgp::new(cfg.f)),
+                    EstimatorKind::MultiTangent => {
+                        Box::new(MultiTangentForward::new(cfg.tangents, cfg.seed))
+                    }
+                    EstimatorKind::NeuralCv => {
+                        Box::new(NeuralControlVariate::new(cfg.f).with_seed(cfg.seed))
+                    }
+                }
+            }
         };
         anyhow::ensure!(
             est.f() > 0.0 && est.f() <= 1.0,
@@ -421,11 +469,14 @@ impl TrainSession {
             let (mc, mp) = m.split_sizes(f);
             names.push(m.train_grads_name(mc));
             // predict artifacts are only touched when there is a
-            // prediction micro-batch (f < 1)
+            // prediction micro-batch (f < 1); host predictors (ADR-006)
+            // only need the CheapForward, not the device predict_grad.
             if mp > 0 && self.est.uses_predictor() {
-                names.push(m.predict_grad_name(mc));
                 names.push(m.cheap_fwd_name(mp));
-                names.push(m.predict_grad_name(mp));
+                if !self.est.host_predictor() {
+                    names.push(m.predict_grad_name(mc));
+                    names.push(m.predict_grad_name(mp));
+                }
             }
         }
         names.push(m.cheap_fwd_name(m.val_batch));
@@ -458,20 +509,26 @@ impl TrainSession {
     /// workers and return the reduced leaf sums in slot order — gradient
     /// plus the (loss, acc) traces.
     fn execute_update(&mut self, dev: &DeviceParams) -> anyhow::Result<(FlatGrad, f64, f64)> {
-        let plan = self.est.plan(&self.rt.manifest, self.pred.fits > 0);
-        if plan.use_pred {
+        let ready = self.est.predictor_ready(self.pred.fits);
+        let plan = self.est.plan(&self.rt.manifest, ready);
+        let host_pred = self.est.host_predictor();
+        if plan.use_pred && !host_pred {
             // Upload once per update (version-cached) and share read-only
-            // across the shards.
+            // across the shards. Host predictors (ADR-006) own their
+            // state, so nothing goes to the device.
             let up = self.rt.upload_predictor(&self.pred, self.dev_pred.take())?;
             self.dev_pred = Some(up);
         }
         let ctx = SlotCtx {
             rt: &self.rt,
             dev,
-            dev_pred: if plan.use_pred { self.dev_pred.as_ref() } else { None },
+            dev_pred: if plan.use_pred && !host_pred { self.dev_pred.as_ref() } else { None },
             est: &*self.est,
             plan,
             classes: self.rt.manifest.classes,
+            head_w: &self.params.head_w,
+            width: self.rt.manifest.width,
+            smoothing: self.rt.manifest.label_smoothing as f32,
         };
         let per_slot = plan.consumed_per_slot();
         let base = self.data.cursor();
@@ -556,13 +613,26 @@ impl TrainSession {
             }
         }
 
-        let report = fit_with_ws(
-            self.backend,
-            &mut self.pred,
-            &self.fit_buf,
-            self.cfg.ridge_lambda as f32,
-            &mut self.ws,
-        )?;
+        // ADR-006: estimators owning their predictor (neural-cv) fit from
+        // the same collected stream; everyone else refits the shared
+        // linear predictor.
+        let owns_fit = self.est.owns_predictor_fit();
+        let report = if owns_fit {
+            self.est.fit_own(
+                self.backend,
+                &self.fit_buf,
+                self.cfg.ridge_lambda as f32,
+                &mut self.ws,
+            )?
+        } else {
+            fit_with_ws(
+                self.backend,
+                &mut self.pred,
+                &self.fit_buf,
+                self.cfg.ridge_lambda as f32,
+                &mut self.ws,
+            )?
+        };
         crate::log_debug!(
             "refit: n={} energy={:.3} rel_err={:.3}",
             report.n,
@@ -573,7 +643,8 @@ impl TrainSession {
         // samples (plug-in ρ̂/κ̂ of Sec. 5.3) — computed once per refit and
         // cached (a per-step recomputation over n_fit × P_T floats was the
         // top hot-path cost before the perf pass; see EXPERIMENTS.md §Perf).
-        if self.cfg.track_alignment {
+        // Skipped for estimator-owned fits: `self.pred` was not refitted.
+        if self.cfg.track_alignment && !owns_fit {
             let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..self.fit_buf.len())
                 .map(|j| {
                     let a_row = &self.fit_buf.a1(j)[..d];
@@ -628,7 +699,7 @@ impl TrainSession {
             if self.est.uses_predictor()
                 && self.est.plan(&self.rt.manifest, true).mp > 0
             {
-                let due = if self.pred.fits == 0 {
+                let due = if !self.est.predictor_ready(self.pred.fits) {
                     self.step >= 1
                 } else {
                     self.cfg.refit_every > 0 && self.step % self.cfg.refit_every == 0
@@ -828,5 +899,38 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(format!("{err}").contains("control fraction"), "{err}");
+    }
+
+    #[test]
+    fn estimator_kind_and_tangents_accumulate() {
+        let b = SessionBuilder::new()
+            .estimator_kind(EstimatorKind::MultiTangent)
+            .tangents(16);
+        assert_eq!(b.config().estimator, Some(EstimatorKind::MultiTangent));
+        assert_eq!(b.config().tangents, 16);
+        // And through JSON, with an alias.
+        let j = Json::parse(r#"{"estimator":"ncv","tangents":4}"#).unwrap();
+        let b = SessionBuilder::new().apply_json(&j).unwrap();
+        assert_eq!(b.config().estimator, Some(EstimatorKind::NeuralCv));
+        assert_eq!(b.config().tangents, 4);
+        let j = Json::parse(r#"{"estimator":"nope"}"#).unwrap();
+        assert!(SessionBuilder::new().apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn adaptive_f_rejects_non_control_variate_kinds() {
+        let err = SessionBuilder::new()
+            .estimator_kind(EstimatorKind::PredictedLgp)
+            .adaptive_f(true)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("control-variate"), "{err}");
+        // Tangent count is validated like every other range check.
+        let err = SessionBuilder::new()
+            .estimator_kind(EstimatorKind::MultiTangent)
+            .tangents(0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("tangent"), "{err}");
     }
 }

@@ -9,7 +9,7 @@
 //! worker.
 
 use crate::data::loader::ShardDataView;
-use crate::estimator::{CombineCx, GradientEstimator, UpdatePlan};
+use crate::estimator::{CombineCx, GradientEstimator, PredictInput, UpdatePlan};
 use crate::metrics::accuracy;
 use crate::model::params::FlatGrad;
 use crate::predictor::fit::FitBuffer;
@@ -66,6 +66,11 @@ pub struct SlotCtx<'a> {
     pub est: &'a dyn GradientEstimator,
     pub plan: UpdatePlan,
     pub classes: usize,
+    /// Host copy of the head weights (width, classes row-major) — host
+    /// predictors (ADR-006) backprop residuals through it on-thread.
+    pub head_w: &'a [f32],
+    pub width: usize,
+    pub smoothing: f32,
 }
 
 /// One micro-batch slot's contribution: the gradient leaf plus the scalar
@@ -110,35 +115,79 @@ pub(crate) fn run_micro(
     // prediction draw (consumed_per_slot matches).
     if !plan.use_pred {
         let TrainOut { loss, g_trunk, g_head_w, g_head_b, .. } = ctrl;
-        return Ok(MicroOut {
-            grad: FlatGrad { trunk: g_trunk, head_w: g_head_w, head_b: g_head_b },
-            loss,
-            acc,
-            cost: c_units,
-            examples,
-        });
+        let mut grad = FlatGrad { trunk: g_trunk, head_w: g_head_w, head_b: g_head_b };
+        // Control-only post-transform (ADR-006): seeded by the stream
+        // position — a pure function of the data cursor — so the result
+        // is bit-identical at every shard count. Identity for all but
+        // MultiTangentForward.
+        ctx.est.transform_control(&mut grad, pos as u64);
+        return Ok(MicroOut { grad, loss, acc, cost: c_units, examples });
     }
-    let dev_pred = ctx
-        .dev_pred
-        .expect("session uploads the predictor before a use_pred scatter");
 
-    // -- predictor on the control micro-batch (g_cp) ----------------------
-    let pc = ctx
-        .rt
-        .predict_grad(&ctrl.a, &ctrl.probs, &w.y, ctx.dev, dev_pred, plan.mc)?;
-
-    // -- prediction micro-batch: CheapForward + predictor (g_p) -----------
+    // -- prediction micro-batch inputs: CheapForward ----------------------
     w.view.batch_at(pos + plan.mc, plan.mp, &mut w.xp, &mut w.yp);
     let (a_p, probs_p) = ctx.rt.cheap_fwd(ctx.dev, &w.xp, plan.mp)?;
-    let pp = ctx
-        .rt
-        .predict_grad(&a_p, &probs_p, &w.yp, ctx.dev, dev_pred, plan.mp)?;
 
-    let g_cp = FlatGrad { trunk: pc.g_trunk, head_w: pc.g_head_w, head_b: pc.g_head_b };
-    let g_p = FlatGrad { trunk: pp.g_trunk, head_w: pp.g_head_w, head_b: pp.g_head_b };
+    let (g_cp, g_p) = if ctx.est.host_predictor() {
+        // Host predictor (ADR-006): the estimator owns the prediction —
+        // no device predictor upload, no predict_grad round-trips.
+        let zeros = || FlatGrad {
+            trunk: vec![0.0; ctrl.g_trunk.len()],
+            head_w: vec![0.0; ctrl.g_head_w.len()],
+            head_b: vec![0.0; ctrl.g_head_b.len()],
+        };
+        let mut g_cp = zeros();
+        let mut g_p = zeros();
+        ctx.est.host_predict(
+            &PredictInput {
+                a: &ctrl.a,
+                probs: &ctrl.probs,
+                y: &w.y,
+                head_w: ctx.head_w,
+                m: plan.mc,
+                width: ctx.width,
+                classes: ctx.classes,
+                smoothing: ctx.smoothing,
+            },
+            &mut g_cp,
+        )?;
+        ctx.est.host_predict(
+            &PredictInput {
+                a: &a_p,
+                probs: &probs_p,
+                y: &w.yp,
+                head_w: ctx.head_w,
+                m: plan.mp,
+                width: ctx.width,
+                classes: ctx.classes,
+                smoothing: ctx.smoothing,
+            },
+            &mut g_p,
+        )?;
+        (g_cp, g_p)
+    } else {
+        let dev_pred = ctx
+            .dev_pred
+            .expect("session uploads the predictor before a use_pred scatter");
+
+        // -- predictor on the control micro-batch (g_cp) ------------------
+        let pc = ctx
+            .rt
+            .predict_grad(&ctrl.a, &ctrl.probs, &w.y, ctx.dev, dev_pred, plan.mc)?;
+
+        // -- predictor on the prediction micro-batch (g_p) ----------------
+        let pp = ctx
+            .rt
+            .predict_grad(&a_p, &probs_p, &w.yp, ctx.dev, dev_pred, plan.mp)?;
+
+        (
+            FlatGrad { trunk: pc.g_trunk, head_w: pc.g_head_w, head_b: pc.g_head_b },
+            FlatGrad { trunk: pp.g_trunk, head_w: pp.g_head_w, head_b: pp.g_head_b },
+        )
+    };
 
     // -- estimator-owned combine (ADR-005) --------------------------------
     let mut g = FlatGrad { trunk: ctrl.g_trunk, head_w: ctrl.g_head_w, head_b: ctrl.g_head_b };
-    ctx.est.combine(&CombineCx { rt: ctx.rt }, &mut g, &g_cp, &g_p, plan.f_eff)?;
+    ctx.est.combine(&CombineCx { rt: Some(ctx.rt) }, &mut g, &g_cp, &g_p, plan.f_eff)?;
     Ok(MicroOut { grad: g, loss: ctrl.loss, acc, cost: c_units, examples })
 }

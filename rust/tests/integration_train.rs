@@ -39,6 +39,8 @@ fn tiny_cfg() -> Option<RunConfig> {
         // assertion below holds unchanged. A malformed LGP_SHARDS is a
         // hard error, never a silent serial fallback.
         shards: lgp::config::shards_env_override().expect("LGP_SHARDS").unwrap_or(1),
+        estimator: None,
+        tangents: 8,
     })
 }
 

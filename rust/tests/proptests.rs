@@ -3,6 +3,7 @@
 //! seeded PCG64; failures print the violating seed for reproduction.
 
 use lgp::estimator::combine::{cv_combine, split_indices};
+use lgp::estimator::forward::multi_tangent_project;
 use lgp::coordinator::{exec, reduce};
 use lgp::data::loader::DataPipeline;
 use lgp::model::params::FlatGrad;
@@ -48,6 +49,68 @@ fn prop_cv_combine_linear_identities() {
             let want = f * ct.trunk[i] + (1.0 - f) * p.trunk[i];
             assert!((gp.trunk[i] - want).abs() < 1e-5, "seed {seed}");
         }
+    }
+}
+
+/// Property (ADR-006): when the predictor's output on the control part is
+/// bitwise identical to its output on the prediction part, eq. (1)'s
+/// correction `(1−f)(g_p − g_cp)` is exactly ±0.0 and the combine returns
+/// the control gradient bit-for-bit — for every f, including f = 0, where
+/// the estimate is carried *entirely* by the correction term.
+#[test]
+fn prop_cv_combine_identical_predictions_is_bitwise_identity() {
+    let bits_eq = |a: &[f32], b: &[f32]| a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 108);
+        let n = 1 + rng.below(64) as usize;
+        let ct = rand_grad(&mut rng, n);
+        let p = rand_grad(&mut rng, n);
+        for f in [0.0f32, 0.25, 0.6, 1.0] {
+            let g = cv_combine(&ct, &p, &p, f);
+            assert!(bits_eq(&g.trunk, &ct.trunk), "seed {seed} f={f}");
+            assert!(bits_eq(&g.head_w, &ct.head_w), "seed {seed} f={f}");
+            assert!(bits_eq(&g.head_b, &ct.head_b), "seed {seed} f={f}");
+        }
+        // Contrast: distinct predictions at f < 1 must move the estimate.
+        let cp = rand_grad(&mut rng, n);
+        let g = cv_combine(&ct, &cp, &p, 0.25);
+        assert!(!bits_eq(&g.trunk, &ct.trunk), "seed {seed}");
+    }
+}
+
+/// Property (ADR-006): the multi-tangent forward estimate is invariant to
+/// the *order* of its tangent seeds — `multi_tangent_project` sorts them
+/// before accumulating, so any permutation produces a bitwise-identical
+/// projection. This is what makes the estimator shard-invariant: shard
+/// scheduling can never reorder a slot's tangents.
+#[test]
+fn prop_multi_tangent_projection_permutation_invariant() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 109);
+        let n = 1 + rng.below(48) as usize;
+        let k = 1 + rng.below(12) as usize;
+        let g0 = rand_grad(&mut rng, n);
+        let seeds: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
+        let mut shuffled = seeds.clone();
+        for i in (1..shuffled.len()).rev() {
+            let j = rng.below((i + 1) as u64) as usize;
+            shuffled.swap(i, j);
+        }
+        let mut a = g0.clone();
+        multi_tangent_project(&mut a, &seeds);
+        let mut b = g0.clone();
+        multi_tangent_project(&mut b, &shuffled);
+        for (x, y) in a.trunk.iter().zip(&b.trunk) {
+            assert_eq!(x.to_bits(), y.to_bits(), "seed {seed}");
+        }
+        for (x, y) in a.head_w.iter().zip(&b.head_w) {
+            assert_eq!(x.to_bits(), y.to_bits(), "seed {seed}");
+        }
+        for (x, y) in a.head_b.iter().zip(&b.head_b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "seed {seed}");
+        }
+        // The projection is an estimate, not the identity.
+        assert_ne!(a.trunk, g0.trunk, "seed {seed}");
     }
 }
 

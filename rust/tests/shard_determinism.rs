@@ -20,14 +20,21 @@
 //! `LGP_SHARDS=K cargo test -q` adds K to the sweep in both layers, so
 //! the tier-1 smoke invocation exercises the requested width.
 
-use lgp::config::{shards_env_override, Algo, OptimKind, RunConfig};
+use lgp::config::{shards_env_override, Algo, EstimatorKind, OptimKind, RunConfig};
 use lgp::coordinator::{exec, reduce};
 use lgp::data::loader::{DataPipeline, ShardDataView};
+use lgp::estimator::testbed::Testbed;
+use lgp::estimator::{
+    ControlVariate, GradientEstimator, MultiTangentForward, NeuralControlVariate, PredictedLgp,
+    TrueBackprop,
+};
 use lgp::model::manifest::{Manifest, TrunkParam};
 use lgp::model::params::{FlatGrad, ParamStore};
 use lgp::optim::{OptimConfig, Optimizer};
+use lgp::predictor::fit::{fit_with, FitBuffer};
+use lgp::predictor::Predictor;
 use lgp::session::SessionBuilder;
-use lgp::tensor::Backend;
+use lgp::tensor::{Backend, Workspace};
 use lgp::util::rng::Pcg64;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -221,6 +228,91 @@ fn host_model_sharding_is_repeatable() {
 }
 
 // ---------------------------------------------------------------------------
+// Layer 1b: the full estimator zoo through the same sharded machinery
+// ---------------------------------------------------------------------------
+
+/// A short training run of one zoo member on the host [`Testbed`]
+/// through the real scatter/reduce executor. Returns the final trunk
+/// parameters and the per-update loss trace (as bits).
+fn run_zoo_host(kind: EstimatorKind, shards: usize, updates: usize) -> (Vec<f32>, Vec<u64>) {
+    const SEED: u64 = 11;
+    const ACC: usize = 4;
+    let mut tb = Testbed::new(SEED, 128, 12, 6, 4);
+    let man = tb.manifest(8, 2);
+    let mut est: Box<dyn GradientEstimator> = match kind {
+        EstimatorKind::TrueBackprop => Box::new(TrueBackprop),
+        EstimatorKind::ControlVariate => Box::new(ControlVariate::new(0.25)),
+        EstimatorKind::PredictedLgp => Box::new(PredictedLgp::new(0.25)),
+        EstimatorKind::MultiTangent => Box::new(MultiTangentForward::new(4, SEED)),
+        EstimatorKind::NeuralCv => {
+            Box::new(NeuralControlVariate::new(0.25).with_seed(SEED).with_mlp(6, 60, 0.05))
+        }
+    };
+    est.bind(&man).unwrap();
+    let mut pred = Predictor::new(tb.trunk_params(), tb.width, man.rank);
+    let mut linear_fits = 0usize;
+    if est.uses_predictor() {
+        let mut buf = FitBuffer::new(man.n_fit);
+        let idxs: Vec<usize> = (0..man.n_fit).map(|i| (i * 5) % tb.n).collect();
+        tb.fill_fit_buffer(&mut buf, &idxs);
+        if est.owns_predictor_fit() {
+            est.fit_own(Backend::blocked(), &buf, 1e-4, &mut Workspace::new()).unwrap();
+        } else {
+            fit_with(Backend::blocked(), &mut pred, &buf, 1e-4).unwrap();
+            linear_fits = 1;
+        }
+    }
+    let plan = est.plan(&man, est.predictor_ready(linear_fits));
+    let consumed = plan.consumed_per_slot();
+    let mut rng = Pcg64::new(SEED, 0x7373);
+    let stream: Vec<usize> =
+        (0..updates * ACC * consumed).map(|_| rng.below(tb.n as u64) as usize).collect();
+    let mut workers: Vec<()> = vec![(); shards];
+    let mut losses = Vec::with_capacity(updates);
+    let mut cursor = 0usize;
+    for _ in 0..updates {
+        let base = cursor;
+        let outs = {
+            let (tbr, predr, streamr) = (&tb, &pred, &stream);
+            let est_ref: &dyn GradientEstimator = &*est;
+            exec::scatter(&mut workers, ACC, |_w, slot| {
+                tbr.slot_estimate(est_ref, &plan, predr, streamr, base + slot * consumed)
+            })
+            .unwrap()
+        };
+        let mut loss = 0.0f64;
+        let mut leaves = Vec::with_capacity(ACC);
+        for (g, l) in outs {
+            loss += l as f64;
+            leaves.push(g);
+        }
+        let mut grad = reduce::tree_reduce_grads(leaves).unwrap();
+        grad.scale(1.0 / ACC as f32);
+        tb.sgd_step(&grad, 0.05);
+        losses.push((loss / ACC as f64).to_bits());
+        cursor += ACC * consumed;
+    }
+    (tb.trunk.clone(), losses)
+}
+
+#[test]
+fn estimator_zoo_shards_are_bit_identical_to_serial() {
+    // Every zoo member (ADR-006), not just the GPR path: slot estimates
+    // are pure functions of (model, stream, position) — multi-tangent's
+    // seeded tangents and neural-cv's host predictor included — so shard
+    // scheduling must never leak into the parameters.
+    for &kind in EstimatorKind::ALL {
+        let (trunk1, loss1) = run_zoo_host(kind, 1, 3);
+        assert!(trunk1.iter().all(|v| v.is_finite()), "{kind:?}");
+        for shards in shard_sweep() {
+            let (trunk_n, loss_n) = run_zoo_host(kind, shards, 3);
+            assert_eq!(trunk_n, trunk1, "{kind:?} shards={shards}: trunk differs (bitwise)");
+            assert_eq!(loss_n, loss1, "{kind:?} shards={shards}: loss trace differs");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Layer 2: the full TrainSession, when artifacts exist
 // ---------------------------------------------------------------------------
 
@@ -252,6 +344,8 @@ fn tiny_cfg(shards: usize) -> Option<RunConfig> {
         adaptive_f: false,
         backend: lgp::tensor::BackendKind::Blocked,
         shards,
+        estimator: None,
+        tangents: 8,
     })
 }
 

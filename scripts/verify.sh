@@ -33,10 +33,23 @@ cargo run --release --example quickstart
 cargo run --release --example alignment_study -- --steps 12
 cargo run --release --example e2e_vit_cifar -- --budget 5 --seeds 1
 
+# Estimator zoo head-to-head (ADR-006): a tiny budgeted sweep must cover
+# all five estimators and emit a schema-valid BENCH_estimators.json; the
+# schema's `bench == "estimators"` rule rejects any dropped zoo member.
+LGP_BENCH_BUDGET=10 cargo run --release --example estimator_sweep -- \
+    --updates 8 --trials 8
+cargo run --release --bin bench_report -- --expect estimators
+
 # Formatting gate: rustfmt differences are API-surface noise in review.
-# Skipped only where the toolchain lacks the rustfmt component.
+# Skipped only where the toolchain lacks the rustfmt component. On
+# failure, name the offending files (`-l`) before the diff-bearing exit
+# so the log's last lines say *what* to reformat, not just that the gate
+# tripped.
 if cargo fmt --version >/dev/null 2>&1; then
-    cargo fmt --check
+    if ! cargo fmt -- --check -l; then
+        echo "FAIL: cargo fmt --check — files listed above need rustfmt" >&2
+        exit 1
+    fi
 else
     echo "WARN: rustfmt not installed; skipping cargo fmt --check"
 fi
