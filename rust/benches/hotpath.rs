@@ -165,16 +165,41 @@ fn main() -> anyhow::Result<()> {
     let scfg = kernels::ShardedBenchConfig::from_env();
     let sharded = kernels::run_sharded(&scfg);
     println!(
-        "\n[SHARDED] update throughput, accum={} n={} (micro backend)\n",
-        scfg.accum, scfg.n
+        "\n[SHARDED] update throughput, accum={} n={} and dispatch shape accum={} n={} (micro backend)\n",
+        scfg.accum, scfg.n, scfg.accum_dispatch, scfg.n_dispatch
     );
     kernels::table(&sharded).print();
-    if let (Some(t1), Some(tn)) = (sharded.first(), sharded.last()) {
-        if t1.threads == 1 && tn.threads > 1 && tn.mean_ns > 0.0 {
+    let max_t = scfg.shard_counts.iter().copied().max().unwrap_or(1);
+    let cell = |name: &str, threads: usize, accum: usize, n: usize| {
+        sharded
+            .iter()
+            .find(|r| r.name == name && r.threads == threads && r.shape == [accum, n, n])
+    };
+    if let (Some(t1), Some(tn)) = (
+        cell("sharded_update", 1, scfg.accum, scfg.n),
+        cell("sharded_update", max_t, scfg.accum, scfg.n),
+    ) {
+        if max_t > 1 && tn.mean_ns > 0.0 {
             println!(
                 "\nspeedup at {} shards: {:.2}x updates/s over serial",
-                tn.threads,
+                max_t,
                 t1.mean_ns / tn.mean_ns
+            );
+        }
+    }
+    // The pool's reason to exist: per-update spawn overhead is a visible
+    // fraction of a *small* update, which the dispatch shape isolates.
+    if let (Some(pool), Some(spawn)) = (
+        cell("sharded_update", max_t, scfg.accum_dispatch, scfg.n_dispatch),
+        cell("sharded_update_spawn", max_t, scfg.accum_dispatch, scfg.n_dispatch),
+    ) {
+        if max_t > 1 && pool.mean_ns > 0.0 {
+            println!(
+                "pool vs per-update spawn at {} shards (accum={} n={}): {:.2}x",
+                max_t,
+                scfg.accum_dispatch,
+                scfg.n_dispatch,
+                spawn.mean_ns / pool.mean_ns
             );
         }
     }

@@ -10,8 +10,11 @@
 //! regresses by more than the threshold (default 10%), or when a baseline
 //! cell disappears from the new document (silent coverage loss reads as a
 //! pass otherwise) — the failure text names every missing cell, not just
-//! a count. Cells that exist only in the new document are fine — shape
-//! grids may grow.
+//! a count, and when every missing cell's backend is absent from the new
+//! document entirely it additionally names that backend dimension (a
+//! whole column of e.g. `simd` rows vanishing usually means the host
+//! lacks the baseline machine's CPU features, not a harness bug). Cells
+//! that exist only in the new document are fine — shape grids may grow.
 //!
 //! Drivers: `bench_report --compare <baseline.json> <new.json>` at the
 //! command line, and the cargo-test smoke check in
@@ -22,7 +25,7 @@
 use super::schema;
 use super::Table;
 use crate::util::json::Json;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 /// Default regression threshold: fail on >10% mean ns/op slowdown.
@@ -47,6 +50,14 @@ pub struct CompareReport {
     pub cells: Vec<CellDelta>,
     /// Baseline cells missing from the new document.
     pub missing: Vec<String>,
+    /// Backends that own at least one missing cell and have **zero**
+    /// cells anywhere in the new document. A whole backend column
+    /// vanishing is almost always an environment difference (the host
+    /// lacks the CPU features the baseline machine had — e.g. `simd`
+    /// rows from an AVX2+FMA box), not a bench-harness coverage bug, so
+    /// the failure text names the dimension instead of leaving the user
+    /// to reverse-engineer it from a wall of per-cell keys.
+    pub missing_backends: Vec<String>,
     pub threshold: f64,
 }
 
@@ -98,6 +109,15 @@ impl CompareReport {
                 "{} baseline cell(s) lost coverage (kernel backend shape threads estimator): {}",
                 self.missing.len(),
                 self.missing.join(", ")
+            ));
+        }
+        if !self.missing_backends.is_empty() {
+            parts.push(format!(
+                "note: backend(s) [{}] contribute missing cells and appear nowhere in the new \
+                 document — this host likely lacks the CPU features the baseline machine had \
+                 (e.g. avx2+fma for 'simd'); re-run on matching hardware or regenerate the \
+                 baseline without those rows",
+                self.missing_backends.join(", ")
             ));
         }
         Some(parts.join("; "))
@@ -155,8 +175,12 @@ fn cell_key(rec: &Json) -> Option<String> {
     Some(key)
 }
 
-fn index_cells(doc: &Json, what: &str) -> Result<BTreeMap<String, f64>, String> {
+fn index_cells(
+    doc: &Json,
+    what: &str,
+) -> Result<(BTreeMap<String, f64>, BTreeSet<String>), String> {
     let mut cells = BTreeMap::new();
+    let mut backends = BTreeSet::new();
     let records = doc
         .get("records")
         .and_then(Json::as_arr)
@@ -168,12 +192,14 @@ fn index_cells(doc: &Json, what: &str) -> Result<BTreeMap<String, f64>, String> 
             .get("mean_ns")
             .and_then(Json::as_f64)
             .ok_or_else(|| format!("{what}: records[{i}] missing mean_ns"))?;
+        // cell_key() already proved `backend` is a string.
+        backends.insert(rec.get("backend").and_then(Json::as_str).unwrap().to_string());
         // Duplicate cells would make the comparison ambiguous.
         if cells.insert(key.clone(), mean).is_some() {
             return Err(format!("{what}: duplicate cell '{key}'"));
         }
     }
-    Ok(cells)
+    Ok((cells, backends))
 }
 
 /// Compare two validated documents. Both must pass schema validation and
@@ -187,20 +213,36 @@ pub fn compare_docs(base: &Json, new: &Json, threshold: f64) -> Result<CompareRe
             base_rep.bench, new_rep.bench
         ));
     }
-    let base_cells = index_cells(base, "baseline")?;
-    let new_cells = index_cells(new, "new")?;
+    let (base_cells, _) = index_cells(base, "baseline")?;
+    let (new_cells, new_backends) = index_cells(new, "new")?;
     let mut cells = Vec::new();
     let mut missing = Vec::new();
+    let mut missing_backends = BTreeSet::new();
     for (key, &base_ns) in &base_cells {
         match new_cells.get(key) {
             Some(&new_ns) => {
                 let ratio = if base_ns > 0.0 { new_ns / base_ns } else { 1.0 };
                 cells.push(CellDelta { key: key.clone(), base_ns, new_ns, ratio });
             }
-            None => missing.push(key.clone()),
+            None => {
+                // Keys are "name backend shape tN [estimator]" and neither
+                // name nor backend may contain whitespace, so the second
+                // token is the backend dimension of the lost cell.
+                if let Some(be) = key.split_whitespace().nth(1) {
+                    if !new_backends.contains(be) {
+                        missing_backends.insert(be.to_string());
+                    }
+                }
+                missing.push(key.clone());
+            }
         }
     }
-    Ok(CompareReport { cells, missing, threshold })
+    Ok(CompareReport {
+        cells,
+        missing,
+        missing_backends: missing_backends.into_iter().collect(),
+        threshold,
+    })
 }
 
 /// Read, validate and compare two `BENCH_*.json` files.
@@ -381,6 +423,42 @@ mod tests {
             .cells
             .iter()
             .any(|c| c.key == "slot_estimate micro 8 t1 control-variate"));
+    }
+
+    #[test]
+    fn missing_whole_backend_names_the_backend_dimension() {
+        // The baseline has simd rows (written on an AVX2+FMA machine);
+        // the new document has none at all. The failure text must name
+        // the backend dimension, not just list cells.
+        let base = doc(&[
+            ("matmul", "micro", &[192, 192, 192], 100.0),
+            ("matmul", "simd", &[192, 192, 192], 40.0),
+            ("gram_t", "simd", &[192, 96], 30.0),
+        ]);
+        let new = doc(&[("matmul", "micro", &[192, 192, 192], 100.0)]);
+        let rep = compare_docs(&base, &new, DEFAULT_THRESHOLD).unwrap();
+        assert!(!rep.passed());
+        assert_eq!(rep.missing.len(), 2);
+        assert_eq!(rep.missing_backends, vec!["simd".to_string()]);
+        let msg = rep.failure_message().unwrap();
+        assert!(msg.contains("backend(s) [simd]"), "{msg}");
+        assert!(msg.contains("CPU features"), "{msg}");
+    }
+
+    #[test]
+    fn missing_cell_of_a_still_present_backend_gets_no_backend_note() {
+        // micro still has cells in the new document, so a lost micro cell
+        // is a genuine coverage regression — no environment note.
+        let base = doc(&[
+            ("matmul", "micro", &[8, 8, 8], 100.0),
+            ("gram_t", "micro", &[32, 16], 50.0),
+        ]);
+        let new = doc(&[("matmul", "micro", &[8, 8, 8], 100.0)]);
+        let rep = compare_docs(&base, &new, DEFAULT_THRESHOLD).unwrap();
+        assert!(!rep.passed());
+        assert!(rep.missing_backends.is_empty());
+        let msg = rep.failure_message().unwrap();
+        assert!(!msg.contains("backend(s) ["), "{msg}");
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub const SCHEMA_ID: &str = "lgp.bench.v1";
 pub struct BenchRecord {
     /// Kernel or procedure name, e.g. `matmul`, `gram_t`, `train_grads`.
     pub name: String,
-    /// Tensor backend (`naive`/`blocked`/`micro`), or `device` for PJRT
-    /// timings, or `-` where the notion does not apply.
+    /// Tensor backend (`naive`/`blocked`/`micro`/`simd`), or `device` for
+    /// PJRT timings, or `-` where the notion does not apply.
     pub backend: String,
     /// Problem shape, kernel-specific (matmul: `[m, k, n]`).
     pub shape: Vec<usize>,

@@ -3,13 +3,14 @@
 //! Library form of the kernel comparison so `cargo bench --bench hotpath`
 //! and the `cargo test` smoke test (`tests/backend_equivalence.rs`) run
 //! the exact same code: time `matmul`, `gram_t` and `dot` on every
-//! concrete backend, and serialize the results as `lgp.bench.v1` records
-//! destined for `BENCH_kernels.json` (EXPERIMENTS.md §Benches).
+//! backend available on the host (the portable concrete set plus `simd`
+//! on AVX2+FMA machines), and serialize the results as `lgp.bench.v1`
+//! records destined for `BENCH_kernels.json` (EXPERIMENTS.md §Benches).
 
 use super::json_out::{bench_doc, BenchRecord};
 use super::{bench, Table};
-use crate::coordinator::{exec, reduce};
-use crate::tensor::{Backend, Tensor, Workspace};
+use crate::coordinator::{exec, pool::WorkerPool, reduce};
+use crate::tensor::{simd, Backend, Tensor, Workspace};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -135,7 +136,7 @@ pub fn run(cfg: &KernelBenchConfig) -> Vec<BenchRecord> {
     records
 }
 
-/// Sizing of the sharded-update throughput sweep (ADR-004).
+/// Sizing of the sharded-update throughput sweep (ADR-004/ADR-007).
 #[derive(Clone, Debug)]
 pub struct ShardedBenchConfig {
     pub warmup: usize,
@@ -145,6 +146,12 @@ pub struct ShardedBenchConfig {
     /// Square matmul side of the per-slot workload — the update is
     /// square-matmul-dominated, like the device micro-batch it stands for.
     pub n: usize,
+    /// Second (accum, n) point with a deliberately *small* per-update
+    /// workload, where per-update thread-spawn overhead is a visible
+    /// fraction of the update — the cell that shows the persistent pool's
+    /// win over `exec::scatter` (ADR-007).
+    pub accum_dispatch: usize,
+    pub n_dispatch: usize,
     pub shard_counts: Vec<usize>,
 }
 
@@ -155,6 +162,8 @@ impl ShardedBenchConfig {
             iters: 10,
             accum: 8,
             n: 192,
+            accum_dispatch: 4,
+            n_dispatch: 48,
             shard_counts: vec![1, 2, 4],
         }
     }
@@ -165,6 +174,8 @@ impl ShardedBenchConfig {
             iters: 3,
             accum: 4,
             n: 48,
+            accum_dispatch: 2,
+            n_dispatch: 24,
             shard_counts: vec![1, 2],
         }
     }
@@ -175,6 +186,11 @@ impl ShardedBenchConfig {
         } else {
             ShardedBenchConfig::full()
         }
+    }
+
+    /// The (accum, n) grid points the sweep times per shard count.
+    fn shapes(&self) -> [(usize, usize); 2] {
+        [(self.accum, self.n), (self.accum_dispatch, self.n_dispatch)]
     }
 }
 
@@ -187,48 +203,122 @@ struct ShardedBenchWorker {
     ws: Workspace,
 }
 
+/// Build the per-worker state for one synthetic update at side `n`.
+fn sharded_workers(rng: &mut Pcg64, count: usize, n: usize) -> Vec<ShardedBenchWorker> {
+    (0..count.max(1))
+        .map(|_| {
+            let mut a = Tensor::zeros(&[n, n]);
+            rng.fill_normal(&mut a.data, 1.0);
+            ShardedBenchWorker { a, c: Tensor::zeros(&[n, n]), ws: Workspace::new() }
+        })
+        .collect()
+}
+
 /// Sharded-update throughput sweep: one synthetic optimizer update =
-/// `accum` square-matmul micro-tasks scattered over the real executor
-/// (`coordinator::exec`) plus the fixed-topology reduction
-/// (`coordinator::reduce`) — timed per shard count and emitted with the
-/// `threads` dimension. Runs on the `micro` backend regardless of the
-/// calibration probe so the (kernel, backend, shape, threads) cell keys
-/// stay stable for the compare gate.
+/// `accum` square-matmul micro-tasks scattered over the persistent pool
+/// (`coordinator::pool`, the session's ADR-007 path — `sharded_update`)
+/// and, as the overhead comparison point, over the one-shot scoped-thread
+/// executor (`coordinator::exec` — `sharded_update_spawn`), both plus the
+/// fixed-topology reduction (`coordinator::reduce`) — timed per shard
+/// count × (accum, n) grid point and emitted with the `threads`
+/// dimension. At `shards >= 2` the sweep also times the pool's banded
+/// single-kernel matmul/gram_t paths (micro and, when the host supports
+/// it, simd). Runs the micro backend for the update rows regardless of
+/// the calibration probe so the (kernel, backend, shape, threads) cell
+/// keys stay stable for the compare gate.
 pub fn run_sharded(cfg: &ShardedBenchConfig) -> Vec<BenchRecord> {
     let be = Backend::micro();
     let mut rng = Pcg64::seeded(0x5AAD);
-    let n = cfg.n;
     let mut records = Vec::new();
     for &shards in &cfg.shard_counts {
-        let mut workers: Vec<ShardedBenchWorker> = (0..shards.max(1))
-            .map(|_| {
-                let mut a = Tensor::zeros(&[n, n]);
-                rng.fill_normal(&mut a.data, 1.0);
-                ShardedBenchWorker { a, c: Tensor::zeros(&[n, n]), ws: Workspace::new() }
-            })
-            .collect();
-        let mut acc = vec![0.0f32; n * n];
-        let s = bench(cfg.warmup, cfg.iters, || {
-            let leaves = exec::scatter(&mut workers, cfg.accum, |w, _slot| {
-                be.matmul_into_ws(&w.a, &w.a, &mut w.c, &mut w.ws);
-                Ok(w.c.data.clone())
-            })
-            .expect("synthetic tasks cannot fail");
-            let refs: Vec<&[f32]> = leaves.iter().map(|l| l.as_slice()).collect();
-            reduce::tree_reduce_into(&mut acc, &refs);
-            std::hint::black_box(&acc);
-        });
-        let flops = cfg.accum as f64 * 2.0 * (n as f64).powi(3);
-        records.push(
-            BenchRecord::from_summary(
-                "sharded_update",
-                be.name(),
-                &[cfg.accum, n, n],
-                &s,
-                Some(flops),
-            )
-            .with_threads(shards),
-        );
+        // Spawned once per shard count, reused by every timed update —
+        // amortization is exactly what the pool rows measure.
+        let pool = WorkerPool::new(shards.max(1));
+        for (accum, n) in cfg.shapes() {
+            let flops = accum as f64 * 2.0 * (n as f64).powi(3);
+            let mut workers = sharded_workers(&mut rng, shards.max(1), n);
+            let mut acc = vec![0.0f32; n * n];
+            let s = bench(cfg.warmup, cfg.iters, || {
+                let leaves = pool
+                    .scatter(&mut workers, accum, |w, _slot| {
+                        be.matmul_into_ws(&w.a, &w.a, &mut w.c, &mut w.ws);
+                        Ok(w.c.data.clone())
+                    })
+                    .expect("synthetic tasks cannot fail");
+                let refs: Vec<&[f32]> = leaves.iter().map(|l| l.as_slice()).collect();
+                reduce::tree_reduce_into(&mut acc, &refs);
+                std::hint::black_box(&acc);
+            });
+            records.push(
+                BenchRecord::from_summary("sharded_update", be.name(), &[accum, n, n], &s, Some(flops))
+                    .with_threads(shards),
+            );
+            let s = bench(cfg.warmup, cfg.iters, || {
+                let leaves = exec::scatter(&mut workers, accum, |w, _slot| {
+                    be.matmul_into_ws(&w.a, &w.a, &mut w.c, &mut w.ws);
+                    Ok(w.c.data.clone())
+                })
+                .expect("synthetic tasks cannot fail");
+                let refs: Vec<&[f32]> = leaves.iter().map(|l| l.as_slice()).collect();
+                reduce::tree_reduce_into(&mut acc, &refs);
+                std::hint::black_box(&acc);
+            });
+            records.push(
+                BenchRecord::from_summary(
+                    "sharded_update_spawn",
+                    be.name(),
+                    &[accum, n, n],
+                    &s,
+                    Some(flops),
+                )
+                .with_threads(shards),
+            );
+        }
+        // Banded single-kernel rows (ADR-007 intra-shard parallelism).
+        // Only at shards >= 2: at one thread the pooled entry points
+        // delegate to the plain serial kernels, whose cells the kernel
+        // suite already emits (duplicate cell keys would fail the index).
+        if shards >= 2 {
+            let n = cfg.n;
+            let a = rand_t(&mut rng, &[n, n]);
+            let b = rand_t(&mut rng, &[n, n]);
+            let mut c = Tensor::zeros(&[n, n]);
+            let mut ws = Workspace::new();
+            let mut banded = vec![Backend::micro()];
+            if simd::simd_available() {
+                banded.push(Backend::simd());
+            }
+            for kb in banded {
+                let s = bench(cfg.warmup, cfg.iters, || {
+                    pool.matmul_into_ws(kb, &a, &b, &mut c, &mut ws);
+                    std::hint::black_box(&c);
+                });
+                records.push(
+                    BenchRecord::from_summary(
+                        "matmul",
+                        kb.name(),
+                        &[n, n, n],
+                        &s,
+                        Some(2.0 * (n as f64).powi(3)),
+                    )
+                    .with_threads(shards),
+                );
+                let s = bench(cfg.warmup, cfg.iters, || {
+                    pool.gram_t_into_ws(kb, &a, &mut c, &mut ws);
+                    std::hint::black_box(&c);
+                });
+                records.push(
+                    BenchRecord::from_summary(
+                        "gram_t",
+                        kb.name(),
+                        &[n, n],
+                        &s,
+                        Some(n as f64 * n as f64 * (n + 1) as f64),
+                    )
+                    .with_threads(shards),
+                );
+            }
+        }
     }
     records
 }
@@ -269,7 +359,13 @@ mod tests {
     #[test]
     fn fast_suite_covers_all_backends_and_kernels() {
         let records = run(&KernelBenchConfig::fast());
-        for be in ["naive", "blocked", "micro"] {
+        let mut required = vec!["naive", "blocked", "micro"];
+        if simd::simd_available() {
+            // The simd rows ride along automatically wherever the host
+            // supports AVX2+FMA (Backend::all()).
+            required.push("simd");
+        }
+        for be in required {
             for kernel in ["matmul", "gram_t", "dot"] {
                 assert!(
                     records.iter().any(|r| r.backend == be && r.name == kernel),
@@ -293,12 +389,37 @@ mod tests {
     fn sharded_suite_sweeps_thread_counts() {
         let cfg = ShardedBenchConfig::fast();
         let records = run_sharded(&cfg);
-        assert_eq!(records.len(), cfg.shard_counts.len());
-        for (&shards, r) in cfg.shard_counts.iter().zip(&records) {
-            assert_eq!(r.name, "sharded_update");
-            assert_eq!(r.threads, shards);
-            assert_eq!(r.shape, vec![cfg.accum, cfg.n, cfg.n]);
-            assert!(r.mean_ns.is_finite() && r.mean_ns > 0.0);
+        // Per shard count: pool + spawn rows at both (accum, n) grid
+        // points; banded kernel rows ride along at shards >= 2.
+        for name in ["sharded_update", "sharded_update_spawn"] {
+            let rows: Vec<_> = records.iter().filter(|r| r.name == name).collect();
+            assert_eq!(rows.len(), 2 * cfg.shard_counts.len(), "{name}");
+            for &shards in &cfg.shard_counts {
+                for (accum, n) in cfg.shapes() {
+                    assert!(
+                        rows.iter().any(|r| r.threads == shards
+                            && r.shape == vec![accum, n, n]
+                            && r.mean_ns.is_finite()
+                            && r.mean_ns > 0.0),
+                        "{name} missing t{shards} {accum}x{n}"
+                    );
+                }
+            }
+        }
+        // Banded kernel rows: micro always, simd with the host's support,
+        // and never at one thread (those cells belong to the kernel suite).
+        for kernel in ["matmul", "gram_t"] {
+            let rows: Vec<_> = records.iter().filter(|r| r.name == kernel).collect();
+            assert!(rows.iter().all(|r| r.threads >= 2), "{kernel} t1 row leaked");
+            assert!(
+                rows.iter().any(|r| r.backend == "micro"),
+                "missing banded {kernel} on micro"
+            );
+            assert_eq!(
+                rows.iter().any(|r| r.backend == "simd"),
+                simd::simd_available(),
+                "banded {kernel} simd rows must track host support"
+            );
         }
         // Mixed with the kernel rows, the combined document still passes
         // schema validation (threads is a first-class dimension).

@@ -127,7 +127,11 @@ pub fn validate(doc: &Json) -> Result<ValidationReport, String> {
     }
 
     // Bench-specific invariant: the kernel trajectory must cover every
-    // tensor backend, or cross-PR comparisons silently lose a column.
+    // *portable* tensor backend, or cross-PR comparisons silently lose a
+    // column. `simd` is deliberately not required — it exists only on
+    // AVX2+FMA hosts (ADR-007), and a kernels document emitted on a
+    // scalar machine must still validate; the compare gate is what
+    // notices when a baseline's simd column goes missing.
     if bench == "kernels" {
         for required in ["naive", "blocked", "micro"] {
             if !backends.iter().any(|b| b == required) {

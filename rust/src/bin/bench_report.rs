@@ -16,9 +16,14 @@
 //! the new document. This is the enforced perf-regression gate
 //! (EXPERIMENTS.md §Compare gate).
 //!
+//! **CPU features**: `--cpu-features` prints the feature set the simd
+//! backend detected ("avx2+fma" or "scalar") and exits 0 — the hook
+//! scripts/verify.sh uses to decide whether to smoke the simd backend.
+//!
 //!   cargo run --release --bin bench_report
 //!   cargo run --release --bin bench_report -- --dir . --expect kernels,cost_model
 //!   cargo run --release --bin bench_report -- --compare BENCH_kernels.baseline.json BENCH_kernels.json
+//!   cargo run --release --bin bench_report -- --cpu-features
 
 use lgp::bench_support::json_out::bench_out_dir;
 use lgp::bench_support::{compare, schema, Table};
@@ -29,6 +34,13 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.first().map(String::as_str) == Some("--compare") {
         std::process::exit(run_compare(&argv[1..]));
+    }
+    if argv.first().map(String::as_str) == Some("--cpu-features") {
+        // Print the detected feature set ("avx2+fma" or "scalar") so
+        // shell drivers (scripts/verify.sh) can gate the simd-backend
+        // smoke run without re-implementing CPU detection.
+        println!("{}", lgp::tensor::simd::cpu_features());
+        std::process::exit(0);
     }
     std::process::exit(run());
 }

@@ -4,6 +4,11 @@
 //! - [`exec`] — the sharded scatter executor: `slots` independent
 //!   micro-tasks over per-worker state on scoped threads, results handed
 //!   back in slot order regardless of thread scheduling.
+//! - [`pool`] — the persistent parked worker pool (ADR-007): same
+//!   scatter contract as [`exec`] without the per-update thread spawn,
+//!   plus banded intra-shard matmul/gram kernels. Sessions dispatch
+//!   through the pool; [`exec`] remains as the one-shot reference
+//!   implementation (and the bench's spawn-overhead comparison point).
 //! - [`reduce`] — fixed-topology (left-deep, slot-order) gradient
 //!   reduction, so `--shards N` is bit-identical to serial.
 //!
@@ -17,4 +22,5 @@
 //! reduce leaves deterministically.
 
 pub mod exec;
+pub mod pool;
 pub mod reduce;

@@ -1,0 +1,696 @@
+//! Persistent parked worker pool (DESIGN.md ADR-007): the successor to
+//! per-update `std::thread::scope` scatter in [`super::exec`].
+//!
+//! [`super::exec::scatter`] spawns and joins OS threads on **every**
+//! update, an overhead (~60–120µs per spawn on this class of host) that
+//! scales with update count and dwarfs small dispatch workloads. A
+//! [`WorkerPool`] spawns its threads once — at session build — and parks
+//! them on a per-thread condvar between dispatches, so steady-state
+//! dispatch cost is two mutex hops per worker and zero allocations.
+//!
+//! The pool preserves the ADR-004 determinism contract exactly: slot
+//! assignment is the same round-robin pure function
+//! ([`super::exec::worker_of_slot`]), results land in a slot-indexed
+//! array, the serial path (one worker or one slot) runs inline on the
+//! caller thread, and the lowest-indexed failing worker's error wins.
+//! `pool.scatter` is bit-identical to `exec::scatter` for any task.
+//!
+//! On top of the generic scatter the pool parallelizes *single large
+//! kernels* across workers ([`WorkerPool::matmul_into_ws`],
+//! [`WorkerPool::gram_t_into_ws`]): the output is split into contiguous
+//! row bands, each band computed by `Backend::matmul_rows` /
+//! `Backend::gram_t_rows`. Those primitives carry a banding contract
+//! (see `tensor::backend`): a band's rows are bitwise identical to the
+//! same rows of a full serial call under any partition, so the pooled
+//! kernels stay bit-identical to serial and `--shards N` determinism
+//! survives intra-shard parallelism.
+//!
+//! # Safety model (the `unsafe` in this file)
+//!
+//! Dispatch hands workers a raw pointer to a stack-allocated, type-erased
+//! [`JobHeader`] (first field of a `#[repr(C)]` `Job<W, T, F>` carrying
+//! the real pointers: worker slice, output slab, task closure, error and
+//! panic sinks). This is sound because the dispatching thread **blocks
+//! inside the same `scatter` call until every worker has signalled
+//! completion** — the job, the worker slice and the output slab outlive
+//! every dereference, and each worker touches only its own round-robin
+//! slots (disjoint `&mut` access by construction, exactly as in the
+//! scoped-thread version). Worker panics are caught, parked in a sink,
+//! and re-thrown on the dispatching thread after the barrier — the pool
+//! itself survives and stays usable. Outputs are written into a
+//! `MaybeUninit<T>` slab; on failure, per-worker completion counters
+//! (published with `Release`, read after the completion barrier) say
+//! exactly which slots were initialized and must be dropped.
+
+use std::any::Any;
+use std::mem::MaybeUninit;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::exec;
+use crate::tensor::backend::mirror_upper;
+use crate::tensor::{Backend, Tensor, Workspace};
+
+/// Minimum FLOP count (2·m·k·n for matmul, n·d² for gram) before a kernel
+/// is worth banding across workers: below this the ~two-mutex-hop wakeup
+/// per worker is a measurable fraction of the kernel itself.
+const PAR_MIN_FLOPS: usize = 1 << 19;
+
+/// What a parked worker thread is being asked to do. The raw job pointer
+/// is only ever dereferenced while the dispatching thread blocks in the
+/// same `scatter` call (see module docs), which is what makes the manual
+/// `Send` sound.
+enum Cmd {
+    Idle,
+    Run { job: *const JobHeader, worker: usize },
+    Exit,
+}
+
+// SAFETY: `Cmd::Run`'s pointer is created by `scatter`, which keeps the
+// pointee alive and blocks until the worker is done with it.
+unsafe impl Send for Cmd {}
+
+/// Type-erased entry of a dispatched job: first (and only) field read by
+/// worker threads, which re-derive the concrete `Job<W, T, F>` through
+/// the monomorphized `run` they were handed.
+#[repr(C)]
+struct JobHeader {
+    run: unsafe fn(*const JobHeader, usize),
+}
+
+/// The concrete, fully-typed job, stack-allocated in `scatter`.
+/// `#[repr(C)]` with `header` first so a `*const JobHeader` round-trips
+/// to `*const Job<W, T, F>`.
+#[repr(C)]
+struct Job<W, T, F> {
+    header: JobHeader,
+    workers: *mut W,
+    /// Effective worker count; worker `w` owns slots `{s : s % n == w}`.
+    n: usize,
+    slots: usize,
+    outs: *mut MaybeUninit<T>,
+    task: *const F,
+    err: *const Mutex<Option<(usize, anyhow::Error)>>,
+    panic: *const Mutex<Option<Box<dyn Any + Send>>>,
+    /// Per-worker count of slots successfully written (len ≥ n).
+    completed: *const AtomicUsize,
+}
+
+/// Monomorphized worker body: run worker `w`'s round-robin slots of the
+/// job behind `header`.
+///
+/// # Safety
+/// `header` must point at the `JobHeader` of a live `Job<W, T, F>` whose
+/// pointers are all valid for the duration of the call, and no other
+/// thread may touch worker `w`'s state or slots concurrently — both
+/// guaranteed by `scatter`'s dispatch/barrier protocol.
+unsafe fn run_one<W, T, F>(header: *const JobHeader, w: usize)
+where
+    F: Fn(&mut W, usize) -> anyhow::Result<T>,
+{
+    let job = &*(header as *const Job<W, T, F>);
+    let task = &*job.task;
+    let worker = &mut *job.workers.add(w);
+    let completed = &*job.completed.add(w);
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        let mut done = 0usize;
+        let mut slot = w;
+        while slot < job.slots {
+            match task(worker, slot) {
+                Ok(v) => {
+                    std::ptr::write(job.outs.add(slot), MaybeUninit::new(v));
+                    done += 1;
+                    completed.store(done, Ordering::Release);
+                }
+                Err(e) => {
+                    let mut guard = (*job.err).lock().unwrap();
+                    if guard.as_ref().map_or(true, |(we, _)| w < *we) {
+                        *guard = Some((w, e));
+                    }
+                    return;
+                }
+            }
+            slot += job.n;
+        }
+    }));
+    if let Err(p) = outcome {
+        let mut guard = (*job.panic).lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(p);
+        }
+    }
+}
+
+/// One parked worker thread's mailbox.
+struct WorkerSlot {
+    cmd: Mutex<Cmd>,
+    cv: Condvar,
+}
+
+/// Completion barrier: how many background workers of the current
+/// dispatch are still running.
+struct DoneGate {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+struct PoolThread {
+    slot: Arc<WorkerSlot>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+fn worker_loop(slot: Arc<WorkerSlot>, gate: Arc<DoneGate>) {
+    loop {
+        let (job, worker) = {
+            let mut cmd = slot.cmd.lock().unwrap();
+            loop {
+                match *cmd {
+                    Cmd::Run { job, worker } => {
+                        *cmd = Cmd::Idle;
+                        break (job, worker);
+                    }
+                    Cmd::Exit => return,
+                    Cmd::Idle => cmd = slot.cv.wait(cmd).unwrap(),
+                }
+            }
+        };
+        // SAFETY: the dispatcher keeps the job alive until the gate
+        // reaches zero, which only happens after this call returns.
+        unsafe { ((*job).run)(job, worker) };
+        let mut remaining = gate.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            gate.cv.notify_all();
+        }
+    }
+}
+
+/// Raw `f32` base pointer that may cross threads: the banded kernels
+/// hand each worker a disjoint row range of one output buffer.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: workers write disjoint `[r0*stride, r1*stride)` ranges (one
+// band per slot, each slot dispatched exactly once).
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Persistent worker pool: `width - 1` parked threads plus the calling
+/// thread (worker 0). Spawn once per [`crate::session::TrainSession`],
+/// reuse for every update (ADR-007).
+pub struct WorkerPool {
+    width: usize,
+    threads: Vec<PoolThread>,
+    gate: Arc<DoneGate>,
+    /// Non-reentrant dispatch guard: one job in flight at a time. Held
+    /// across dispatch + completion barrier; band kernels must not be
+    /// called from inside a pool task (documented invariant).
+    dispatch: Mutex<()>,
+    err: Mutex<Option<(usize, anyhow::Error)>>,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Pre-allocated per-worker completion counters (no per-dispatch
+    /// allocation; the alloc-free satellite test pins this).
+    completed: Vec<AtomicUsize>,
+    /// Per-worker scratch arenas for the banded kernels; locked by the
+    /// owning band task on its worker thread.
+    wss: Vec<Mutex<Workspace>>,
+}
+
+impl WorkerPool {
+    /// Build a pool sized for `shards` workers (≥ 1). `shards <= 1`
+    /// spawns no threads at all — every dispatch takes the inline serial
+    /// path, identical to `exec::scatter`.
+    pub fn new(shards: usize) -> WorkerPool {
+        let width = shards.max(1);
+        let gate = Arc::new(DoneGate { remaining: Mutex::new(0), cv: Condvar::new() });
+        let mut threads = Vec::with_capacity(width - 1);
+        for t in 0..width - 1 {
+            let slot = Arc::new(WorkerSlot { cmd: Mutex::new(Cmd::Idle), cv: Condvar::new() });
+            let worker_slot = Arc::clone(&slot);
+            let worker_gate = Arc::clone(&gate);
+            let handle = std::thread::Builder::new()
+                .name(format!("lgp-pool-{t}"))
+                .spawn(move || worker_loop(worker_slot, worker_gate))
+                .expect("spawn pool worker thread");
+            threads.push(PoolThread { slot, handle: Some(handle) });
+        }
+        WorkerPool {
+            width,
+            threads,
+            gate,
+            dispatch: Mutex::new(()),
+            err: Mutex::new(None),
+            panic: Mutex::new(None),
+            completed: (0..width).map(|_| AtomicUsize::new(0)).collect(),
+            wss: (0..width).map(|_| Mutex::new(Workspace::new())).collect(),
+        }
+    }
+
+    /// Worker capacity (the configured shard count, min 1).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Scatter `slots` tasks across the pool, gather results in slot
+    /// order — drop-in replacement for [`super::exec::scatter`] with the
+    /// identical contract (round-robin ownership, slot-ordered results,
+    /// lowest-indexed worker's error, panics re-thrown on the caller),
+    /// minus the per-call thread spawn. In steady state (warmed caller
+    /// buffers, `T` zero-sized or pre-sized) a dispatch performs no heap
+    /// allocation.
+    pub fn scatter<W, T, F>(
+        &self,
+        workers: &mut [W],
+        slots: usize,
+        task: F,
+    ) -> anyhow::Result<Vec<T>>
+    where
+        W: Send,
+        T: Send,
+        F: Fn(&mut W, usize) -> anyhow::Result<T> + Sync,
+    {
+        assert!(!workers.is_empty(), "scatter needs at least one worker");
+        if slots == 0 {
+            return Ok(Vec::new());
+        }
+        let n = exec::effective_workers(workers.len().min(self.width), slots);
+        if n == 1 {
+            // Serial fast path: same slot order, no synchronization.
+            let w = &mut workers[0];
+            let mut out = Vec::with_capacity(slots);
+            for slot in 0..slots {
+                out.push(task(&mut *w, slot)?);
+            }
+            return Ok(out);
+        }
+
+        let mut outs: Vec<MaybeUninit<T>> = Vec::with_capacity(slots);
+        // SAFETY: `MaybeUninit` needs no initialization; every element is
+        // either written by its owning worker or never read (failure
+        // cleanup walks the completion counters).
+        unsafe { outs.set_len(slots) };
+
+        let _dispatch = self.dispatch.lock().unwrap();
+        *self.err.lock().unwrap() = None;
+        *self.panic.lock().unwrap() = None;
+        for c in &self.completed[..n] {
+            c.store(0, Ordering::Relaxed);
+        }
+        *self.gate.remaining.lock().unwrap() = n - 1;
+
+        let job = Job::<W, T, F> {
+            header: JobHeader { run: run_one::<W, T, F> },
+            workers: workers.as_mut_ptr(),
+            n,
+            slots,
+            outs: outs.as_mut_ptr(),
+            task: &task,
+            err: &self.err,
+            panic: &self.panic,
+            completed: self.completed.as_ptr(),
+        };
+        let header = &job.header as *const JobHeader;
+        for w in 1..n {
+            let thread = &self.threads[w - 1];
+            let mut cmd = thread.slot.cmd.lock().unwrap();
+            debug_assert!(matches!(*cmd, Cmd::Idle), "dispatch into a busy worker");
+            *cmd = Cmd::Run { job: header, worker: w };
+            thread.slot.cv.notify_one();
+        }
+        // The dispatching thread is worker 0.
+        // SAFETY: `job` and everything it points to live on this stack
+        // frame / in `self`, and we do not return before the gate says
+        // every background worker is done with them.
+        unsafe { run_one::<W, T, F>(header, 0) };
+        {
+            let mut remaining = self.gate.remaining.lock().unwrap();
+            while *remaining != 0 {
+                remaining = self.gate.cv.wait(remaining).unwrap();
+            }
+        }
+
+        if let Some(p) = self.panic.lock().unwrap().take() {
+            Self::drop_partial(&mut outs, n, &self.completed);
+            resume_unwind(p);
+        }
+        if let Some((_, e)) = self.err.lock().unwrap().take() {
+            Self::drop_partial(&mut outs, n, &self.completed);
+            return Err(e);
+        }
+        // Success: every slot initialized by its round-robin owner.
+        // SAFETY: `MaybeUninit<T>` has the same layout as `T`.
+        let out = unsafe {
+            let ptr = outs.as_mut_ptr() as *mut T;
+            let (len, cap) = (outs.len(), outs.capacity());
+            std::mem::forget(outs);
+            Vec::from_raw_parts(ptr, len, cap)
+        };
+        Ok(out)
+    }
+
+    /// Drop the slots that were initialized before a failed dispatch:
+    /// worker `w` wrote its first `completed[w]` slots `w, w+n, …`.
+    fn drop_partial<T>(outs: &mut [MaybeUninit<T>], n: usize, completed: &[AtomicUsize]) {
+        if !std::mem::needs_drop::<T>() {
+            return;
+        }
+        for (w, c) in completed[..n].iter().enumerate() {
+            let done = c.load(Ordering::Acquire);
+            for i in 0..done {
+                // SAFETY: the owner published `done` successful writes.
+                unsafe { outs[w + i * n].assume_init_drop() };
+            }
+        }
+    }
+
+    /// C = A @ B with the output row-banded across the pool when the
+    /// problem is large enough to amortize the wakeup (ADR-007); serial
+    /// `be.matmul_into_ws` otherwise. Bit-identical to the serial call in
+    /// both regimes via the backend banding contract.
+    pub fn matmul_into_ws(
+        &self,
+        be: Backend,
+        a: &Tensor,
+        b: &Tensor,
+        c: &mut Tensor,
+        ws: &mut Workspace,
+    ) {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        let flops = 2 * m * k * n;
+        if self.width < 2 || m < 2 || n == 0 || flops < PAR_MIN_FLOPS {
+            be.matmul_into_ws(a, b, c, ws);
+            return;
+        }
+        self.matmul_banded(be, a, b, c);
+    }
+
+    /// The always-banded matmul path (tests call this directly to pin
+    /// band/serial bitwise identity below the FLOP threshold too).
+    fn matmul_banded(&self, be: Backend, a: &Tensor, b: &Tensor, c: &mut Tensor) {
+        let (m, k) = (a.rows(), a.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
+        assert_eq!(c.shape, [m, n], "matmul output shape mismatch");
+        let nw = self.width.min(m);
+        let per = m.div_ceil(nw);
+        let nbands = m.div_ceil(per);
+        let base = SendPtr(c.data.as_mut_ptr());
+        let wss = &self.wss;
+        let mut units = vec![(); nbands];
+        self.scatter(&mut units, nbands, move |_u: &mut (), slot| {
+            let r0 = slot * per;
+            let r1 = (r0 + per).min(m);
+            // SAFETY: bands are disjoint row ranges of `c.data` (slot is
+            // unique per dispatch), valid while `c` is borrowed above.
+            let band =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), (r1 - r0) * n) };
+            let mut ws = wss[slot].lock().unwrap();
+            be.matmul_rows(a, b, r0, r1, band, &mut ws);
+            Ok(())
+        })
+        .expect("pooled matmul tasks are infallible");
+    }
+
+    /// C = A^T @ A with output rows banded across the pool (triangle-
+    /// balanced cuts, since row `i` of the fused symmetric kernel only
+    /// computes `d - i` cells); serial below the FLOP threshold.
+    pub fn gram_t_into_ws(&self, be: Backend, a: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
+        let (n, d) = (a.rows(), a.cols());
+        let flops = n * d * d;
+        if self.width < 2 || d < 2 || flops < PAR_MIN_FLOPS {
+            be.gram_t_into_ws(a, c, ws);
+            return;
+        }
+        self.gram_t_banded(be, a, c);
+    }
+
+    fn gram_t_banded(&self, be: Backend, a: &Tensor, c: &mut Tensor) {
+        let d = a.cols();
+        assert_eq!(c.shape, [d, d], "gram_t output shape mismatch");
+        let nw = self.width.min(d);
+        let base = SendPtr(c.data.as_mut_ptr());
+        let wss = &self.wss;
+        let mut units = vec![(); nw];
+        self.scatter(&mut units, nw, move |_u: &mut (), slot| {
+            let r0 = tri_cut(d, nw, slot);
+            let r1 = tri_cut(d, nw, slot + 1);
+            // SAFETY: `tri_cut` is monotone in `slot`, so bands are
+            // disjoint row ranges of `c.data`.
+            let band =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * d), (r1 - r0) * d) };
+            let mut ws = wss[slot].lock().unwrap();
+            be.gram_t_rows(a, r0, r1, band, &mut ws);
+            Ok(())
+        })
+        .expect("pooled gram_t tasks are infallible");
+        mirror_upper(c, d);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for t in &self.threads {
+            let mut cmd = t.slot.cmd.lock().unwrap();
+            *cmd = Cmd::Exit;
+            t.slot.cv.notify_one();
+        }
+        for t in &mut self.threads {
+            if let Some(h) = t.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Row boundary `b` of `parts` triangle-balanced contiguous bands over
+/// the `d`-row upper-triangular gram workload: the smallest `i` whose
+/// cumulative cell count `i·d − i(i−1)/2` reaches `b/parts` of the total
+/// `d(d+1)/2`. `tri_cut(d, p, 0) == 0` and `tri_cut(d, p, p) == d`.
+fn tri_cut(d: usize, parts: usize, b: usize) -> usize {
+    if b >= parts {
+        return d;
+    }
+    let total = d * (d + 1) / 2;
+    let target = total * b / parts;
+    let (mut lo, mut hi) = (0usize, d);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        let cum = mid * d - mid * mid.saturating_sub(1) / 2;
+        if cum >= target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn pool_scatter_matches_exec_scatter_in_slot_order() {
+        let task = |_w: &mut usize, slot: usize| Ok(slot * slot + 1);
+        let mut one = vec![0usize];
+        let want = exec::scatter(&mut one, 9, task).unwrap();
+        for shards in 1..=5 {
+            let pool = WorkerPool::new(shards);
+            let mut workers: Vec<usize> = (0..shards).collect();
+            let got = pool.scatter(&mut workers, 9, task).unwrap();
+            assert_eq!(got, want, "{shards} shards");
+            // Reuse: a second dispatch through the parked workers agrees.
+            let again = pool.scatter(&mut workers, 9, task).unwrap();
+            assert_eq!(again, want, "{shards} shards, reused");
+        }
+    }
+
+    #[test]
+    fn workers_see_only_their_slots() {
+        let pool = WorkerPool::new(3);
+        let mut workers: Vec<Vec<usize>> = vec![Vec::new(), Vec::new(), Vec::new()];
+        pool.scatter(&mut workers, 8, |w, slot| {
+            w.push(slot);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(workers[0], vec![0, 3, 6]);
+        assert_eq!(workers[1], vec![1, 4, 7]);
+        assert_eq!(workers[2], vec![2, 5]);
+    }
+
+    #[test]
+    fn zero_slots_and_excess_workers() {
+        let pool = WorkerPool::new(4);
+        let mut workers = vec![(), (), (), ()];
+        let out: Vec<usize> = pool.scatter(&mut workers, 0, |_, s| Ok(s)).unwrap();
+        assert!(out.is_empty());
+        // More workers than slots: only `slots` workers are dispatched.
+        let out = pool.scatter(&mut workers, 2, |_, s| Ok(s + 10)).unwrap();
+        assert_eq!(out, vec![10, 11]);
+    }
+
+    #[test]
+    fn task_errors_propagate_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let mut workers = vec![(), ()];
+        let err = pool
+            .scatter(&mut workers, 4, |_, slot| {
+                if slot == 2 {
+                    anyhow::bail!("boom at slot {slot}")
+                }
+                Ok(slot)
+            })
+            .unwrap_err();
+        assert!(format!("{err}").contains("boom"), "{err}");
+        // Failed slots must not leak initialized non-failed outputs, and
+        // the pool must keep working.
+        let ok = pool.scatter(&mut workers, 4, |_, s| Ok(s)).unwrap();
+        assert_eq!(ok, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn lowest_indexed_workers_error_wins() {
+        let pool = WorkerPool::new(3);
+        let mut workers = vec![(), (), ()];
+        // Slots 1 (worker 1) and 2 (worker 2) both fail; worker 1 wins.
+        let err = pool
+            .scatter(&mut workers, 3, |_, slot| {
+                if slot >= 1 {
+                    anyhow::bail!("fail {slot}")
+                }
+                Ok(slot)
+            })
+            .unwrap_err();
+        assert_eq!(format!("{err}"), "fail 1");
+    }
+
+    #[test]
+    fn panics_resurface_and_pool_is_reusable_after() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let mut workers = vec![(), ()];
+            let _ = pool.scatter(&mut workers, 4, |_, slot| {
+                if slot == 3 {
+                    panic!("worker panic at slot {slot}");
+                }
+                Ok(slot)
+            });
+        }));
+        assert!(caught.is_err(), "panic must propagate to the dispatcher");
+        let mut workers = vec![(), ()];
+        let ok = pool.scatter(&mut workers, 4, |_, s| Ok(s * 2)).unwrap();
+        assert_eq!(ok, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn dropped_results_do_not_leak_or_double_free() {
+        // Heap-owning T over both success and failure paths (miri-style
+        // smoke for the MaybeUninit slab; under a leak-checking allocator
+        // this would flag either bug).
+        let pool = WorkerPool::new(3);
+        let mut workers = vec![(), (), ()];
+        let got: Vec<String> = pool
+            .scatter(&mut workers, 7, |_, s| Ok(format!("slot-{s}")))
+            .unwrap();
+        assert_eq!(got[6], "slot-6");
+        let err = pool
+            .scatter(&mut workers, 7, |_, s| {
+                if s == 4 {
+                    anyhow::bail!("no slot 4")
+                }
+                Ok(format!("slot-{s}"))
+            })
+            .unwrap_err();
+        assert!(format!("{err}").contains("no slot 4"));
+    }
+
+    #[test]
+    fn tri_cut_partitions_the_row_range() {
+        for d in [1usize, 2, 3, 7, 48, 129] {
+            for parts in [1usize, 2, 3, 5, 8] {
+                assert_eq!(tri_cut(d, parts, 0), 0);
+                assert_eq!(tri_cut(d, parts, parts), d);
+                for b in 0..parts {
+                    assert!(tri_cut(d, parts, b) <= tri_cut(d, parts, b + 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn banded_kernels_are_bitwise_identical_to_serial() {
+        // The load-bearing ADR-007 property: intra-shard banding must not
+        // perturb a single bit, for every backend, at shapes both above
+        // and below the dispatch threshold (the banded path is called
+        // directly to cover the latter).
+        let mut rng = Pcg64::seeded(4007);
+        for &(m, k, n) in &[(64usize, 96usize, 48usize), (13, 31, 7), (5, 17, 1)] {
+            let a = rand_t(&mut rng, &[m, k]);
+            let b = rand_t(&mut rng, &[k, n]);
+            for be in Backend::all() {
+                let mut ws = Workspace::new();
+                let mut want = Tensor::zeros(&[m, n]);
+                be.matmul_into_ws(&a, &b, &mut want, &mut ws);
+                for width in [2usize, 3, 5] {
+                    let pool = WorkerPool::new(width);
+                    let mut got = Tensor::filled(&[m, n], f32::NAN);
+                    pool.matmul_banded(be, &a, &b, &mut got);
+                    assert_eq!(
+                        got.data,
+                        want.data,
+                        "matmul {m}x{k}x{n} {} width {width}",
+                        be.name()
+                    );
+                }
+            }
+        }
+        for &(n, d) in &[(96usize, 48usize), (9, 33), (4, 3)] {
+            let a = rand_t(&mut rng, &[n, d]);
+            for be in Backend::all() {
+                let mut ws = Workspace::new();
+                let mut want = Tensor::zeros(&[d, d]);
+                be.gram_t_into_ws(&a, &mut want, &mut ws);
+                for width in [2usize, 3, 5] {
+                    let pool = WorkerPool::new(width);
+                    let mut got = Tensor::filled(&[d, d], f32::NAN);
+                    pool.gram_t_banded(be, &a, &mut got);
+                    assert_eq!(
+                        got.data,
+                        want.data,
+                        "gram_t {n}x{d} {} width {width}",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_path_delegates_serially_and_stays_identical() {
+        let mut rng = Pcg64::seeded(4008);
+        let a = rand_t(&mut rng, &[8, 8]);
+        let b = rand_t(&mut rng, &[8, 8]);
+        let be = Backend::micro();
+        let pool = WorkerPool::new(4);
+        let mut ws = Workspace::new();
+        let mut want = Tensor::zeros(&[8, 8]);
+        be.matmul_into_ws(&a, &b, &mut want, &mut ws);
+        let mut got = Tensor::zeros(&[8, 8]);
+        pool.matmul_into_ws(be, &a, &b, &mut got, &mut ws);
+        assert_eq!(got.data, want.data);
+        let mut gt_want = Tensor::zeros(&[8, 8]);
+        be.gram_t_into_ws(&a, &mut gt_want, &mut ws);
+        let mut gt_got = Tensor::zeros(&[8, 8]);
+        pool.gram_t_into_ws(be, &a, &mut gt_got, &mut ws);
+        assert_eq!(gt_got.data, gt_want.data);
+    }
+}

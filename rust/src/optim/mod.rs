@@ -105,6 +105,21 @@ impl Optimizer {
 
     /// Apply one update in place.
     pub fn step(&mut self, params: &mut ParamStore, grad: &FlatGrad, manifest: &Manifest) {
+        self.step_pooled(params, grad, manifest, None);
+    }
+
+    /// [`step`](Optimizer::step) with Muon's Newton–Schulz matmuls
+    /// optionally banded across a persistent worker pool (ADR-007). The
+    /// pooled path is bit-identical to the serial one (backend banding
+    /// contract), so estimator/shard determinism is unaffected; every
+    /// other optimizer ignores the pool.
+    pub fn step_pooled(
+        &mut self,
+        params: &mut ParamStore,
+        grad: &FlatGrad,
+        manifest: &Manifest,
+        pool: Option<&crate::coordinator::pool::WorkerPool>,
+    ) {
         match self {
             Optimizer::Sgd { cfg } => {
                 sgd_update(&mut params.trunk, &grad.trunk, cfg);
@@ -140,7 +155,23 @@ impl Optimizer {
                             *o = cfg.momentum * *b + gv;
                         }
                         let mut o = ws.take_tensor(&[rows, cols]);
-                        linalg::newton_schulz_into(cfg.backend, &gm, cfg.ns_steps, &mut o, ws);
+                        match pool {
+                            Some(p) => linalg::newton_schulz_into_with(
+                                cfg.backend,
+                                |a, b, c, ws| p.matmul_into_ws(cfg.backend, a, b, c, ws),
+                                &gm,
+                                cfg.ns_steps,
+                                &mut o,
+                                ws,
+                            ),
+                            None => linalg::newton_schulz_into(
+                                cfg.backend,
+                                &gm,
+                                cfg.ns_steps,
+                                &mut o,
+                                ws,
+                            ),
+                        }
                         // Muon's shape-aware scale: sqrt(max(1, rows/cols)).
                         let scale = (rows as f32 / cols as f32).max(1.0).sqrt();
                         let slice = &mut params.trunk[p.offset..p.offset + p.len];

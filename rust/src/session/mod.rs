@@ -37,7 +37,7 @@ mod worker;
 pub use worker::{ShardWorker, SlotCtx};
 
 use crate::config::{Algo, EstimatorKind, OptimKind, RunConfig};
-use crate::coordinator::{exec, reduce};
+use crate::coordinator::{exec, pool::WorkerPool, reduce};
 use crate::data::loader::DataPipeline;
 use crate::estimator::{
     ControlVariate, GradientEstimator, MultiTangentForward, NeuralControlVariate, PredictedLgp,
@@ -389,7 +389,9 @@ impl SessionBuilder {
         );
         let shards = cfg.shards.max(1);
         if shards > 1 {
-            crate::log_info!("sharded executor: {shards} worker threads (ADR-004)");
+            crate::log_info!(
+                "sharded executor: {shards} persistent pool workers (ADR-004/ADR-007)"
+            );
         }
         let chunks = rt.manifest.n_fit.div_ceil(rt.manifest.n_chunk);
         // Each worker's segment holds exactly its worst-case round-robin
@@ -402,6 +404,10 @@ impl SessionBuilder {
             tracker: AlignmentMeter::default(),
             backend: be,
             ws: Workspace::new(),
+            // Spawned once here, parked between updates (ADR-007): every
+            // scatter below goes through this pool instead of fresh
+            // scoped threads.
+            pool: WorkerPool::new(shards),
             workers,
             fit_buf,
             est,
@@ -445,6 +451,10 @@ pub struct TrainSession {
     /// Long-lived scratch arena threaded through the predictor refit so
     /// repeat fits reuse the same slabs (ADR-003).
     ws: Workspace,
+    /// Persistent parked worker pool (ADR-007): spawned at build, reused
+    /// by every update's scatter and by Muon's banded Newton–Schulz
+    /// matmuls; replaces the per-update `std::thread::scope` spawn.
+    pool: WorkerPool,
     /// One state bundle per configured shard (ADR-004); `workers[0]` is
     /// the serial path's state when `shards = 1`.
     workers: Vec<ShardWorker>,
@@ -533,9 +543,10 @@ impl TrainSession {
         let per_slot = plan.consumed_per_slot();
         let base = self.data.cursor();
         let slots = self.cfg.accum;
-        // Scatter: each worker thread computes its round-robin slots
-        // against disjoint stream ranges; gather is slot-ordered.
-        let outs = exec::scatter(&mut self.workers, slots, |w, slot| {
+        // Scatter through the persistent pool (ADR-007): each parked
+        // worker computes its round-robin slots against disjoint stream
+        // ranges; gather is slot-ordered, bit-identical to exec::scatter.
+        let outs = self.pool.scatter(&mut self.workers, slots, |w, slot| {
             worker::run_micro(&ctx, w, base + slot * per_slot)
         })?;
         self.data.advance(slots * per_slot);
@@ -584,7 +595,7 @@ impl TrainSession {
         let base = self.data.cursor();
         let rt = &self.rt;
         let head_w = &self.params.head_w;
-        exec::scatter(&mut self.workers, chunks, |w, slot| {
+        self.pool.scatter(&mut self.workers, chunks, |w, slot| {
             w.view.batch_at(base + slot * n_chunk, n_chunk, &mut w.x, &mut w.y);
             let (g_rows, a, probs) = rt.per_example_grads(dev, &w.x, &w.y)?;
             let resid = residuals(&probs, &w.y, classes, smoothing);
@@ -726,9 +737,10 @@ impl TrainSession {
                 }
             }
 
-            // Scatter micro-batches over the shards, reduce, step.
+            // Scatter micro-batches over the shards, reduce, step. Muon's
+            // Newton–Schulz matmuls band across the same pool (ADR-007).
             let (grad, loss_sum, acc_sum) = self.execute_update(&dev)?;
-            self.opt.step(&mut self.params, &grad, &self.rt.manifest);
+            self.opt.step_pooled(&mut self.params, &grad, &self.rt.manifest, Some(&self.pool));
             self.step += 1;
 
             let loss = loss_ema.push(loss_sum / self.cfg.accum as f64);

@@ -15,6 +15,19 @@
 //!   contiguous workspace panel, so the 4-row micro-kernel streams
 //!   contiguous memory instead of striding across B, and each panel row
 //!   loaded from L1 is reused four times.
+//! - [`SimdBackend`](super::simd::SimdBackend) — explicit AVX2+FMA f32x8
+//!   kernels (ADR-007) behind runtime feature detection; `Backend::simd()`
+//!   falls back to `micro` on hosts without the features.
+//!
+//! The trait's primitive entry points are the *row-band* forms
+//! (`matmul_rows`, `gram_t_rows`): the persistent worker pool
+//! (`coordinator::pool`, ADR-007) splits large outputs into contiguous
+//! row bands across workers, and the banding contract — a band result is
+//! **bitwise identical** to the same rows of a full-kernel call — is what
+//! lets intra-shard parallel kernels coexist with the ADR-004 guarantee
+//! that `--shards N` matches serial bit-for-bit. Kernels uphold it by
+//! making each output row's arithmetic a pure function of (row, A, B),
+//! never of which rows share its block.
 //!
 //! All kernels are **workspace-aware** (ADR-003): the trait entry points
 //! are `*_into` forms writing into caller-owned outputs, with a
@@ -54,12 +67,53 @@ pub trait TensorBackend: Sync {
     /// Gram matrices and `matvec`).
     fn dot(&self, a: &[f32], b: &[f32]) -> f32;
 
+    /// Row band `[r0, r1)` of C = A @ B, written into `c_rows` (the
+    /// corresponding `(r1 - r0) * n` floats of C). This is the kernel
+    /// primitive: `matmul_into` is the full-range call, and the pooled
+    /// executor dispatches disjoint bands of one output concurrently.
+    ///
+    /// **Banding contract:** the band must be bitwise identical to the
+    /// same rows of a full-range call, for any partition — each output
+    /// row's arithmetic may depend only on (row, A, B), never on band
+    /// geometry (e.g. no zero-skip in one row path but not another).
+    fn matmul_rows(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        r0: usize,
+        r1: usize,
+        c_rows: &mut [f32],
+        ws: &mut Workspace,
+    );
+
     /// C = A @ B into a pre-allocated output (zeroed by the kernel).
     /// `ws` supplies operand-packing scratch.
-    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, ws: &mut Workspace);
+    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
+        let m = a.rows();
+        self.matmul_rows(a, b, 0, m, &mut c.data, ws);
+    }
+
+    /// Output-row band `[i0, i1)` of C = A^T @ A for A: (n, d), written
+    /// into `c_rows` ((i1 - i0) full d-wide rows). Only the
+    /// upper-triangle cells `j >= i` are computed (band rows are zeroed
+    /// first); the caller mirrors after all bands land — `mirror_upper`
+    /// only reads the upper triangle, so it commutes with banding. Same
+    /// banding contract as [`matmul_rows`](TensorBackend::matmul_rows).
+    fn gram_t_rows(
+        &self,
+        a: &Tensor,
+        i0: usize,
+        i1: usize,
+        c_rows: &mut [f32],
+        ws: &mut Workspace,
+    );
 
     /// C = A^T @ A for A: (n, d) into a pre-allocated (d, d) output.
-    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, ws: &mut Workspace);
+    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
+        let d = a.cols();
+        self.gram_t_rows(a, 0, d, &mut c.data, ws);
+        mirror_upper(c, d);
+    }
 
     /// K = A @ A^T for A: (n, d) into a pre-allocated (n, n) output.
     /// Default: symmetric row-dot fill using this backend's `dot`, with
@@ -105,29 +159,47 @@ impl TensorBackend for NaiveBackend {
         s
     }
 
-    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
-        let (m, k) = (a.rows(), a.cols());
+    fn matmul_rows(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        r0: usize,
+        r1: usize,
+        c_rows: &mut [f32],
+        _ws: &mut Workspace,
+    ) {
+        let k = a.cols();
         let n = b.cols();
-        for i in 0..m {
-            for j in 0..n {
+        for i in r0..r1 {
+            let c_row = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
+            for (j, cv) in c_row.iter_mut().enumerate() {
                 let mut s = 0.0f32;
                 for kk in 0..k {
                     s += a.at(i, kk) * b.at(kk, j);
                 }
-                c.set(i, j, s);
+                *cv = s;
             }
         }
     }
 
-    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
+    fn gram_t_rows(
+        &self,
+        a: &Tensor,
+        i0: usize,
+        i1: usize,
+        c_rows: &mut [f32],
+        _ws: &mut Workspace,
+    ) {
         let (n, d) = (a.rows(), a.cols());
-        for i in 0..d {
-            for j in 0..d {
+        c_rows.fill(0.0);
+        for i in i0..i1 {
+            let c_row = &mut c_rows[(i - i0) * d..(i - i0 + 1) * d];
+            for j in i..d {
                 let mut s = 0.0f32;
                 for row in 0..n {
                     s += a.at(row, i) * a.at(row, j);
                 }
-                c.set(i, j, s);
+                c_row[j] = s;
             }
         }
     }
@@ -170,38 +242,55 @@ impl TensorBackend for BlockedBackend {
         super::stats::dot(a, b)
     }
 
-    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
-        let (m, k) = (a.rows(), a.cols());
+    fn matmul_rows(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        r0: usize,
+        r1: usize,
+        c_rows: &mut [f32],
+        _ws: &mut Workspace,
+    ) {
+        let k = a.cols();
         let n = b.cols();
-        c.data.fill(0.0);
-        for i in 0..m {
+        c_rows.fill(0.0);
+        for i in r0..r1 {
             let a_row = &a.data[i * k..(i + 1) * k];
-            let c_row = &mut c.data[i * n..(i + 1) * n];
+            let c_row = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
             blocked_row(a_row, b, c_row, n);
         }
     }
 
-    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
+    fn gram_t_rows(
+        &self,
+        a: &Tensor,
+        i0: usize,
+        i1: usize,
+        c_rows: &mut [f32],
+        _ws: &mut Workspace,
+    ) {
         let (n, d) = (a.rows(), a.cols());
-        c.data.fill(0.0);
+        c_rows.fill(0.0);
         for row in 0..n {
             let r = &a.data[row * d..(row + 1) * d];
-            for i in 0..d {
+            for i in i0..i1 {
                 let ri = r[i];
                 if ri == 0.0 {
                     continue;
                 }
-                let c_row = &mut c.data[i * d..(i + 1) * d];
+                let c_row = &mut c_rows[(i - i0) * d..(i - i0 + 1) * d];
                 for j in i..d {
                     c_row[j] += ri * r[j];
                 }
             }
         }
-        mirror_upper(c, d);
     }
 }
 
-fn mirror_upper(c: &mut Tensor, d: usize) {
+/// Copy the upper triangle into the lower one (used by the default
+/// `gram_t_into` and the pooled gram_t after its bands land; reads only
+/// cells `j >= i`, so it is safe to run once after any band partition).
+pub(crate) fn mirror_upper(c: &mut Tensor, d: usize) {
     for i in 0..d {
         for j in 0..i {
             c.data[i * d + j] = c.data[j * d + i];
@@ -259,11 +348,12 @@ fn micro_block4(
 }
 
 /// Remainder rows (m % 4): one output-row axpy over the packed panel.
+/// Deliberately no zero-skip: a skipped `+= 0.0 * b` can flip a -0.0 to
+/// +0.0 relative to the dense 4-row block, and the banding contract
+/// (ADR-007) requires a row's bits to be identical whichever path
+/// computes it.
 fn micro_row(a_row: &[f32], panel: &[f32], c_seg: &mut [f32], w: usize) {
     for (kk, &aik) in a_row.iter().enumerate() {
-        if aik == 0.0 {
-            continue;
-        }
         let b_row = &panel[kk * w..(kk + 1) * w];
         for (cv, &bv) in c_seg.iter_mut().zip(b_row) {
             *cv += aik * bv;
@@ -297,10 +387,19 @@ impl TensorBackend for MicroBackend {
         s
     }
 
-    fn matmul_into(&self, a: &Tensor, b: &Tensor, c: &mut Tensor, ws: &mut Workspace) {
-        let (m, k) = (a.rows(), a.cols());
+    fn matmul_rows(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        r0: usize,
+        r1: usize,
+        c_rows: &mut [f32],
+        ws: &mut Workspace,
+    ) {
+        let k = a.cols();
         let n = b.cols();
-        c.data.fill(0.0);
+        let m = r1 - r0;
+        c_rows.fill(0.0);
         if m == 0 || n == 0 || k == 0 {
             return;
         }
@@ -320,14 +419,15 @@ impl TensorBackend for MicroBackend {
             }
             let panel = &panel[..k * w];
             for blk in 0..full_blocks {
-                let i0 = blk * MICRO_MR;
+                let i0 = r0 + blk * MICRO_MR;
+                let o0 = blk * MICRO_MR;
                 micro_block4(
                     &a.data[i0 * k..(i0 + 1) * k],
                     &a.data[(i0 + 1) * k..(i0 + 2) * k],
                     &a.data[(i0 + 2) * k..(i0 + 3) * k],
                     &a.data[(i0 + 3) * k..(i0 + 4) * k],
                     panel,
-                    &mut c.data[i0 * n..(i0 + MICRO_MR) * n],
+                    &mut c_rows[o0 * n..(o0 + MICRO_MR) * n],
                     k,
                     n,
                     j0,
@@ -335,8 +435,8 @@ impl TensorBackend for MicroBackend {
                 );
             }
             for i in full_blocks * MICRO_MR..m {
-                let a_row = &a.data[i * k..(i + 1) * k];
-                let c_seg = &mut c.data[i * n + j0..i * n + j1];
+                let a_row = &a.data[(r0 + i) * k..(r0 + i + 1) * k];
+                let c_seg = &mut c_rows[i * n + j0..i * n + j1];
                 micro_row(a_row, panel, c_seg, w);
             }
         }
@@ -344,11 +444,19 @@ impl TensorBackend for MicroBackend {
     }
 
     /// Fused symmetric rank-k update: four samples per pass over the upper
-    /// triangle only (skipping the redundant lower-triangle work), then one
-    /// mirror. Quarters the passes over C relative to the blocked kernel.
-    fn gram_t_into(&self, a: &Tensor, c: &mut Tensor, _ws: &mut Workspace) {
+    /// triangle only (skipping the redundant lower-triangle work); the
+    /// trait's `gram_t_into` mirrors once after the full range lands.
+    /// Quarters the passes over C relative to the blocked kernel.
+    fn gram_t_rows(
+        &self,
+        a: &Tensor,
+        i0: usize,
+        i1: usize,
+        c_rows: &mut [f32],
+        _ws: &mut Workspace,
+    ) {
         let (n, d) = (a.rows(), a.cols());
-        c.data.fill(0.0);
+        c_rows.fill(0.0);
         let quads = n / 4;
         for q in 0..quads {
             let base = 4 * q * d;
@@ -356,9 +464,9 @@ impl TensorBackend for MicroBackend {
             let r1 = &a.data[base + d..base + 2 * d];
             let r2 = &a.data[base + 2 * d..base + 3 * d];
             let r3 = &a.data[base + 3 * d..base + 4 * d];
-            for i in 0..d {
+            for i in i0..i1 {
                 let (x0, x1, x2, x3) = (r0[i], r1[i], r2[i], r3[i]);
-                let c_row = &mut c.data[i * d..(i + 1) * d];
+                let c_row = &mut c_rows[(i - i0) * d..(i - i0 + 1) * d];
                 for j in i..d {
                     c_row[j] += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
                 }
@@ -366,15 +474,14 @@ impl TensorBackend for MicroBackend {
         }
         for row in 4 * quads..n {
             let r = &a.data[row * d..(row + 1) * d];
-            for i in 0..d {
+            for i in i0..i1 {
                 let ri = r[i];
-                let c_row = &mut c.data[i * d..(i + 1) * d];
+                let c_row = &mut c_rows[(i - i0) * d..(i - i0 + 1) * d];
                 for j in i..d {
                     c_row[j] += ri * r[j];
                 }
             }
         }
-        mirror_upper(c, d);
     }
 }
 
@@ -388,15 +495,34 @@ pub enum BackendKind {
     Naive,
     Blocked,
     Micro,
+    /// Explicit AVX2+FMA f32x8 kernels (ADR-007). Requires runtime CPU
+    /// feature support; resolves to `micro` (warn-once) on hosts without
+    /// it, so configs ship portably.
+    Simd,
     /// One-shot calibration probe at startup picks among the concrete
     /// kinds; resolves once per process (cache file skips repeat probes).
     Auto,
 }
 
 impl BackendKind {
-    /// The concrete (selectable-by-probe) kinds.
+    /// The portable concrete kinds — runnable on every host. `Simd` is
+    /// deliberately not here: its handle depends on runtime CPU features
+    /// (see [`BackendKind::available`]).
     pub const CONCRETE: [BackendKind; 3] =
         [BackendKind::Naive, BackendKind::Blocked, BackendKind::Micro];
+
+    /// The concrete kinds actually runnable on *this* host: the portable
+    /// set plus `simd` when the CPU has AVX2+FMA. The calibration probe
+    /// and `Backend::all()` sweep exactly this set, so bench rows and
+    /// equivalence coverage never contain a silently-falling-back
+    /// duplicate of `micro`.
+    pub fn available() -> Vec<BackendKind> {
+        let mut kinds = BackendKind::CONCRETE.to_vec();
+        if super::simd::simd_available() {
+            kinds.push(BackendKind::Simd);
+        }
+        kinds
+    }
 
     /// Single source of truth for the parser and the `--help` option
     /// list (`util::cli::options(BackendKind::SPECS)`).
@@ -412,6 +538,11 @@ impl BackendKind {
             aliases: &["microkernel"],
             value: BackendKind::Micro,
         },
+        crate::util::cli::EnumSpec {
+            name: "simd",
+            aliases: &["avx2"],
+            value: BackendKind::Simd,
+        },
         crate::util::cli::EnumSpec { name: "auto", aliases: &[], value: BackendKind::Auto },
     ];
 
@@ -424,6 +555,7 @@ impl BackendKind {
             BackendKind::Naive => "naive",
             BackendKind::Blocked => "blocked",
             BackendKind::Micro => "micro",
+            BackendKind::Simd => "simd",
             BackendKind::Auto => "auto",
         }
     }
@@ -440,6 +572,7 @@ impl std::str::FromStr for BackendKind {
 static NAIVE: NaiveBackend = NaiveBackend;
 static BLOCKED: BlockedBackend = BlockedBackend;
 static MICRO: MicroBackend = MicroBackend;
+static SIMD: super::simd::SimdBackend = super::simd::SimdBackend;
 
 /// Copyable handle to a backend implementation — the thing threaded through
 /// `fit_with`, `newton_schulz_with`, `OptimConfig` and the bench suites.
@@ -465,6 +598,25 @@ impl Backend {
         Backend { imp: &MICRO, kind: BackendKind::Micro }
     }
 
+    /// The AVX2+FMA backend (ADR-007) when the host CPU supports it;
+    /// otherwise falls back to `micro` with a warn-once log, so a config
+    /// or calibration cache naming `simd` degrades instead of failing.
+    /// Note the fallback handle reports `kind() == Micro` — callers (and
+    /// bench cell keys) see what actually runs.
+    pub fn simd() -> Backend {
+        if super::simd::simd_available() {
+            Backend { imp: &SIMD, kind: BackendKind::Simd }
+        } else {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                crate::log_warn!(
+                    "backend 'simd' requested but host lacks AVX2+FMA; falling back to 'micro'"
+                );
+            });
+            Backend::micro()
+        }
+    }
+
     /// Resolve a kind to a handle; `Auto` runs (or reuses) the calibration
     /// probe.
     pub fn of(kind: BackendKind) -> Backend {
@@ -472,13 +624,16 @@ impl Backend {
             BackendKind::Naive => Backend::naive(),
             BackendKind::Blocked => Backend::blocked(),
             BackendKind::Micro => Backend::micro(),
+            BackendKind::Simd => Backend::simd(),
             BackendKind::Auto => auto_select(),
         }
     }
 
-    /// All concrete backends, for equivalence tests and bench sweeps.
-    pub fn all() -> [Backend; 3] {
-        [Backend::naive(), Backend::blocked(), Backend::micro()]
+    /// All concrete backends runnable on this host (`simd` included only
+    /// when the CPU supports it — [`BackendKind::available`]), for
+    /// equivalence tests and bench sweeps.
+    pub fn all() -> Vec<Backend> {
+        BackendKind::available().into_iter().map(Backend::of).collect()
     }
 
     pub fn name(&self) -> &'static str {
@@ -566,6 +721,44 @@ impl Backend {
         assert_eq!(c.shape, [n, n], "gram output shape mismatch");
         self.imp.gram_into(a, c, ws);
     }
+
+    /// Row band `[r0, r1)` of C = A @ B into `c_rows` — the entry the
+    /// pooled executor (ADR-007) dispatches concurrent bands through.
+    /// Bitwise identical to the same rows of `matmul_into_ws` for any
+    /// partition (the trait's banding contract).
+    pub fn matmul_rows(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        r0: usize,
+        r1: usize,
+        c_rows: &mut [f32],
+        ws: &mut Workspace,
+    ) {
+        let (m, k) = (a.rows(), a.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
+        assert!(r0 <= r1 && r1 <= m, "matmul row band [{r0}, {r1}) out of range (m = {m})");
+        assert_eq!((r1 - r0) * n, c_rows.len(), "matmul band output length mismatch");
+        self.imp.matmul_rows(a, b, r0, r1, c_rows, ws);
+    }
+
+    /// Output-row band `[i0, i1)` of C = A^T @ A into `c_rows` (upper
+    /// triangle only; mirror with `mirror_upper` after every band lands).
+    pub fn gram_t_rows(
+        &self,
+        a: &Tensor,
+        i0: usize,
+        i1: usize,
+        c_rows: &mut [f32],
+        ws: &mut Workspace,
+    ) {
+        assert_eq!(a.shape.len(), 2, "gram_t needs a matrix");
+        let d = a.cols();
+        assert!(i0 <= i1 && i1 <= d, "gram_t row band [{i0}, {i1}) out of range (d = {d})");
+        assert_eq!((i1 - i0) * d, c_rows.len(), "gram_t band output length mismatch");
+        self.imp.gram_t_rows(a, i0, i1, c_rows, ws);
+    }
 }
 
 impl fmt::Debug for Backend {
@@ -584,7 +777,8 @@ impl PartialEq for Backend {
 // Global active backend + calibration probe
 // ---------------------------------------------------------------------------
 
-// Codes for the atomic: 0 = naive, 1 = blocked (default), 2 = micro.
+// Codes for the atomic: 0 = naive, 1 = blocked (default), 2 = micro,
+// 3 = simd (resolves through the runtime-detected fallback on load).
 static ACTIVE: AtomicU8 = AtomicU8::new(1);
 
 fn code_of(kind: BackendKind) -> u8 {
@@ -592,6 +786,7 @@ fn code_of(kind: BackendKind) -> u8 {
         BackendKind::Naive => 0,
         BackendKind::Blocked => 1,
         BackendKind::Micro => 2,
+        BackendKind::Simd => 3,
         BackendKind::Auto => 1,
     }
 }
@@ -602,6 +797,7 @@ pub fn active() -> Backend {
     match ACTIVE.load(Ordering::Relaxed) {
         0 => Backend::naive(),
         2 => Backend::micro(),
+        3 => Backend::simd(),
         _ => Backend::blocked(),
     }
 }
@@ -618,12 +814,14 @@ pub fn set_active(kind: BackendKind) -> Backend {
 #[derive(Clone, Debug)]
 pub struct CalibrationReport {
     pub chosen: BackendKind,
-    /// (kind, best-of-three seconds) per concrete backend.
+    /// (kind, best-of-three seconds) per available backend.
     pub timings: Vec<(BackendKind, f64)>,
 }
 
 /// One-shot startup probe: time a representative matmul + Gram pair on
-/// each concrete backend and pick the fastest. Shapes are sized so the
+/// each backend available on this host ([`BackendKind::available`],
+/// i.e. the portable concrete set plus `simd` when the CPU supports
+/// AVX2+FMA) and pick the fastest. Shapes are sized so the
 /// whole probe stays in the low milliseconds (it runs before training and
 /// before bench suites; DESIGN.md §2).
 pub fn calibrate() -> CalibrationReport {
@@ -640,7 +838,7 @@ pub fn calibrate() -> CalibrationReport {
     let mut ws = Workspace::new();
 
     let mut timings = Vec::new();
-    for kind in BackendKind::CONCRETE {
+    for kind in BackendKind::available() {
         let be = Backend::of(kind);
         // one unmeasured warmup, then best of three
         be.matmul_into_ws(&a, &b, &mut c, &mut ws);
@@ -669,16 +867,20 @@ pub fn calibrate() -> CalibrationReport {
 /// Schema id stamped into the calibration cache file.
 pub const CALIB_CACHE_SCHEMA: &str = "lgp.calib.v1";
 
-/// Cache key: crate version + the concrete backend set + the probe's
-/// shape grid. A new release (which may change kernel implementations and
-/// therefore the ranking), a new backend, or new probe shapes all
-/// invalidate stale cache files instead of pinning an outdated winner.
+/// Cache key: crate version + the backend set available on this host +
+/// the detected CPU feature string + the probe's shape grid. A new
+/// release (which may change kernel implementations and therefore the
+/// ranking), a new backend, a host with different SIMD support, or new
+/// probe shapes all invalidate stale cache files instead of pinning an
+/// outdated winner.
 pub fn calib_cache_key() -> String {
-    let names: Vec<&str> = BackendKind::CONCRETE.iter().map(|k| k.as_str()).collect();
+    let avail = BackendKind::available();
+    let names: Vec<&str> = avail.iter().map(|k| k.as_str()).collect();
     format!(
-        "v{}|{}|matmul:64x96x80|gram_t:96x48",
+        "v{}|{}|feat:{}|matmul:64x96x80|gram_t:96x48",
         env!("CARGO_PKG_VERSION"),
-        names.join(",")
+        names.join(","),
+        super::simd::cpu_features()
     )
 }
 
@@ -695,26 +897,51 @@ fn calib_cache_path() -> Option<PathBuf> {
 }
 
 /// Read a cached probe winner. Returns `None` (probe as usual) on a
-/// missing file, parse failure, schema/key mismatch, or a non-concrete
-/// cached kind — the cache can only ever skip work, never break startup.
+/// missing file, parse failure, schema/key mismatch, a CPU-feature
+/// mismatch, or a cached kind this host can't run — the cache can only
+/// ever skip work, never break startup or pin an unsupported backend.
+///
+/// A feature mismatch (cache written on a host with a different SIMD
+/// feature set, e.g. copied from an AVX2 box to one without) warns once
+/// per process and re-probes, per ISSUE 7 satellite 1.
 pub fn read_calib_cache(path: &Path, key: &str) -> Option<BackendKind> {
     let text = std::fs::read_to_string(path).ok()?;
     let j = Json::parse(&text).ok()?;
-    if j.at(&["schema"]).as_str() != Some(CALIB_CACHE_SCHEMA)
-        || j.at(&["key"]).as_str() != Some(key)
-    {
+    if j.at(&["schema"]).as_str() != Some(CALIB_CACHE_SCHEMA) {
+        return None;
+    }
+    let here = super::simd::cpu_features();
+    if let Some(feat) = j.at(&["features"]).as_str() {
+        if feat != here {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                crate::log_warn!(
+                    "calibration cache {} was written for cpu features '{}' but this \
+                     host has '{}'; re-probing",
+                    path.display(),
+                    feat,
+                    here
+                );
+            });
+            return None;
+        }
+    }
+    if j.at(&["key"]).as_str() != Some(key) {
         return None;
     }
     let kind = BackendKind::parse(j.at(&["chosen"]).as_str()?).ok()?;
-    (kind != BackendKind::Auto).then_some(kind)
+    (kind != BackendKind::Auto && BackendKind::available().contains(&kind)).then_some(kind)
 }
 
 /// Best-effort cache write; IO errors are swallowed (the probe result is
-/// advisory and will simply be re-measured next startup).
+/// advisory and will simply be re-measured next startup). The detected
+/// CPU feature string is stamped in so [`read_calib_cache`] can reject
+/// the file on a host with different SIMD support.
 pub fn write_calib_cache(path: &Path, key: &str, chosen: BackendKind) {
     let doc = obj(vec![
         ("schema", s(CALIB_CACHE_SCHEMA)),
         ("key", s(key)),
+        ("features", s(super::simd::cpu_features())),
         ("chosen", s(chosen.as_str())),
     ]);
     let mut text = doc.to_string();
@@ -885,7 +1112,7 @@ mod tests {
     fn calibration_picks_a_concrete_backend() {
         let report = calibrate();
         assert_ne!(report.chosen, BackendKind::Auto);
-        assert_eq!(report.timings.len(), 3);
+        assert_eq!(report.timings.len(), BackendKind::available().len());
         assert!(report.timings.iter().all(|&(_, s)| s > 0.0 && s.is_finite()));
         assert_ne!(auto_select().kind(), BackendKind::Auto);
     }
@@ -914,6 +1141,22 @@ mod tests {
         )
         .unwrap();
         assert_eq!(read_calib_cache(&path, &key), None);
+        // A cache stamped with another host's CPU feature set is rejected
+        // (re-probe) even when the key would otherwise match.
+        std::fs::write(
+            &path,
+            format!(
+                r#"{{"schema":"{CALIB_CACHE_SCHEMA}","key":"{key}","features":"some-other-isa","chosen":"micro"}}"#
+            ),
+        )
+        .unwrap();
+        assert_eq!(read_calib_cache(&path, &key), None);
+        // A cached kind this host can't run is rejected; a supported one
+        // round-trips. (Which branch fires depends on the host's SIMD
+        // support — both hold the same invariant.)
+        write_calib_cache(&path, &key, BackendKind::Simd);
+        let expect = crate::tensor::simd::simd_available().then_some(BackendKind::Simd);
+        assert_eq!(read_calib_cache(&path, &key), expect);
     }
 
     #[test]

@@ -157,6 +157,32 @@ pub fn newton_schulz_into(
     out: &mut Tensor,
     ws: &mut Workspace,
 ) {
+    newton_schulz_into_with(
+        be,
+        |a, b, c, ws| be.matmul_into_ws(a, b, c, ws),
+        g,
+        steps,
+        out,
+        ws,
+    );
+}
+
+/// [`newton_schulz_into`] with the dense matmuls routed through a caller
+/// closure, so the session can parallelize the iteration's large products
+/// across the persistent worker pool (ADR-007) without `linalg` knowing
+/// about the pool. `mm` must compute `c = a @ b` with results bitwise
+/// identical to `be.matmul_into_ws` (the pooled path guarantees this via
+/// the banding contract); `be` still handles the symmetric Gram fill.
+pub fn newton_schulz_into_with<F>(
+    be: Backend,
+    mut mm: F,
+    g: &Tensor,
+    steps: usize,
+    out: &mut Tensor,
+    ws: &mut Workspace,
+) where
+    F: FnMut(&Tensor, &Tensor, &mut Tensor, &mut Workspace),
+{
     let (m, n) = (g.rows(), g.cols());
     // stack-array comparison: the hot path's shape check must not allocate
     assert_eq!(out.shape, [m, n], "newton_schulz output shape mismatch");
@@ -185,12 +211,12 @@ pub fn newton_schulz_into(
     for _ in 0..steps {
         // aX + b(XX^T)X + c(XX^T)^2 X
         be.gram_into_ws(&x, &mut xxt, ws); // XX^T, symmetric fill
-        be.matmul_into_ws(&xxt, &xxt, &mut xxt2, ws);
+        mm(&xxt, &xxt, &mut xxt2, ws);
         // combo = b·XX^T + c·(XX^T)², fused in place over xxt
         for (xv, yv) in xxt.data.iter_mut().zip(&xxt2.data) {
             *xv = B * *xv + C * yv;
         }
-        be.matmul_into_ws(&xxt, &x, &mut next, ws);
+        mm(&xxt, &x, &mut next, ws);
         for (nv, xv) in next.data.iter_mut().zip(&x.data) {
             *nv += A * xv;
         }

@@ -4,7 +4,8 @@
 //! blocked ikj/j-tiled, register-tiled micro-kernel); these free functions
 //! route through [`backend::active`] so existing call sites pick up
 //! whatever the startup selection (config flag or calibration probe)
-//! installed. Single-threaded (the box has one core); the perf pass
+//! installed. Single-threaded here — intra-shard parallelism lives in the
+//! coordinator's persistent worker pool (ADR-007); the perf pass
 //! (EXPERIMENTS.md §Perf) measures the backends against each other and
 //! `BENCH_kernels.json` records the trajectory. These feed the predictor
 //! fit (Gram matrices, U materialization) and Muon's Newton–Schulz

@@ -7,13 +7,15 @@
 //!
 //! The dense kernels (matmul, Gram products, dot reductions) are pluggable:
 //! `backend` defines the [`backend::TensorBackend`] trait with naive /
-//! blocked / register-tiled micro-kernel implementations, selected at
-//! startup by config or a calibration probe (DESIGN.md §2). The free
-//! functions in `matmul` dispatch through the active backend.
+//! blocked / register-tiled micro-kernel / AVX2 SIMD implementations,
+//! selected at startup by config or a calibration probe (DESIGN.md §2,
+//! ADR-007). The free functions in `matmul` dispatch through the active
+//! backend.
 
 pub mod backend;
 pub mod linalg;
 pub mod matmul;
+pub mod simd;
 pub mod stats;
 pub mod workspace;
 

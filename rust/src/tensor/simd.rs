@@ -1,0 +1,500 @@
+//! Explicit AVX2+FMA f32x8 kernels — the `simd` backend (DESIGN.md
+//! ADR-007).
+//!
+//! The scalar `micro` backend plateaus at register-tiling's ceiling:
+//! every multiply–add retires one lane. These kernels run the same loop
+//! nests over 8-lane `__m256` vectors with fused multiply–adds, which is
+//! where the remaining single-core headroom lives. The matmul keeps the
+//! ADR-003 structure — a packed shared-operand panel reused across row
+//! blocks — but the panel is 16 columns wide (two vector registers) and
+//! re-based to a 32-byte boundary inside the workspace slab
+//! ([`Workspace::take_aligned32`]) so the inner loop's B reads are
+//! aligned vector loads.
+//!
+//! # Safety model (the ADR-007 argument, in short)
+//!
+//! - Every `unsafe` intrinsics block in the crate lives in this file.
+//! - The `#[target_feature(enable = "avx2,fma")]` kernels are reachable
+//!   only through [`SimdBackend`], and `Backend::simd()` hands one out
+//!   only after [`simd_available`] confirms both features at runtime; on
+//!   any other host it falls back to `micro` (warn-once). Each trait
+//!   method additionally `debug_assert!`s availability.
+//! - All pointer arithmetic is derived from slice lengths that the safe
+//!   [`Backend`](super::backend::Backend) wrappers shape-check before
+//!   dispatching; partial vectors at row/column tails go through a stack
+//!   staging buffer, never past the end of an operand.
+//! - The banding contract of `matmul_rows`/`gram_t_rows` (bitwise
+//!   identity under any row partition, required by the pooled executor's
+//!   determinism guarantee) holds because the 1-row and 4-row kernels
+//!   perform the identical per-row FMA sequence: the k-loop order and
+//!   per-lane rounding of an output row never depend on which rows share
+//!   its block.
+
+use super::backend::TensorBackend;
+use super::{Tensor, Workspace};
+
+/// `true` when the running CPU has the AVX2 and FMA features these
+/// kernels require. Checked at runtime (`is_x86_feature_detected!`), so a
+/// binary built for the default x86-64 target still runs — and falls back
+/// to `micro` — on older hosts.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Detected kernel feature set as a stable string. Part of the
+/// calibration-cache key and payload, so a cache written on an AVX2 host
+/// can never silently pin `simd` on a host that lacks it.
+pub fn cpu_features() -> &'static str {
+    if simd_available() {
+        "avx2+fma"
+    } else {
+        "scalar"
+    }
+}
+
+/// f32x8 kernels behind [`TensorBackend`]. Constructed as a static in
+/// `backend.rs` but only ever *dispatched* when [`simd_available`]
+/// (`Backend::simd()` resolves to `micro` otherwise).
+pub struct SimdBackend;
+
+/// Panel width in columns: two `__m256` registers per packed B-panel row.
+const NR: usize = 16;
+/// Output rows per register tile (4 rows x 16 cols = 8 accumulators).
+const MR: usize = 4;
+
+#[cfg(target_arch = "x86_64")]
+mod kernels {
+    use std::arch::x86_64::*;
+
+    use super::NR;
+
+    /// Horizontal sum of one vector of partial sums.
+    ///
+    /// # Safety
+    /// AVX2 must be available (caller is a `target_feature` kernel).
+    #[inline]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let lo = _mm256_castps256_ps128(v);
+        let s4 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 1));
+        _mm_cvtss_f32(s1)
+    }
+
+    /// 4-accumulator FMA dot product (32 elements per iteration).
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 16)),
+                _mm256_loadu_ps(pb.add(i + 16)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 24)),
+                _mm256_loadu_ps(pb.add(i + 24)),
+                acc3,
+            );
+            i += 32;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(
+            _mm256_add_ps(acc0, acc1),
+            _mm256_add_ps(acc2, acc3),
+        ));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// Store the leading `t < 8` lanes of `v` at `dst` via a stack
+    /// staging buffer (no masked stores needed, no out-of-bounds write).
+    ///
+    /// # Safety
+    /// `dst` must be valid for `t` writes.
+    #[inline]
+    unsafe fn store_tail(v: __m256, dst: *mut f32, t: usize) {
+        let mut buf = [0.0f32; 8];
+        _mm256_storeu_ps(buf.as_mut_ptr(), v);
+        std::ptr::copy_nonoverlapping(buf.as_ptr(), dst, t);
+    }
+
+    /// Store one row's pair of accumulators into `w <= 16` output cells.
+    ///
+    /// # Safety
+    /// `c` must be valid for `w` writes.
+    #[inline]
+    unsafe fn store_row(v0: __m256, v1: __m256, c: *mut f32, w: usize) {
+        if w == NR {
+            _mm256_storeu_ps(c, v0);
+            _mm256_storeu_ps(c.add(8), v1);
+        } else if w >= 8 {
+            _mm256_storeu_ps(c, v0);
+            store_tail(v1, c.add(8), w - 8);
+        } else {
+            store_tail(v0, c, w);
+        }
+    }
+
+    /// The 4x16 register tile: rows `c[0..4][0..w]` = A-rows @ panel,
+    /// full k reduction in 8 accumulators. The panel is `k` rows of 16
+    /// floats, 32-byte aligned (zero-padded when the logical width is
+    /// `w < 16`, so the kernel itself is branch-free until the store).
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA; `a` points at 4 consecutive length-`k`
+    /// rows with stride `a_stride`; `panel` holds `k * 16` floats at a
+    /// 32-byte boundary; `c` points at 4 output row segments of `w`
+    /// writable floats with stride `c_stride`.
+    #[allow(clippy::missing_safety_doc)]
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn mm4x16(
+        a: *const f32,
+        a_stride: usize,
+        panel: *const f32,
+        k: usize,
+        c: *mut f32,
+        c_stride: usize,
+        w: usize,
+    ) {
+        let mut acc00 = _mm256_setzero_ps();
+        let mut acc01 = _mm256_setzero_ps();
+        let mut acc10 = _mm256_setzero_ps();
+        let mut acc11 = _mm256_setzero_ps();
+        let mut acc20 = _mm256_setzero_ps();
+        let mut acc21 = _mm256_setzero_ps();
+        let mut acc30 = _mm256_setzero_ps();
+        let mut acc31 = _mm256_setzero_ps();
+        let (a0, a1) = (a, a.add(a_stride));
+        let (a2, a3) = (a.add(2 * a_stride), a.add(3 * a_stride));
+        for kk in 0..k {
+            let b0 = _mm256_load_ps(panel.add(kk * NR));
+            let b1 = _mm256_load_ps(panel.add(kk * NR + 8));
+            let v0 = _mm256_set1_ps(*a0.add(kk));
+            acc00 = _mm256_fmadd_ps(v0, b0, acc00);
+            acc01 = _mm256_fmadd_ps(v0, b1, acc01);
+            let v1 = _mm256_set1_ps(*a1.add(kk));
+            acc10 = _mm256_fmadd_ps(v1, b0, acc10);
+            acc11 = _mm256_fmadd_ps(v1, b1, acc11);
+            let v2 = _mm256_set1_ps(*a2.add(kk));
+            acc20 = _mm256_fmadd_ps(v2, b0, acc20);
+            acc21 = _mm256_fmadd_ps(v2, b1, acc21);
+            let v3 = _mm256_set1_ps(*a3.add(kk));
+            acc30 = _mm256_fmadd_ps(v3, b0, acc30);
+            acc31 = _mm256_fmadd_ps(v3, b1, acc31);
+        }
+        store_row(acc00, acc01, c, w);
+        store_row(acc10, acc11, c.add(c_stride), w);
+        store_row(acc20, acc21, c.add(2 * c_stride), w);
+        store_row(acc30, acc31, c.add(3 * c_stride), w);
+    }
+
+    /// Remainder-row (m % 4) variant of [`mm4x16`]: one output row, same
+    /// per-row FMA sequence as the 4-row tile (the banding-invariance
+    /// contract depends on this).
+    ///
+    /// # Safety
+    /// Same contract as [`mm4x16`] for a single row.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn mm1x16(a: *const f32, panel: *const f32, k: usize, c: *mut f32, w: usize) {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for kk in 0..k {
+            let b0 = _mm256_load_ps(panel.add(kk * NR));
+            let b1 = _mm256_load_ps(panel.add(kk * NR + 8));
+            let v = _mm256_set1_ps(*a.add(kk));
+            acc0 = _mm256_fmadd_ps(v, b0, acc0);
+            acc1 = _mm256_fmadd_ps(v, b1, acc1);
+        }
+        store_row(acc0, acc1, c, w);
+    }
+
+    /// Fused symmetric rank-4 row update (the ADR-003 gram_t quad,
+    /// vectorized): `c_row[j] += x0*r0[j] + x1*r1[j] + x2*r2[j] +
+    /// x3*r3[j]` for `j in j0..d`. The vector/scalar split point depends
+    /// only on `(j0, d)`, never on banding.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA; `c_row` and `r0..r3` must be valid for
+    /// `d` reads/writes.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn rank4_update(
+        c_row: *mut f32,
+        j0: usize,
+        d: usize,
+        x: [f32; 4],
+        r0: *const f32,
+        r1: *const f32,
+        r2: *const f32,
+        r3: *const f32,
+    ) {
+        let x0 = _mm256_set1_ps(x[0]);
+        let x1 = _mm256_set1_ps(x[1]);
+        let x2 = _mm256_set1_ps(x[2]);
+        let x3 = _mm256_set1_ps(x[3]);
+        let mut j = j0;
+        while j + 8 <= d {
+            let mut cv = _mm256_loadu_ps(c_row.add(j));
+            cv = _mm256_fmadd_ps(x0, _mm256_loadu_ps(r0.add(j)), cv);
+            cv = _mm256_fmadd_ps(x1, _mm256_loadu_ps(r1.add(j)), cv);
+            cv = _mm256_fmadd_ps(x2, _mm256_loadu_ps(r2.add(j)), cv);
+            cv = _mm256_fmadd_ps(x3, _mm256_loadu_ps(r3.add(j)), cv);
+            _mm256_storeu_ps(c_row.add(j), cv);
+            j += 8;
+        }
+        while j < d {
+            *c_row.add(j) +=
+                x[0] * *r0.add(j) + x[1] * *r1.add(j) + x[2] * *r2.add(j) + x[3] * *r3.add(j);
+            j += 1;
+        }
+    }
+
+    /// Rank-1 remainder-row variant of [`rank4_update`].
+    ///
+    /// # Safety
+    /// Same contract as [`rank4_update`] for a single sample row.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn rank1_update(c_row: *mut f32, j0: usize, d: usize, xi: f32, r: *const f32) {
+        let xv = _mm256_set1_ps(xi);
+        let mut j = j0;
+        while j + 8 <= d {
+            let cv = _mm256_fmadd_ps(xv, _mm256_loadu_ps(r.add(j)), _mm256_loadu_ps(c_row.add(j)));
+            _mm256_storeu_ps(c_row.add(j), cv);
+            j += 8;
+        }
+        while j < d {
+            *c_row.add(j) += xi * *r.add(j);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+impl TensorBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert!(simd_available(), "simd backend dispatched without AVX2+FMA");
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: feature presence is guaranteed by Backend::simd()'s
+        // runtime gate; lengths are equal (checked by the Backend handle).
+        unsafe { kernels::dot(a, b) }
+    }
+
+    fn matmul_rows(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        r0: usize,
+        r1: usize,
+        c_rows: &mut [f32],
+        ws: &mut Workspace,
+    ) {
+        debug_assert!(simd_available(), "simd backend dispatched without AVX2+FMA");
+        let k = a.cols();
+        let n = b.cols();
+        let m = r1 - r0;
+        c_rows.fill(0.0);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let full_blocks = m / MR;
+        // One 16-wide aligned panel serves every column tile; narrower
+        // last tiles zero-pad so the register tile stays branch-free.
+        let (mut panel_buf, off) = ws.take_aligned32(k * NR);
+        for j0 in (0..n).step_by(NR) {
+            let j1 = (j0 + NR).min(n);
+            let w = j1 - j0;
+            let panel = &mut panel_buf[off..off + k * NR];
+            if w < NR {
+                panel.fill(0.0);
+            }
+            for kk in 0..k {
+                panel[kk * NR..kk * NR + w].copy_from_slice(&b.data[kk * n + j0..kk * n + j1]);
+            }
+            // SAFETY: row/column indices are bounded by (m, k, n) from
+            // the shape-checked operands; the panel holds k*16 floats at
+            // a 32-byte boundary; store widths are clamped to w.
+            unsafe {
+                let pa = a.data.as_ptr();
+                let pp = panel.as_ptr();
+                let pc = c_rows.as_mut_ptr();
+                for blk in 0..full_blocks {
+                    kernels::mm4x16(
+                        pa.add((r0 + blk * MR) * k),
+                        k,
+                        pp,
+                        k,
+                        pc.add(blk * MR * n + j0),
+                        n,
+                        w,
+                    );
+                }
+                for i in full_blocks * MR..m {
+                    kernels::mm1x16(pa.add((r0 + i) * k), pp, k, pc.add(i * n + j0), w);
+                }
+            }
+        }
+        ws.give(panel_buf);
+    }
+
+    fn gram_t_rows(&self, a: &Tensor, i0: usize, i1: usize, c_rows: &mut [f32], _ws: &mut Workspace) {
+        debug_assert!(simd_available(), "simd backend dispatched without AVX2+FMA");
+        let (n, d) = (a.rows(), a.cols());
+        c_rows.fill(0.0);
+        if i1 <= i0 || d == 0 {
+            return;
+        }
+        let quads = n / 4;
+        // SAFETY: all row pointers index within a.data (n*d floats) and
+        // c_rows ((i1-i0)*d floats); the update kernels stop at d.
+        unsafe {
+            let pa = a.data.as_ptr();
+            let pc = c_rows.as_mut_ptr();
+            for q in 0..quads {
+                let r0 = pa.add(4 * q * d);
+                let r1 = r0.add(d);
+                let r2 = r0.add(2 * d);
+                let r3 = r0.add(3 * d);
+                for i in i0..i1 {
+                    let x = [*r0.add(i), *r1.add(i), *r2.add(i), *r3.add(i)];
+                    kernels::rank4_update(pc.add((i - i0) * d), i, d, x, r0, r1, r2, r3);
+                }
+            }
+            for row in 4 * quads..n {
+                let r = pa.add(row * d);
+                for i in i0..i1 {
+                    kernels::rank1_update(pc.add((i - i0) * d), i, d, *r.add(i), r);
+                }
+            }
+        }
+    }
+}
+
+/// Non-x86_64 builds still need the type to exist (the static in
+/// `backend.rs` is unconditional), but [`simd_available`] is `false`
+/// there, so `Backend::simd()` always resolves to `micro` and these
+/// bodies are unreachable.
+#[cfg(not(target_arch = "x86_64"))]
+impl TensorBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn dot(&self, _a: &[f32], _b: &[f32]) -> f32 {
+        unreachable!("simd backend dispatched on a non-x86_64 target")
+    }
+
+    fn matmul_rows(
+        &self,
+        _a: &Tensor,
+        _b: &Tensor,
+        _r0: usize,
+        _r1: usize,
+        _c_rows: &mut [f32],
+        _ws: &mut Workspace,
+    ) {
+        unreachable!("simd backend dispatched on a non-x86_64 target")
+    }
+
+    fn gram_t_rows(
+        &self,
+        _a: &Tensor,
+        _i0: usize,
+        _i1: usize,
+        _c_rows: &mut [f32],
+        _ws: &mut Workspace,
+    ) {
+        unreachable!("simd backend dispatched on a non-x86_64 target")
+    }
+}
+
+#[cfg(all(test, target_arch = "x86_64"))]
+mod tests {
+    use super::*;
+    use crate::tensor::backend::Backend;
+    use crate::util::rng::Pcg64;
+
+    fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    #[test]
+    fn simd_kernels_match_naive_when_available() {
+        if !simd_available() {
+            eprintln!("SKIP: host lacks AVX2+FMA");
+            return;
+        }
+        let mut rng = Pcg64::seeded(123);
+        let (naive, simd) = (Backend::naive(), Backend::simd());
+        assert_eq!(simd.name(), "simd");
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 8, 16),
+            (5, 7, 3),
+            (17, 33, 9),
+            (12, 20, 31),
+            (33, 16, 40),
+        ] {
+            let a = rand_t(&mut rng, &[m, k]);
+            let b = rand_t(&mut rng, &[k, n]);
+            let want = naive.matmul(&a, &b);
+            let got = simd.matmul(&a, &b);
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{m}x{k}x{n}: {x} vs {y}");
+            }
+            let want_g = naive.gram_t(&a);
+            let got_g = simd.gram_t(&a);
+            for (x, y) in got_g.data.iter().zip(&want_g.data) {
+                assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "gram_t {m}x{k}: {x} vs {y}");
+            }
+        }
+        let mut a = vec![0.0f32; 1037];
+        let mut b = vec![0.0f32; 1037];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        let got = simd.dot(&a, &b) as f64;
+        assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "{got} vs {want}");
+    }
+
+    #[test]
+    fn feature_string_is_stable() {
+        assert!(["avx2+fma", "scalar"].contains(&cpu_features()));
+        assert_eq!(simd_available(), cpu_features() == "avx2+fma");
+    }
+}

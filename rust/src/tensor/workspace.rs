@@ -73,6 +73,20 @@ impl Workspace {
         }
     }
 
+    /// [`take`](Workspace::take) with slack for SIMD panel packing
+    /// (ADR-007): returns a zeroed buffer of `len + 7` elements plus the
+    /// element offset at which a 32-byte (f32x8) boundary falls, so the
+    /// caller can re-base `&buf[off..off + len]` onto an aligned panel
+    /// and use aligned vector loads. Return the buffer with plain
+    /// [`give`](Workspace::give); the offset is recomputed per checkout
+    /// because the best-fit pool may hand back differently based storage.
+    pub fn take_aligned32(&mut self, len: usize) -> (Vec<f32>, usize) {
+        let buf = self.take(len + 7);
+        let off = buf.as_ptr().align_offset(32);
+        debug_assert!(off <= 7, "f32 storage must reach a 32B boundary within 7 elements");
+        (buf, off)
+    }
+
     /// [`take`] wrapped in a shaped [`Tensor`] (zeroed). The shape vector
     /// is recycled from returned tensors, so a warmed take/give cycle does
     /// not touch the heap at all.
@@ -168,6 +182,17 @@ mod tests {
         let t2 = ws.take_tensor(&[2, 6]);
         assert_eq!(t2.data.len(), 12);
         assert_eq!(ws.misses(), 1, "second tensor reuses the first's storage");
+    }
+
+    #[test]
+    fn aligned_take_reaches_a_32b_boundary() {
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let (buf, off) = ws.take_aligned32(64);
+            assert!(off + 64 <= buf.len());
+            assert_eq!(buf[off..].as_ptr() as usize % 32, 0, "panel base must be 32B-aligned");
+            ws.give(buf);
+        }
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //! does not move while all workers iterate concurrently — per-worker
 //! arena reuse holds and sharding introduces no cross-thread allocation
 //! churn.
+//!
+//! The pool variant (ADR-007) pins the persistent worker pool's dispatch
+//! protocol itself: once warm, a park → unpark → run → park round trip
+//! with zero-sized task results performs no heap allocation at all — the
+//! job descriptor lives on the dispatcher's stack, the completion
+//! counters are pre-allocated in the pool, and a `Vec` of ZST results
+//! never touches the allocator.
 
 #![cfg(feature = "alloc-counter")]
 
@@ -173,6 +180,44 @@ fn steady_state_hot_loop_is_allocation_free() {
     // Sanity: the loop did real work (params moved, counter is live).
     assert!(alloc_track::alloc_count() > 0);
     assert!(hot.params.trunk.iter().any(|&w| w != 0.0));
+}
+
+#[test]
+fn pool_dispatch_steady_state_is_allocation_free() {
+    use lgp::coordinator::pool::WorkerPool;
+    let _serial = COUNTER_LOCK.lock().unwrap();
+    const SHARDS: usize = 3;
+    const SLOTS: usize = 8;
+    let pool = WorkerPool::new(SHARDS);
+    let mut workers: Vec<u64> = vec![0; SHARDS];
+    // Warm-up: first dispatches let the OS sync primitives and any lazy
+    // per-thread state reach their steady footprint.
+    for _ in 0..3 {
+        pool.scatter(&mut workers, SLOTS, |w, slot| {
+            *w = w.wrapping_add(slot as u64 + 1);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    let before = alloc_track::alloc_count();
+    for _ in 0..5 {
+        pool.scatter(&mut workers, SLOTS, |w, slot| {
+            *w = w.wrapping_add(slot as u64 + 1);
+            Ok(())
+        })
+        .unwrap();
+    }
+    let after = alloc_track::alloc_count();
+    assert_eq!(
+        after - before,
+        0,
+        "pool park/unpark/dispatch round trips allocated {} time(s)",
+        after - before
+    );
+    // Round-robin slot ownership reached every worker, so the parked
+    // threads (not just the inline worker 0) were exercised.
+    assert!(workers.iter().all(|&w| w > 0), "every pool worker must have run tasks");
 }
 
 #[test]

@@ -12,7 +12,7 @@ use lgp::bench_support::json_out::{bench_doc, bench_out_dir, BenchRecord};
 use lgp::bench_support::{compare, kernels, schema, Summary};
 use lgp::predictor::fit::{fit_with, FitBuffer};
 use lgp::predictor::Predictor;
-use lgp::tensor::{backend, linalg, Backend, BackendKind, Tensor, Workspace};
+use lgp::tensor::{backend, linalg, simd, Backend, BackendKind, Tensor, Workspace};
 use lgp::util::json::Json;
 use lgp::util::rng::Pcg64;
 
@@ -172,11 +172,172 @@ fn newton_schulz_agrees_across_backends() {
     for &(m, n) in &[(6usize, 6usize), (5, 11), (11, 5)] {
         let g = rand_t(&mut rng, &[m, n]);
         let want = linalg::newton_schulz_with(Backend::naive(), &g, 5);
-        for be in [Backend::blocked(), Backend::micro()] {
+        // Every non-reference backend, simd included when the host has it.
+        for be in Backend::all().into_iter().filter(|b| b.name() != "naive") {
             let got = linalg::newton_schulz_with(be, &g, 5);
             // five matmul-squaring rounds amplify f32 noise; the contract
             // is agreement well inside Muon's update scale.
             assert_rel_close(&got, &want, 1e-3, be.name());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD backend: ULP-level agreement and banding bitwise-identity (ADR-007)
+// ---------------------------------------------------------------------------
+
+/// Monotonic integer key for f32 ordering: adjacent representable floats
+/// differ by 1, and +0.0/-0.0 both map to 0.
+fn ulp_key(f: f32) -> i64 {
+    let b = f.to_bits() as i32 as i64;
+    if b < 0 {
+        (i32::MIN as i64) - b
+    } else {
+        b
+    }
+}
+
+/// ULPs between two finite floats; `u32::MAX` when either is NaN.
+fn ulp_diff(x: f32, y: f32) -> u32 {
+    if x == y {
+        return 0;
+    }
+    if x.is_nan() || y.is_nan() {
+        return u32::MAX;
+    }
+    (ulp_key(x) - ulp_key(y)).unsigned_abs().min(u32::MAX as u64) as u32
+}
+
+/// SIMD tolerance: the AVX2 kernels reassociate sums (8-lane FMA trees
+/// vs the scalar backends' serial accumulation), so exact equality is
+/// not the contract — agreement to a few hundred ULPs *or* 1e-4
+/// relative is, and in practice the observed gap is far smaller.
+fn assert_ulp_close(got: &Tensor, want: &Tensor, what: &str) {
+    assert_eq!(got.shape, want.shape, "{what}: shape mismatch");
+    for (i, (x, y)) in got.data.iter().zip(&want.data).enumerate() {
+        let ok = ulp_diff(*x, *y) <= 256 || (x - y).abs() <= 1e-4 * (1.0 + y.abs());
+        assert!(ok, "{what}[{i}]: {x} vs {y} ({} ulps)", ulp_diff(*x, *y));
+    }
+}
+
+/// The simd backend against micro and naive on every kernel form the hot
+/// paths use, dirty workspace outputs included. Skips (passes) cleanly on
+/// hosts without AVX2+FMA — `Backend::simd()` would silently hand back
+/// micro there, which would make this test vacuous, not wrong, but the
+/// explicit skip keeps the log honest.
+#[test]
+fn prop_simd_matches_scalar_backends_within_ulps() {
+    if !simd::simd_available() {
+        eprintln!("simd ULP suite: skipped — host lacks avx2+fma (features: {})", simd::cpu_features());
+        return;
+    }
+    let sd = Backend::simd();
+    assert_eq!(sd.name(), "simd");
+    let mut ws = Workspace::new();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 210);
+        let &(m, k, n) = &MATMUL_SHAPES[(seed as usize) % MATMUL_SHAPES.len()];
+        let a = rand_t(&mut rng, &[m, k]);
+        let b = rand_t(&mut rng, &[k, n]);
+        for oracle in [Backend::micro(), Backend::naive()] {
+            let want = oracle.matmul(&a, &b);
+            let what = format!("seed {seed} simd-vs-{}", oracle.name());
+            assert_ulp_close(&sd.matmul(&a, &b), &want, &format!("{what} matmul"));
+            let mut c = Tensor::filled(&[m, n], f32::NAN);
+            sd.matmul_into_ws(&a, &b, &mut c, &mut ws);
+            assert_ulp_close(&c, &want, &format!("{what} matmul_into_ws"));
+        }
+        // gram_t / gram on the a operand reshaped as (rows, d).
+        let (rows, d) = (m.max(1), k.max(1));
+        let g = rand_t(&mut rng, &[rows, d]);
+        for oracle in [Backend::micro(), Backend::naive()] {
+            let what = format!("seed {seed} simd-vs-{}", oracle.name());
+            assert_ulp_close(&sd.gram_t(&g), &oracle.gram_t(&g), &format!("{what} gram_t"));
+            let mut ct = Tensor::filled(&[d, d], f32::NAN);
+            sd.gram_t_into_ws(&g, &mut ct, &mut ws);
+            assert_ulp_close(&ct, &oracle.gram_t(&g), &format!("{what} gram_t_into_ws"));
+            let mut cg = Tensor::filled(&[rows, rows], f32::NAN);
+            sd.gram_into_ws(&g, &mut cg, &mut ws);
+            assert_ulp_close(&cg, &oracle.gram(&g), &format!("{what} gram_into_ws"));
+        }
+        // dot: f64 reference with length-scaled tolerance, like the
+        // cross-backend dot property above.
+        let len = (rng.below(700)) as usize;
+        let mut x = vec![0.0f32; len];
+        let mut y = vec![0.0f32; len];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut y, 1.0);
+        let want: f64 = x.iter().zip(&y).map(|(p, q)| *p as f64 * *q as f64).sum();
+        let got = sd.dot(&x, &y) as f64;
+        assert!(
+            (got - want).abs() <= 1e-4 * (1.0 + want.abs()) * (1.0 + (len as f64).sqrt()),
+            "seed {seed} simd dot len {len}: {got} vs {want}"
+        );
+    }
+}
+
+/// The banding-invariance contract behind the worker pool (ADR-007):
+/// `matmul_rows` / `gram_t_rows` produce rows **bitwise identical** to
+/// the same rows of a full kernel call, under any row partition — odd
+/// splits, width-1 bands, empty bands. This is what makes pooled
+/// intra-shard kernels bit-identical to serial execution.
+#[test]
+fn prop_row_bands_are_bitwise_identical_to_full_kernels() {
+    let mut ws = Workspace::new();
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 211);
+        let &(m, k, n) = &MATMUL_SHAPES[(seed as usize) % MATMUL_SHAPES.len()];
+        let a = rand_t(&mut rng, &[m, k]);
+        let b = rand_t(&mut rng, &[k, n]);
+        // Deliberately ragged cut points, clamped into range and sorted.
+        let cuts: Vec<usize> = {
+            let mut c = vec![0, m.min(1), m / 3, m.saturating_sub(1), m, m / 2];
+            c.sort_unstable();
+            c.dedup();
+            c
+        };
+        for be in Backend::all() {
+            let mut full = Tensor::zeros(&[m, n]);
+            be.matmul_into_ws(&a, &b, &mut full, &mut ws);
+            let mut banded = vec![f32::NAN; m * n];
+            for w in cuts.windows(2) {
+                let (r0, r1) = (w[0], w[1]);
+                be.matmul_rows(&a, &b, r0, r1, &mut banded[r0 * n..r1 * n], &mut ws);
+            }
+            assert_eq!(
+                banded,
+                full.data,
+                "seed {seed} {} matmul bands not bitwise identical",
+                be.name()
+            );
+
+            let d = k; // gram_t over a: (m, k) -> (k, k)
+            let mut gfull = Tensor::zeros(&[d, d]);
+            be.gram_t_into_ws(&a, &mut gfull, &mut ws);
+            let gcuts: Vec<usize> = {
+                let mut c = vec![0, d.min(1), d / 2, d];
+                c.sort_unstable();
+                c.dedup();
+                c
+            };
+            let mut grows = vec![f32::NAN; d * d];
+            for w in gcuts.windows(2) {
+                let (i0, i1) = (w[0], w[1]);
+                be.gram_t_rows(&a, i0, i1, &mut grows[i0 * d..i1 * d], &mut ws);
+            }
+            // gram_t_rows computes only the upper-triangle cells j >= i
+            // of its band (the mirror runs after all bands land), so
+            // compare exactly those against the mirrored full result.
+            for i in 0..d {
+                for j in i..d {
+                    assert_eq!(
+                        grows[i * d + j].to_bits(),
+                        gfull.data[i * d + j].to_bits(),
+                        "seed {seed} {} gram_t band ({i},{j}) not bitwise identical",
+                        be.name()
+                    );
+                }
+            }
         }
     }
 }
@@ -246,14 +407,17 @@ fn predictor_fit_agrees_across_backends() {
 #[test]
 fn calibration_probe_picks_valid_backend() {
     let report = backend::calibrate();
+    // The candidate set is the portable concrete backends plus simd on
+    // hosts with AVX2+FMA (ADR-007).
+    let candidates = BackendKind::available();
     assert!(
-        BackendKind::CONCRETE.contains(&report.chosen),
+        candidates.contains(&report.chosen),
         "probe chose {:?}",
         report.chosen
     );
-    assert_eq!(report.timings.len(), BackendKind::CONCRETE.len());
+    assert_eq!(report.timings.len(), candidates.len());
     for (kind, secs) in &report.timings {
-        assert!(BackendKind::CONCRETE.contains(kind));
+        assert!(candidates.contains(kind));
         assert!(secs.is_finite() && *secs > 0.0, "{kind:?} timed at {secs}");
     }
     // Auto resolution produces a usable handle that computes correctly.

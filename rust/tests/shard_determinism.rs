@@ -8,7 +8,9 @@
 //!    linear-softmax model standing in for the PJRT micro-batch call
 //!    (which the offline `xla` stub cannot execute). Three optimizer
 //!    steps on the synthetic dataset at shards = 1, 2, 4 must produce
-//!    bit-identical parameter vectors and loss traces.
+//!    bit-identical parameter vectors and loss traces — through both the
+//!    one-shot scoped-thread executor and the persistent worker pool
+//!    (ADR-007), with the pool additionally reused across whole runs.
 //!
 //! 2. **Full-session path (artifact-gated).** When the AOT artifacts are
 //!    built, the same assertion runs through `TrainSession::run` itself
@@ -21,7 +23,7 @@
 //! the tier-1 smoke invocation exercises the requested width.
 
 use lgp::config::{shards_env_override, Algo, EstimatorKind, OptimKind, RunConfig};
-use lgp::coordinator::{exec, reduce};
+use lgp::coordinator::{exec, pool::WorkerPool, reduce};
 use lgp::data::loader::{DataPipeline, ShardDataView};
 use lgp::estimator::testbed::Testbed;
 use lgp::estimator::{
@@ -141,8 +143,16 @@ struct HostWorker {
 }
 
 /// Three Muon steps of the host model at a given shard count; returns the
-/// final trunk parameters and the per-step loss trace.
-fn run_host(shards: usize, steps: usize) -> (Vec<f32>, Vec<f64>) {
+/// final trunk parameters and the per-step loss trace. `pool` selects the
+/// dispatch path: `None` scatters through the one-shot scoped-thread
+/// executor (`exec::scatter`), `Some` through a caller-owned persistent
+/// worker pool — reused across every step, like `TrainSession` runs it
+/// (ADR-007). Both must be bit-identical to serial.
+fn run_host_with(
+    shards: usize,
+    steps: usize,
+    pool: Option<&WorkerPool>,
+) -> (Vec<f32>, Vec<f64>) {
     let manifest = host_manifest();
     let mut params = ParamStore {
         trunk: vec![0.0; CLASSES * FEAT],
@@ -167,12 +177,15 @@ fn run_host(shards: usize, steps: usize) -> (Vec<f32>, Vec<f64>) {
     for _ in 0..steps {
         let base = data.cursor();
         let trunk = &params.trunk;
-        let outs = exec::scatter(&mut workers, ACCUM, |w, slot| {
+        let task = |w: &mut HostWorker, slot: usize| {
             w.view.batch_at(base + slot * MICRO, MICRO, &mut w.x, &mut w.y);
             let (g, loss) = micro_grad(trunk, &w.x, &w.y);
             Ok((g, loss))
-        })
-        .unwrap();
+        };
+        let outs = match pool {
+            Some(p) => p.scatter(&mut workers, ACCUM, task).unwrap(),
+            None => exec::scatter(&mut workers, ACCUM, task).unwrap(),
+        };
         data.advance(ACCUM * MICRO);
 
         let mut loss_sum = 0.0f64;
@@ -191,6 +204,10 @@ fn run_host(shards: usize, steps: usize) -> (Vec<f32>, Vec<f64>) {
         losses.push(loss_sum / ACCUM as f64);
     }
     (params.trunk, losses)
+}
+
+fn run_host(shards: usize, steps: usize) -> (Vec<f32>, Vec<f64>) {
+    run_host_with(shards, steps, None)
 }
 
 #[test]
@@ -225,6 +242,31 @@ fn host_model_sharding_is_repeatable() {
     let (b, lb) = run_host(4, 3);
     assert_eq!(a, b);
     assert_eq!(la, lb);
+}
+
+#[test]
+fn pooled_dispatch_is_bit_identical_and_pool_reuse_is_deterministic() {
+    // The ADR-007 path: the persistent parked pool must match both the
+    // serial run and the per-update-spawn executor bit for bit — and a
+    // *reused* pool (the session keeps one alive across every update)
+    // must not accumulate any state that leaks into results.
+    let bits = |ls: &[f64]| ls.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    let (serial, loss_serial) = run_host(1, 3);
+    for shards in shard_sweep() {
+        let pool = WorkerPool::new(shards);
+        let (a, la) = run_host_with(shards, 3, Some(&pool));
+        assert_eq!(a, serial, "shards={shards}: pooled trunk differs from serial (bitwise)");
+        assert_eq!(
+            bits(&la),
+            bits(&loss_serial),
+            "shards={shards}: pooled loss trace differs from serial"
+        );
+        // Second full run through the *same* pool instance: parked-thread
+        // reuse across many dispatches stays deterministic.
+        let (b, lb) = run_host_with(shards, 3, Some(&pool));
+        assert_eq!(b, serial, "shards={shards}: pool reuse changed the trunk");
+        assert_eq!(bits(&lb), bits(&loss_serial), "shards={shards}: pool reuse changed the loss");
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -1,25 +1,28 @@
 #!/usr/bin/env bash
 # Tier-1 verification + the ADR-004 parallel-path smoke + the ADR-005
-# public-API drift gate.
+# public-API drift gate + the ADR-007 simd/pool smoke.
 #
 #   scripts/verify.sh            # build, tests, sharded smoke, alloc gate,
-#                                # examples against the public API, fmt,
-#                                # bench-JSON validation
+#                                # examples against the public API, simd
+#                                # smoke, fmt, bench-JSON validation
 #
 # The LGP_SHARDS=2 pass reruns the full integration suite through the
-# sharded executor: determinism (tests/shard_determinism.rs) guarantees
-# bit-identical results, so every assertion must hold unchanged.
+# sharded executor — which since ADR-007 dispatches through the
+# persistent parked worker pool, so this smoke also covers pool reuse:
+# determinism (tests/shard_determinism.rs) guarantees bit-identical
+# results, so every assertion must hold unchanged.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo test -q
 
-# ADR-004 smoke: the whole suite again, scattered over 2 worker shards.
+# ADR-004/ADR-007 smoke: the whole suite again, scattered over 2 pool
+# workers.
 LGP_SHARDS=2 cargo test -q
 
-# Zero-allocation steady state (ADR-003), serial and per-worker-thread
-# (ADR-004).
+# Zero-allocation steady state (ADR-003), serial, per-worker-thread
+# (ADR-004) and across the pool dispatch protocol (ADR-007).
 cargo test -q --features alloc-counter --test alloc_free_hotpath
 
 # ADR-005 public-API drift gate: every example must build AND run against
@@ -39,6 +42,19 @@ cargo run --release --example e2e_vit_cifar -- --budget 5 --seeds 1
 LGP_BENCH_BUDGET=10 cargo run --release --example estimator_sweep -- \
     --updates 8 --trials 8
 cargo run --release --bin bench_report -- --expect estimators
+
+# ADR-007 simd smoke: when the host has AVX2+FMA, pin the hot-path
+# backend to simd and run the fast bench suite end to end (kernels +
+# sharded sweep through the pool) into a scratch dir. Auto-skips on
+# scalar hosts — `--cpu-features` is the single source of truth for
+# what the simd backend detected.
+features="$(cargo run --release --bin bench_report -- --cpu-features)"
+if [ "$features" = "avx2+fma" ]; then
+    LGP_BENCH_DIR="$(mktemp -d)" LGP_BENCH_FAST=1 LGP_BACKEND=simd \
+        cargo bench --bench hotpath
+else
+    echo "SKIP: simd smoke — host cpu features are '$features' (need avx2+fma)"
+fi
 
 # Formatting gate: rustfmt differences are API-surface noise in review.
 # Skipped only where the toolchain lacks the rustfmt component. On
