@@ -6,10 +6,11 @@
 //!   LGP_BENCH_FAST=1 cargo bench --bench hotpath     (sub-second suite)
 //!   LGP_BACKEND=micro cargo bench --bench hotpath    (pin the hot-path backend)
 
-use lgp::bench_support::json_out::write_bench_doc;
+use lgp::bench_support::json_out::{write_bench_doc, BenchRecord};
 use lgp::bench_support::{bench, fmt_time, kernels, Table};
+use lgp::checkpoint::{self, state as ckstate, Checkpoint};
 use lgp::estimator::combine::cv_combine_into;
-use lgp::model::params::FlatGrad;
+use lgp::model::params::{FlatGrad, ParamStore};
 use lgp::predictor::fit::{fit_with_ws, FitBuffer};
 use lgp::predictor::Predictor;
 use lgp::tensor::{backend, linalg, BackendKind, Tensor, Workspace};
@@ -147,6 +148,73 @@ fn main() -> anyhow::Result<()> {
         "-".into(),
     ]);
 
+    // --- checkpoint encode / atomic write / load+decode (ADR-008) -----------
+    // The crash-safety artifact written every `--checkpoint-every` updates,
+    // dominated by the params section at hot-path size. Timed in three
+    // stages so the trajectory separates CPU work (section CRCs) from the
+    // durability cost (tmp write + fsync + rename) and the recovery path
+    // (directory scan + decode + restore).
+    let mut ck_params = ParamStore {
+        trunk: vec![0.0; p],
+        head_w: vec![0.0; 640],
+        head_b: vec![0.0; 10],
+        width: 64,
+        classes: 10,
+    };
+    rng.fill_normal(&mut ck_params.trunk, 0.02);
+    rng.fill_normal(&mut ck_params.head_w, 0.02);
+    rng.fill_normal(&mut ck_params.head_b, 0.02);
+    const CK_FP: u64 = 0xbe7c;
+    let build_ckpt = |ps: &ParamStore| {
+        let mut ck = Checkpoint::new(CK_FP);
+        ck.add("params", ckstate::encode_params(ps));
+        ck
+    };
+    let artifact = build_ckpt(&ck_params).encode();
+    let ck_bytes = artifact.len();
+    let mut ckpt_records: Vec<BenchRecord> = Vec::new();
+
+    let s = bench(warm, iters, || {
+        std::hint::black_box(build_ckpt(&ck_params).encode());
+    });
+    table.row(vec![
+        "ckpt encode (host)".into(),
+        format!("{} KiB", ck_bytes / 1024),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.1} GB/s", ck_bytes as f64 / s.mean / 1e9),
+    ]);
+    ckpt_records.push(BenchRecord::from_summary("ckpt_encode", "-", &[ck_bytes], &s, None));
+
+    let ck_dir = std::env::temp_dir().join("lgp_bench_ckpt");
+    let _ = std::fs::remove_dir_all(&ck_dir);
+    let s = bench(warm, iters, || {
+        checkpoint::write_atomic(&ck_dir, &checkpoint::file_name(1), &artifact).unwrap();
+    });
+    table.row(vec![
+        "ckpt write_atomic (fsync)".into(),
+        format!("{} KiB", ck_bytes / 1024),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.2} GB/s", ck_bytes as f64 / s.mean / 1e9),
+    ]);
+    ckpt_records.push(BenchRecord::from_summary("ckpt_write_atomic", "-", &[ck_bytes], &s, None));
+
+    let s = bench(warm, iters, || {
+        let loaded = checkpoint::load_latest(&ck_dir, CK_FP).unwrap().unwrap();
+        ckstate::decode_params(&mut ck_params, loaded.ckpt.section("params").unwrap()).unwrap();
+        std::hint::black_box(&ck_params);
+    });
+    table.row(vec![
+        "ckpt load+decode (resume)".into(),
+        format!("{} KiB", ck_bytes / 1024),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.1} GB/s", ck_bytes as f64 / s.mean / 1e9),
+    ]);
+    ckpt_records.push(BenchRecord::from_summary("ckpt_load_decode", "-", &[ck_bytes], &s, None));
+    let _ = std::fs::remove_dir_all(&ck_dir);
+
     println!("[HOTPATH] host-side per-update costs\n");
     table.print();
     println!("\ncontext: one GPR update (accum=4) does 4 combines + 4 predictor");
@@ -204,6 +272,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     records.extend(sharded);
+    records.extend(ckpt_records);
 
     let doc = kernels::doc(&records);
     let path = write_bench_doc("BENCH_kernels.json", &doc)?;

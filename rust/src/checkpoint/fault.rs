@@ -1,0 +1,88 @@
+//! Fault-injection shim for the atomic-write protocol (ADR-008).
+//!
+//! Compiled only under `cfg(test)` or the `fault-inject` feature; release
+//! builds carry none of this. The armed plan is **thread-local** so
+//! parallel test threads (cargo's default) cannot interfere with each
+//! other: arm a fault, call [`super::write_atomic`] on the same thread,
+//! then [`disarm`].
+//!
+//! Fault semantics:
+//! - [`Fault::ShortWrite`] — the tmp file receives only a prefix, then the
+//!   process "dies" (torn tmp file on disk; never retried).
+//! - [`Fault::ENospc`] — the next `times` write attempts fail with a
+//!   transient IO error; the bounded retry loop is expected to absorb a
+//!   small number of these.
+//! - [`Fault::Kill`] — simulated process death at a precise point in the
+//!   write → fsync → rename sequence; surfaces as a non-retried error
+//!   leaving the directory exactly as a real crash would.
+
+use std::cell::RefCell;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillPoint {
+    AfterTmpWrite,
+    AfterTmpSync,
+    AfterRename,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    ShortWrite { bytes: usize },
+    ENospc { times: usize },
+    Kill(KillPoint),
+}
+
+pub(super) enum WriteAction {
+    Proceed,
+    Error(std::io::Error),
+    ShortThenKill(usize),
+}
+
+thread_local! {
+    static PLAN: RefCell<Option<Fault>> = const { RefCell::new(None) };
+}
+
+/// Arm one fault for subsequent writes on this thread.
+pub fn arm(f: Fault) {
+    PLAN.with(|p| *p.borrow_mut() = Some(f));
+}
+
+/// Clear any armed fault.
+pub fn disarm() {
+    PLAN.with(|p| *p.borrow_mut() = None);
+}
+
+/// Consulted once per write attempt, before the payload hits the tmp file.
+pub(super) fn on_write(_len: usize) -> WriteAction {
+    PLAN.with(|p| {
+        let mut plan = p.borrow_mut();
+        match *plan {
+            Some(Fault::ShortWrite { bytes }) => {
+                *plan = None;
+                WriteAction::ShortThenKill(bytes)
+            }
+            Some(Fault::ENospc { times }) if times > 0 => {
+                *plan = if times == 1 { None } else { Some(Fault::ENospc { times: times - 1 }) };
+                WriteAction::Error(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected ENOSPC: no space left on device",
+                ))
+            }
+            _ => WriteAction::Proceed,
+        }
+    })
+}
+
+/// True when an armed kill-point matches `point` (consumes the plan).
+pub(super) fn kill_at(point: KillPoint) -> bool {
+    PLAN.with(|p| {
+        let mut plan = p.borrow_mut();
+        if let Some(Fault::Kill(k)) = *plan {
+            if k == point {
+                *plan = None;
+                return true;
+            }
+        }
+        false
+    })
+}

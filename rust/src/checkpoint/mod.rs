@@ -1,0 +1,749 @@
+//! Crash-safe checkpoint artifacts (DESIGN.md ADR-008).
+//!
+//! One checkpoint is one file: a versioned binary container with a magic
+//! header, a config/manifest fingerprint, and named sections each guarded
+//! by a CRC32. Writes go through a tmp-file + fsync + atomic-rename
+//! protocol so a crash at any instant leaves the directory either with the
+//! previous valid artifact or with the new one — never with a torn file
+//! under the final name. Loads scan the directory newest-first and fall
+//! back past corrupt or truncated artifacts; a *valid* artifact whose
+//! fingerprint disagrees with the running config is a hard error (resuming
+//! it would silently be a different experiment).
+//!
+//! The resume-bit-identity contract this container serves: a run
+//! checkpointed at step `k` and resumed must be bit-identical from step
+//! `k+1` onward to the uninterrupted run (`tests/checkpoint_resume.rs`).
+//! Everything positional (data stream, tangent seeds, NCV fit RNG) is a
+//! pure function of `(seed, position)` per ADR-004, so the data section
+//! stores only the cursor; the mutable state (params, optimizer moments,
+//! FitBuffer ring, predictor factors, estimator internals, loss EMA) is
+//! serialized exactly.
+
+use anyhow::{bail, ensure, Context as _, Result};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+pub mod state;
+
+#[cfg(any(test, feature = "fault-inject"))]
+pub mod fault;
+
+/// File magic: identifies the container format before any parsing.
+pub const MAGIC: [u8; 8] = *b"LGPCKPT\0";
+
+/// Bumped on any incompatible layout change; readers reject unknown
+/// versions instead of guessing.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Extension for checkpoint artifacts (`ckpt-<step:08>.lgpckpt`).
+pub const FILE_EXT: &str = "lgpckpt";
+
+/// Attempts for one atomic write before giving up on transient IO errors.
+const WRITE_ATTEMPTS: u32 = 3;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3 polynomial, hand-rolled — no external crates, ADR-002)
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC32 of `bytes` (the `cksum`/zlib polynomial, reflected).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+/// FNV-1a 64-bit over `key=value` pairs: the config/manifest fingerprint
+/// stamped into every artifact. Covers only behavior-affecting knobs —
+/// `shards` is deliberately absent (the stream is bit-identical across
+/// shard counts, ADR-004), as are output/budget/checkpoint knobs.
+pub fn fingerprint_of(parts: &[(&str, String)]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for (k, v) in parts {
+        mix(k.as_bytes());
+        mix(b"=");
+        mix(v.as_bytes());
+        mix(b"\n");
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian byte codec
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian encoder for section payloads.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed f32 slice (u64 count + raw LE words).
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed UTF-8 string (u32 byte count).
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed raw byte blob (u64 count).
+    pub fn put_vec(&mut self, bytes: &[u8]) {
+        self.put_u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+}
+
+/// Decoder over one section payload; every error names the section so a
+/// bad checkpoint diagnoses itself.
+pub struct Dec<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    section: &'a str,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(bytes: &'a [u8], section: &'a str) -> Dec<'a> {
+        Dec { bytes, pos: 0, section }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.bytes.len(),
+            "checkpoint section '{}' truncated: need {} bytes at offset {}, have {}",
+            self.section,
+            n,
+            self.pos,
+            self.bytes.len() - self.pos
+        );
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_bool(&mut self) -> Result<bool> {
+        match self.take_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("checkpoint section '{}': bad bool byte {v}", self.section),
+        }
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.take_u64()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| {
+            anyhow::anyhow!("checkpoint section '{}': f32 slice length overflow", self.section)
+        })?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn take_vec(&mut self) -> Result<Vec<u8>> {
+        let n = self.take_u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn take_str(&mut self) -> Result<String> {
+        let n = self.take_u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| anyhow::anyhow!("checkpoint section '{}': invalid UTF-8", self.section))
+    }
+
+    /// Assert the payload was fully consumed — trailing bytes mean the
+    /// writer and reader disagree about the section layout.
+    pub fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.bytes.len(),
+            "checkpoint section '{}': {} trailing bytes after decode",
+            self.section,
+            self.bytes.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Container
+// ---------------------------------------------------------------------------
+
+/// A decoded (or to-be-encoded) checkpoint: a fingerprint plus named,
+/// CRC-guarded sections.
+///
+/// Layout (all integers little-endian):
+///
+/// ```text
+/// magic[8] | version u32 | fingerprint u64 | section_count u32 | header_crc u32
+/// then per section:
+///   name_len u32 | name bytes | payload_len u64 | section_crc u32 | payload
+/// ```
+///
+/// `header_crc` covers everything before it, so a bit flip anywhere in the
+/// header (including the fingerprint) reads as *corrupt* — recoverable by
+/// falling back to an older artifact — rather than as a spurious
+/// fingerprint mismatch, which is a hard error by design. `section_crc`
+/// covers the name bytes and the payload.
+pub struct Checkpoint {
+    pub fingerprint: u64,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Checkpoint {
+    pub fn new(fingerprint: u64) -> Checkpoint {
+        Checkpoint { fingerprint, sections: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &str, payload: Vec<u8>) {
+        self.sections.push((name.to_string(), payload));
+    }
+
+    pub fn section(&self, name: &str) -> Result<&[u8]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint has no '{name}' section"))
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            24 + self.sections.iter().map(|(n, p)| 16 + n.len() + p.len()).sum::<usize>(),
+        );
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        let header_crc = crc32(&out);
+        out.extend_from_slice(&header_crc.to_le_bytes());
+        for (name, payload) in &self.sections {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            let mut crc_input = Vec::with_capacity(name.len() + payload.len());
+            crc_input.extend_from_slice(name.as_bytes());
+            crc_input.extend_from_slice(payload);
+            out.extend_from_slice(&crc32(&crc_input).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        ensure!(bytes.len() >= 28, "checkpoint truncated: {} bytes (header is 28)", bytes.len());
+        ensure!(bytes[..8] == MAGIC, "not a checkpoint: bad magic");
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        ensure!(
+            version == FORMAT_VERSION,
+            "unsupported checkpoint format version {version} (this build reads {FORMAT_VERSION})"
+        );
+        let fingerprint = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        let count = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
+        let header_crc = u32::from_le_bytes(bytes[24..28].try_into().unwrap());
+        ensure!(crc32(&bytes[..24]) == header_crc, "checkpoint header corrupt (crc mismatch)");
+
+        let mut d = Dec::new(&bytes[28..], "container");
+        let mut sections = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = d.take_u32()? as usize;
+            let name_raw = d.take(name_len)?;
+            let name = std::str::from_utf8(name_raw)
+                .map_err(|_| anyhow::anyhow!("checkpoint section name is not UTF-8"))?
+                .to_string();
+            let payload_len = d.take_u64()? as usize;
+            let want_crc = d.take_u32()?;
+            let payload = d
+                .take(payload_len)
+                .with_context(|| format!("checkpoint section '{name}'"))?;
+            let mut crc_input = Vec::with_capacity(name.len() + payload.len());
+            crc_input.extend_from_slice(name.as_bytes());
+            crc_input.extend_from_slice(payload);
+            ensure!(
+                crc32(&crc_input) == want_crc,
+                "checkpoint section '{name}' corrupt (crc mismatch)"
+            );
+            sections.push((name, payload.to_vec()));
+        }
+        d.finish().context("checkpoint container")?;
+        Ok(Checkpoint { fingerprint, sections })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomic write protocol + recovery scan
+// ---------------------------------------------------------------------------
+
+/// Canonical artifact name for step `step`. Zero-padded so lexical order
+/// equals numeric order in directory listings.
+pub fn file_name(step: u64) -> String {
+    format!("ckpt-{step:08}.{FILE_EXT}")
+}
+
+/// Inverse of [`file_name`]; `None` for anything else (tmp files, foreign
+/// files) so the recovery scan skips them.
+pub fn parse_step(name: &str) -> Option<u64> {
+    let rest = name.strip_prefix("ckpt-")?;
+    let digits = rest.strip_suffix(&format!(".{FILE_EXT}"))?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+enum ProtoErr {
+    /// Transient IO failure — eligible for retry.
+    Io(std::io::Error),
+    /// Injected crash: the process is "dead"; never retried, and the
+    /// directory is left exactly as a real kill at that instant would.
+    #[cfg_attr(not(any(test, feature = "fault-inject")), allow(dead_code))]
+    Kill(&'static str),
+}
+
+/// Write `bytes` to `dir/file_name` via tmp + fsync + rename + dir-fsync.
+/// Transient IO errors get bounded retry with backoff; injected
+/// kill-points abort immediately (simulating process death).
+pub fn write_atomic(dir: &Path, file_name: &str, bytes: &[u8]) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let final_path = dir.join(file_name);
+    let tmp_path = dir.join(format!(".{file_name}.tmp"));
+    let mut last_err = None;
+    for attempt in 0..WRITE_ATTEMPTS {
+        if attempt > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(5 << attempt));
+        }
+        match write_once(&tmp_path, &final_path, dir, bytes) {
+            Ok(()) => return Ok(final_path),
+            Err(ProtoErr::Kill(point)) => {
+                bail!("checkpoint write killed by injected fault ({point})")
+            }
+            Err(ProtoErr::Io(e)) => last_err = Some(e),
+        }
+    }
+    let _ = std::fs::remove_file(&tmp_path);
+    Err(anyhow::anyhow!(
+        "writing checkpoint {} failed after {WRITE_ATTEMPTS} attempts: {}",
+        final_path.display(),
+        last_err.expect("retry loop ran")
+    ))
+}
+
+fn write_once(tmp: &Path, dst: &Path, dir: &Path, bytes: &[u8]) -> Result<(), ProtoErr> {
+    let mut f = std::fs::File::create(tmp).map_err(ProtoErr::Io)?;
+    #[cfg(any(test, feature = "fault-inject"))]
+    match fault::on_write(bytes.len()) {
+        fault::WriteAction::Proceed => {}
+        fault::WriteAction::Error(e) => return Err(ProtoErr::Io(e)),
+        fault::WriteAction::ShortThenKill(n) => {
+            let _ = f.write_all(&bytes[..n.min(bytes.len())]);
+            let _ = f.sync_all();
+            return Err(ProtoErr::Kill("short tmp write"));
+        }
+    }
+    f.write_all(bytes).map_err(ProtoErr::Io)?;
+    #[cfg(any(test, feature = "fault-inject"))]
+    if fault::kill_at(fault::KillPoint::AfterTmpWrite) {
+        return Err(ProtoErr::Kill("after tmp write"));
+    }
+    f.sync_all().map_err(ProtoErr::Io)?;
+    #[cfg(any(test, feature = "fault-inject"))]
+    if fault::kill_at(fault::KillPoint::AfterTmpSync) {
+        return Err(ProtoErr::Kill("after tmp fsync"));
+    }
+    drop(f);
+    std::fs::rename(tmp, dst).map_err(ProtoErr::Io)?;
+    #[cfg(any(test, feature = "fault-inject"))]
+    if fault::kill_at(fault::KillPoint::AfterRename) {
+        return Err(ProtoErr::Kill("after rename"));
+    }
+    // Durability for the rename itself. Best-effort: a failed directory
+    // fsync does not undo an already-visible rename.
+    #[cfg(unix)]
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+/// A checkpoint recovered from disk.
+pub struct Loaded {
+    pub step: u64,
+    pub path: PathBuf,
+    pub ckpt: Checkpoint,
+}
+
+/// Scan `dir` for the newest loadable checkpoint. Corrupt, truncated, or
+/// unreadable artifacts are skipped with a warning (torn-write fallback);
+/// a *valid* artifact with the wrong fingerprint is a hard error. Returns
+/// `Ok(None)` when the directory has no artifacts at all.
+pub fn load_latest(dir: &Path, expect_fingerprint: u64) -> Result<Option<Loaded>> {
+    if !dir.exists() {
+        return Ok(None);
+    }
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning checkpoint dir {}", dir.display()))?;
+    let mut found: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in entries {
+        let entry = entry.with_context(|| format!("scanning checkpoint dir {}", dir.display()))?;
+        let name = entry.file_name();
+        if let Some(step) = name.to_str().and_then(parse_step) {
+            found.push((step, entry.path()));
+        }
+    }
+    found.sort_by(|a, b| b.0.cmp(&a.0));
+    for (step, path) in found {
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                crate::log_warn!("skipping unreadable checkpoint {}: {e}", path.display());
+                continue;
+            }
+        };
+        match Checkpoint::decode(&bytes) {
+            Ok(ckpt) => {
+                ensure!(
+                    ckpt.fingerprint == expect_fingerprint,
+                    "checkpoint {} was written by an incompatible run \
+                     (fingerprint {:016x}, expected {:016x}) — refusing to resume",
+                    path.display(),
+                    ckpt.fingerprint,
+                    expect_fingerprint
+                );
+                return Ok(Some(Loaded { step, path, ckpt }));
+            }
+            Err(e) => {
+                crate::log_warn!("skipping corrupt checkpoint {}: {e:#}", path.display());
+            }
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lgp_ckpt_{tag}_{:?}", std::thread::current().id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample(fp: u64) -> Checkpoint {
+        let mut ck = Checkpoint::new(fp);
+        let mut e = Enc::new();
+        e.put_u64(42);
+        e.put_f64(0.25);
+        e.put_f32s(&[1.0, -2.5, 3.25]);
+        e.put_str("hello");
+        ck.add("alpha", e.into_bytes());
+        ck.add("beta", vec![9, 8, 7, 6, 5]);
+        ck
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard check value for "123456789" under CRC-32/ISO-HDLC.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn container_round_trips_and_reencodes_identically() {
+        let ck = sample(0xdead_beef);
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back.fingerprint, 0xdead_beef);
+        assert_eq!(back.section("beta").unwrap(), &[9, 8, 7, 6, 5]);
+        let mut d = Dec::new(back.section("alpha").unwrap(), "alpha");
+        assert_eq!(d.take_u64().unwrap(), 42);
+        assert_eq!(d.take_f64().unwrap(), 0.25);
+        assert_eq!(d.take_f32s().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(d.take_str().unwrap(), "hello");
+        d.finish().unwrap();
+        assert_eq!(back.encode(), bytes, "re-encode must be byte-identical");
+    }
+
+    #[test]
+    fn every_corrupt_byte_is_rejected_or_detected() {
+        // Flipping any single byte must never produce a silently-wrong
+        // decode: either the decode errors, or (for a payload-length or
+        // structural flip) it errors with truncation. Nothing decodes to
+        // different section contents without complaint.
+        let bytes = sample(7).encode();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                Checkpoint::decode(&bad).is_err(),
+                "byte {i} flipped but decode succeeded"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_payload_names_the_section() {
+        let ck = sample(7);
+        let bytes = ck.encode();
+        // Corrupt the last byte: inside the final ("beta") payload.
+        let mut bad = bytes.clone();
+        *bad.last_mut().unwrap() ^= 0xff;
+        let err = format!("{:#}", Checkpoint::decode(&bad).unwrap_err());
+        assert!(err.contains("'beta'"), "diagnostic should name the section: {err}");
+        assert!(err.contains("crc mismatch"), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let bytes = sample(7).encode();
+        for cut in [0, 5, 27, 30, bytes.len() - 1] {
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn file_names_sort_lexically_by_step() {
+        assert_eq!(file_name(6), "ckpt-00000006.lgpckpt");
+        assert_eq!(parse_step("ckpt-00000006.lgpckpt"), Some(6));
+        assert_eq!(parse_step("ckpt-12345678.lgpckpt"), Some(12_345_678));
+        assert_eq!(parse_step(".ckpt-00000006.lgpckpt.tmp"), None);
+        assert_eq!(parse_step("params.lgpckpt"), None);
+        assert!(file_name(6) < file_name(10));
+    }
+
+    #[test]
+    fn write_then_load_latest_round_trips() {
+        let dir = scratch("roundtrip");
+        for step in [2u64, 6, 4] {
+            let mut ck = sample(11);
+            let mut e = Enc::new();
+            e.put_u64(step);
+            ck.add("step", e.into_bytes());
+            write_atomic(&dir, &file_name(step), &ck.encode()).unwrap();
+        }
+        let loaded = load_latest(&dir, 11).unwrap().expect("artifacts present");
+        assert_eq!(loaded.step, 6, "newest-by-step wins");
+        let mut d = Dec::new(loaded.ckpt.section("step").unwrap(), "step");
+        assert_eq!(d.take_u64().unwrap(), 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_latest_empty_and_missing_dir() {
+        let dir = scratch("empty");
+        assert!(load_latest(&dir, 0).unwrap().is_none(), "missing dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load_latest(&dir, 0).unwrap().is_none(), "empty dir");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_latest_falls_back_past_corrupt_newest() {
+        let dir = scratch("fallback");
+        write_atomic(&dir, &file_name(4), &sample(11).encode()).unwrap();
+        // Newest artifact is torn: truncate a valid encoding.
+        let bytes = sample(11).encode();
+        std::fs::write(dir.join(file_name(8)), &bytes[..bytes.len() / 2]).unwrap();
+        let loaded = load_latest(&dir, 11).unwrap().expect("older artifact valid");
+        assert_eq!(loaded.step, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_a_hard_error() {
+        let dir = scratch("fpmismatch");
+        write_atomic(&dir, &file_name(3), &sample(11).encode()).unwrap();
+        let err = format!("{:#}", load_latest(&dir, 99).unwrap_err());
+        assert!(err.contains("incompatible run"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_of_is_order_and_content_sensitive() {
+        let a = fingerprint_of(&[("k", "1".into()), ("j", "2".into())]);
+        let b = fingerprint_of(&[("j", "2".into()), ("k", "1".into())]);
+        let c = fingerprint_of(&[("k", "1".into()), ("j", "3".into())]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, fingerprint_of(&[("k", "1".into()), ("j", "2".into())]));
+    }
+
+    // -- fault-injection suite: no kill-point between write and rename may
+    //    leave the directory without a loadable valid artifact -------------
+
+    /// After a simulated crash at any point, the directory must still
+    /// resolve to `want_step` (or `None`) via the normal recovery scan.
+    fn assert_recovers_to(dir: &Path, fp: u64, want_step: Option<u64>) {
+        let got = load_latest(dir, fp).unwrap().map(|l| l.step);
+        assert_eq!(got, want_step);
+    }
+
+    #[test]
+    fn kill_points_never_lose_the_previous_artifact() {
+        for kp in [
+            fault::KillPoint::AfterTmpWrite,
+            fault::KillPoint::AfterTmpSync,
+            fault::KillPoint::AfterRename,
+        ] {
+            let dir = scratch(&format!("kill_{kp:?}"));
+            // A previous good checkpoint at step 3.
+            write_atomic(&dir, &file_name(3), &sample(11).encode()).unwrap();
+            fault::arm(fault::Fault::Kill(kp));
+            let err = write_atomic(&dir, &file_name(6), &sample(11).encode()).unwrap_err();
+            fault::disarm();
+            assert!(format!("{err:#}").contains("killed"), "{err:#}");
+            // AfterRename: the new artifact is already visible; earlier
+            // kills must fall back to step 3. Either way the dir has a
+            // loadable valid artifact.
+            let want = if kp == fault::KillPoint::AfterRename { Some(6) } else { Some(3) };
+            assert_recovers_to(&dir, 11, want);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn kill_on_first_ever_write_leaves_dir_recoverably_empty() {
+        for kp in [fault::KillPoint::AfterTmpWrite, fault::KillPoint::AfterTmpSync] {
+            let dir = scratch(&format!("killfirst_{kp:?}"));
+            fault::arm(fault::Fault::Kill(kp));
+            let _ = write_atomic(&dir, &file_name(1), &sample(11).encode());
+            fault::disarm();
+            // Only a tmp file may exist; the scan sees no artifacts.
+            assert_recovers_to(&dir, 11, None);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn short_write_leaves_only_a_torn_tmp_file() {
+        let dir = scratch("short");
+        write_atomic(&dir, &file_name(2), &sample(11).encode()).unwrap();
+        fault::arm(fault::Fault::ShortWrite { bytes: 10 });
+        let err = write_atomic(&dir, &file_name(5), &sample(11).encode()).unwrap_err();
+        fault::disarm();
+        assert!(format!("{err:#}").contains("short tmp write"), "{err:#}");
+        assert_recovers_to(&dir, 11, Some(2));
+        // The torn bytes live under the tmp name, never the final name.
+        assert!(dir.join(format!(".{}.tmp", file_name(5))).exists());
+        assert!(!dir.join(file_name(5)).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn transient_enospc_is_absorbed_by_retry() {
+        let dir = scratch("enospc");
+        fault::arm(fault::Fault::ENospc { times: 2 });
+        let path = write_atomic(&dir, &file_name(9), &sample(11).encode()).unwrap();
+        fault::disarm();
+        assert!(path.exists());
+        assert_recovers_to(&dir, 11, Some(9));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persistent_enospc_exhausts_retries_with_a_path_naming_error() {
+        let dir = scratch("enospc_hard");
+        fault::arm(fault::Fault::ENospc { times: 1000 });
+        let err = write_atomic(&dir, &file_name(9), &sample(11).encode()).unwrap_err();
+        fault::disarm();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("after 3 attempts"), "{msg}");
+        assert!(msg.contains(&file_name(9)), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

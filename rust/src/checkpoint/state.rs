@@ -1,0 +1,401 @@
+//! Component codecs for the session checkpoint sections (ADR-008).
+//!
+//! One encode/decode pair per stateful training component. Decoders write
+//! *into* an existing object built by the normal construction path
+//! (`SessionBuilder::build`, `Optimizer::new`, …) and verify shapes
+//! against it — a checkpoint can never resize a component, only refill
+//! it. All functions are also the contract surface for the host-level
+//! kill-and-resume tests (`tests/checkpoint_resume.rs`), which round-trip
+//! every estimator in the zoo through them without artifacts.
+
+use super::{Dec, Enc};
+use crate::estimator::GradientEstimator;
+use crate::model::params::{FlatGrad, ParamStore};
+use crate::optim::Optimizer;
+use crate::predictor::fit::FitBuffer;
+use crate::predictor::Predictor;
+use anyhow::{bail, ensure, Result};
+
+/// Section names of the session checkpoint artifact.
+pub const META: &str = "meta";
+pub const PARAMS: &str = "params";
+pub const OPTIM: &str = "optim";
+pub const PREDICTOR: &str = "predictor";
+pub const FITBUF: &str = "fitbuf";
+pub const ESTIMATOR: &str = "estimator";
+pub const DATA: &str = "data";
+
+// -- params -----------------------------------------------------------------
+
+pub fn encode_params(p: &ParamStore) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.put_f32s(&p.trunk);
+    e.put_f32s(&p.head_w);
+    e.put_f32s(&p.head_b);
+    e.into_bytes()
+}
+
+pub fn decode_params(p: &mut ParamStore, bytes: &[u8]) -> Result<()> {
+    let mut d = Dec::new(bytes, PARAMS);
+    let trunk = d.take_f32s()?;
+    let head_w = d.take_f32s()?;
+    let head_b = d.take_f32s()?;
+    ensure!(
+        trunk.len() == p.trunk.len()
+            && head_w.len() == p.head_w.len()
+            && head_b.len() == p.head_b.len(),
+        "checkpoint params sized ({}, {}, {}) but the model has ({}, {}, {})",
+        trunk.len(),
+        head_w.len(),
+        head_b.len(),
+        p.trunk.len(),
+        p.head_w.len(),
+        p.head_b.len()
+    );
+    p.trunk = trunk;
+    p.head_w = head_w;
+    p.head_b = head_b;
+    d.finish()
+}
+
+// -- optimizer --------------------------------------------------------------
+
+fn put_flat(e: &mut Enc, g: &FlatGrad) {
+    e.put_f32s(&g.trunk);
+    e.put_f32s(&g.head_w);
+    e.put_f32s(&g.head_b);
+}
+
+fn take_flat_into(d: &mut Dec, g: &mut FlatGrad, what: &str) -> Result<()> {
+    let trunk = d.take_f32s()?;
+    let head_w = d.take_f32s()?;
+    let head_b = d.take_f32s()?;
+    ensure!(
+        trunk.len() == g.trunk.len()
+            && head_w.len() == g.head_w.len()
+            && head_b.len() == g.head_b.len(),
+        "checkpoint {what} buffer shape mismatch"
+    );
+    g.trunk = trunk;
+    g.head_w = head_w;
+    g.head_b = head_b;
+    Ok(())
+}
+
+fn optim_tag(o: &Optimizer) -> u8 {
+    match o {
+        Optimizer::Sgd { .. } => 0,
+        Optimizer::Momentum { .. } => 1,
+        Optimizer::AdamW { .. } => 2,
+        Optimizer::Muon { .. } => 3,
+    }
+}
+
+/// Serialize the optimizer *state* (moments, step counters). Hyper-
+/// parameters and scratch workspaces are rebuilt from config, not stored.
+pub fn encode_optimizer(o: &Optimizer) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.put_u8(optim_tag(o));
+    match o {
+        Optimizer::Sgd { .. } => {}
+        Optimizer::Momentum { velocity, .. } => put_flat(&mut e, velocity),
+        Optimizer::AdamW { m, v, t, .. } => {
+            e.put_u64(*t);
+            put_flat(&mut e, m);
+            put_flat(&mut e, v);
+        }
+        Optimizer::Muon { matrix_momentum, adam_m, adam_v, t, .. } => {
+            e.put_u64(*t);
+            e.put_u64(matrix_momentum.len() as u64);
+            for slot in matrix_momentum {
+                match slot {
+                    None => e.put_bool(false),
+                    Some(buf) => {
+                        e.put_bool(true);
+                        e.put_f32s(buf);
+                    }
+                }
+            }
+            put_flat(&mut e, adam_m);
+            put_flat(&mut e, adam_v);
+        }
+    }
+    e.into_bytes()
+}
+
+pub fn decode_optimizer(o: &mut Optimizer, bytes: &[u8]) -> Result<()> {
+    let mut d = Dec::new(bytes, OPTIM);
+    let tag = d.take_u8()?;
+    ensure!(
+        tag == optim_tag(o),
+        "checkpoint optimizer kind (tag {tag}) differs from the configured one (tag {})",
+        optim_tag(o)
+    );
+    match o {
+        Optimizer::Sgd { .. } => {}
+        Optimizer::Momentum { velocity, .. } => take_flat_into(&mut d, velocity, "velocity")?,
+        Optimizer::AdamW { m, v, t, .. } => {
+            *t = d.take_u64()?;
+            take_flat_into(&mut d, m, "adam m")?;
+            take_flat_into(&mut d, v, "adam v")?;
+        }
+        Optimizer::Muon { matrix_momentum, adam_m, adam_v, t, .. } => {
+            *t = d.take_u64()?;
+            let n = d.take_u64()? as usize;
+            ensure!(
+                n == matrix_momentum.len(),
+                "checkpoint muon layout has {n} trunk slots, manifest has {}",
+                matrix_momentum.len()
+            );
+            for (i, slot) in matrix_momentum.iter_mut().enumerate() {
+                let present = d.take_bool()?;
+                match (present, slot.as_mut()) {
+                    (false, None) => {}
+                    (true, Some(buf)) => {
+                        let vals = d.take_f32s()?;
+                        ensure!(
+                            vals.len() == buf.len(),
+                            "checkpoint muon momentum {i} has {} values, expected {}",
+                            vals.len(),
+                            buf.len()
+                        );
+                        *buf = vals;
+                    }
+                    _ => bail!("checkpoint muon-eligibility of trunk slot {i} changed"),
+                }
+            }
+            take_flat_into(&mut d, adam_m, "muon adam m")?;
+            take_flat_into(&mut d, adam_v, "muon adam v")?;
+        }
+    }
+    d.finish()
+}
+
+// -- predictor --------------------------------------------------------------
+
+pub fn encode_predictor(p: &Predictor) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.put_u64(p.fits as u64);
+    e.put_f32s(&p.u.data);
+    e.put_f32s(&p.b.data);
+    e.into_bytes()
+}
+
+/// Restore (U, B, fits). Bumps `version` so device-resident copies are
+/// invalidated and re-uploaded on the next use.
+pub fn decode_predictor(p: &mut Predictor, bytes: &[u8]) -> Result<()> {
+    let mut d = Dec::new(bytes, PREDICTOR);
+    let fits = d.take_u64()? as usize;
+    let u = d.take_f32s()?;
+    let b = d.take_f32s()?;
+    ensure!(
+        u.len() == p.u.data.len() && b.len() == p.b.data.len(),
+        "checkpoint predictor sized (U {}, B {}) but session has (U {}, B {})",
+        u.len(),
+        b.len(),
+        p.u.data.len(),
+        p.b.data.len()
+    );
+    p.u.data = u;
+    p.b.data = b;
+    p.fits = fits;
+    p.version += 1;
+    d.finish()
+}
+
+// -- fit buffer -------------------------------------------------------------
+
+/// Serialize the ring in *logical* order (0 = oldest): the physical
+/// head/slot layout is an implementation detail, and a restore via
+/// `clear` + `push` is bit-equivalent because all reads go through the
+/// logical accessors.
+pub fn encode_fitbuf(buf: &FitBuffer) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.put_u64(buf.capacity as u64);
+    e.put_u64(buf.len() as u64);
+    if !buf.is_empty() {
+        let d = buf.h(0).len();
+        e.put_u64(d as u64);
+        for i in 0..buf.len() {
+            e.put_f32s(buf.grad(i));
+            e.put_f32s(&buf.a1(i)[..d]);
+            e.put_f32s(buf.h(i));
+        }
+    }
+    e.into_bytes()
+}
+
+pub fn decode_fitbuf(buf: &mut FitBuffer, bytes: &[u8]) -> Result<()> {
+    let mut dec = Dec::new(bytes, FITBUF);
+    let capacity = dec.take_u64()? as usize;
+    ensure!(
+        capacity == buf.capacity,
+        "checkpoint fit buffer capacity {capacity} differs from session's {}",
+        buf.capacity
+    );
+    let len = dec.take_u64()? as usize;
+    buf.clear();
+    if len > 0 {
+        let d = dec.take_u64()? as usize;
+        for i in 0..len {
+            let grad = dec.take_f32s()?;
+            let a = dec.take_f32s()?;
+            let h = dec.take_f32s()?;
+            ensure!(
+                a.len() == d && h.len() == d,
+                "checkpoint fit buffer row {i} has widths (a {}, h {}), expected {d}",
+                a.len(),
+                h.len()
+            );
+            buf.push(&grad, &a, &h);
+        }
+    }
+    dec.finish()
+}
+
+// -- estimator --------------------------------------------------------------
+
+/// Wrap an estimator's own [`GradientEstimator::save_state`] payload with
+/// its name, so resuming under a different estimator kind fails with a
+/// clear diagnostic instead of a garbled decode.
+pub fn encode_estimator(est: &dyn GradientEstimator) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.put_str(est.name());
+    e.put_vec(&est.save_state());
+    e.into_bytes()
+}
+
+pub fn decode_estimator(est: &mut dyn GradientEstimator, bytes: &[u8]) -> Result<()> {
+    let mut d = Dec::new(bytes, ESTIMATOR);
+    let name = d.take_str()?;
+    ensure!(
+        name == est.name(),
+        "checkpoint was written by estimator '{name}', session runs '{}'",
+        est.name()
+    );
+    let payload = d.take_vec()?;
+    d.finish()?;
+    est.load_state(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::{ControlVariate, MultiTangentForward, TrueBackprop};
+    use crate::util::rng::Pcg64;
+
+    fn dummy_params(rng: &mut Pcg64) -> ParamStore {
+        let mut p = ParamStore {
+            trunk: vec![0.0; 24],
+            head_w: vec![0.0; 12],
+            head_b: vec![0.0; 3],
+            width: 4,
+            classes: 3,
+        };
+        rng.fill_normal(&mut p.trunk, 1.0);
+        rng.fill_normal(&mut p.head_w, 1.0);
+        rng.fill_normal(&mut p.head_b, 1.0);
+        p
+    }
+
+    #[test]
+    fn params_round_trip_bitwise() {
+        let mut rng = Pcg64::seeded(1);
+        let p = dummy_params(&mut rng);
+        let mut q = dummy_params(&mut rng);
+        decode_params(&mut q, &encode_params(&p)).unwrap();
+        assert_eq!(p.trunk, q.trunk);
+        assert_eq!(p.head_w, q.head_w);
+        assert_eq!(p.head_b, q.head_b);
+    }
+
+    #[test]
+    fn params_shape_mismatch_rejected() {
+        let mut rng = Pcg64::seeded(2);
+        let p = dummy_params(&mut rng);
+        let mut small = p.clone();
+        small.trunk.truncate(10);
+        let err = decode_params(&mut small, &encode_params(&p)).unwrap_err();
+        assert!(format!("{err:#}").contains("sized"), "{err:#}");
+    }
+
+    #[test]
+    fn fitbuf_round_trip_preserves_logical_rows_through_ring_wrap() {
+        let mut rng = Pcg64::seeded(3);
+        let mut buf = FitBuffer::new(4);
+        // Push 6 rows into capacity 4 so the ring wraps.
+        for _ in 0..6 {
+            let mut g = vec![0.0f32; 10];
+            let mut a = vec![0.0f32; 3];
+            let mut h = vec![0.0f32; 3];
+            rng.fill_normal(&mut g, 1.0);
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut h, 1.0);
+            buf.push(&g, &a, &h);
+        }
+        let bytes = encode_fitbuf(&buf);
+        let mut back = FitBuffer::new(4);
+        decode_fitbuf(&mut back, &bytes).unwrap();
+        assert_eq!(back.len(), buf.len());
+        for i in 0..buf.len() {
+            assert_eq!(back.grad(i), buf.grad(i), "row {i}");
+            assert_eq!(back.a1(i), buf.a1(i), "row {i}");
+            assert_eq!(back.h(i), buf.h(i), "row {i}");
+        }
+        // Re-encode from the restored buffer: byte-identical.
+        assert_eq!(encode_fitbuf(&back), bytes);
+        // Capacity mismatch is rejected.
+        let mut wrong = FitBuffer::new(8);
+        assert!(decode_fitbuf(&mut wrong, &bytes).is_err());
+    }
+
+    #[test]
+    fn empty_fitbuf_round_trips() {
+        let buf = FitBuffer::new(5);
+        let mut back = FitBuffer::new(5);
+        // Pre-fill then confirm restore empties it.
+        back.push(&[1.0], &[2.0], &[3.0]);
+        decode_fitbuf(&mut back, &encode_fitbuf(&buf)).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn estimator_wrapper_names_must_match() {
+        let cv = ControlVariate::new(0.25);
+        let bytes = encode_estimator(&cv);
+        let mut mtf = MultiTangentForward::new(4, 0);
+        let err = decode_estimator(&mut mtf, &bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("control-variate") && msg.contains("multi-tangent"), "{msg}");
+    }
+
+    #[test]
+    fn stateless_estimator_rejects_unexpected_payload() {
+        let mut tb = TrueBackprop;
+        let mut e = Enc::new();
+        e.put_str("true-backprop");
+        e.put_vec(&[1, 2, 3]);
+        let err = decode_estimator(&mut tb, &e.into_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("no checkpoint state"), "{err:#}");
+    }
+
+    #[test]
+    fn predictor_restore_bumps_version() {
+        let mut rng = Pcg64::seeded(4);
+        let mut p = Predictor::new(20, 4, 2);
+        rng.fill_normal(&mut p.u.data, 1.0);
+        rng.fill_normal(&mut p.b.data, 1.0);
+        p.fits = 3;
+        let bytes = encode_predictor(&p);
+        let mut q = Predictor::new(20, 4, 2);
+        let v0 = q.version;
+        decode_predictor(&mut q, &bytes).unwrap();
+        assert_eq!(q.fits, 3);
+        assert_eq!(q.u.data, p.u.data);
+        assert_eq!(q.b.data, p.b.data);
+        assert!(q.version > v0, "device copies must be invalidated");
+        // Wrong rank -> size mismatch.
+        let mut wrong = Predictor::new(20, 4, 3);
+        assert!(decode_predictor(&mut wrong, &bytes).is_err());
+    }
+}

@@ -206,6 +206,15 @@ pub struct RunConfig {
     /// many threads; 1 = serial. Any value yields bit-identical results —
     /// the fixed-topology reduction is the determinism contract.
     pub shards: usize,
+    /// Directory for crash-safe session checkpoints (`--checkpoint-dir`,
+    /// DESIGN.md ADR-008); `None` disables checkpointing entirely.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Write a checkpoint every N optimizer updates (0 = only on
+    /// graceful shutdown). Ignored without `checkpoint_dir`.
+    pub checkpoint_every: usize,
+    /// Resume from the newest valid checkpoint in `checkpoint_dir`
+    /// before training (`--resume`); a fresh run if the dir is empty.
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -234,6 +243,9 @@ impl Default for RunConfig {
             adaptive_f: false,
             backend: BackendKind::Auto,
             shards: 1,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 }
@@ -267,6 +279,10 @@ impl RunConfig {
         anyhow::ensure!(self.train_size >= 16, "train_size too small");
         anyhow::ensure!(self.shards >= 1, "shards must be >= 1, got {}", self.shards);
         anyhow::ensure!(self.tangents >= 1, "tangents must be >= 1, got {}", self.tangents);
+        anyhow::ensure!(
+            !self.resume || self.checkpoint_dir.is_some(),
+            "resume requires a checkpoint directory (--resume needs --checkpoint-dir)"
+        );
         Ok(())
     }
 
@@ -361,6 +377,16 @@ mod tests {
         assert_eq!("ncv".parse::<EstimatorKind>().unwrap(), EstimatorKind::NeuralCv);
         assert!(EstimatorKind::parse("nope").is_err());
         assert_eq!(EstimatorKind::ALL.len(), EstimatorKind::SPECS.len());
+    }
+
+    #[test]
+    fn resume_without_checkpoint_dir_rejected() {
+        let mut c = RunConfig::default();
+        c.resume = true;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("--checkpoint-dir"), "{err}");
+        c.checkpoint_dir = Some(PathBuf::from("ckpts"));
+        c.validate().unwrap();
     }
 
     #[test]

@@ -55,13 +55,16 @@ pub fn load_dir(dir: &std::path::Path) -> anyhow::Result<(Dataset, Dataset)> {
         let path = dir.join(format!("data_batch_{i}.bin"));
         let bytes = std::fs::read(&path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        let part = decode(&bytes)?;
+        let part = decode(&bytes)
+            .map_err(|e| e.context(format!("decoding {}", path.display())))?;
         train.images.extend(part.images);
         train.labels.extend(part.labels);
     }
-    let test_bytes = std::fs::read(dir.join("test_batch.bin"))
-        .map_err(|e| anyhow::anyhow!("reading test_batch.bin: {e}"))?;
-    let test = decode(&test_bytes)?;
+    let test_path = dir.join("test_batch.bin");
+    let test_bytes = std::fs::read(&test_path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", test_path.display()))?;
+    let test = decode(&test_bytes)
+        .map_err(|e| e.context(format!("decoding {}", test_path.display())))?;
     Ok((train, test))
 }
 
@@ -114,5 +117,28 @@ mod tests {
         let (train, test) = load_dir(&dir).unwrap();
         assert_eq!(train.len(), 40);
         assert_eq!(test.len(), 6);
+    }
+
+    #[test]
+    fn io_errors_name_the_offending_path() {
+        let dir = std::env::temp_dir().join("lgp_cifar_test_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for i in 1..=5 {
+            std::fs::write(dir.join(format!("data_batch_{i}.bin")), fake_batch(2)).unwrap();
+        }
+        // test_batch.bin absent: the error must carry the full path, not
+        // just the file name.
+        let err = load_dir(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("test_batch.bin") && msg.contains("lgp_cifar_test_missing"),
+            "{msg}"
+        );
+        // A present-but-garbled batch names the file it came from.
+        std::fs::write(dir.join("test_batch.bin"), [1u8; 7]).unwrap();
+        let err = load_dir(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("test_batch.bin") && msg.contains("record size"), "{msg}");
     }
 }

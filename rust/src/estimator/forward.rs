@@ -145,6 +145,31 @@ impl GradientEstimator for MultiTangentForward {
         // Forward gradients never run a backward pass.
         0.0
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        // Tangent draws are positional (seed, slot, i) — there is no
+        // mutable state. Record the construction config for validation:
+        // resuming with different tangents would silently change the
+        // estimator's variance.
+        let mut e = crate::checkpoint::Enc::new();
+        e.put_u64(self.k as u64);
+        e.put_u64(self.seed);
+        e.into_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut d = crate::checkpoint::Dec::new(bytes, "multi-tangent state");
+        let k = d.take_u64()? as usize;
+        let seed = d.take_u64()?;
+        anyhow::ensure!(
+            k == self.k && seed == self.seed,
+            "multi-tangent checkpoint mismatch: checkpoint has k={k} seed={seed}, \
+             session has k={} seed={}",
+            self.k,
+            self.seed
+        );
+        d.finish()
+    }
 }
 
 #[cfg(test)]

@@ -229,6 +229,28 @@ pub trait GradientEstimator: Send + Sync {
     fn predictor_ready(&self, linear_fits: usize) -> bool {
         linear_fits > 0
     }
+
+    /// Serialize checkpointable estimator state (ADR-008): everything a
+    /// resumed run needs for the estimator to be *the same estimator* —
+    /// the adaptive-f controller position, the NCV network and fit count,
+    /// the current control fraction. Stateless estimators return empty.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state written by [`save_state`](Self::save_state). Called
+    /// after [`bind`](Self::bind), so manifest-derived structures exist.
+    /// The default accepts only an empty payload — a stateless estimator
+    /// handed bytes is a checkpoint/config mismatch, not a no-op.
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "estimator '{}' carries no checkpoint state but the checkpoint has {} bytes",
+            self.name(),
+            bytes.len()
+        );
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -393,6 +415,48 @@ impl GradientEstimator for ControlVariate {
             vec![self.f]
         }
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut e = crate::checkpoint::Enc::new();
+        e.put_f64(self.f);
+        match &self.adaptive {
+            Some(ctl) => {
+                e.put_bool(true);
+                e.put_f64(ctl.current);
+                e.put_u64(ctl.switches as u64);
+            }
+            None => e.put_bool(false),
+        }
+        e.into_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut d = crate::checkpoint::Dec::new(bytes, "control-variate state");
+        let f = d.take_f64()?;
+        anyhow::ensure!(
+            f > 0.0 && f <= 1.0,
+            "checkpointed control fraction {f} out of range (0,1]"
+        );
+        self.f = f;
+        if d.take_bool()? {
+            let current = d.take_f64()?;
+            let switches = d.take_u64()? as usize;
+            let ctl = self.adaptive.as_mut().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint carries adaptive-f state but this session was built \
+                     without adaptive_f"
+                )
+            })?;
+            ctl.current = current;
+            ctl.switches = switches;
+        } else {
+            anyhow::ensure!(
+                self.adaptive.is_none(),
+                "this session enables adaptive_f but the checkpoint has no controller state"
+            );
+        }
+        d.finish()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -456,6 +520,23 @@ impl GradientEstimator for PredictedLgp {
     ) -> anyhow::Result<()> {
         combine::blend_into(g, g_p, f_eff);
         Ok(())
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut e = crate::checkpoint::Enc::new();
+        e.put_f64(self.f);
+        e.into_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut d = crate::checkpoint::Dec::new(bytes, "predicted-lgp state");
+        let f = d.take_f64()?;
+        anyhow::ensure!(
+            f > 0.0 && f <= 1.0,
+            "checkpointed control fraction {f} out of range (0,1]"
+        );
+        self.f = f;
+        d.finish()
     }
 }
 

@@ -373,6 +373,68 @@ impl GradientEstimator for NeuralControlVariate {
         out.head_b.copy_from_slice(&gb);
         Ok(())
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut e = crate::checkpoint::Enc::new();
+        e.put_f64(self.f);
+        e.put_u64(self.fits as u64);
+        match &self.state {
+            None => e.put_bool(false),
+            Some(st) => {
+                e.put_bool(true);
+                e.put_u64(st.p_t as u64);
+                e.put_u64(st.r as u64);
+                e.put_u64(st.d as u64);
+                e.put_u64(st.hidden as u64);
+                e.put_f32s(&st.u_rows);
+                e.put_f32s(&st.w1);
+                e.put_f32s(&st.b1);
+                e.put_f32s(&st.w2);
+                e.put_f32s(&st.b2);
+            }
+        }
+        e.into_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut dec = crate::checkpoint::Dec::new(bytes, "neural-cv state");
+        let f = dec.take_f64()?;
+        anyhow::ensure!(
+            f > 0.0 && f <= 1.0,
+            "checkpointed control fraction {f} out of range (0,1]"
+        );
+        self.f = f;
+        self.fits = dec.take_u64()? as usize;
+        self.state = if dec.take_bool()? {
+            let p_t = dec.take_u64()? as usize;
+            let r = dec.take_u64()? as usize;
+            let d = dec.take_u64()? as usize;
+            let hidden = dec.take_u64()? as usize;
+            let st = NcvState {
+                u_rows: dec.take_f32s()?,
+                p_t,
+                r,
+                d,
+                hidden,
+                w1: dec.take_f32s()?,
+                b1: dec.take_f32s()?,
+                w2: dec.take_f32s()?,
+                b2: dec.take_f32s()?,
+            };
+            anyhow::ensure!(
+                st.u_rows.len() == r * p_t
+                    && st.w1.len() == hidden * 2 * d
+                    && st.b1.len() == hidden
+                    && st.w2.len() == r * hidden
+                    && st.b2.len() == r,
+                "neural-cv checkpoint has inconsistent layer shapes"
+            );
+            Some(st)
+        } else {
+            None
+        };
+        dec.finish()
+    }
 }
 
 #[cfg(test)]

@@ -35,6 +35,7 @@ static GLOBAL_ALLOC_COUNTER: util::alloc_track::CountingAllocator =
     util::alloc_track::CountingAllocator;
 
 pub mod bench_support;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -63,6 +63,9 @@ SUBCOMMANDS
            [--backend {backend}]   (host tensor kernels; auto = probe)
            [--shards N]   (data-parallel worker threads per update;
                            bit-identical to --shards 1, DESIGN.md ADR-004)
+           [--checkpoint-dir DIR] [--checkpoint-every N] [--resume]
+                          (crash-safe checkpoints + bit-identical resume;
+                           SIGINT checkpoints then exits, DESIGN.md ADR-008)
   theory   print Theorem 3/4 tables and the cost model
   sweep-f  --fs 0.125,0.25,0.5 plus the train flags
   data     --n 100 --side 32 [--seed S]  describe synthetic data

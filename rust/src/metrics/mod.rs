@@ -184,6 +184,16 @@ impl Ema {
         }
         self.value
     }
+
+    /// `(value, alpha, initialized)` for checkpointing (ADR-008).
+    pub fn parts(&self) -> (f64, f64, bool) {
+        (self.value, self.alpha, self.initialized)
+    }
+
+    /// Rebuild a meter from [`parts`](Self::parts) output.
+    pub fn from_parts(value: f64, alpha: f64, initialized: bool) -> Ema {
+        Ema { value, alpha, initialized }
+    }
 }
 
 /// One row of the training log (shared by both algorithms so curves are

@@ -2,8 +2,10 @@
 //! from the AOT init bins and updated in place by the optimizer.
 
 use super::manifest::Manifest;
+use crate::checkpoint;
 use crate::tensor::Tensor;
 use crate::util;
+use anyhow::Context as _;
 
 /// The three parameter tensors the whole system revolves around.
 /// Trunk layout is defined by the manifest; `head_w` is (D, C) row-major.
@@ -63,17 +65,61 @@ impl ParamStore {
         out
     }
 
-    /// Save a checkpoint (three .bin files under `dir`).
+    /// File name of the parameter checkpoint artifact under the target
+    /// directory (one versioned, CRC-guarded container — ADR-008).
+    pub const CKPT_FILE: &str = "params.lgpckpt";
+
+    /// Fingerprint over the store's shape: restoring into a differently
+    /// shaped model is an incompatibility (hard error), not corruption.
+    fn shape_fingerprint(&self) -> u64 {
+        checkpoint::fingerprint_of(&[
+            ("trunk", self.trunk.len().to_string()),
+            ("head_w", self.head_w.len().to_string()),
+            ("head_b", self.head_b.len().to_string()),
+            ("width", self.width.to_string()),
+            ("classes", self.classes.to_string()),
+        ])
+    }
+
+    /// Save a parameter checkpoint: a single `params.lgpckpt` artifact
+    /// written through the atomic tmp+fsync+rename protocol (ADR-008).
+    /// Replaces the pre-ADR-008 layout of three raw `.bin` files.
     pub fn save(&self, dir: &std::path::Path) -> anyhow::Result<()> {
-        std::fs::create_dir_all(dir)?;
-        util::write_f32_file(&dir.join("trunk.bin"), &self.trunk)?;
-        util::write_f32_file(&dir.join("head_w.bin"), &self.head_w)?;
-        util::write_f32_file(&dir.join("head_b.bin"), &self.head_b)?;
+        let mut ck = checkpoint::Checkpoint::new(self.shape_fingerprint());
+        ck.add(checkpoint::state::PARAMS, checkpoint::state::encode_params(self));
+        checkpoint::write_atomic(dir, Self::CKPT_FILE, &ck.encode())?;
         Ok(())
     }
 
-    /// Restore a checkpoint saved by `save`.
+    /// Restore a checkpoint saved by [`save`](Self::save). Prefers the
+    /// versioned artifact; falls back — with a deprecation warning — to
+    /// the legacy three-`.bin` layout for one release of read-compat.
     pub fn restore(&mut self, dir: &std::path::Path) -> anyhow::Result<()> {
+        let path = dir.join(Self::CKPT_FILE);
+        if path.exists() {
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading parameter checkpoint {}", path.display()))?;
+            let ck = checkpoint::Checkpoint::decode(&bytes)
+                .with_context(|| format!("decoding parameter checkpoint {}", path.display()))?;
+            anyhow::ensure!(
+                ck.fingerprint == self.shape_fingerprint(),
+                "{} was written for a differently shaped model \
+                 (fingerprint {:016x}, expected {:016x})",
+                path.display(),
+                ck.fingerprint,
+                self.shape_fingerprint()
+            );
+            return checkpoint::state::decode_params(
+                self,
+                ck.section(checkpoint::state::PARAMS)?,
+            );
+        }
+        crate::log_warn!(
+            "restoring legacy three-.bin parameter checkpoint from {} — deprecated; \
+             re-save to produce a single {} artifact",
+            dir.display(),
+            Self::CKPT_FILE
+        );
         let trunk = util::read_f32_file(&dir.join("trunk.bin"))?;
         anyhow::ensure!(trunk.len() == self.trunk.len(), "checkpoint trunk size mismatch");
         let head_w = util::read_f32_file(&dir.join("head_w.bin"))?;
@@ -204,11 +250,64 @@ mod tests {
     #[test]
     fn checkpoint_round_trip() {
         let dir = std::env::temp_dir().join("lgp_params_test");
+        let _ = std::fs::remove_dir_all(&dir);
         let mut p = dummy();
         p.save(&dir).unwrap();
+        assert!(dir.join(ParamStore::CKPT_FILE).exists(), "single-artifact layout");
+        assert!(!dir.join("trunk.bin").exists(), "legacy .bin layout is gone");
         let orig = p.clone();
         p.trunk[0] = 99.0;
         p.restore(&dir).unwrap();
         assert_eq!(p.trunk, orig.trunk);
+    }
+
+    #[test]
+    fn new_format_takes_precedence_over_stale_legacy_bins() {
+        let dir = std::env::temp_dir().join("lgp_params_test_precedence");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Stale legacy checkpoint with different values.
+        let mut stale = dummy();
+        stale.trunk.iter_mut().for_each(|v| *v = -7.0);
+        crate::util::write_f32_file(&dir.join("trunk.bin"), &stale.trunk).unwrap();
+        crate::util::write_f32_file(&dir.join("head_w.bin"), &stale.head_w).unwrap();
+        crate::util::write_f32_file(&dir.join("head_b.bin"), &stale.head_b).unwrap();
+        let p = dummy();
+        p.save(&dir).unwrap();
+        let mut q = dummy();
+        q.trunk.iter_mut().for_each(|v| *v = 0.0);
+        q.restore(&dir).unwrap();
+        assert_eq!(q.trunk, p.trunk, "versioned artifact must win over stale .bin files");
+    }
+
+    #[test]
+    fn legacy_three_bin_layout_still_restores() {
+        let dir = std::env::temp_dir().join("lgp_params_test_legacy");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dummy();
+        crate::util::write_f32_file(&dir.join("trunk.bin"), &p.trunk).unwrap();
+        crate::util::write_f32_file(&dir.join("head_w.bin"), &p.head_w).unwrap();
+        crate::util::write_f32_file(&dir.join("head_b.bin"), &p.head_b).unwrap();
+        let mut q = dummy();
+        q.trunk.iter_mut().for_each(|v| *v = 0.0);
+        q.restore(&dir).unwrap();
+        assert_eq!(q.trunk, p.trunk);
+    }
+
+    #[test]
+    fn restore_rejects_differently_shaped_store() {
+        let dir = std::env::temp_dir().join("lgp_params_test_shape");
+        let _ = std::fs::remove_dir_all(&dir);
+        dummy().save(&dir).unwrap();
+        let mut wrong = ParamStore {
+            trunk: vec![0.0; 8],
+            head_w: vec![0.0; 6],
+            head_b: vec![0.0; 3],
+            width: 2,
+            classes: 3,
+        };
+        let err = wrong.restore(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("differently shaped"), "{err:#}");
     }
 }

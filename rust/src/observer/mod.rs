@@ -24,7 +24,7 @@ use crate::metrics::{Alignment, LogRow};
 use crate::predictor::fit::FitReport;
 use crate::util::CsvWriter;
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// One predictor refit, as seen by observers.
 #[derive(Clone, Copy, Debug)]
@@ -39,6 +39,21 @@ pub struct RefitEvent {
     /// Control fraction in effect after the refit (the adaptive
     /// controller may have just retuned it).
     pub f: f64,
+}
+
+/// One durable checkpoint write (DESIGN.md ADR-008), emitted after the
+/// artifact has been atomically renamed into place.
+#[derive(Clone, Debug)]
+pub struct CheckpointEvent {
+    /// Optimizer updates captured by the artifact (resume continues at
+    /// `step + 1`).
+    pub step: usize,
+    /// Final artifact path (`ckpt-XXXXXXXX.lgpckpt`).
+    pub path: PathBuf,
+    /// Encoded artifact size in bytes.
+    pub bytes: usize,
+    /// Wall-clock seconds spent encoding + writing + fsyncing.
+    pub write_secs: f64,
 }
 
 /// End-of-run summary, emitted exactly once.
@@ -70,6 +85,12 @@ pub trait TrainObserver: Send {
 
     /// After each predictor refit.
     fn on_refit(&mut self, ev: &RefitEvent) -> anyhow::Result<()> {
+        let _ = ev;
+        Ok(())
+    }
+
+    /// After each durable checkpoint write (ADR-008).
+    fn on_checkpoint(&mut self, ev: &CheckpointEvent) -> anyhow::Result<()> {
         let _ = ev;
         Ok(())
     }
@@ -169,6 +190,18 @@ impl TrainObserver for JsonlObserver {
         Ok(())
     }
 
+    fn on_checkpoint(&mut self, ev: &CheckpointEvent) -> anyhow::Result<()> {
+        writeln!(
+            self.file,
+            r#"{{"event":"checkpoint","step":{},"path":{:?},"bytes":{},"write_secs":{}}}"#,
+            ev.step,
+            ev.path.display().to_string(),
+            ev.bytes,
+            jnum(ev.write_secs),
+        )?;
+        Ok(())
+    }
+
     fn on_end(&mut self, s: &RunSummary) -> anyhow::Result<()> {
         writeln!(
             self.file,
@@ -240,6 +273,13 @@ impl TrainObserver for Multicast {
         Ok(())
     }
 
+    fn on_checkpoint(&mut self, ev: &CheckpointEvent) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.on_checkpoint(ev)?;
+        }
+        Ok(())
+    }
+
     fn on_end(&mut self, summary: &RunSummary) -> anyhow::Result<()> {
         for s in &mut self.sinks {
             s.on_end(summary)?;
@@ -280,7 +320,7 @@ mod tests {
     /// Counts events into shared state (the pattern custom observers use
     /// to hand results back out of the session).
     #[derive(Clone, Default)]
-    struct Counter(Arc<Mutex<(usize, usize, usize, usize)>>);
+    struct Counter(Arc<Mutex<(usize, usize, usize, usize, usize)>>);
 
     impl TrainObserver for Counter {
         fn on_step(&mut self, _row: &LogRow) -> anyhow::Result<()> {
@@ -293,6 +333,10 @@ mod tests {
         }
         fn on_refit(&mut self, _ev: &RefitEvent) -> anyhow::Result<()> {
             self.0.lock().unwrap().2 += 1;
+            Ok(())
+        }
+        fn on_checkpoint(&mut self, _ev: &CheckpointEvent) -> anyhow::Result<()> {
+            self.0.lock().unwrap().4 += 1;
             Ok(())
         }
         fn on_end(&mut self, _s: &RunSummary) -> anyhow::Result<()> {
@@ -311,6 +355,13 @@ mod tests {
         m.on_step(&row(2, 0.5)).unwrap();
         m.on_eval(2, 0.5).unwrap();
         m.on_refit(&refit_event(2)).unwrap();
+        m.on_checkpoint(&CheckpointEvent {
+            step: 2,
+            path: PathBuf::from("ckpts/ckpt-00000002.lgpckpt"),
+            bytes: 1024,
+            write_secs: 0.001,
+        })
+        .unwrap();
         m.on_end(&RunSummary {
             steps: 2,
             final_val_acc: 0.5,
@@ -320,7 +371,7 @@ mod tests {
         })
         .unwrap();
         for c in [a, b] {
-            assert_eq!(*c.0.lock().unwrap(), (2, 1, 1, 1));
+            assert_eq!(*c.0.lock().unwrap(), (2, 1, 1, 1, 1));
         }
     }
 
@@ -360,6 +411,13 @@ mod tests {
         let mut o = JsonlObserver::create(&path).unwrap();
         o.on_step(&row(1, f64::NAN)).unwrap();
         o.on_refit(&refit_event(1)).unwrap();
+        o.on_checkpoint(&CheckpointEvent {
+            step: 1,
+            path: PathBuf::from("ckpts/ckpt-00000001.lgpckpt"),
+            bytes: 2048,
+            write_secs: 0.002,
+        })
+        .unwrap();
         o.on_end(&RunSummary {
             steps: 1,
             final_val_acc: 0.5,
@@ -371,7 +429,10 @@ mod tests {
         drop(o);
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 3);
+        assert_eq!(lines.len(), 4);
+        let ckpt = Json::parse(lines[2]).unwrap();
+        assert_eq!(ckpt.get("event").and_then(Json::as_str), Some("checkpoint"));
+        assert_eq!(ckpt.get("bytes").and_then(Json::as_usize), Some(2048));
         for line in &lines {
             let j = Json::parse(line).unwrap_or_else(|e| panic!("bad jsonl line {line}: {e}"));
             assert!(j.get("event").and_then(Json::as_str).is_some());

@@ -99,6 +99,15 @@ pub fn builder_from_args(args: &Args) -> anyhow::Result<SessionBuilder> {
     if args.flag("adaptive-f") {
         b = b.adaptive_f(true);
     }
+    if let Some(v) = args.str_opt("checkpoint-dir") {
+        b = b.checkpoint_dir(PathBuf::from(v));
+    }
+    if let Some(v) = args.parsed::<usize>("checkpoint-every")? {
+        b = b.checkpoint_every(v);
+    }
+    if args.flag("resume") {
+        b = b.resume(true);
+    }
     Ok(b)
 }
 
@@ -141,6 +150,19 @@ mod tests {
         let a = parse("train --estimator nope");
         let err = builder_from_args(&a).unwrap_err();
         assert!(format!("{err}").contains("unknown estimator 'nope'"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_flags_map_onto_builder() {
+        let a = parse("train --checkpoint-dir ckpts --checkpoint-every 5 --resume");
+        let b = builder_from_args(&a).unwrap();
+        assert_eq!(b.config().checkpoint_dir, Some(PathBuf::from("ckpts")));
+        assert_eq!(b.config().checkpoint_every, 5);
+        assert!(b.config().resume);
+        let a = parse("train");
+        let b = builder_from_args(&a).unwrap();
+        assert_eq!(b.config().checkpoint_dir, None);
+        assert!(!b.config().resume);
     }
 
     #[test]

@@ -36,6 +36,7 @@ mod worker;
 
 pub use worker::{ShardWorker, SlotCtx};
 
+use crate::checkpoint::{self, state as ckstate, Dec, Enc};
 use crate::config::{Algo, EstimatorKind, OptimKind, RunConfig};
 use crate::coordinator::{exec, pool::WorkerPool, reduce};
 use crate::data::loader::DataPipeline;
@@ -43,16 +44,16 @@ use crate::estimator::{
     ControlVariate, GradientEstimator, MultiTangentForward, NeuralControlVariate, PredictedLgp,
     TrueBackprop,
 };
-use crate::metrics::{alignment_of, AlignmentMeter, Ema, LogRow};
+use crate::metrics::{alignment_of, Alignment, AlignmentMeter, Ema, LogRow};
 use crate::model::params::{FlatGrad, ParamStore};
-use crate::observer::{RefitEvent, RunSummary, TrainObserver};
+use crate::observer::{CheckpointEvent, RefitEvent, RunSummary, TrainObserver};
 use crate::optim::{OptimConfig, Optimizer};
 use crate::predictor::fit::{fit_with_ws, FitBuffer, FitReport};
 use crate::predictor::{residuals, Predictor};
 use crate::runtime::{DeviceParams, Runtime};
 use crate::tensor::{backend, Backend, BackendKind, Workspace};
 use crate::util::json::Json;
-use crate::util::Stopwatch;
+use crate::util::{shutdown, Stopwatch};
 use std::path::PathBuf;
 
 // ---------------------------------------------------------------------------
@@ -254,6 +255,26 @@ impl SessionBuilder {
         self
     }
 
+    /// Directory for crash-safe checkpoints (ADR-008); unset = no
+    /// checkpointing.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Checkpoint every N optimizer updates (0 = only on graceful
+    /// shutdown).
+    pub fn checkpoint_every(mut self, every: usize) -> Self {
+        self.cfg.checkpoint_every = every;
+        self
+    }
+
+    /// Resume from the newest valid checkpoint before training.
+    pub fn resume(mut self, on: bool) -> Self {
+        self.cfg.resume = on;
+        self
+    }
+
     /// Apply a JSON config document (same keys as the CLI flags). Enum
     /// strings fail immediately; range validation happens at `build`.
     pub fn apply_json(mut self, j: &Json) -> anyhow::Result<Self> {
@@ -274,6 +295,9 @@ impl SessionBuilder {
         }
         if let Some(v) = j.get("estimator").and_then(Json::as_str) {
             self.cfg.estimator = Some(v.parse()?);
+        }
+        if let Some(v) = j.get("checkpoint_dir").and_then(Json::as_str) {
+            self.cfg.checkpoint_dir = Some(PathBuf::from(v));
         }
         macro_rules! num {
             ($key:literal, $field:expr, $ty:ty) => {
@@ -297,11 +321,15 @@ impl SessionBuilder {
         num!("eval_every", self.cfg.eval_every, usize);
         num!("shards", self.cfg.shards, usize);
         num!("tangents", self.cfg.tangents, usize);
+        num!("checkpoint_every", self.cfg.checkpoint_every, usize);
         if let Some(v) = j.get("track_alignment").and_then(Json::as_bool) {
             self.cfg.track_alignment = v;
         }
         if let Some(v) = j.get("adaptive_f").and_then(Json::as_bool) {
             self.cfg.adaptive_f = v;
+        }
+        if let Some(v) = j.get("resume").and_then(Json::as_bool) {
+            self.cfg.resume = v;
         }
         Ok(self)
     }
@@ -402,6 +430,7 @@ impl SessionBuilder {
             .collect();
         Ok(TrainSession {
             tracker: AlignmentMeter::default(),
+            loss_ema: Ema::new(0.2),
             backend: be,
             ws: Workspace::new(),
             // Spawned once here, parked between updates (ADR-007): every
@@ -445,6 +474,9 @@ pub struct TrainSession {
     fit_buf: FitBuffer,
     pub data: DataPipeline,
     pub tracker: AlignmentMeter,
+    /// Smoothed training loss; a session field (not a `run`-local) so a
+    /// resumed run reproduces the exact smoothed series (ADR-008).
+    loss_ema: Ema,
     /// Host tensor backend selected at build from `cfg.backend` (Auto →
     /// calibration probe); threaded through the fit and the optimizer.
     pub backend: Backend,
@@ -684,14 +716,217 @@ impl TrainSession {
         Ok(if batches == 0 { 0.0 } else { correct_weighted / batches as f64 })
     }
 
+    // ---- crash-safe checkpointing (ADR-008) --------------------------------
+
+    /// Fingerprint over every behavior-affecting config and manifest knob,
+    /// stamped into each checkpoint artifact. Deliberately excludes
+    /// `shards` (any count is bit-identical, ADR-004) and the output /
+    /// budget / checkpoint knobs a resumed run may legitimately change.
+    pub fn fingerprint(&self) -> u64 {
+        let c = &self.cfg;
+        let m = &self.rt.manifest;
+        checkpoint::fingerprint_of(&[
+            ("algo", format!("{:?}", c.algo)),
+            ("estimator", self.est.name().to_string()),
+            ("f", format!("{}", c.f)),
+            ("adaptive_f", format!("{}", c.adaptive_f)),
+            ("tangents", format!("{}", c.tangents)),
+            ("accum", format!("{}", c.accum)),
+            ("optimizer", format!("{:?}", c.optimizer)),
+            ("lr", format!("{}", c.lr)),
+            ("weight_decay", format!("{}", c.weight_decay)),
+            ("refit_every", format!("{}", c.refit_every)),
+            ("ridge_lambda", format!("{}", c.ridge_lambda)),
+            ("train_size", format!("{}", c.train_size)),
+            ("val_size", format!("{}", c.val_size)),
+            ("aug_multiplier", format!("{}", c.aug_multiplier)),
+            ("seed", format!("{}", c.seed)),
+            ("track_alignment", format!("{}", c.track_alignment)),
+            ("backend", self.backend.name().to_string()),
+            ("preset", m.preset.clone()),
+            ("trunk_params", format!("{}", m.trunk_params)),
+            ("width", format!("{}", m.width)),
+            ("classes", format!("{}", m.classes)),
+            ("n_fit", format!("{}", m.n_fit)),
+            ("micro_batch", format!("{}", m.micro_batch)),
+        ])
+    }
+
+    /// Capture the full mutable session state as a checkpoint container.
+    fn build_checkpoint(&self) -> checkpoint::Checkpoint {
+        let mut ck = checkpoint::Checkpoint::new(self.fingerprint());
+        let mut meta = Enc::new();
+        meta.put_u64(self.step as u64);
+        meta.put_u64(self.examples_seen as u64);
+        meta.put_f64(self.cost_units);
+        let (v, alpha, init) = self.loss_ema.parts();
+        meta.put_f64(v);
+        meta.put_f64(alpha);
+        meta.put_bool(init);
+        match self.tracker.snapshot() {
+            None => meta.put_bool(false),
+            Some(a) => {
+                meta.put_bool(true);
+                meta.put_f64(a.rho);
+                meta.put_f64(a.kappa);
+                meta.put_f64(a.sigma_g);
+                meta.put_f64(a.sigma_h);
+                meta.put_u64(a.n as u64);
+            }
+        }
+        ck.add(ckstate::META, meta.into_bytes());
+        ck.add(ckstate::PARAMS, ckstate::encode_params(&self.params));
+        ck.add(ckstate::OPTIM, ckstate::encode_optimizer(&self.opt));
+        ck.add(ckstate::PREDICTOR, ckstate::encode_predictor(&self.pred));
+        ck.add(ckstate::FITBUF, ckstate::encode_fitbuf(&self.fit_buf));
+        ck.add(ckstate::ESTIMATOR, ckstate::encode_estimator(&*self.est));
+        // The data stream is positional (ADR-004): the cursor alone
+        // reproduces the exact stream state on a fresh pipeline.
+        let mut data = Enc::new();
+        data.put_u64(self.cfg.seed);
+        data.put_u64(self.data.cursor() as u64);
+        ck.add(ckstate::DATA, data.into_bytes());
+        ck
+    }
+
+    /// Restore every mutable component from a decoded checkpoint. Shape
+    /// and identity mismatches (estimator kind, optimizer kind, seeds)
+    /// error without partially applying — callers only see a mutated
+    /// session on `Ok` because params/optim/pred/fitbuf decoding validates
+    /// before overwriting and the scalar fields are assigned last.
+    fn restore_from(&mut self, ck: &checkpoint::Checkpoint) -> anyhow::Result<()> {
+        let mut meta = Dec::new(ck.section(ckstate::META)?, ckstate::META);
+        let step = meta.take_u64()? as usize;
+        let examples_seen = meta.take_u64()? as usize;
+        let cost_units = meta.take_f64()?;
+        let ema_value = meta.take_f64()?;
+        let ema_alpha = meta.take_f64()?;
+        let ema_init = meta.take_bool()?;
+        let mut tracker = AlignmentMeter::default();
+        if meta.take_bool()? {
+            let a = Alignment {
+                rho: meta.take_f64()?,
+                kappa: meta.take_f64()?,
+                sigma_g: meta.take_f64()?,
+                sigma_h: meta.take_f64()?,
+                n: meta.take_u64()? as usize,
+            };
+            tracker.update(Some(a));
+        }
+        meta.finish()?;
+
+        let mut data = Dec::new(ck.section(ckstate::DATA)?, ckstate::DATA);
+        let seed = data.take_u64()?;
+        anyhow::ensure!(
+            seed == self.cfg.seed,
+            "checkpoint data stream seed {seed} differs from session seed {}",
+            self.cfg.seed
+        );
+        let cursor = data.take_u64()? as usize;
+        data.finish()?;
+        anyhow::ensure!(
+            cursor >= self.data.cursor(),
+            "checkpoint cursor {cursor} is behind the session's ({})",
+            self.data.cursor()
+        );
+
+        ckstate::decode_params(&mut self.params, ck.section(ckstate::PARAMS)?)?;
+        ckstate::decode_optimizer(&mut self.opt, ck.section(ckstate::OPTIM)?)?;
+        ckstate::decode_predictor(&mut self.pred, ck.section(ckstate::PREDICTOR)?)?;
+        ckstate::decode_fitbuf(&mut self.fit_buf, ck.section(ckstate::FITBUF)?)?;
+        ckstate::decode_estimator(&mut *self.est, ck.section(ckstate::ESTIMATOR)?)?;
+
+        self.data.advance(cursor - self.data.cursor());
+        self.step = step;
+        self.examples_seen = examples_seen;
+        self.cost_units = cost_units;
+        self.loss_ema = Ema::from_parts(ema_value, ema_alpha, ema_init);
+        self.tracker = tracker;
+        // Any device-resident predictor copy predates the restore.
+        self.dev_pred = None;
+        Ok(())
+    }
+
+    /// Encode the session state and write it durably to
+    /// `cfg.checkpoint_dir` (tmp + fsync + atomic rename, ADR-008).
+    /// No-op returning `Ok(None)` when no checkpoint dir is configured.
+    pub fn write_checkpoint(&mut self) -> anyhow::Result<Option<PathBuf>> {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            return Ok(None);
+        };
+        let sw = Stopwatch::start();
+        let bytes = self.build_checkpoint().encode();
+        let path = checkpoint::write_atomic(&dir, &checkpoint::file_name(self.step as u64), &bytes)?;
+        let ev = CheckpointEvent {
+            step: self.step,
+            path: path.clone(),
+            bytes: bytes.len(),
+            write_secs: sw.seconds(),
+        };
+        for o in &mut self.observers {
+            o.on_checkpoint(&ev)?;
+        }
+        crate::log_info!(
+            "checkpoint: step {} -> {} ({} bytes, {:.1} ms)",
+            self.step,
+            path.display(),
+            ev.bytes,
+            sw.millis()
+        );
+        Ok(Some(path))
+    }
+
+    /// Restore from the newest valid checkpoint in `cfg.checkpoint_dir`.
+    /// `Ok(None)` (fresh run) when the directory holds no artifacts; a
+    /// hard error on fingerprint mismatch or when every artifact is
+    /// corrupt beyond the newest-valid fallback.
+    pub fn resume_latest(&mut self) -> anyhow::Result<Option<usize>> {
+        let dir = self.cfg.checkpoint_dir.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "resume requires a checkpoint directory (--resume needs --checkpoint-dir)"
+            )
+        })?;
+        anyhow::ensure!(
+            self.step == 0,
+            "resume_latest on a session that already ran {} steps",
+            self.step
+        );
+        match checkpoint::load_latest(&dir, self.fingerprint())? {
+            None => {
+                crate::log_info!(
+                    "resume: no checkpoints in {} — starting fresh",
+                    dir.display()
+                );
+                Ok(None)
+            }
+            Some(loaded) => {
+                self.restore_from(&loaded.ckpt)?;
+                crate::log_info!(
+                    "resume: restored step {} from {}",
+                    self.step,
+                    loaded.path.display()
+                );
+                Ok(Some(self.step))
+            }
+        }
+    }
+
     // ---- the budgeted training loop ---------------------------------------
 
     /// Run until the wall-clock budget or step limit, notifying observers
-    /// at each step/eval/refit and once at the end.
+    /// at each step/eval/refit and once at the end. With a checkpoint dir
+    /// configured, writes durable artifacts on the periodic schedule and
+    /// on SIGINT (graceful shutdown, ADR-008); with `resume` set, first
+    /// restores the newest valid checkpoint and continues bit-identically
+    /// from the next step.
     pub fn run(&mut self) -> anyhow::Result<()> {
+        if self.cfg.resume && self.step == 0 {
+            self.resume_latest()?;
+        }
+        shutdown::install();
+        shutdown::reset();
         self.warmup()?;
         let sw = Stopwatch::start();
-        let mut loss_ema = Ema::new(0.2);
         loop {
             if self.cfg.budget_secs > 0.0 && sw.seconds() >= self.cfg.budget_secs {
                 break;
@@ -743,7 +978,7 @@ impl TrainSession {
             self.opt.step_pooled(&mut self.params, &grad, &self.rt.manifest, Some(&self.pool));
             self.step += 1;
 
-            let loss = loss_ema.push(loss_sum / self.cfg.accum as f64);
+            let loss = self.loss_ema.push(loss_sum / self.cfg.accum as f64);
             let train_acc = acc_sum / self.cfg.accum as f64;
 
             // periodic eval + log
@@ -784,6 +1019,23 @@ impl TrainSession {
                 );
             }
             self.log.push(row);
+
+            // ADR-008: durable checkpoint at the update boundary. The
+            // artifact captures post-step-k state, so a resume continues
+            // bit-identically at k+1. A graceful-shutdown request always
+            // gets a final checkpoint before the loop exits.
+            let stop = shutdown::requested();
+            if self.cfg.checkpoint_dir.is_some()
+                && ((self.cfg.checkpoint_every > 0
+                    && self.step % self.cfg.checkpoint_every == 0)
+                    || stop)
+            {
+                self.write_checkpoint()?;
+            }
+            if stop {
+                crate::log_info!("shutdown requested: stopping after step {}", self.step);
+                break;
+            }
         }
         // Final eval if the last step wasn't an eval step.
         if self.log.last().map_or(true, |r| r.val_acc.is_nan()) {

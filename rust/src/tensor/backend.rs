@@ -933,10 +933,13 @@ pub fn read_calib_cache(path: &Path, key: &str) -> Option<BackendKind> {
     (kind != BackendKind::Auto && BackendKind::available().contains(&kind)).then_some(kind)
 }
 
-/// Best-effort cache write; IO errors are swallowed (the probe result is
-/// advisory and will simply be re-measured next startup). The detected
-/// CPU feature string is stamped in so [`read_calib_cache`] can reject
-/// the file on a host with different SIMD support.
+/// Best-effort cache write; an IO failure never aborts startup (the probe
+/// result is advisory and will simply be re-measured next time), but it is
+/// logged with the offending path instead of being swallowed silently —
+/// a read-only or full temp dir otherwise re-probes every run with no
+/// visible reason. The detected CPU feature string is stamped in so
+/// [`read_calib_cache`] can reject the file on a host with different SIMD
+/// support.
 pub fn write_calib_cache(path: &Path, key: &str, chosen: BackendKind) {
     let doc = obj(vec![
         ("schema", s(CALIB_CACHE_SCHEMA)),
@@ -946,7 +949,12 @@ pub fn write_calib_cache(path: &Path, key: &str, chosen: BackendKind) {
     ]);
     let mut text = doc.to_string();
     text.push('\n');
-    let _ = std::fs::write(path, text);
+    if let Err(e) = std::fs::write(path, text) {
+        crate::log_warn!(
+            "writing calibration cache {}: {e} (probe will re-run next startup)",
+            path.display()
+        );
+    }
 }
 
 static AUTO_CHOICE: OnceLock<BackendKind> = OnceLock::new();

@@ -9,6 +9,7 @@ pub mod alloc_track;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod shutdown;
 
 use std::io::Write;
 use std::time::Instant;

@@ -97,6 +97,19 @@ impl Pcg64 {
         }
     }
 
+    /// Raw generator state `(state, inc)` for checkpointing (ADR-008).
+    /// Most RNG use in this repo is *positional* — fresh generators seeded
+    /// from `(seed, position)` — so sessions rarely hold a live generator;
+    /// these accessors exist for the components (and tests) that do.
+    pub fn state_parts(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`state_parts`](Self::state_parts) output.
+    pub fn from_parts(state: u128, inc: u128) -> Pcg64 {
+        Pcg64 { state, inc }
+    }
+
     /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         let n = xs.len();
@@ -179,6 +192,19 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn state_parts_round_trip_resumes_the_stream() {
+        let mut a = Pcg64::new(9, 3);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let (s, i) = a.state_parts();
+        let mut b = Pcg64::from_parts(s, i);
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

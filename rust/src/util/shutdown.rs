@@ -1,0 +1,93 @@
+//! Graceful-shutdown flag for the training loop (DESIGN.md ADR-008).
+//!
+//! The session polls [`requested`] at update boundaries: on SIGINT the
+//! handler only flips an `AtomicBool` (the whole async-signal-safe
+//! budget), the loop notices at the next boundary, writes a final
+//! checkpoint, and exits cleanly. A second Ctrl-C still kills the
+//! process the hard way because the handler is installed with
+//! `SA_RESETHAND`-like semantics via re-registration — see [`install`].
+//!
+//! No `libc` dependency is available offline, so the handler goes
+//! through the C `signal(2)` entry point directly; on non-Unix targets
+//! the module compiles to a no-op flag that only [`request`] can set.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+static REQUESTED: AtomicBool = AtomicBool::new(false);
+static INSTALL: Once = Once::new();
+
+#[cfg(unix)]
+mod sys {
+    use super::{Ordering, REQUESTED};
+
+    pub const SIGINT: i32 = 2;
+    pub const SIG_DFL: usize = 0;
+
+    extern "C" {
+        // POSIX `signal(2)`; returns the previous handler (SIG_ERR = !0).
+        pub fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    pub extern "C" fn on_sigint(_signum: i32) {
+        // Async-signal-safe: a relaxed store and nothing else. Re-arm to
+        // the default disposition so a second Ctrl-C terminates even if
+        // the loop is wedged between poll points.
+        REQUESTED.store(true, Ordering::Relaxed);
+        unsafe {
+            signal(SIGINT, SIG_DFL);
+        }
+    }
+}
+
+/// Install the SIGINT handler once per process. Idempotent; later calls
+/// are no-ops (the flag is process-global, matching the one-session-per-
+/// process CLI). On non-Unix targets this does nothing.
+pub fn install() {
+    INSTALL.call_once(|| {
+        #[cfg(unix)]
+        unsafe {
+            let handler: extern "C" fn(i32) = sys::on_sigint;
+            sys::signal(sys::SIGINT, handler as usize);
+        }
+    });
+}
+
+/// Has a graceful shutdown been requested (SIGINT or [`request`])?
+pub fn requested() -> bool {
+    REQUESTED.load(Ordering::Relaxed)
+}
+
+/// Programmatic shutdown request — what the signal handler does, callable
+/// from tests and embedding code.
+pub fn request() {
+    REQUESTED.store(true, Ordering::Relaxed);
+}
+
+/// Clear the flag (tests; a fresh `TrainSession::run` also clears it so a
+/// stale request from a previous run in the same process cannot abort the
+/// next one at step 1).
+pub fn reset() {
+    REQUESTED.store(false, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_sets_and_reset_clears_the_flag() {
+        reset();
+        assert!(!requested());
+        request();
+        assert!(requested());
+        reset();
+        assert!(!requested());
+    }
+
+    #[test]
+    fn install_is_idempotent() {
+        install();
+        install();
+    }
+}

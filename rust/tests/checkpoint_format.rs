@@ -1,0 +1,234 @@
+//! ADR-008 artifact format properties, proptest-style (seeded loops over
+//! randomized contents — the repo's dependency-free stand-in for a
+//! proptest crate):
+//!
+//! - container encode → decode → re-encode is byte-identical for random
+//!   fingerprints, section names, and payloads;
+//! - every single-byte corruption of an artifact is detected, and payload
+//!   corruption names the section it hit;
+//! - each estimator's `save_state` payload survives decode into a freshly
+//!   constructed estimator and re-encodes byte-identically;
+//! - optimizer moments (all four kinds, Muon's matrix momentum included)
+//!   round-trip byte-identically after real update steps.
+
+use lgp::checkpoint::{state as ckstate, Checkpoint};
+use lgp::config::OptimKind;
+use lgp::estimator::testbed::Testbed;
+use lgp::estimator::{
+    ControlVariate, GradientEstimator, MultiTangentForward, NeuralControlVariate, PredictedLgp,
+};
+use lgp::metrics::Alignment;
+use lgp::model::params::ParamStore;
+use lgp::optim::{OptimConfig, Optimizer};
+use lgp::predictor::fit::FitBuffer;
+use lgp::tensor::{Backend, Workspace};
+use lgp::util::rng::Pcg64;
+
+const CASES: u64 = 16;
+
+#[test]
+fn randomized_container_round_trips_byte_identically() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 0xC0DE);
+        let mut ck = Checkpoint::new(rng.next_u64());
+        let n_sections = 1 + rng.below(5) as usize;
+        for i in 0..n_sections {
+            let name = format!("s{i}_{}", rng.below(1000));
+            let len = rng.below(300) as usize;
+            let payload: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+            ck.add(&name, payload);
+        }
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        assert_eq!(back.fingerprint, ck.fingerprint, "seed {seed}");
+        assert_eq!(
+            back.section_names().collect::<Vec<_>>(),
+            ck.section_names().collect::<Vec<_>>(),
+            "seed {seed}"
+        );
+        assert_eq!(back.encode(), bytes, "seed {seed}: re-encode differs");
+    }
+}
+
+#[test]
+fn every_single_byte_corruption_is_detected() {
+    let mut ck = Checkpoint::new(0xFEED);
+    ck.add("alpha", vec![7u8; 33]);
+    ck.add("beta", vec![9u8; 21]);
+    let bytes = ck.encode();
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        assert!(
+            Checkpoint::decode(&bad).is_err(),
+            "flipping byte {i} of {} went undetected",
+            bytes.len()
+        );
+    }
+    // Truncation at any prefix length is detected too.
+    for cut in 0..bytes.len() {
+        assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "truncation at {cut} undetected");
+    }
+}
+
+#[test]
+fn payload_corruption_names_the_section_it_hit() {
+    let mut ck = Checkpoint::new(1);
+    ck.add("alpha", vec![7u8; 33]);
+    ck.add("beta", vec![9u8; 21]);
+    let mut bytes = ck.encode();
+    // Offset of beta's payload: 28-byte header, alpha record
+    // (4 + "alpha" + 8 + 4 + payload), beta record prefix (4 + "beta" + 8 + 4).
+    let beta_payload = 28 + (4 + 5 + 8 + 4 + 33) + (4 + 4 + 8 + 4);
+    bytes[beta_payload + 10] ^= 0x40;
+    let err = Checkpoint::decode(&bytes).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("beta") && msg.contains("crc"), "{msg}");
+
+    // A header flip reads as header corruption, not a fingerprint mismatch.
+    let mut hdr = ck.encode();
+    hdr[14] ^= 0x01; // inside the fingerprint field
+    let err = Checkpoint::decode(&hdr).unwrap_err();
+    assert!(format!("{err:#}").contains("header corrupt"), "{err:#}");
+}
+
+#[test]
+fn estimator_state_round_trips_byte_identically() {
+    let tb = Testbed::new(3, 64, 10, 5, 3);
+    let man = tb.manifest(8, 2);
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 0xE57A);
+        // control-variate, fixed f
+        {
+            let f = (rng.below(999) + 1) as f64 / 1000.0;
+            let mut a = ControlVariate::new(f);
+            a.bind(&man).unwrap();
+            let bytes = ckstate::encode_estimator(&a);
+            let mut b = ControlVariate::new(0.5);
+            b.bind(&man).unwrap();
+            ckstate::decode_estimator(&mut b, &bytes).unwrap();
+            assert_eq!(ckstate::encode_estimator(&b), bytes, "cv seed {seed}");
+        }
+        // control-variate with the Theorem-4 controller ticked by a random
+        // alignment observation
+        {
+            let mut a = ControlVariate::new(0.25).with_adaptive(true);
+            a.bind(&man).unwrap();
+            let align = Alignment {
+                rho: rng.next_f64(),
+                kappa: 0.5 + rng.next_f64(),
+                sigma_g: rng.next_f64(),
+                sigma_h: rng.next_f64(),
+                n: 8,
+            };
+            a.observe_alignment(Some(align));
+            let bytes = ckstate::encode_estimator(&a);
+            let mut b = ControlVariate::new(0.25).with_adaptive(true);
+            b.bind(&man).unwrap();
+            ckstate::decode_estimator(&mut b, &bytes).unwrap();
+            assert_eq!(ckstate::encode_estimator(&b), bytes, "adaptive cv seed {seed}");
+        }
+        // predicted-lgp
+        {
+            let f = (rng.below(999) + 1) as f64 / 1000.0;
+            let mut a = PredictedLgp::new(f);
+            a.bind(&man).unwrap();
+            let bytes = ckstate::encode_estimator(&a);
+            let mut b = PredictedLgp::new(0.5);
+            b.bind(&man).unwrap();
+            ckstate::decode_estimator(&mut b, &bytes).unwrap();
+            assert_eq!(ckstate::encode_estimator(&b), bytes, "plgp seed {seed}");
+        }
+        // multi-tangent: state is the (k, seed) identity
+        {
+            let k = 1 + rng.below(6) as usize;
+            let s = rng.next_u64();
+            let mut a = MultiTangentForward::new(k, s);
+            a.bind(&man).unwrap();
+            let bytes = ckstate::encode_estimator(&a);
+            let mut b = MultiTangentForward::new(k, s);
+            b.bind(&man).unwrap();
+            ckstate::decode_estimator(&mut b, &bytes).unwrap();
+            assert_eq!(ckstate::encode_estimator(&b), bytes, "mtf seed {seed}");
+        }
+        // neural-cv with a fitted MLP: full weight tensors round-trip
+        {
+            let mut a = NeuralControlVariate::new(0.25).with_seed(seed).with_mlp(4, 10, 0.05);
+            a.bind(&man).unwrap();
+            let mut buf = FitBuffer::new(man.n_fit);
+            let idxs: Vec<usize> = (0..man.n_fit).map(|i| (i * 7) % tb.n).collect();
+            tb.fill_fit_buffer(&mut buf, &idxs);
+            a.fit_own(Backend::blocked(), &buf, 1e-4, &mut Workspace::new()).unwrap();
+            let bytes = ckstate::encode_estimator(&a);
+            let mut b = NeuralControlVariate::new(0.25).with_seed(seed).with_mlp(4, 10, 0.05);
+            b.bind(&man).unwrap();
+            ckstate::decode_estimator(&mut b, &bytes).unwrap();
+            assert_eq!(ckstate::encode_estimator(&b), bytes, "ncv seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn multi_tangent_rejects_mismatched_tangent_config() {
+    let tb = Testbed::new(3, 64, 10, 5, 3);
+    let man = tb.manifest(8, 2);
+    let mut a = MultiTangentForward::new(4, 9);
+    a.bind(&man).unwrap();
+    let bytes = ckstate::encode_estimator(&a);
+    let mut b = MultiTangentForward::new(2, 9);
+    b.bind(&man).unwrap();
+    assert!(ckstate::decode_estimator(&mut b, &bytes).is_err(), "k mismatch must be rejected");
+}
+
+fn testbed_params(tb: &Testbed) -> ParamStore {
+    ParamStore {
+        trunk: tb.trunk.clone(),
+        head_w: tb.head_w.clone(),
+        head_b: tb.head_b.clone(),
+        width: tb.width,
+        classes: tb.classes,
+    }
+}
+
+#[test]
+fn optimizer_state_round_trips_byte_identically_after_real_steps() {
+    let tb = Testbed::new(5, 32, 10, 5, 3);
+    let man = tb.manifest(8, 2);
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed, 0x0071);
+        for kind in [OptimKind::Sgd, OptimKind::Momentum, OptimKind::AdamW, OptimKind::Muon] {
+            let mut params = testbed_params(&tb);
+            let cfg = OptimConfig { lr: 0.02, backend: Backend::blocked(), ..OptimConfig::default() };
+            let mut opt = Optimizer::new(kind, cfg.clone(), &params, &man);
+            // Two real steps with random gradients populate every moment
+            // buffer (Muon's matrix momentum and aux AdamW included).
+            for _ in 0..2 {
+                let mut g = tb.zero_grad();
+                rng.fill_normal(&mut g.trunk, 1.0);
+                rng.fill_normal(&mut g.head_w, 1.0);
+                rng.fill_normal(&mut g.head_b, 1.0);
+                opt.step(&mut params, &g, &man);
+            }
+            let bytes = ckstate::encode_optimizer(&opt);
+            let mut fresh = Optimizer::new(kind, cfg.clone(), &params, &man);
+            ckstate::decode_optimizer(&mut fresh, &bytes).unwrap();
+            assert_eq!(
+                ckstate::encode_optimizer(&fresh),
+                bytes,
+                "{kind:?} seed {seed}: re-encode differs"
+            );
+        }
+    }
+}
+
+#[test]
+fn optimizer_kind_mismatch_is_rejected() {
+    let tb = Testbed::new(5, 32, 10, 5, 3);
+    let man = tb.manifest(8, 2);
+    let params = testbed_params(&tb);
+    let cfg = OptimConfig { lr: 0.02, backend: Backend::blocked(), ..OptimConfig::default() };
+    let sgd = Optimizer::new(OptimKind::Sgd, cfg.clone(), &params, &man);
+    let mut muon = Optimizer::new(OptimKind::Muon, cfg, &params, &man);
+    let err = ckstate::decode_optimizer(&mut muon, &ckstate::encode_optimizer(&sgd)).unwrap_err();
+    assert!(format!("{err:#}").contains("optimizer kind"), "{err:#}");
+}

@@ -1,0 +1,109 @@
+//! ADR-008 graceful shutdown: a shutdown request observed at an update
+//! boundary writes a final checkpoint (even off the periodic schedule)
+//! and exits the loop cleanly — and a later `--resume` continues the
+//! interrupted trajectory bit for bit.
+//!
+//! Lives in its own integration binary: the shutdown flag is process
+//! global (it models SIGINT), so this test must not share a process with
+//! other `TrainSession::run` tests. The flag is raised from inside the
+//! run by an observer — after `run()` has installed the handler and reset
+//! the flag — exactly the ordering a real mid-run SIGINT has.
+
+use lgp::config::{Algo, OptimKind, RunConfig};
+use lgp::metrics::LogRow;
+use lgp::observer::TrainObserver;
+use lgp::session::{SessionBuilder, TrainSession};
+use std::path::PathBuf;
+
+fn tiny_cfg(ckpt_dir: Option<PathBuf>, resume: bool) -> Option<RunConfig> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: tiny artifacts not built");
+        return None;
+    }
+    Some(RunConfig {
+        artifacts_dir: dir,
+        algo: Algo::Gpr,
+        f: 0.25,
+        accum: 4,
+        optimizer: OptimKind::Muon,
+        lr: 0.02,
+        weight_decay: 0.0,
+        budget_secs: 0.0,
+        max_steps: 10,
+        refit_every: 4,
+        ridge_lambda: 1e-4,
+        train_size: 600,
+        val_size: 150,
+        aug_multiplier: 1,
+        seed: 7,
+        eval_every: 0,
+        out_dir: std::env::temp_dir().join("lgp_shutdown_out"),
+        track_alignment: true,
+        adaptive_f: false,
+        backend: lgp::tensor::BackendKind::Blocked,
+        shards: lgp::config::shards_env_override().expect("LGP_SHARDS").unwrap_or(1),
+        estimator: None,
+        tangents: 8,
+        checkpoint_dir: ckpt_dir,
+        checkpoint_every: 0, // no periodic schedule: only shutdown writes
+        resume,
+    })
+}
+
+fn session(cfg: RunConfig) -> TrainSession {
+    SessionBuilder::from_config(cfg).build().unwrap()
+}
+
+/// Raises the process shutdown flag after a chosen step, from inside the
+/// observer fan-out — the update-boundary poll sees it on the same step.
+struct InterruptAt(usize);
+
+impl TrainObserver for InterruptAt {
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        if row.step == self.0 {
+            lgp::util::shutdown::request();
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn shutdown_request_checkpoints_and_resume_rejoins_the_trajectory() {
+    let Some(golden_cfg) = tiny_cfg(None, false) else { return };
+    let mut golden = session(golden_cfg);
+    golden.run().unwrap();
+    let golden_loss: Vec<u64> = golden.log.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(golden.step_count(), 10);
+
+    let ckpt = std::env::temp_dir().join("lgp_shutdown_ckpt");
+    let _ = std::fs::remove_dir_all(&ckpt);
+
+    // "SIGINT" lands during step 4: the run stops there, leaving exactly
+    // one artifact — the off-schedule final checkpoint.
+    let Some(cfg) = tiny_cfg(Some(ckpt.clone()), false) else { return };
+    let mut interrupted = SessionBuilder::from_config(cfg)
+        .observer(Box::new(InterruptAt(4)))
+        .build()
+        .unwrap();
+    interrupted.run().unwrap();
+    assert_eq!(interrupted.step_count(), 4, "run must stop at the requested boundary");
+    assert!(
+        ckpt.join(lgp::checkpoint::file_name(4)).exists(),
+        "graceful shutdown must write a final checkpoint off-schedule"
+    );
+
+    // A fresh session resumes from the shutdown artifact and finishes the
+    // budget bit-identically to the never-interrupted run.
+    let Some(cfg) = tiny_cfg(Some(ckpt.clone()), true) else { return };
+    let mut resumed = session(cfg);
+    resumed.run().unwrap();
+    assert_eq!(resumed.step_count(), 10);
+    assert_eq!(resumed.params.trunk, golden.params.trunk, "resumed trunk differs (bitwise)");
+    assert_eq!(resumed.params.head_w, golden.params.head_w);
+    assert_eq!(resumed.params.head_b, golden.params.head_b);
+    let resumed_loss: Vec<u64> = resumed.log.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(resumed_loss, golden_loss[4..].to_vec(), "post-resume loss trace differs");
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+}

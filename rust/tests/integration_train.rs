@@ -41,6 +41,9 @@ fn tiny_cfg() -> Option<RunConfig> {
         shards: lgp::config::shards_env_override().expect("LGP_SHARDS").unwrap_or(1),
         estimator: None,
         tangents: 8,
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        resume: false,
     })
 }
 

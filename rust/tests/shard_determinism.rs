@@ -388,6 +388,9 @@ fn tiny_cfg(shards: usize) -> Option<RunConfig> {
         shards,
         estimator: None,
         tangents: 8,
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        resume: false,
     })
 }
 

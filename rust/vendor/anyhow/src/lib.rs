@@ -2,9 +2,9 @@
 //!
 //! The build environment has no crates.io access, so the repository vendors
 //! the slice of anyhow's API that the `lgp` crate actually uses:
-//! `anyhow::Error`, `anyhow::Result`, and the `anyhow!` / `bail!` /
-//! `ensure!` macros, with the same `?`-conversion and `{:#}` chain
-//! formatting semantics. See DESIGN.md ADR-002 for the rationale; swap
+//! `anyhow::Error`, `anyhow::Result`, the [`Context`] extension trait,
+//! and the `anyhow!` / `bail!` / `ensure!` macros, with the same
+//! `?`-conversion and `{:#}` chain formatting semantics. See DESIGN.md ADR-002 for the rationale; swap
 //! this path dependency for `anyhow = "1"` when building online.
 
 use std::error::Error as StdError;
@@ -15,6 +15,8 @@ enum Repr {
     Msg(String),
     /// A concrete error converted through `?` — keeps its source chain.
     Wrapped(Box<dyn StdError + Send + Sync + 'static>),
+    /// A message layered on top of another error by [`Context`].
+    Context { msg: String, source: Box<Error> },
 }
 
 /// Dynamic error type: any `std::error::Error` converts into it via `?`.
@@ -33,21 +35,38 @@ impl Error {
         Error { repr: Repr::Wrapped(Box::new(error)) }
     }
 
+    /// Wrap this error with an outer context message (what [`Context`]
+    /// methods build). The context becomes the headline; the wrapped error
+    /// moves into the cause chain.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            repr: Repr::Context { msg: context.to_string(), source: Box::new(self) },
+        }
+    }
+
     /// The root-most error message (no chain).
     pub fn root_message(&self) -> String {
         match &self.repr {
             Repr::Msg(m) => m.clone(),
             Repr::Wrapped(e) => e.to_string(),
+            Repr::Context { msg, .. } => msg.clone(),
         }
     }
 
     fn source_chain(&self) -> Vec<String> {
         let mut out = Vec::new();
-        if let Repr::Wrapped(e) = &self.repr {
-            let mut cur = e.source();
-            while let Some(s) = cur {
-                out.push(s.to_string());
-                cur = s.source();
+        match &self.repr {
+            Repr::Msg(_) => {}
+            Repr::Wrapped(e) => {
+                let mut cur = e.source();
+                while let Some(s) = cur {
+                    out.push(s.to_string());
+                    cur = s.source();
+                }
+            }
+            Repr::Context { source, .. } => {
+                out.push(source.root_message());
+                out.extend(source.source_chain());
             }
         }
         out
@@ -91,6 +110,65 @@ impl<E: StdError + Send + Sync + 'static> From<E> for Error {
 
 /// `Result` with `anyhow::Error` as the default error type.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach contextual messages to errors as they bubble up, mirroring
+/// anyhow's `Context` extension trait.
+///
+/// The two `Result` impls are coherent because [`Error`] deliberately does
+/// not implement `std::error::Error`, so `Result<T, Error>` never overlaps
+/// the `E: StdError` blanket.
+pub trait Context<T> {
+    /// Wrap the error value with a fixed context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error value with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
 
 /// Construct an [`Error`] from a message, a format string, or any
 /// display-able value.
@@ -188,5 +266,47 @@ mod tests {
         let e = Error::new(io_err());
         let s = format!("{e:#}");
         assert!(s.contains("missing thing"));
+    }
+
+    #[test]
+    fn context_layers_over_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err()).context("reading the manifest")?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "reading the manifest");
+        let s = format!("{e:#}");
+        assert!(s.contains("reading the manifest: missing thing"), "{s}");
+    }
+
+    #[test]
+    fn with_context_layers_over_anyhow_errors() {
+        fn leaf() -> Result<()> {
+            bail!("disk on fire")
+        }
+        let path = "/tmp/x";
+        let e = leaf().with_context(|| format!("writing {path}")).unwrap_err();
+        assert_eq!(e.to_string(), "writing /tmp/x");
+        let s = format!("{e:#}");
+        assert!(s.contains("writing /tmp/x: disk on fire"), "{s}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("disk on fire"), "{dbg}");
+    }
+
+    #[test]
+    fn context_on_option_converts_none() {
+        let v: Option<u32> = None;
+        let e = v.context("slot missing").unwrap_err();
+        assert_eq!(e.to_string(), "slot missing");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn nested_context_keeps_full_chain() {
+        let e = Error::new(io_err()).context("layer one").context("layer two");
+        let s = format!("{e:#}");
+        assert!(s.contains("layer two: layer one: missing thing"), "{s}");
     }
 }

@@ -25,6 +25,13 @@ LGP_SHARDS=2 cargo test -q
 # (ADR-004) and across the pool dispatch protocol (ADR-007).
 cargo test -q --features alloc-counter --test alloc_free_hotpath
 
+# ADR-008 crash-safety smoke: the kill-and-resume suite again through the
+# sharded executor, plus the fault-injection feature pass (torn writes,
+# ENOSPC retry, every kill-point in the write protocol). The plain
+# `cargo test -q` above already ran the serial resume-bit-identity suite.
+LGP_SHARDS=2 cargo test -q --test checkpoint_resume
+cargo test -q --features fault-inject --test checkpoint_resume --test checkpoint_format
+
 # ADR-005 public-API drift gate: every example must build AND run against
 # lgp::prelude, so an example that falls behind the session/estimator/
 # observer API fails tier-1 here. Examples exit 0 with a SKIP message
