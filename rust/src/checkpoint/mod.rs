@@ -514,6 +514,64 @@ pub fn load_latest(dir: &Path, expect_fingerprint: u64) -> Result<Option<Loaded>
     Ok(None)
 }
 
+/// Retention policy (`--checkpoint-keep K`): after a successful write,
+/// delete artifacts beyond the newest `keep` *valid* ones. Invariants:
+///
+/// - the artifact at `just_wrote` is never deleted (it counts as valid
+///   without re-reading it — it was just written through the atomic
+///   protocol);
+/// - torn/corrupt artifacts never count toward `keep` (they would pin
+///   the window with files [`load_latest`] can only skip) and are pruned
+///   *after* every excess valid artifact, oldest first — once a newer
+///   valid artifact exists they serve no recovery purpose;
+/// - deletion order is oldest-first, so an interruption mid-prune always
+///   leaves the newest state intact.
+///
+/// `keep == 0` disables retention entirely. Returns the number of files
+/// removed. Foreign files and `.tmp` droppings are left alone
+/// ([`parse_step`] skips them).
+pub fn prune_keep(dir: &Path, keep: usize, just_wrote: &Path) -> Result<usize> {
+    if keep == 0 {
+        return Ok(0);
+    }
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning checkpoint dir {}", dir.display()))?;
+    let mut valid: Vec<(u64, PathBuf)> = Vec::new();
+    let mut torn: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in entries {
+        let entry = entry.with_context(|| format!("scanning checkpoint dir {}", dir.display()))?;
+        let name = entry.file_name();
+        let Some(step) = name.to_str().and_then(parse_step) else {
+            continue;
+        };
+        let path = entry.path();
+        if path == just_wrote {
+            valid.push((step, path));
+            continue;
+        }
+        let ok = std::fs::read(&path).map_or(false, |b| Checkpoint::decode(&b).is_ok());
+        if ok {
+            valid.push((step, path));
+        } else {
+            torn.push((step, path));
+        }
+    }
+    valid.sort_by(|a, b| b.0.cmp(&a.0)); // newest first: [..keep] is the window
+    let excess = if valid.len() > keep { valid.split_off(keep) } else { Vec::new() };
+    torn.sort_by(|a, b| a.0.cmp(&b.0)); // oldest first
+    let mut removed = 0usize;
+    // Excess valid artifacts first (oldest first), torn last.
+    for (_, path) in excess.iter().rev().chain(torn.iter()) {
+        if path == just_wrote {
+            continue;
+        }
+        std::fs::remove_file(path)
+            .with_context(|| format!("pruning old checkpoint {}", path.display()))?;
+        removed += 1;
+    }
+    Ok(removed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -744,6 +802,66 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("after 3 attempts"), "{msg}");
         assert!(msg.contains(&file_name(9)), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_keep_retains_newest_valid_and_drops_torn_last() {
+        let dir = scratch("prune");
+        let bytes = sample(11).encode();
+        let mut last = PathBuf::new();
+        for step in [1u64, 2, 3, 4, 5] {
+            last = write_atomic(&dir, &file_name(step), &bytes).unwrap();
+        }
+        // A torn artifact *newer* than everything valid: it must neither
+        // count toward the window nor survive the prune.
+        std::fs::write(dir.join(file_name(6)), &bytes[..10]).unwrap();
+
+        // keep = 0 disables retention entirely.
+        assert_eq!(prune_keep(&dir, 0, &last).unwrap(), 0);
+        assert!(dir.join(file_name(1)).exists());
+
+        // keep = 2: valid steps 1-3 and the torn 6 go; 4 and 5 stay.
+        assert_eq!(prune_keep(&dir, 2, &last).unwrap(), 4);
+        for gone in [1u64, 2, 3, 6] {
+            assert!(!dir.join(file_name(gone)).exists(), "step {gone} must be pruned");
+        }
+        assert!(dir.join(file_name(4)).exists());
+        assert!(dir.join(file_name(5)).exists());
+        // The survivor set is exactly what recovery sees.
+        assert_recovers_to(&dir, 11, Some(5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_keep_never_deletes_the_artifact_just_written() {
+        let dir = scratch("prune_self");
+        let bytes = sample(11).encode();
+        let p4 = write_atomic(&dir, &file_name(4), &bytes).unwrap();
+        write_atomic(&dir, &file_name(5), &bytes).unwrap();
+        // Pathological call: the just-written artifact is *outside* the
+        // newest-1 window (a clock-skewed or replayed step number). The
+        // excess scan must still skip it.
+        assert_eq!(prune_keep(&dir, 1, &p4).unwrap(), 0);
+        assert!(dir.join(file_name(4)).exists(), "just-written artifact is untouchable");
+        assert!(dir.join(file_name(5)).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_keep_ignores_foreign_files_and_tmp_droppings() {
+        let dir = scratch("prune_foreign");
+        let bytes = sample(11).encode();
+        let mut last = PathBuf::new();
+        for step in [1u64, 2, 3] {
+            last = write_atomic(&dir, &file_name(step), &bytes).unwrap();
+        }
+        std::fs::write(dir.join("notes.txt"), b"keep me").unwrap();
+        std::fs::write(dir.join(format!(".{}.tmp", file_name(9))), b"torn tmp").unwrap();
+        assert_eq!(prune_keep(&dir, 1, &last).unwrap(), 2);
+        assert!(dir.join("notes.txt").exists());
+        assert!(dir.join(format!(".{}.tmp", file_name(9))).exists());
+        assert!(dir.join(file_name(3)).exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

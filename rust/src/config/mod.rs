@@ -212,6 +212,11 @@ pub struct RunConfig {
     /// Write a checkpoint every N optimizer updates (0 = only on
     /// graceful shutdown). Ignored without `checkpoint_dir`.
     pub checkpoint_every: usize,
+    /// Retain only the newest K valid checkpoint artifacts after each
+    /// successful write (`--checkpoint-keep`, 0 = keep everything). The
+    /// artifact just written is never pruned; torn artifacts never count
+    /// toward K and are pruned last.
+    pub checkpoint_keep: usize,
     /// Resume from the newest valid checkpoint in `checkpoint_dir`
     /// before training (`--resume`); a fresh run if the dir is empty.
     pub resume: bool,
@@ -245,6 +250,7 @@ impl Default for RunConfig {
             shards: 1,
             checkpoint_dir: None,
             checkpoint_every: 0,
+            checkpoint_keep: 0,
             resume: false,
         }
     }

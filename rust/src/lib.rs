@@ -46,6 +46,7 @@ pub mod observer;
 pub mod optim;
 pub mod predictor;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod tensor;
 pub mod theory;

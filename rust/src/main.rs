@@ -5,6 +5,7 @@
 //!
 //! Subcommands:
 //!   train      run Algorithm 1 (GPR) or Algorithm 2 (baseline)
+//!   serve      host training sessions over HTTP/JSONL (DESIGN.md ADR-009)
 //!   theory     print the Section 5 closed-form tables (Thm 3/4, cost model)
 //!   sweep-f    train short runs across control fractions f
 //!   data       generate + describe the synthetic dataset
@@ -35,6 +36,7 @@ fn main() {
     };
     let code = match args.subcommand.as_deref() {
         Some("train") => run(cmd_train(&args)),
+        Some("serve") => run(cmd_serve(&args)),
         Some("theory") => run(cmd_theory(&args)),
         Some("sweep-f") => run(cmd_sweep_f(&args)),
         Some("data") => run(cmd_data(&args)),
@@ -64,8 +66,13 @@ SUBCOMMANDS
            [--shards N]   (data-parallel worker threads per update;
                            bit-identical to --shards 1, DESIGN.md ADR-004)
            [--checkpoint-dir DIR] [--checkpoint-every N] [--resume]
-                          (crash-safe checkpoints + bit-identical resume;
+           [--checkpoint-keep K]   (prune to the newest K valid artifacts;
+                           crash-safe checkpoints + bit-identical resume;
                            SIGINT checkpoints then exits, DESIGN.md ADR-008)
+  serve    --addr 127.0.0.1:7878   (0 = ephemeral port, printed on stdout)
+           training-as-a-service control plane (DESIGN.md ADR-009):
+           POST /sessions (JSON config), GET /sessions/:id,
+           GET /sessions/:id/events (JSONL stream), POST /sessions/:id/cancel
   theory   print Theorem 3/4 tables and the cost model
   sweep-f  --fs 0.125,0.25,0.5 plus the train flags
   data     --n 100 --side 32 [--seed S]  describe synthetic data
@@ -147,6 +154,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let unknown = args.unknown_keys();
+    anyhow::ensure!(unknown.is_empty(), "unknown flags: {unknown:?}");
+    let server = lgp::serve::Server::bind(&addr)?;
+    // Machine-readable first line so scripts can scrape the bound
+    // address when `--addr host:0` picked an ephemeral port.
+    println!("lgp-serve listening on http://{}", server.local_addr()?);
+    println!("  POST /sessions | GET /sessions/:id | GET /sessions/:id/events | POST /sessions/:id/cancel");
+    server.run()
 }
 
 fn cmd_theory(_args: &Args) -> anyhow::Result<()> {

@@ -12,8 +12,11 @@
 //! Shipped sinks:
 //! - [`CsvObserver`] — the Figure-1 CSV series (one row per step, the
 //!   exact format the old `Trainer::train(Some(csv))` produced);
-//! - [`JsonlObserver`] — one JSON object per event (step/refit/end),
-//!   NaN-safe (`null`), for programmatic consumers;
+//! - [`JsonlObserver`] — one JSON object per event
+//!   (step/eval/refit/checkpoint/end), NaN-safe (`null`), for
+//!   programmatic consumers; the per-event line formats are exposed as
+//!   [`step_line`] & co. and reused verbatim by the serve control
+//!   plane's event stream (DESIGN.md ADR-009);
 //! - [`Multicast`] — composes any number of observers into one.
 //!
 //! Custom observers implement whichever callbacks they need — every
@@ -153,65 +156,97 @@ fn jnum(v: f64) -> String {
     }
 }
 
+// One function per event kind, shared by [`JsonlObserver`] (file sink)
+// and the serve control plane's event stream (`crate::serve`, DESIGN.md
+// ADR-009) — a single source of truth so the on-disk format and the wire
+// format cannot drift. Each returns one JSON object with no trailing
+// newline; every emitted number is finite or `null`.
+
+/// `"event":"step"` line for one optimizer update.
+pub fn step_line(row: &LogRow) -> String {
+    format!(
+        r#"{{"event":"step","step":{},"wall_secs":{},"loss":{},"train_acc":{},"val_acc":{},"rho":{},"kappa":{},"phi":{},"examples_seen":{}}}"#,
+        row.step,
+        jnum(row.wall_secs),
+        jnum(row.loss),
+        jnum(row.train_acc),
+        jnum(row.val_acc),
+        jnum(row.rho),
+        jnum(row.kappa),
+        jnum(row.phi),
+        row.examples_seen,
+    )
+}
+
+/// `"event":"eval"` line for one validation evaluation.
+pub fn eval_line(step: usize, val_acc: f64) -> String {
+    format!(r#"{{"event":"eval","step":{},"val_acc":{}}}"#, step, jnum(val_acc))
+}
+
+/// `"event":"refit"` line for one predictor refit.
+pub fn refit_line(ev: &RefitEvent) -> String {
+    let (rho, kappa) = ev
+        .alignment
+        .map_or((f64::NAN, f64::NAN), |a| (a.rho, a.kappa));
+    format!(
+        r#"{{"event":"refit","step":{},"n":{},"rank":{},"energy_captured":{},"rel_error":{},"rho":{},"kappa":{},"f":{}}}"#,
+        ev.step,
+        ev.report.n,
+        ev.report.rank,
+        jnum(ev.report.energy_captured),
+        jnum(ev.report.rel_error),
+        jnum(rho),
+        jnum(kappa),
+        jnum(ev.f),
+    )
+}
+
+/// `"event":"checkpoint"` line for one durable artifact write.
+pub fn checkpoint_line(ev: &CheckpointEvent) -> String {
+    format!(
+        r#"{{"event":"checkpoint","step":{},"path":{:?},"bytes":{},"write_secs":{}}}"#,
+        ev.step,
+        ev.path.display().to_string(),
+        ev.bytes,
+        jnum(ev.write_secs),
+    )
+}
+
+/// `"event":"end"` line, emitted exactly once per run.
+pub fn end_line(s: &RunSummary) -> String {
+    format!(
+        r#"{{"event":"end","steps":{},"final_val_acc":{},"examples_seen":{},"cost_units":{},"wall_secs":{}}}"#,
+        s.steps,
+        jnum(s.final_val_acc),
+        s.examples_seen,
+        jnum(s.cost_units),
+        jnum(s.wall_secs),
+    )
+}
+
 impl TrainObserver for JsonlObserver {
     fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
-        writeln!(
-            self.file,
-            r#"{{"event":"step","step":{},"wall_secs":{},"loss":{},"train_acc":{},"val_acc":{},"rho":{},"kappa":{},"phi":{},"examples_seen":{}}}"#,
-            row.step,
-            jnum(row.wall_secs),
-            jnum(row.loss),
-            jnum(row.train_acc),
-            jnum(row.val_acc),
-            jnum(row.rho),
-            jnum(row.kappa),
-            jnum(row.phi),
-            row.examples_seen,
-        )?;
+        writeln!(self.file, "{}", step_line(row))?;
+        Ok(())
+    }
+
+    fn on_eval(&mut self, step: usize, val_acc: f64) -> anyhow::Result<()> {
+        writeln!(self.file, "{}", eval_line(step, val_acc))?;
         Ok(())
     }
 
     fn on_refit(&mut self, ev: &RefitEvent) -> anyhow::Result<()> {
-        let (rho, kappa) = ev
-            .alignment
-            .map_or((f64::NAN, f64::NAN), |a| (a.rho, a.kappa));
-        writeln!(
-            self.file,
-            r#"{{"event":"refit","step":{},"n":{},"rank":{},"energy_captured":{},"rel_error":{},"rho":{},"kappa":{},"f":{}}}"#,
-            ev.step,
-            ev.report.n,
-            ev.report.rank,
-            jnum(ev.report.energy_captured),
-            jnum(ev.report.rel_error),
-            jnum(rho),
-            jnum(kappa),
-            jnum(ev.f),
-        )?;
+        writeln!(self.file, "{}", refit_line(ev))?;
         Ok(())
     }
 
     fn on_checkpoint(&mut self, ev: &CheckpointEvent) -> anyhow::Result<()> {
-        writeln!(
-            self.file,
-            r#"{{"event":"checkpoint","step":{},"path":{:?},"bytes":{},"write_secs":{}}}"#,
-            ev.step,
-            ev.path.display().to_string(),
-            ev.bytes,
-            jnum(ev.write_secs),
-        )?;
+        writeln!(self.file, "{}", checkpoint_line(ev))?;
         Ok(())
     }
 
     fn on_end(&mut self, s: &RunSummary) -> anyhow::Result<()> {
-        writeln!(
-            self.file,
-            r#"{{"event":"end","steps":{},"final_val_acc":{},"examples_seen":{},"cost_units":{},"wall_secs":{}}}"#,
-            s.steps,
-            jnum(s.final_val_acc),
-            s.examples_seen,
-            jnum(s.cost_units),
-            jnum(s.wall_secs),
-        )?;
+        writeln!(self.file, "{}", end_line(s))?;
         Ok(())
     }
 }

@@ -1,0 +1,282 @@
+//! Minimal HTTP/1.1 plumbing for the serve control plane (DESIGN.md
+//! ADR-009).
+//!
+//! Deliberately tiny: exactly what the JSONL control plane needs and
+//! nothing more. One request per connection (`Connection: close`, no
+//! keep-alive state machine), bounded header and body reads so a hostile
+//! client cannot balloon per-connection memory, and chunked transfer
+//! encoding for the event stream. Zero dependencies — std sockets only,
+//! same offline-crate constraint as the rest of the tree.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Hard cap on the request line + headers. Past this the connection is
+/// answered `431` and closed — the read buffer never grows beyond
+/// roughly this bound regardless of what the client streams.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Hard cap on declared request bodies: far above any real config
+/// document, far below anything that could hurt. Checked against
+/// `Content-Length` *before* the body is read, so an attacker declaring
+/// a huge body costs one header parse, not a gigabyte of buffering.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Per-connection socket timeout: a stalled or byte-dripping client is
+/// disconnected instead of pinning its handler thread forever.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One parsed request — just the parts the control plane routes on.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Request path with any query string stripped.
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be read; maps onto the status the handler
+/// answers before closing the connection.
+#[derive(Debug)]
+pub enum BadRequest {
+    /// Head or declared body exceeds its bound (`status` is 431 or 413).
+    TooLarge { status: u16, what: &'static str },
+    /// Syntactically broken request → 400.
+    Malformed(String),
+    /// The socket died mid-read; nothing can be answered.
+    Io(std::io::Error),
+}
+
+/// Reads one bounded request: head until `\r\n\r\n` (≤
+/// [`MAX_HEAD_BYTES`]), then exactly `Content-Length` body bytes (≤
+/// [`MAX_BODY_BYTES`]). Transfer-encoded request bodies are not
+/// supported — the control plane's only body is a small JSON document.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, BadRequest> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(BadRequest::TooLarge {
+                status: 431,
+                what: "request head exceeds 8 KiB",
+            });
+        }
+        let n = stream.read(&mut chunk).map_err(BadRequest::Io)?;
+        if n == 0 {
+            return Err(BadRequest::Malformed(
+                "connection closed before the request head completed".to_string(),
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| BadRequest::Malformed("request head is not UTF-8".to_string()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() {
+        return Err(BadRequest::Malformed(format!("bad request line {request_line:?}")));
+    }
+    let path = target.split('?').next().unwrap_or("").to_string();
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse::<usize>().map_err(|_| {
+                    BadRequest::Malformed(format!("bad content-length {:?}", v.trim()))
+                })?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(BadRequest::TooLarge { status: 413, what: "request body exceeds 1 MiB" });
+    }
+
+    let mut body = buf.split_off(head_end + 4);
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).map_err(BadRequest::Io)?;
+        if n == 0 {
+            return Err(BadRequest::Malformed(
+                "connection closed before the declared body arrived".to_string(),
+            ));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, body })
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Reason phrase for the handful of statuses the control plane emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        _ => "",
+    }
+}
+
+/// One complete JSON response; close-delimited (`Connection: close`).
+pub fn respond_json(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        body.len()
+    )?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// `{"error": <msg>}` with the message JSON-escaped through the writer.
+pub fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> std::io::Result<()> {
+    let body = crate::util::json::obj(vec![("error", crate::util::json::s(msg))]).to_string();
+    respond_json(stream, status, &body)
+}
+
+/// Starts a chunked JSONL stream (`Transfer-Encoding: chunked`,
+/// `application/x-ndjson`). Follow with [`write_chunk_line`] per event
+/// and [`end_chunked`] to terminate.
+pub fn start_chunked(stream: &mut TcpStream, status: u16) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status)
+    )
+}
+
+/// One JSONL line as one chunk; the trailing `\n` is part of the chunk
+/// so line-oriented clients can split on it directly.
+pub fn write_chunk_line(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n{}\n\r\n", line.len() + 1, line)
+}
+
+/// Zero-length chunk: end of stream.
+pub fn end_chunked(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Runs `read_request` against raw client bytes over a real loopback
+    /// socket. The client half closes after writing, so truncation cases
+    /// see EOF rather than a read timeout.
+    fn roundtrip(raw: &[u8]) -> Result<Request, BadRequest> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let client = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(&raw).unwrap();
+            c.flush().unwrap();
+            // dropping the stream sends FIN; sent bytes stay readable
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        server.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let out = read_request(&mut server);
+        client.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let req = roundtrip(b"POST /sessions?watch=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/sessions", "query string must be stripped");
+        assert_eq!(req.body, b"abcd");
+
+        let req = roundtrip(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn oversized_head_is_bounded_and_431() {
+        let mut raw = b"GET /".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(4 * MAX_HEAD_BYTES));
+        match roundtrip(&raw) {
+            Err(BadRequest::TooLarge { status: 431, .. }) => {}
+            other => panic!("want 431 TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_declared_body_is_rejected_before_buffering() {
+        // The body never arrives — the declaration alone must be enough
+        // to refuse, otherwise the cap would not bound memory.
+        let raw = format!(
+            "POST /sessions HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        match roundtrip(raw.as_bytes()) {
+            Err(BadRequest::TooLarge { status: 413, .. }) => {}
+            other => panic!("want 413 TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_body_and_garbage_are_malformed_not_panics() {
+        match roundtrip(b"POST /sessions HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc") {
+            Err(BadRequest::Malformed(_)) => {}
+            other => panic!("want Malformed, got {other:?}"),
+        }
+        match roundtrip(b"\x00\x01\x02\xff\r\n\r\n") {
+            Err(BadRequest::Malformed(_)) => {}
+            other => panic!("want Malformed, got {other:?}"),
+        }
+        match roundtrip(b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n") {
+            Err(BadRequest::Malformed(msg)) => assert!(msg.contains("content-length"), "{msg}"),
+            other => panic!("want Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_writer_emits_wellformed_frames() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let mut out = Vec::new();
+            c.read_to_end(&mut out).unwrap();
+            out
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        start_chunked(&mut server, 200).unwrap();
+        write_chunk_line(&mut server, r#"{"event":"a"}"#).unwrap();
+        write_chunk_line(&mut server, r#"{"event":"b"}"#).unwrap();
+        end_chunked(&mut server).unwrap();
+        drop(server);
+        let text = String::from_utf8(reader.join().unwrap()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Transfer-Encoding: chunked"), "{text}");
+        // 14 bytes = 13-byte line + the newline folded into the chunk.
+        assert!(text.contains("e\r\n{\"event\":\"a\"}\n\r\n"), "{text}");
+        assert!(text.ends_with("0\r\n\r\n"), "{text}");
+    }
+}

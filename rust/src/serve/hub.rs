@@ -1,0 +1,273 @@
+//! Bounded event queue between a hosted session and its streaming
+//! readers (DESIGN.md ADR-009 backpressure policy).
+//!
+//! The training loop must never block on a slow (or absent) HTTP
+//! client, and per-session memory must stay bounded no matter how long
+//! a run goes unobserved. So the hub is a fixed-capacity ring: pushes
+//! always succeed, evicting the *oldest* retained line when full.
+//! Lines carry dense sequence numbers; a reader whose cursor falls
+//! behind the retained window sees the gap explicitly (the stream
+//! surfaces it as a `{"event":"dropped","count":n}` marker) instead of
+//! silently missing events.
+
+use crate::metrics::LogRow;
+use crate::observer::{
+    self, CheckpointEvent, RefitEvent, RunSummary, TrainObserver,
+};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Retained-line cap per session. At the tiny preset's event rate this
+/// holds an entire short run; long runs keep the newest window, which is
+/// what a late-attaching poller wants anyway.
+pub const EVENT_QUEUE_CAP: usize = 256;
+
+/// Fixed-capacity, seq-numbered event queue (`Mutex` + `Condvar`).
+pub struct EventHub {
+    cap: usize,
+    state: Mutex<HubState>,
+    cond: Condvar,
+}
+
+struct HubState {
+    /// `(seq, jsonl line)` — seq is dense from 0, so a gap between a
+    /// reader's cursor and the oldest retained seq counts exactly the
+    /// lines drop-oldest evicted unseen.
+    lines: VecDeque<(u64, String)>,
+    next_seq: u64,
+    closed: bool,
+}
+
+/// One blocking read: everything after the cursor, plus the size of any
+/// evicted gap.
+pub struct Batch {
+    /// Lines evicted before the reader saw them (0 when caught up).
+    pub dropped: u64,
+    pub lines: Vec<(u64, String)>,
+    /// True once the hub is closed *and* the cursor has drained it — the
+    /// stream can terminate.
+    pub done: bool,
+}
+
+impl EventHub {
+    pub fn new(cap: usize) -> EventHub {
+        EventHub {
+            cap: cap.max(1),
+            state: Mutex::new(HubState { lines: VecDeque::new(), next_seq: 0, closed: false }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Appends a line, evicting the oldest when at capacity. Never
+    /// blocks beyond the lock; ignored after [`EventHub::close`].
+    pub fn push(&self, line: String) {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return;
+        }
+        if s.lines.len() >= self.cap {
+            s.lines.pop_front();
+        }
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        s.lines.push_back((seq, line));
+        drop(s);
+        self.cond.notify_all();
+    }
+
+    /// Marks the producer finished; readers drain what is retained and
+    /// then see `done`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Lines strictly after `after` (`None` = from the start of the
+    /// retained window), blocking up to `timeout` for new ones. An empty
+    /// non-`done` batch means the wait timed out — callers loop, which
+    /// keeps them responsive to their own transport dying.
+    pub fn read_after(&self, after: Option<u64>, timeout: Duration) -> Batch {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let next_wanted = after.map_or(0, |a| a + 1);
+            let newest = s.lines.back().map(|(seq, _)| *seq);
+            if newest.map_or(false, |n| n >= next_wanted) {
+                let oldest = s.lines.front().map_or(next_wanted, |(seq, _)| *seq);
+                let dropped = oldest.saturating_sub(next_wanted);
+                let lines: Vec<(u64, String)> =
+                    s.lines.iter().filter(|(seq, _)| *seq >= next_wanted).cloned().collect();
+                return Batch { dropped, lines, done: false };
+            }
+            if s.closed {
+                return Batch { dropped: 0, lines: Vec::new(), done: true };
+            }
+            let (guard, res) = self.cond.wait_timeout(s, timeout).unwrap();
+            s = guard;
+            if res.timed_out() {
+                return Batch { dropped: 0, lines: Vec::new(), done: false };
+            }
+        }
+    }
+}
+
+/// ADR-005 observer that renders events with the shared
+/// [`observer::step_line`]-family formatters — byte-identical to the
+/// `JsonlObserver` file format — and pushes them into an [`EventHub`].
+/// Purely in-memory: the training loop never waits on a network peer.
+pub struct ServeObserver {
+    hub: Arc<EventHub>,
+}
+
+impl ServeObserver {
+    pub fn new(hub: Arc<EventHub>) -> ServeObserver {
+        ServeObserver { hub }
+    }
+}
+
+impl TrainObserver for ServeObserver {
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        self.hub.push(observer::step_line(row));
+        Ok(())
+    }
+
+    fn on_eval(&mut self, step: usize, val_acc: f64) -> anyhow::Result<()> {
+        self.hub.push(observer::eval_line(step, val_acc));
+        Ok(())
+    }
+
+    fn on_refit(&mut self, ev: &RefitEvent) -> anyhow::Result<()> {
+        self.hub.push(observer::refit_line(ev));
+        Ok(())
+    }
+
+    fn on_checkpoint(&mut self, ev: &CheckpointEvent) -> anyhow::Result<()> {
+        self.hub.push(observer::checkpoint_line(ev));
+        Ok(())
+    }
+
+    fn on_end(&mut self, s: &RunSummary) -> anyhow::Result<()> {
+        self.hub.push(observer::end_line(s));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(hub: &EventHub, after: Option<u64>) -> Batch {
+        hub.read_after(after, Duration::from_millis(10))
+    }
+
+    #[test]
+    fn drop_oldest_keeps_newest_and_reports_the_gap() {
+        let hub = EventHub::new(4);
+        for i in 0..10 {
+            hub.push(format!("l{i}"));
+        }
+        let b = drain(&hub, None);
+        assert_eq!(b.dropped, 6, "six lines were evicted unseen");
+        let texts: Vec<&str> = b.lines.iter().map(|(_, l)| l.as_str()).collect();
+        assert_eq!(texts, ["l6", "l7", "l8", "l9"]);
+        assert_eq!(b.lines.first().unwrap().0, 6);
+        assert!(!b.done);
+    }
+
+    #[test]
+    fn cursor_reads_see_only_new_lines_without_gaps() {
+        let hub = EventHub::new(8);
+        hub.push("a".into());
+        hub.push("b".into());
+        let b = drain(&hub, None);
+        assert_eq!(b.dropped, 0);
+        assert_eq!(b.lines.len(), 2);
+        let cursor = b.lines.last().unwrap().0;
+        hub.push("c".into());
+        let b = drain(&hub, Some(cursor));
+        assert_eq!(b.dropped, 0);
+        assert_eq!(b.lines.len(), 1);
+        assert_eq!(b.lines[0].1, "c");
+        // Caught up: an idle wait times out as a non-done empty batch.
+        let b = drain(&hub, Some(b.lines[0].0));
+        assert!(b.lines.is_empty() && !b.done);
+    }
+
+    #[test]
+    fn close_wakes_blocked_readers_and_drains_cleanly() {
+        let hub = Arc::new(EventHub::new(8));
+        let h = hub.clone();
+        let reader = std::thread::spawn(move || {
+            let mut cursor = None;
+            let mut got = Vec::new();
+            loop {
+                let b = h.read_after(cursor, Duration::from_secs(5));
+                for (seq, line) in b.lines {
+                    got.push(line);
+                    cursor = Some(seq);
+                }
+                if b.done {
+                    return got;
+                }
+            }
+        });
+        hub.push("x".into());
+        hub.push("y".into());
+        hub.close();
+        assert_eq!(reader.join().unwrap(), ["x", "y"]);
+    }
+
+    #[test]
+    fn push_after_close_is_ignored() {
+        let hub = EventHub::new(8);
+        hub.push("kept".into());
+        hub.close();
+        hub.push("lost".into());
+        let b = drain(&hub, None);
+        assert_eq!(b.lines.len(), 1);
+        assert_eq!(b.lines[0].1, "kept");
+    }
+
+    #[test]
+    fn serve_observer_formats_match_the_jsonl_file_format() {
+        use crate::util::json::Json;
+        let hub = Arc::new(EventHub::new(8));
+        let mut obs = ServeObserver::new(hub.clone());
+        let row = LogRow {
+            step: 3,
+            wall_secs: 0.5,
+            loss: 1.25,
+            train_acc: 0.5,
+            val_acc: f64::NAN,
+            rho: f64::NAN,
+            kappa: f64::NAN,
+            phi: f64::NAN,
+            examples_seen: 96,
+        };
+        obs.on_step(&row).unwrap();
+        obs.on_eval(3, 0.75).unwrap();
+        obs.on_end(&RunSummary {
+            steps: 3,
+            final_val_acc: 0.75,
+            examples_seen: 96,
+            cost_units: 9.0,
+            wall_secs: 0.5,
+        })
+        .unwrap();
+        let b = drain(&hub, None);
+        assert_eq!(b.lines.len(), 3);
+        assert_eq!(b.lines[0].1, observer::step_line(&row), "wire and file formats must agree");
+        for (_, line) in &b.lines {
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("bad line {line}: {e}"));
+            assert!(j.get("event").and_then(Json::as_str).is_some());
+        }
+        assert_eq!(
+            Json::parse(&b.lines[1].1).unwrap().get("event").and_then(Json::as_str),
+            Some("eval")
+        );
+    }
+}

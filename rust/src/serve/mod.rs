@@ -1,0 +1,480 @@
+//! Training-as-a-service control plane (DESIGN.md ADR-009).
+//!
+//! `lgp serve` binds a plain-std `TcpListener` and hosts
+//! [`crate::session::TrainSession`]s behind a minimal HTTP/1.1 + JSONL
+//! surface — zero new dependencies, same offline constraint as
+//! everything else. One short-lived handler thread per connection, one
+//! request per connection, every buffer bounded ([`http`]).
+//!
+//! Routes:
+//! - `POST /sessions` — body is the ADR-004 JSON config dialect; it goes
+//!   through the hardened `Json::parse` and the strict
+//!   `SessionBuilder::apply_json`, so adversarial or mistyped documents
+//!   come back as structured 400s (field name or byte offset included),
+//!   never a panic. Success spawns the session thread and answers 201.
+//! - `GET /sessions` / `GET /sessions/:id` — status documents.
+//! - `GET /sessions/:id/events` — the ADR-005 observer pipeline as a
+//!   chunked JSONL stream ([`hub::ServeObserver`] → bounded
+//!   [`hub::EventHub`] → this socket), with evicted-line gaps surfaced
+//!   as `{"event":"dropped","count":n}` markers.
+//! - `POST /sessions/:id/cancel` — flips the session's
+//!   [`CancelToken`]; the run loop sees it at the next update boundary,
+//!   writes its ADR-008 final checkpoint, and exits cleanly. The
+//!   process-global SIGINT flag is never touched, so hosted sessions
+//!   cancel independently of each other and of the server's own Ctrl-C.
+//! - `GET /healthz` — liveness probe.
+
+pub mod http;
+pub mod hub;
+
+use crate::config::RunConfig;
+use crate::session::SessionBuilder;
+use crate::util::json::{self, Json};
+use crate::util::shutdown::CancelToken;
+use anyhow::Context;
+use http::Request;
+use hub::{EventHub, ServeObserver, EVENT_QUEUE_CAP};
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long the event stream waits per hub poll. Bounds how quickly a
+/// streaming handler notices its own socket died (each wakeup flushes).
+const STREAM_POLL: Duration = Duration::from_millis(200);
+
+/// Lifecycle of a hosted session.
+#[derive(Clone, Debug)]
+pub enum Status {
+    /// Accepted; the session thread is still loading artifacts.
+    Pending,
+    Running,
+    Done { steps: usize, final_val_acc: f64 },
+    /// Cancelled at an update boundary — the final checkpoint (if a
+    /// checkpoint dir was configured) is on disk.
+    Cancelled { steps: usize },
+    Failed { error: String },
+}
+
+impl Status {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Status::Pending => "pending",
+            Status::Running => "running",
+            Status::Done { .. } => "done",
+            Status::Cancelled { .. } => "cancelled",
+            Status::Failed { .. } => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Status::Done { .. } | Status::Cancelled { .. } | Status::Failed { .. })
+    }
+}
+
+/// One hosted training session — the registry's handle to its thread.
+pub struct Hosted {
+    pub id: u64,
+    status: Mutex<Status>,
+    cancel: CancelToken,
+    pub events: Arc<EventHub>,
+}
+
+impl Hosted {
+    pub fn status(&self) -> Status {
+        self.status.lock().unwrap().clone()
+    }
+
+    fn set_status(&self, s: Status) {
+        *self.status.lock().unwrap() = s;
+    }
+
+    /// Requests a graceful stop; idempotent. The run loop polls the
+    /// token at update boundaries (never mid-update), checkpoints, and
+    /// exits — same path as a SIGINT on a CLI run.
+    pub fn request_cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Status document served by `GET /sessions/:id`.
+    pub fn status_json(&self) -> Json {
+        let st = self.status();
+        let mut pairs = vec![
+            ("id", json::num(self.id as f64)),
+            ("status", json::s(st.name())),
+        ];
+        match &st {
+            Status::Done { steps, final_val_acc } => {
+                pairs.push(("steps", json::num(*steps as f64)));
+                pairs.push((
+                    "final_val_acc",
+                    if final_val_acc.is_finite() { json::num(*final_val_acc) } else { Json::Null },
+                ));
+            }
+            Status::Cancelled { steps } => pairs.push(("steps", json::num(*steps as f64))),
+            Status::Failed { error } => pairs.push(("error", json::s(error))),
+            Status::Pending | Status::Running => {}
+        }
+        json::obj(pairs)
+    }
+}
+
+/// Shared session table behind the HTTP surface.
+#[derive(Default)]
+pub struct Registry {
+    next_id: AtomicU64,
+    sessions: Mutex<HashMap<u64, Arc<Hosted>>>,
+}
+
+impl Registry {
+    /// Validates a config document and spawns its session thread.
+    /// Errors out of here (unknown field, lossy number, bad range) are
+    /// the caller's 400; once this returns `Ok`, later failures surface
+    /// as status `failed` on the hosted session instead.
+    pub fn submit(&self, cfg_doc: &Json) -> anyhow::Result<Arc<Hosted>> {
+        let builder = SessionBuilder::new().apply_json(cfg_doc)?;
+        let cfg: RunConfig = builder.config().clone();
+        cfg.validate()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let hosted = Arc::new(Hosted {
+            id,
+            status: Mutex::new(Status::Pending),
+            cancel: CancelToken::new(),
+            events: Arc::new(EventHub::new(EVENT_QUEUE_CAP)),
+        });
+        self.sessions.lock().unwrap().insert(id, hosted.clone());
+        let h = hosted.clone();
+        std::thread::Builder::new()
+            .name(format!("lgp-session-{id}"))
+            .spawn(move || host_run(&h, cfg))
+            .context("spawning session thread")?;
+        Ok(hosted)
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<Hosted>> {
+        self.sessions.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Session ids in submission order.
+    pub fn ids(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.sessions.lock().unwrap().keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Body of a session thread. The (Send, Clone) `RunConfig` crosses the
+/// thread boundary; the `SessionBuilder` — which holds boxed trait
+/// objects — is rebuilt on this side of it. The per-session token and
+/// the `ServeObserver` are wired here, so a hosted run never installs
+/// the process-global SIGINT handler.
+fn host_run(h: &Hosted, cfg: RunConfig) {
+    let mut sess = match SessionBuilder::from_config(cfg)
+        .cancel_token(h.cancel_token())
+        .observer(Box::new(ServeObserver::new(h.events.clone())))
+        .build()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            h.events.push(error_line(&msg));
+            h.set_status(Status::Failed { error: msg });
+            h.events.close();
+            return;
+        }
+    };
+    h.set_status(Status::Running);
+    match sess.run() {
+        Ok(()) => {
+            let steps = sess.step_count();
+            if h.cancel_token().is_cancelled() {
+                h.set_status(Status::Cancelled { steps });
+            } else {
+                h.set_status(Status::Done { steps, final_val_acc: sess.final_val_acc() });
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            h.events.push(error_line(&msg));
+            h.set_status(Status::Failed { error: msg });
+        }
+    }
+    h.events.close();
+}
+
+/// Terminal `{"event":"error",...}` line for failed runs, JSON-escaped.
+fn error_line(msg: &str) -> String {
+    json::obj(vec![("event", json::s("error")), ("message", json::s(msg))]).to_string()
+}
+
+/// The control-plane listener.
+pub struct Server {
+    listener: TcpListener,
+    registry: Arc<Registry>,
+}
+
+impl Server {
+    /// Binds the control plane; `host:0` picks an ephemeral port, read
+    /// it back with [`Server::local_addr`].
+    pub fn bind(addr: &str) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding control plane on {addr}"))?;
+        Ok(Server { listener, registry: Arc::new(Registry::default()) })
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        self.listener.local_addr().context("reading bound address")
+    }
+
+    pub fn registry(&self) -> Arc<Registry> {
+        self.registry.clone()
+    }
+
+    /// Accept loop: one short-lived handler thread per connection, one
+    /// request per connection. Runs until the listener dies.
+    pub fn run(self) -> anyhow::Result<()> {
+        for conn in self.listener.incoming() {
+            match conn {
+                Ok(stream) => {
+                    let registry = self.registry.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("lgp-serve-conn".to_string())
+                        .spawn(move || handle_connection(&registry, stream));
+                    if let Err(e) = spawned {
+                        crate::log_warn!("serve: handler spawn failed: {e}");
+                    }
+                }
+                Err(e) => crate::log_warn!("serve: accept failed: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Embedding/test convenience: runs the accept loop on a background
+    /// thread and returns the bound address plus the shared registry.
+    /// The thread (and any hosted sessions) live until process exit.
+    pub fn spawn(self) -> anyhow::Result<(SocketAddr, Arc<Registry>)> {
+        let addr = self.local_addr()?;
+        let registry = self.registry();
+        std::thread::Builder::new()
+            .name("lgp-serve-accept".to_string())
+            .spawn(move || {
+                let _ = self.run();
+            })
+            .context("spawning accept loop")?;
+        Ok((addr, registry))
+    }
+}
+
+/// Reads exactly one bounded request and answers it. Every failure mode
+/// is a structured JSON error — hostile input must never panic a
+/// handler, and a dead socket is just an early return.
+fn handle_connection(registry: &Registry, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(http::IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(http::IO_TIMEOUT));
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(http::BadRequest::TooLarge { status, what }) => {
+            let _ = http::respond_error(&mut stream, status, what);
+            finish_rejected(&mut stream);
+            return;
+        }
+        Err(http::BadRequest::Malformed(msg)) => {
+            let _ = http::respond_error(&mut stream, 400, &msg);
+            finish_rejected(&mut stream);
+            return;
+        }
+        Err(http::BadRequest::Io(_)) => return,
+    };
+    // Route errors are write failures: the peer is gone, nothing to do.
+    let _ = route(registry, &mut stream, &req);
+}
+
+/// After rejecting a request mid-read: half-close so the client sees
+/// the error response + EOF, then discard (bounded) whatever it was
+/// still sending — closing with unread data would RST the connection
+/// and can destroy the in-flight error response. The discard buffer is
+/// a fixed scratch array; per-connection memory stays bounded even
+/// here, and the socket read timeout bounds the time.
+fn finish_rejected(stream: &mut TcpStream) {
+    use std::io::Read;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut scratch = [0u8; 4096];
+    let mut budget: usize = 256 * 1024;
+    while budget > 0 {
+        match stream.read(&mut scratch) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => budget = budget.saturating_sub(n),
+        }
+    }
+}
+
+fn route(registry: &Registry, stream: &mut TcpStream, req: &Request) -> std::io::Result<()> {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => http::respond_json(stream, 200, r#"{"ok":true}"#),
+        ("POST", ["sessions"]) => post_session(registry, stream, &req.body),
+        ("GET", ["sessions"]) => {
+            let docs: Vec<Json> = registry
+                .ids()
+                .into_iter()
+                .filter_map(|id| registry.get(id))
+                .map(|h| h.status_json())
+                .collect();
+            http::respond_json(stream, 200, &Json::Arr(docs).to_string())
+        }
+        ("GET", ["sessions", id]) => with_session(registry, stream, id, |stream, h| {
+            http::respond_json(stream, 200, &h.status_json().to_string())
+        }),
+        ("POST", ["sessions", id, "cancel"]) => with_session(registry, stream, id, |stream, h| {
+            h.request_cancel();
+            http::respond_json(stream, 202, &h.status_json().to_string())
+        }),
+        ("GET", ["sessions", id, "events"]) => {
+            with_session(registry, stream, id, stream_events)
+        }
+        _ => http::respond_error(
+            stream,
+            404,
+            &format!("no route for {} {}", req.method, req.path),
+        ),
+    }
+}
+
+/// Resolves `:id`, answering 404 for unknown or non-numeric ids.
+fn with_session<F>(
+    registry: &Registry,
+    stream: &mut TcpStream,
+    id: &str,
+    f: F,
+) -> std::io::Result<()>
+where
+    F: FnOnce(&mut TcpStream, &Hosted) -> std::io::Result<()>,
+{
+    let Ok(id) = id.parse::<u64>() else {
+        return http::respond_error(stream, 404, &format!("bad session id {id:?}"));
+    };
+    match registry.get(id) {
+        Some(h) => f(stream, &h),
+        None => http::respond_error(stream, 404, &format!("no session {id}")),
+    }
+}
+
+/// `POST /sessions`: parse with the hardened `Json::parse` (adversarial
+/// documents come back as 400s naming the byte offset), apply through
+/// the strict builder (400 naming the field), spawn, answer 201 with
+/// the status document.
+fn post_session(registry: &Registry, stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return http::respond_error(stream, 400, "request body is not UTF-8"),
+    };
+    let doc = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return http::respond_error(stream, 400, &format!("{e}")),
+    };
+    match registry.submit(&doc) {
+        Ok(h) => http::respond_json(stream, 201, &h.status_json().to_string()),
+        Err(e) => http::respond_error(stream, 400, &format!("{e:#}")),
+    }
+}
+
+/// `GET /sessions/:id/events`: replays the retained window, then
+/// follows live events as chunked JSONL until the run ends. Gaps the
+/// drop-oldest policy evicted unseen are surfaced as
+/// `{"event":"dropped","count":n}` markers, never silently skipped.
+fn stream_events(stream: &mut TcpStream, h: &Hosted) -> std::io::Result<()> {
+    http::start_chunked(stream, 200)?;
+    let mut cursor: Option<u64> = None;
+    loop {
+        let batch = h.events.read_after(cursor, STREAM_POLL);
+        if batch.dropped > 0 {
+            http::write_chunk_line(
+                stream,
+                &format!(r#"{{"event":"dropped","count":{}}}"#, batch.dropped),
+            )?;
+        }
+        for (seq, line) in &batch.lines {
+            http::write_chunk_line(stream, line)?;
+            cursor = Some(*seq);
+        }
+        if batch.done {
+            break;
+        }
+        // Push partial progress now; also surfaces a dead peer as an
+        // error on the next wakeup instead of looping forever.
+        stream.flush()?;
+    }
+    http::end_chunked(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hosted(status: Status) -> Hosted {
+        Hosted {
+            id: 7,
+            status: Mutex::new(status),
+            cancel: CancelToken::new(),
+            events: Arc::new(EventHub::new(8)),
+        }
+    }
+
+    #[test]
+    fn submit_rejects_bad_documents_with_structured_errors() {
+        let reg = Registry::default();
+        for (doc, needle) in [
+            (r#"{"shards": -1}"#, "shards"),
+            (r#"{"steps": 1.5}"#, "steps"),
+            (r#"{"max_steps": 1.5}"#, "max_steps"),
+            (r#"{"banana": 1}"#, "banana"),
+            (r#"[1, 2, 3]"#, "object"),
+        ] {
+            let j = Json::parse(doc).unwrap();
+            let err = reg.submit(&j).expect_err(doc);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{doc}: {msg}");
+        }
+        assert!(reg.ids().is_empty(), "rejected documents must not register sessions");
+    }
+
+    #[test]
+    fn status_documents_carry_terminal_details() {
+        use crate::util::json::Json;
+        let h = hosted(Status::Pending);
+        let j = h.status_json();
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(7));
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("pending"));
+        assert!(!h.status().is_terminal());
+
+        let h = hosted(Status::Done { steps: 12, final_val_acc: 0.5 });
+        let j = h.status_json();
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("done"));
+        assert_eq!(j.get("steps").and_then(Json::as_usize), Some(12));
+        assert!(h.status().is_terminal());
+
+        let h = hosted(Status::Failed { error: "boom \"quoted\"".into() });
+        let text = h.status_json().to_string();
+        let parsed = Json::parse(&text).expect("error strings must stay JSON-escaped");
+        assert_eq!(parsed.get("error").and_then(Json::as_str), Some("boom \"quoted\""));
+    }
+
+    #[test]
+    fn cancel_is_per_session_and_idempotent() {
+        let a = hosted(Status::Running);
+        let b = hosted(Status::Running);
+        a.request_cancel();
+        a.request_cancel();
+        assert!(a.cancel_token().is_cancelled());
+        // Global-flag independence is pinned (under the SIGINT lock) by
+        // rust/tests/graceful_shutdown.rs; here just the token isolation.
+        assert!(!b.cancel_token().is_cancelled(), "tokens must be independent");
+    }
+}

@@ -105,6 +105,9 @@ pub fn builder_from_args(args: &Args) -> anyhow::Result<SessionBuilder> {
     if let Some(v) = args.parsed::<usize>("checkpoint-every")? {
         b = b.checkpoint_every(v);
     }
+    if let Some(v) = args.parsed::<usize>("checkpoint-keep")? {
+        b = b.checkpoint_keep(v);
+    }
     if args.flag("resume") {
         b = b.resume(true);
     }
@@ -154,14 +157,18 @@ mod tests {
 
     #[test]
     fn checkpoint_flags_map_onto_builder() {
-        let a = parse("train --checkpoint-dir ckpts --checkpoint-every 5 --resume");
+        let a = parse(
+            "train --checkpoint-dir ckpts --checkpoint-every 5 --checkpoint-keep 3 --resume",
+        );
         let b = builder_from_args(&a).unwrap();
         assert_eq!(b.config().checkpoint_dir, Some(PathBuf::from("ckpts")));
         assert_eq!(b.config().checkpoint_every, 5);
+        assert_eq!(b.config().checkpoint_keep, 3);
         assert!(b.config().resume);
         let a = parse("train");
         let b = builder_from_args(&a).unwrap();
         assert_eq!(b.config().checkpoint_dir, None);
+        assert_eq!(b.config().checkpoint_keep, 0, "retention is opt-in");
         assert!(!b.config().resume);
     }
 

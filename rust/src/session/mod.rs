@@ -76,6 +76,7 @@ pub struct SessionBuilder {
     cfg: RunConfig,
     estimator: Option<Box<dyn GradientEstimator>>,
     observers: Vec<Box<dyn TrainObserver>>,
+    cancel: Option<shutdown::CancelToken>,
 }
 
 impl Default for SessionBuilder {
@@ -92,7 +93,7 @@ impl SessionBuilder {
 
     /// Builder starting from an existing configuration (sweeps, tests).
     pub fn from_config(cfg: RunConfig) -> SessionBuilder {
-        SessionBuilder { cfg, estimator: None, observers: Vec::new() }
+        SessionBuilder { cfg, estimator: None, observers: Vec::new(), cancel: None }
     }
 
     /// The configuration as currently accumulated (inspection/tests).
@@ -269,67 +270,157 @@ impl SessionBuilder {
         self
     }
 
+    /// Retain only the newest K valid checkpoint artifacts after each
+    /// successful write (0 = keep everything). The artifact just written
+    /// is never pruned; torn artifacts never count toward K.
+    pub fn checkpoint_keep(mut self, k: usize) -> Self {
+        self.cfg.checkpoint_keep = k;
+        self
+    }
+
     /// Resume from the newest valid checkpoint before training.
     pub fn resume(mut self, on: bool) -> Self {
         self.cfg.resume = on;
         self
     }
 
-    /// Apply a JSON config document (same keys as the CLI flags). Enum
-    /// strings fail immediately; range validation happens at `build`.
+    /// Per-session cancel token (serve control plane, ADR-009). A session
+    /// built with a token polls *only* the token at update boundaries —
+    /// it neither installs the process SIGINT handler nor clears the
+    /// process-global shutdown flag, so hosted sessions cannot clobber
+    /// each other or the host's own Ctrl-C handling. Cancellation is
+    /// graceful: the final checkpoint still lands (ADR-008).
+    pub fn cancel_token(mut self, token: shutdown::CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Apply a JSON config document (same keys as the CLI flags).
+    ///
+    /// Strict: this seam fronts the serve control plane (ADR-009), so
+    /// nothing is silently coerced. Unknown keys, wrong value types, and
+    /// lossy numerics (`{"shards":-1}`, `{"max_steps":1.5}`) are errors
+    /// naming the offending field; enum strings fail immediately with
+    /// their option lists; range validation still happens at `build`.
     pub fn apply_json(mut self, j: &Json) -> anyhow::Result<Self> {
-        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
-            self.cfg.artifacts_dir = PathBuf::from(v);
+        // Every key this document may carry — anything else is a typo or
+        // an attack surface, and a typoed key silently falling back to a
+        // default is the worst outcome for a remote config submission.
+        const KNOWN_KEYS: &[&str] = &[
+            "artifacts_dir",
+            "algo",
+            "optimizer",
+            "out_dir",
+            "backend",
+            "estimator",
+            "checkpoint_dir",
+            "f",
+            "accum",
+            "lr",
+            "weight_decay",
+            "budget_secs",
+            "max_steps",
+            "refit_every",
+            "ridge_lambda",
+            "train_size",
+            "val_size",
+            "aug_multiplier",
+            "seed",
+            "eval_every",
+            "shards",
+            "tangents",
+            "checkpoint_every",
+            "checkpoint_keep",
+            "track_alignment",
+            "adaptive_f",
+            "resume",
+        ];
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config document must be a JSON object"))?;
+        if let Some(k) = obj.keys().find(|k| !KNOWN_KEYS.contains(&k.as_str())) {
+            anyhow::bail!("unknown config field '{k}'");
         }
-        if let Some(v) = j.get("algo").and_then(Json::as_str) {
-            self.cfg.algo = v.parse()?;
+        if let Some(v) = j.get("artifacts_dir") {
+            self.cfg.artifacts_dir = PathBuf::from(json_str(v, "artifacts_dir")?);
         }
-        if let Some(v) = j.get("optimizer").and_then(Json::as_str) {
-            self.cfg.optimizer = v.parse()?;
+        if let Some(v) = j.get("algo") {
+            self.cfg.algo = json_str(v, "algo")?.parse()?;
         }
-        if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
-            self.cfg.out_dir = PathBuf::from(v);
+        if let Some(v) = j.get("optimizer") {
+            self.cfg.optimizer = json_str(v, "optimizer")?.parse()?;
         }
-        if let Some(v) = j.get("backend").and_then(Json::as_str) {
-            self.cfg.backend = v.parse()?;
+        if let Some(v) = j.get("out_dir") {
+            self.cfg.out_dir = PathBuf::from(json_str(v, "out_dir")?);
         }
-        if let Some(v) = j.get("estimator").and_then(Json::as_str) {
-            self.cfg.estimator = Some(v.parse()?);
+        if let Some(v) = j.get("backend") {
+            self.cfg.backend = json_str(v, "backend")?.parse()?;
         }
-        if let Some(v) = j.get("checkpoint_dir").and_then(Json::as_str) {
-            self.cfg.checkpoint_dir = Some(PathBuf::from(v));
+        if let Some(v) = j.get("estimator") {
+            self.cfg.estimator = Some(json_str(v, "estimator")?.parse()?);
         }
-        macro_rules! num {
-            ($key:literal, $field:expr, $ty:ty) => {
-                if let Some(v) = j.get($key).and_then(Json::as_f64) {
-                    $field = v as $ty;
-                }
-            };
+        if let Some(v) = j.get("checkpoint_dir") {
+            self.cfg.checkpoint_dir = Some(PathBuf::from(json_str(v, "checkpoint_dir")?));
         }
-        num!("f", self.cfg.f, f64);
-        num!("accum", self.cfg.accum, usize);
-        num!("lr", self.cfg.lr, f64);
-        num!("weight_decay", self.cfg.weight_decay, f64);
-        num!("budget_secs", self.cfg.budget_secs, f64);
-        num!("max_steps", self.cfg.max_steps, usize);
-        num!("refit_every", self.cfg.refit_every, usize);
-        num!("ridge_lambda", self.cfg.ridge_lambda, f64);
-        num!("train_size", self.cfg.train_size, usize);
-        num!("val_size", self.cfg.val_size, usize);
-        num!("aug_multiplier", self.cfg.aug_multiplier, usize);
-        num!("seed", self.cfg.seed, u64);
-        num!("eval_every", self.cfg.eval_every, usize);
-        num!("shards", self.cfg.shards, usize);
-        num!("tangents", self.cfg.tangents, usize);
-        num!("checkpoint_every", self.cfg.checkpoint_every, usize);
-        if let Some(v) = j.get("track_alignment").and_then(Json::as_bool) {
-            self.cfg.track_alignment = v;
+        if let Some(v) = j.get("f") {
+            self.cfg.f = json_f64(v, "f")?;
         }
-        if let Some(v) = j.get("adaptive_f").and_then(Json::as_bool) {
-            self.cfg.adaptive_f = v;
+        if let Some(v) = j.get("accum") {
+            self.cfg.accum = json_usize(v, "accum")?;
         }
-        if let Some(v) = j.get("resume").and_then(Json::as_bool) {
-            self.cfg.resume = v;
+        if let Some(v) = j.get("lr") {
+            self.cfg.lr = json_f64(v, "lr")?;
+        }
+        if let Some(v) = j.get("weight_decay") {
+            self.cfg.weight_decay = json_f64(v, "weight_decay")?;
+        }
+        if let Some(v) = j.get("budget_secs") {
+            self.cfg.budget_secs = json_f64(v, "budget_secs")?;
+        }
+        if let Some(v) = j.get("max_steps") {
+            self.cfg.max_steps = json_usize(v, "max_steps")?;
+        }
+        if let Some(v) = j.get("refit_every") {
+            self.cfg.refit_every = json_usize(v, "refit_every")?;
+        }
+        if let Some(v) = j.get("ridge_lambda") {
+            self.cfg.ridge_lambda = json_f64(v, "ridge_lambda")?;
+        }
+        if let Some(v) = j.get("train_size") {
+            self.cfg.train_size = json_usize(v, "train_size")?;
+        }
+        if let Some(v) = j.get("val_size") {
+            self.cfg.val_size = json_usize(v, "val_size")?;
+        }
+        if let Some(v) = j.get("aug_multiplier") {
+            self.cfg.aug_multiplier = json_usize(v, "aug_multiplier")?;
+        }
+        if let Some(v) = j.get("seed") {
+            self.cfg.seed = json_u64(v, "seed")?;
+        }
+        if let Some(v) = j.get("eval_every") {
+            self.cfg.eval_every = json_usize(v, "eval_every")?;
+        }
+        if let Some(v) = j.get("shards") {
+            self.cfg.shards = json_usize(v, "shards")?;
+        }
+        if let Some(v) = j.get("tangents") {
+            self.cfg.tangents = json_usize(v, "tangents")?;
+        }
+        if let Some(v) = j.get("checkpoint_every") {
+            self.cfg.checkpoint_every = json_usize(v, "checkpoint_every")?;
+        }
+        if let Some(v) = j.get("checkpoint_keep") {
+            self.cfg.checkpoint_keep = json_usize(v, "checkpoint_keep")?;
+        }
+        if let Some(v) = j.get("track_alignment") {
+            self.cfg.track_alignment = json_bool(v, "track_alignment")?;
+        }
+        if let Some(v) = j.get("adaptive_f") {
+            self.cfg.adaptive_f = json_bool(v, "adaptive_f")?;
+        }
+        if let Some(v) = j.get("resume") {
+            self.cfg.resume = json_bool(v, "resume")?;
         }
         Ok(self)
     }
@@ -338,7 +429,7 @@ impl SessionBuilder {
     /// session. Validation runs before any filesystem access, so
     /// misconfiguration errors are not masked by missing artifacts.
     pub fn build(self) -> anyhow::Result<TrainSession> {
-        let SessionBuilder { cfg, estimator, observers } = self;
+        let SessionBuilder { cfg, estimator, observers, cancel } = self;
         cfg.validate()?;
         // The Theorem-4 controller is driven by the alignment snapshots
         // the refit produces; without tracking it would silently hold f
@@ -440,6 +531,7 @@ impl SessionBuilder {
             workers,
             fit_buf,
             est,
+            cancel,
             observers,
             cfg,
             rt,
@@ -454,6 +546,50 @@ impl SessionBuilder {
             step: 0,
         })
     }
+}
+
+// ---------------------------------------------------------------------------
+// Strict JSON field extraction (ADR-009)
+// ---------------------------------------------------------------------------
+//
+// `apply_json` fronts the serve control plane, so every extraction error
+// must name the offending field — a bare "expected a number" from a 27-key
+// document is undebuggable over the wire.
+
+fn json_str<'a>(v: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    v.as_str().ok_or_else(|| {
+        anyhow::anyhow!("config field '{key}': expected a string, got {}", v.to_string())
+    })
+}
+
+fn json_f64(v: &Json, key: &str) -> anyhow::Result<f64> {
+    v.as_f64().ok_or_else(|| {
+        anyhow::anyhow!("config field '{key}': expected a number, got {}", v.to_string())
+    })
+}
+
+fn json_usize(v: &Json, key: &str) -> anyhow::Result<usize> {
+    v.as_usize().ok_or_else(|| {
+        anyhow::anyhow!(
+            "config field '{key}': expected a non-negative integer, got {}",
+            v.to_string()
+        )
+    })
+}
+
+fn json_u64(v: &Json, key: &str) -> anyhow::Result<u64> {
+    v.as_u64().ok_or_else(|| {
+        anyhow::anyhow!(
+            "config field '{key}': expected a non-negative integer, got {}",
+            v.to_string()
+        )
+    })
+}
+
+fn json_bool(v: &Json, key: &str) -> anyhow::Result<bool> {
+    v.as_bool().ok_or_else(|| {
+        anyhow::anyhow!("config field '{key}': expected a boolean, got {}", v.to_string())
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -493,6 +629,9 @@ pub struct TrainSession {
     dev_pred: Option<crate::runtime::DevicePredictor>,
     /// The gradient-estimation policy (ADR-005).
     est: Box<dyn GradientEstimator>,
+    /// Per-session cancel token (serve, ADR-009); `None` = the CLI path,
+    /// which polls the process-global SIGINT flag instead.
+    cancel: Option<shutdown::CancelToken>,
     observers: Vec<Box<dyn TrainObserver>>,
     pub log: Vec<LogRow>,
     /// Analytic compute units consumed (paper cost model), for the
@@ -873,6 +1012,20 @@ impl TrainSession {
             ev.bytes,
             sw.millis()
         );
+        // Retention (--checkpoint-keep): prune only after the new artifact
+        // is durably in place, and never the one just written. Housekeeping
+        // failure must not abort a training run that just checkpointed
+        // successfully — warn and keep going.
+        if self.cfg.checkpoint_keep > 0 {
+            match checkpoint::prune_keep(&dir, self.cfg.checkpoint_keep, &path) {
+                Ok(0) => {}
+                Ok(n) => crate::log_info!(
+                    "checkpoint: pruned {n} old artifact(s) (keep {})",
+                    self.cfg.checkpoint_keep
+                ),
+                Err(e) => crate::log_warn!("checkpoint: retention prune failed: {e:#}"),
+            }
+        }
         Ok(Some(path))
     }
 
@@ -923,8 +1076,15 @@ impl TrainSession {
         if self.cfg.resume && self.step == 0 {
             self.resume_latest()?;
         }
-        shutdown::install();
-        shutdown::reset();
+        // CLI path: (re-)arm the SIGINT handler — `install` re-registers
+        // after a previous graceful cycle reset it to SIG_DFL — and clear
+        // any stale request. A serve-hosted session (per-session token)
+        // must do neither: touching the process-global machinery would
+        // clobber concurrent hosted sessions and the server's Ctrl-C.
+        if self.cancel.is_none() {
+            shutdown::install();
+            shutdown::reset();
+        }
         self.warmup()?;
         let sw = Stopwatch::start();
         loop {
@@ -1024,7 +1184,10 @@ impl TrainSession {
             // artifact captures post-step-k state, so a resume continues
             // bit-identically at k+1. A graceful-shutdown request always
             // gets a final checkpoint before the loop exits.
-            let stop = shutdown::requested();
+            let stop = match &self.cancel {
+                Some(token) => token.is_cancelled(),
+                None => shutdown::requested(),
+            };
             if self.cfg.checkpoint_dir.is_some()
                 && ((self.cfg.checkpoint_every > 0
                     && self.step % self.cfg.checkpoint_every == 0)
@@ -1128,6 +1291,60 @@ mod tests {
         assert!(SessionBuilder::new().apply_json(&j).is_err());
         let j = Json::parse(r#"{"algo":"nope"}"#).unwrap();
         assert!(SessionBuilder::new().apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn lossy_numeric_config_is_rejected_with_field_names() {
+        // The two ISSUE-9 exemplars: -1 used to saturate to 0, 1.5 used
+        // to truncate to 1 — both silently.
+        for (doc, field) in [
+            (r#"{"shards":-1}"#, "shards"),
+            (r#"{"max_steps":1.5}"#, "max_steps"),
+            (r#"{"accum":-3}"#, "accum"),
+            (r#"{"seed":0.5}"#, "seed"),
+            (r#"{"checkpoint_keep":-2}"#, "checkpoint_keep"),
+            (r#"{"tangents":"8"}"#, "tangents"),
+        ] {
+            let j = Json::parse(doc).unwrap();
+            let err = SessionBuilder::new().apply_json(&j).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains(field), "{doc}: error must name '{field}', got: {msg}");
+        }
+        // Exact integers (including float-typed ones) still apply.
+        let j = Json::parse(r#"{"shards":4,"max_steps":7}"#).unwrap();
+        let b = SessionBuilder::new().apply_json(&j).unwrap();
+        assert_eq!(b.config().shards, 4);
+        assert_eq!(b.config().max_steps, 7);
+    }
+
+    #[test]
+    fn wrong_typed_and_unknown_config_fields_are_rejected() {
+        for (doc, needle) in [
+            (r#"{"algo":3}"#, "algo"),
+            (r#"{"track_alignment":"yes"}"#, "track_alignment"),
+            (r#"{"f":"0.25"}"#, "f"),
+            // A typoed key must not silently fall back to the default —
+            // "steps" is not a field (the field is "max_steps").
+            (r#"{"steps":1.5}"#, "steps"),
+            (r#"{"shard":2}"#, "shard"),
+        ] {
+            let j = Json::parse(doc).unwrap();
+            let err = SessionBuilder::new().apply_json(&j).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains(needle), "{doc}: error must name '{needle}', got: {msg}");
+        }
+        // Non-object documents are rejected outright.
+        let j = Json::parse("[1,2,3]").unwrap();
+        assert!(SessionBuilder::new().apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn checkpoint_keep_flows_through_json_and_builder() {
+        let j = Json::parse(r#"{"checkpoint_keep":3}"#).unwrap();
+        let b = SessionBuilder::new().apply_json(&j).unwrap();
+        assert_eq!(b.config().checkpoint_keep, 3);
+        let b = SessionBuilder::new().checkpoint_keep(5);
+        assert_eq!(b.config().checkpoint_keep, 5);
     }
 
     #[test]

@@ -3,9 +3,24 @@
 //! Hand-rolled because the offline crate set has no serde. Supports the
 //! full JSON grammar we exchange with the python AOT side (manifest.json)
 //! and what the metrics logger emits (JSONL records). Numbers are f64.
+//!
+//! Since the serve control plane (DESIGN.md ADR-009) this parser also
+//! sits on a network-facing wire, so it is hardened for untrusted input:
+//! container nesting is depth-limited ([`MAX_DEPTH`]) so a `[[[[…` bomb
+//! returns a [`JsonError`] naming the offset instead of overflowing the
+//! stack, numbers that overflow f64 are rejected, `\u` escapes decode
+//! UTF-16 surrogate pairs exactly (lone/truncated surrogates are errors,
+//! never U+FFFD), and the integer accessors are checked-exact — `-1` or
+//! `1.9` never silently becomes a `usize`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Maximum container nesting the parser accepts. Deep enough for any
+/// document this system exchanges (manifests nest ~4 levels), shallow
+/// enough that recursive descent cannot exhaust the stack on adversarial
+/// input (`rust/tests/json_adversarial.rs`).
+pub const MAX_DEPTH: usize = 128;
 
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,7 +51,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -72,8 +87,35 @@ impl Json {
         }
     }
 
+    /// Largest f64 that still represents every smaller non-negative
+    /// integer exactly (2^53). Beyond it `n as u64` would quietly invent
+    /// digits, so the checked accessors refuse.
+    const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0;
+
+    /// Checked exact-integer accessor: `Some` only for a non-negative
+    /// whole number within 2^53. `-1`, `1.9`, strings, and huge numbers
+    /// all return `None` — config surfaces turn that into a field-naming
+    /// error instead of a silently truncated value.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n <= Self::MAX_SAFE_INT => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Checked exact-integer accessor over the signed range (|n| ≤ 2^53).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && n.abs() <= Self::MAX_SAFE_INT => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    /// Checked conversion to `usize` (via [`as_u64`](Self::as_u64)).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -189,11 +231,25 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current container nesting; bounded by [`MAX_DEPTH`] so adversarial
+    /// input cannot drive the recursive descent into a stack overflow.
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { pos: self.i, msg: msg.to_string() }
+    }
+
+    /// Enter one container level; errors (naming the offending offset)
+    /// past [`MAX_DEPTH`]. The matching decrement happens on the success
+    /// path of `array`/`object` — error paths abandon the parser anyway.
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -261,9 +317,14 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        let n: f64 = text.parse().map_err(|_| self.err("bad number"))?;
+        // `1e999` parses to infinity; on a network-facing config surface
+        // that must be a structured error, not a value that NaN-poisons
+        // downstream arithmetic.
+        if !n.is_finite() {
+            return Err(self.err("number overflows f64"));
+        }
+        Ok(Json::Num(n))
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -288,15 +349,10 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let code = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                            self.i += 4;
+                            // Handles its own cursor movement (a surrogate
+                            // pair spans two escapes).
+                            out.push(self.unicode_escape()?);
+                            continue;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -315,12 +371,57 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Decode one `\uXXXX` escape with the cursor on the `u`. A valid
+    /// UTF-16 high surrogate must be immediately followed by a `\uYYYY`
+    /// low surrogate; the pair combines into the real scalar (the pair
+    /// d83d/de00 decodes to U+1F600, not two U+FFFD). Lone, reversed, or
+    /// truncated surrogates are structured errors.
+    fn unicode_escape(&mut self) -> Result<char, JsonError> {
+        let hi = self.hex4()?;
+        match hi {
+            0xD800..=0xDBFF => {
+                if self.peek() != Some(b'\\') || self.b.get(self.i + 1) != Some(&b'u') {
+                    return Err(self.err("unpaired high surrogate in \\u escape"));
+                }
+                self.i += 1; // consume the '\'; hex4 consumes the 'u'
+                let lo = self.hex4()?;
+                if !(0xDC00..=0xDFFF).contains(&lo) {
+                    return Err(self.err("invalid low surrogate in \\u escape"));
+                }
+                let scalar = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                Ok(char::from_u32(scalar).expect("surrogate pair combines to a valid scalar"))
+            }
+            0xDC00..=0xDFFF => Err(self.err("unpaired low surrogate in \\u escape")),
+            c => Ok(char::from_u32(c).expect("non-surrogate BMP code point is a valid scalar")),
+        }
+    }
+
+    /// Parse the `uXXXX` of a `\u` escape (cursor on the `u`), advancing
+    /// past it. Strict: exactly four ASCII hex digits — `from_str_radix`
+    /// leniencies like a leading `+` are rejected.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.i + 5 > self.b.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let mut code = 0u32;
+        for k in 1..=4 {
+            let d = (self.b[self.i + k] as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("bad \\u escape (non-hex digit)"))?;
+            code = code * 16 + d;
+        }
+        self.i += 5;
+        Ok(code)
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -331,6 +432,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -339,11 +441,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -359,6 +463,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -434,5 +539,79 @@ mod tests {
     fn builder_and_writer() {
         let j = obj(vec![("x", num(1.0)), ("y", s("z"))]);
         assert_eq!(j.to_string(), r#"{"x":1,"y":"z"}"#);
+    }
+
+    #[test]
+    fn depth_bomb_errors_instead_of_aborting() {
+        // Regression for the unbounded-recursion stack overflow: a few KB
+        // of '[' used to abort the whole process.
+        for bomb in ["[".repeat(100_000), "{\"k\":".repeat(100_000)] {
+            let err = Json::parse(&bomb).unwrap_err();
+            assert!(err.msg.contains("nesting"), "{err}");
+            assert!(err.pos <= bomb.len(), "error must name an in-bounds offset");
+        }
+        // At or under the limit still parses.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&over).is_err());
+    }
+
+    #[test]
+    fn integer_accessors_are_checked_exact() {
+        assert_eq!(Json::parse("-1").unwrap().as_usize(), None, "-1 must not saturate to 0");
+        assert_eq!(Json::parse("1.9").unwrap().as_usize(), None, "1.9 must not truncate to 1");
+        assert_eq!(Json::parse("-1").unwrap().as_i64(), Some(-1));
+        assert_eq!(Json::parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(Json::parse("-0.5").unwrap().as_i64(), None);
+        // 2^53 is the exactness boundary; past it, refuse.
+        assert_eq!(Json::parse("9007199254740992").unwrap().as_u64(), Some(1u64 << 53));
+        assert_eq!(Json::parse("1e17").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("\"7\"").unwrap().as_u64(), None, "strings are not integers");
+    }
+
+    #[test]
+    fn overflowing_numbers_are_structured_errors() {
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        // Large-but-finite still parses.
+        assert_eq!(Json::parse("1e308").unwrap().as_f64(), Some(1e308));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine_into_real_scalars() {
+        // U+1F600 is the UTF-16 pair D83D+DE00; the old decoder mangled
+        // it into two U+FFFD.
+        let j = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"), "surrogate pair must decode to one scalar");
+        // U+1D11E (musical G clef) = D834+DD1E, embedded mid-string.
+        let j = Json::parse("\"x\\ud834\\udd1ey\"").unwrap();
+        assert_eq!(j.as_str(), Some("x\u{1D11E}y"));
+        // BMP escapes unchanged.
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap().as_str(), Some("A"));
+    }
+
+    #[test]
+    fn lone_or_malformed_surrogates_are_errors() {
+        for bad in [
+            "\"\\ud83d\"",       // lone high surrogate
+            "\"\\ud83d!\"",      // high surrogate then plain char
+            "\"\\ud83d\\n\"",    // high surrogate then a non-\u escape
+            "\"\\ud83d\\u0041\"", // high surrogate then a non-surrogate \u
+            "\"\\ude00\"",       // lone low surrogate
+            "\"\\ud8",           // truncated escape at end of input
+            "\"\\u00\"",         // short hex run
+            "\"\\u+041\"",       // from_str_radix leniency must not leak in
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn astral_strings_round_trip_through_the_writer() {
+        for text in ["😀", "x𝄞y", "héllo 😀🎵 → ∞", "\u{10FFFF}"] {
+            let out = Json::Str(text.to_string()).to_string();
+            assert_eq!(Json::parse(&out).unwrap().as_str(), Some(text), "{text:?}");
+        }
     }
 }

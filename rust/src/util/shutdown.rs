@@ -1,21 +1,32 @@
-//! Graceful-shutdown flag for the training loop (DESIGN.md ADR-008).
+//! Graceful-shutdown signalling for training loops (DESIGN.md ADR-008,
+//! ADR-009).
 //!
-//! The session polls [`requested`] at update boundaries: on SIGINT the
-//! handler only flips an `AtomicBool` (the whole async-signal-safe
-//! budget), the loop notices at the next boundary, writes a final
-//! checkpoint, and exits cleanly. A second Ctrl-C still kills the
-//! process the hard way because the handler is installed with
-//! `SA_RESETHAND`-like semantics via re-registration — see [`install`].
+//! Two mechanisms share one polling contract:
+//!
+//! - **Process-global SIGINT flag** (the CLI path): the session polls
+//!   [`requested`] at update boundaries; on SIGINT the handler only flips
+//!   an `AtomicBool` (the whole async-signal-safe budget), the loop
+//!   notices at the next boundary, writes a final checkpoint, and exits
+//!   cleanly. The handler re-arms to the default disposition so a second
+//!   Ctrl-C *within one cycle* still kills a wedged process the hard way
+//!   — and [`install`] re-registers it, so the next `run` in the same
+//!   process gets a fresh graceful cycle (a long-lived multi-session
+//!   process used to hard-die on its second Ctrl-C because the handler
+//!   was `Once`-installed).
+//! - **Per-session [`CancelToken`]** (the serve control plane): a hosted
+//!   session built with an explicit token polls *only* that token. It
+//!   neither installs the signal handler nor touches the process-global
+//!   flag, so concurrent hosted sessions cannot clobber each other or
+//!   the server's own Ctrl-C handling.
 //!
 //! No `libc` dependency is available offline, so the handler goes
 //! through the C `signal(2)` entry point directly; on non-Unix targets
 //! the module compiles to a no-op flag that only [`request`] can set.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Once;
+use std::sync::Arc;
 
 static REQUESTED: AtomicBool = AtomicBool::new(false);
-static INSTALL: Once = Once::new();
 
 #[cfg(unix)]
 mod sys {
@@ -40,17 +51,18 @@ mod sys {
     }
 }
 
-/// Install the SIGINT handler once per process. Idempotent; later calls
-/// are no-ops (the flag is process-global, matching the one-session-per-
-/// process CLI). On non-Unix targets this does nothing.
+/// (Re-)install the SIGINT handler. Called at the top of every
+/// `TrainSession::run` without a per-session token, so each graceful
+/// cycle re-arms the handler the previous cycle reset to `SIG_DFL` —
+/// two sequential Ctrl-C-interrupted runs in one process both shut down
+/// gracefully (`rust/tests/graceful_shutdown.rs`). Idempotent and cheap;
+/// on non-Unix targets this does nothing.
 pub fn install() {
-    INSTALL.call_once(|| {
-        #[cfg(unix)]
-        unsafe {
-            let handler: extern "C" fn(i32) = sys::on_sigint;
-            sys::signal(sys::SIGINT, handler as usize);
-        }
-    });
+    #[cfg(unix)]
+    unsafe {
+        let handler: extern "C" fn(i32) = sys::on_sigint;
+        sys::signal(sys::SIGINT, handler as usize);
+    }
 }
 
 /// Has a graceful shutdown been requested (SIGINT or [`request`])?
@@ -71,6 +83,34 @@ pub fn reset() {
     REQUESTED.store(false, Ordering::Relaxed);
 }
 
+/// Per-session cancellation handle (serve control plane, ADR-009).
+///
+/// Cloning shares the underlying flag: the server keeps one clone to
+/// [`cancel`](CancelToken::cancel) from a `POST /sessions/:id/cancel`
+/// handler while the session thread polls its own clone at update
+/// boundaries. A session built with `SessionBuilder::cancel_token`
+/// ignores the process-global SIGINT flag entirely.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request a graceful stop: the owning session writes its final
+    /// checkpoint at the next update boundary and exits cleanly.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,8 +126,25 @@ mod tests {
     }
 
     #[test]
-    fn install_is_idempotent() {
+    fn install_survives_repeated_calls() {
+        // Re-registration is the whole point (the handler resets itself
+        // to SIG_DFL after firing); repeated installs must be harmless.
         install();
         install();
+        install();
+    }
+
+    #[test]
+    fn cancel_tokens_are_independent_of_the_global_flag() {
+        reset();
+        let a = CancelToken::new();
+        let b = CancelToken::new();
+        let a2 = a.clone();
+        assert!(!a.is_cancelled());
+        a.cancel();
+        assert!(a.is_cancelled(), "cancel must be visible to the owner");
+        assert!(a2.is_cancelled(), "clones share the flag");
+        assert!(!b.is_cancelled(), "tokens are per-session");
+        assert!(!requested(), "a session token never touches the process flag");
     }
 }

@@ -367,6 +367,7 @@ mod session_level {
             tangents: 8,
             checkpoint_dir: ckpt_dir,
             checkpoint_every: every,
+            checkpoint_keep: 0,
             resume,
         })
     }
@@ -422,5 +423,32 @@ mod session_level {
         t.run().unwrap();
         assert_eq!(t.step_count(), 12, "an empty checkpoint dir must not block a fresh run");
         let _ = std::fs::remove_dir_all(&empty);
+    }
+
+    #[test]
+    fn checkpoint_keep_bounds_directory_growth_without_breaking_resume() {
+        let ckpt = super::scratch("session_keep");
+        // Checkpoint every 2 steps for 12 steps = 6 artifacts unpruned;
+        // keep 2 must leave exactly steps 10 and 12 on disk.
+        let Some(mut cfg) = tiny_cfg(Some(ckpt.clone()), 2, false) else { return };
+        cfg.checkpoint_keep = 2;
+        let mut t = session(cfg);
+        t.run().unwrap();
+        let mut steps: Vec<u64> = std::fs::read_dir(&ckpt)
+            .unwrap()
+            .filter_map(|e| lgp::checkpoint::parse_step(e.unwrap().file_name().to_str()?))
+            .collect();
+        steps.sort_unstable();
+        assert_eq!(steps, vec![10, 12], "retention must keep exactly the newest 2 artifacts");
+
+        // The pruned directory still resumes from its newest artifact.
+        let Some(mut cfg) = tiny_cfg(Some(ckpt.clone()), 2, true) else { return };
+        cfg.max_steps = 14;
+        cfg.checkpoint_keep = 2;
+        let mut resumed = session(cfg);
+        resumed.run().unwrap();
+        assert_eq!(resumed.step_count(), 14);
+        assert_eq!(resumed.log.len(), 2, "resume must restore step 12 and run 13..=14");
+        let _ = std::fs::remove_dir_all(&ckpt);
     }
 }

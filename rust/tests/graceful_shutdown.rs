@@ -1,19 +1,31 @@
-//! ADR-008 graceful shutdown: a shutdown request observed at an update
-//! boundary writes a final checkpoint (even off the periodic schedule)
-//! and exits the loop cleanly — and a later `--resume` continues the
-//! interrupted trajectory bit for bit.
+//! ADR-008/ADR-009 graceful shutdown: a shutdown request observed at an
+//! update boundary writes a final checkpoint (even off the periodic
+//! schedule) and exits the loop cleanly — and a later `--resume`
+//! continues the interrupted trajectory bit for bit. Since ISSUE 9 the
+//! handler is re-installed on every `run`, so a long-lived multi-session
+//! process survives *sequential* SIGINT cycles (the old `Once`-install
+//! meant the second Ctrl-C hard-killed mid-checkpoint), and serve-hosted
+//! sessions carry per-session `CancelToken`s that never touch the
+//! process-global flag.
 //!
-//! Lives in its own integration binary: the shutdown flag is process
-//! global (it models SIGINT), so this test must not share a process with
-//! other `TrainSession::run` tests. The flag is raised from inside the
-//! run by an observer — after `run()` has installed the handler and reset
-//! the flag — exactly the ordering a real mid-run SIGINT has.
+//! Lives in its own integration binary: the SIGINT flag is process
+//! global, so these tests must not share a process with other
+//! `TrainSession::run` tests — and they serialize against each other
+//! through `LOCK` because the default test harness is multi-threaded.
+//! The flag is raised from inside the run by an observer — after `run()`
+//! has installed the handler and reset the flag — exactly the ordering a
+//! real mid-run SIGINT has; `raise_sigint` delivers the real signal
+//! through the real handler.
 
 use lgp::config::{Algo, OptimKind, RunConfig};
 use lgp::metrics::LogRow;
 use lgp::observer::TrainObserver;
 use lgp::session::{SessionBuilder, TrainSession};
+use lgp::util::shutdown::CancelToken;
 use std::path::PathBuf;
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
 
 fn tiny_cfg(ckpt_dir: Option<PathBuf>, resume: bool) -> Option<RunConfig> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
@@ -47,12 +59,31 @@ fn tiny_cfg(ckpt_dir: Option<PathBuf>, resume: bool) -> Option<RunConfig> {
         tangents: 8,
         checkpoint_dir: ckpt_dir,
         checkpoint_every: 0, // no periodic schedule: only shutdown writes
+        checkpoint_keep: 0,
         resume,
     })
 }
 
 fn session(cfg: RunConfig) -> TrainSession {
     SessionBuilder::from_config(cfg).build().unwrap()
+}
+
+/// Deliver a real SIGINT to this process — through the installed handler,
+/// not `shutdown::request()` — so the test exercises handler
+/// (re-)installation, not just the flag. On non-Unix targets falls back
+/// to the programmatic request.
+fn raise_sigint() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn raise(sig: i32) -> i32;
+        }
+        unsafe {
+            raise(2); // SIGINT; handled synchronously on this thread
+        }
+    }
+    #[cfg(not(unix))]
+    lgp::util::shutdown::request();
 }
 
 /// Raises the process shutdown flag after a chosen step, from inside the
@@ -68,8 +99,33 @@ impl TrainObserver for InterruptAt {
     }
 }
 
+/// Like [`InterruptAt`], but via a real SIGINT delivery.
+struct SigintAt(usize);
+
+impl TrainObserver for SigintAt {
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        if row.step == self.0 {
+            raise_sigint();
+        }
+        Ok(())
+    }
+}
+
+/// Cancels a per-session token after a chosen step.
+struct CancelAt(usize, CancelToken);
+
+impl TrainObserver for CancelAt {
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        if row.step == self.0 {
+            self.1.cancel();
+        }
+        Ok(())
+    }
+}
+
 #[test]
 fn shutdown_request_checkpoints_and_resume_rejoins_the_trajectory() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let Some(golden_cfg) = tiny_cfg(None, false) else { return };
     let mut golden = session(golden_cfg);
     golden.run().unwrap();
@@ -106,4 +162,76 @@ fn shutdown_request_checkpoints_and_resume_rejoins_the_trajectory() {
     assert_eq!(resumed_loss, golden_loss[4..].to_vec(), "post-resume loss trace differs");
 
     let _ = std::fs::remove_dir_all(&ckpt);
+    lgp::util::shutdown::reset();
+}
+
+/// The ISSUE-9 regression: two *sequential* SIGINT-interrupted runs in one
+/// process must both shut down gracefully. Under the old `Once`-install,
+/// cycle 1's handler re-armed SIG_DFL and was never re-registered, so the
+/// second real SIGINT here hard-killed the whole test binary — there is
+/// no way for this test to "fail politely" on regression, which is the
+/// point.
+#[test]
+fn two_sequential_sigint_cycles_both_checkpoint() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let base = std::env::temp_dir().join("lgp_shutdown_two_cycles");
+    let _ = std::fs::remove_dir_all(&base);
+
+    for (cycle, stop_at) in [(1u32, 3usize), (2, 2)] {
+        let dir = base.join(format!("cycle{cycle}"));
+        let Some(cfg) = tiny_cfg(Some(dir.clone()), false) else { return };
+        let mut sess = SessionBuilder::from_config(cfg)
+            .observer(Box::new(SigintAt(stop_at)))
+            .build()
+            .unwrap();
+        sess.run().unwrap();
+        assert_eq!(sess.step_count(), stop_at, "cycle {cycle} must stop at step {stop_at}");
+        assert!(
+            dir.join(lgp::checkpoint::file_name(stop_at as u64)).exists(),
+            "cycle {cycle}: graceful shutdown must write its final checkpoint"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&base);
+    lgp::util::shutdown::reset();
+}
+
+/// Per-session cancellation (serve, ADR-009): a token-built session stops
+/// gracefully — final checkpoint included — without ever touching the
+/// process-global SIGINT flag, so concurrent hosted sessions and the
+/// host's own Ctrl-C handling stay independent.
+#[test]
+fn cancel_token_checkpoints_without_touching_the_global_flag() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    lgp::util::shutdown::reset();
+    let dir = std::env::temp_dir().join("lgp_shutdown_token_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let token = CancelToken::new();
+    let Some(cfg) = tiny_cfg(Some(dir.clone()), false) else { return };
+    let mut sess = SessionBuilder::from_config(cfg)
+        .cancel_token(token.clone())
+        .observer(Box::new(CancelAt(3, token.clone())))
+        .build()
+        .unwrap();
+    sess.run().unwrap();
+    assert_eq!(sess.step_count(), 3, "run must stop at the cancelled boundary");
+    assert!(
+        dir.join(lgp::checkpoint::file_name(3)).exists(),
+        "cancellation must still write the final checkpoint"
+    );
+    assert!(token.is_cancelled());
+    assert!(
+        !lgp::util::shutdown::requested(),
+        "a per-session cancel must never set the process-global flag"
+    );
+
+    // The same-process global path is unaffected: a fresh global-flag run
+    // still completes its full budget (the token is not consulted).
+    let Some(cfg) = tiny_cfg(None, false) else { return };
+    let mut after = session(cfg);
+    after.run().unwrap();
+    assert_eq!(after.step_count(), 10);
+
+    let _ = std::fs::remove_dir_all(&dir);
 }

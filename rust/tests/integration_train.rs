@@ -43,6 +43,7 @@ fn tiny_cfg() -> Option<RunConfig> {
         tangents: 8,
         checkpoint_dir: None,
         checkpoint_every: 0,
+        checkpoint_keep: 0,
         resume: false,
     })
 }

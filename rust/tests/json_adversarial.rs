@@ -1,0 +1,131 @@
+//! Adversarial JSON corpus (ISSUE 9, DESIGN.md ADR-009): the config
+//! surface is network-facing now, so every hostile document must come
+//! back as a *structured* `JsonError` — offset included — or a clean
+//! value. Never a panic, never a stack overflow, never unbounded
+//! buffering. These run in-process against the same `Json::parse` +
+//! `SessionBuilder::apply_json` pair the serve control plane routes
+//! `POST /sessions` bodies through.
+//!
+//! (String literals below spell `\u` escapes with doubled backslashes;
+//! the documents under test contain single-backslash JSON escapes.)
+
+use lgp::session::SessionBuilder;
+use lgp::util::json::Json;
+
+/// Documents that must each fail with an error that names the byte
+/// offset of the problem.
+fn known_bad() -> Vec<String> {
+    let mut docs: Vec<String> = [
+        // truncated containers and separators
+        "", " ", "{", "[", "}", "]", "{\"a\"", "{\"a\":", "{\"a\":1,", "{\"a\":1",
+        "[1,", "[1 2]", "{\"a\" 1}", "{1:2}", ",", "[,]", "{,}",
+        // broken strings and escapes
+        "\"", "\"abc", "\"\\", "\"\\q\"", "\"\\u\"", "\"\\u00\"", "\"\\u123\"",
+        "\"\\u+123\"", "\"\\uzzzz\"",
+        // surrogate abuse: lone high, lone low, high + non-surrogate,
+        // reversed pair, truncated pair
+        "\"\\ud800\"", "\"\\udfff\"", "\"\\ud83d\\u0041\"", "\"\\udc00\\ud800\"",
+        "\"\\ud83dxx\"",
+        // broken literals and numbers
+        "tru", "fals", "nul", "TRUE", "+1", "-", ".5", "1e", "1e+", "--1",
+        // overflow: finite text, non-finite f64
+        "1e999", "-1e999", "1e309",
+        // trailing garbage after a complete value
+        "{} {}", "[1]x", "1 2", "null,",
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+
+    // Depth bombs: open-only, alternating, and fully closed — all far
+    // past MAX_DEPTH. Before the depth limit these aborted the process
+    // by exhausting the recursive-descent stack.
+    for n in [1_000usize, 100_000] {
+        docs.push("[".repeat(n));
+        docs.push("{\"k\":[".repeat(n));
+        docs.push(format!("{}1{}", "[".repeat(n), "]".repeat(n)));
+    }
+    docs
+}
+
+#[test]
+fn every_known_bad_document_is_a_structured_error_with_an_offset() {
+    for doc in known_bad() {
+        let label: String = doc.chars().take(32).collect();
+        let err = Json::parse(&doc)
+            .map(|_| ())
+            .expect_err(&format!("must reject: {label:?} (len {})", doc.len()));
+        let msg = format!("{err}");
+        assert!(
+            msg.contains("json parse error at byte"),
+            "error must name the offset: {label:?} -> {msg}"
+        );
+        assert!(err.pos <= doc.len(), "offset out of range for {label:?}: {msg}");
+    }
+}
+
+#[test]
+fn depth_bomb_offset_points_at_the_limit_not_the_end() {
+    let doc = "[".repeat(100_000);
+    let err = Json::parse(&doc).unwrap_err();
+    assert!(format!("{err}").contains("nesting"), "{err}");
+    assert!(
+        err.pos < 200,
+        "the error should fire at the depth limit, not after scanning 100k bytes: pos={}",
+        err.pos
+    );
+}
+
+/// Valid-but-weird documents: parsing may succeed or fail, but it must
+/// return. (Each of these is fed through the full pipeline; the test
+/// passing at all is the assertion — a panic or abort fails the run.)
+#[test]
+fn weird_documents_return_instead_of_crashing() {
+    let mut docs: Vec<String> = [
+        "01", "1.", "0.0e0", "-0", "9007199254740993", "1e-999",
+        "\"\\u0000\"", "[\"\\ud83d\\ude00\"]", "{\"\":{\"\":{\"\":0}}}",
+        "[[[[[[[[[[1]]]]]]]]]]",
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    // a 512 KiB string body — bounded work, no amplification
+    docs.push(format!("\"{}\"", "a".repeat(512 * 1024)));
+    // many siblings at one level: breadth is fine, only depth is capped
+    docs.push(format!("[{}1]", "1,".repeat(50_000)));
+    for doc in docs {
+        let _ = Json::parse(&doc);
+    }
+}
+
+/// The serve intake path: whatever the parser *does* accept must then
+/// survive the strict `apply_json` — unknown fields, lossy numerics,
+/// and non-object documents all come back as field-naming errors.
+#[test]
+fn apply_json_survives_the_corpus_and_rejects_with_field_names() {
+    // Parseable-but-invalid configs, with the substring the error must name.
+    for (doc, needle) in [
+        (r#"{"shards": -1}"#, "shards"),
+        (r#"{"max_steps": 1.5}"#, "max_steps"),
+        (r#"{"seed": 1e30}"#, "seed"),
+        (r#"{"tangents": true}"#, "tangents"),
+        (r#"{"lr": "fast"}"#, "lr"),
+        (r#"{"steps": 10}"#, "steps"),
+        (r#"{"algo": "gprx"}"#, "gprx"),
+        (r#"[1,2,3]"#, "object"),
+        (r#""gpr""#, "object"),
+        (r#"null"#, "object"),
+        (r#"42"#, "object"),
+    ] {
+        let j = Json::parse(doc).expect(doc);
+        let err = SessionBuilder::new().apply_json(&j).map(|_| ()).expect_err(doc);
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "{doc}: error must name the problem: {msg}");
+    }
+    // And a fully valid document still applies.
+    let j = Json::parse(r#"{"algo":"gpr","max_steps":3,"seed":9,"shards":2}"#).unwrap();
+    let b = SessionBuilder::new().apply_json(&j).unwrap();
+    assert_eq!(b.config().max_steps, 3);
+    assert_eq!(b.config().seed, 9);
+    assert_eq!(b.config().shards, 2);
+}

@@ -1,0 +1,292 @@
+//! End-to-end smoke of the serve control plane (ISSUE 9, DESIGN.md
+//! ADR-009): a real `TcpListener` on an ephemeral port, real HTTP/1.1
+//! over loopback. The training smoke (submit → stream events → cancel →
+//! final checkpoint on disk) is gated on the tiny artifacts like every
+//! other session-level test; the hostile-input sweep is not — the HTTP
+//! surface must hold up with no artifacts at all.
+
+use lgp::serve::{Registry, Server};
+use lgp::util::json::{self, Json};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn spawn_server() -> (SocketAddr, Arc<Registry>) {
+    Server::bind("127.0.0.1:0").unwrap().spawn().unwrap()
+}
+
+/// One request over a fresh connection; returns the raw close-delimited
+/// response (status line, headers, body).
+fn request_raw(addr: SocketAddr, raw: &[u8]) -> String {
+    let mut c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    c.write_all(raw).unwrap();
+    let mut out = String::new();
+    c.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn status_of(resp: &str) -> u16 {
+    resp.split(' ').nth(1).unwrap_or("0").parse().unwrap_or(0)
+}
+
+fn body_of(resp: &str) -> String {
+    resp.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default()
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let resp = request_raw(addr, format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes());
+    (status_of(&resp), body_of(&resp))
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    let resp = request_raw(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    );
+    (status_of(&resp), body_of(&resp))
+}
+
+fn tiny_artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: tiny artifacts not built");
+        None
+    }
+}
+
+/// Builds the POST body through the JSON writer so paths stay escaped.
+fn config_doc(
+    artifacts: &Path,
+    ckpt: &Path,
+    max_steps: usize,
+    budget_secs: f64,
+    checkpoint_every: usize,
+) -> String {
+    json::obj(vec![
+        ("artifacts_dir", json::s(&artifacts.display().to_string())),
+        ("algo", json::s("gpr")),
+        ("optimizer", json::s("muon")),
+        ("backend", json::s("blocked")),
+        ("f", json::num(0.25)),
+        ("accum", json::num(4.0)),
+        ("lr", json::num(0.02)),
+        ("max_steps", json::num(max_steps as f64)),
+        ("budget_secs", json::num(budget_secs)),
+        ("refit_every", json::num(4.0)),
+        ("train_size", json::num(600.0)),
+        ("val_size", json::num(150.0)),
+        ("seed", json::num(7.0)),
+        ("shards", json::num(1.0)),
+        ("checkpoint_dir", json::s(&ckpt.display().to_string())),
+        ("checkpoint_every", json::num(checkpoint_every as f64)),
+        ("out_dir", json::s(&std::env::temp_dir().join("lgp_serve_out").display().to_string())),
+    ])
+    .to_string()
+}
+
+/// Polls `GET /sessions/:id` until the status matches (or fails fast on
+/// an unexpected `failed`).
+fn wait_status(addr: SocketAddr, id: u64, want: &str, deadline: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let (code, body) = get(addr, &format!("/sessions/{id}"));
+        assert_eq!(code, 200, "{body}");
+        let j = Json::parse(&body).unwrap_or_else(|e| panic!("bad status doc {body}: {e}"));
+        let st = j.get("status").and_then(Json::as_str).unwrap_or("?").to_string();
+        if st == want {
+            return j;
+        }
+        assert!(st != "failed" || want == "failed", "session failed unexpectedly: {body}");
+        assert!(t0.elapsed() < deadline, "timed out waiting for {want:?}, last: {body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The verify.sh serve smoke: ephemeral port, submit a tiny session,
+/// follow the live JSONL stream, cancel mid-run, and assert the
+/// cancelled run left exactly its ADR-008 final checkpoint on disk.
+#[test]
+fn submit_stream_cancel_and_final_checkpoint_end_to_end() {
+    let Some(artifacts) = tiny_artifacts() else { return };
+    let (addr, _reg) = spawn_server();
+    let deadline = Duration::from_secs(300);
+
+    let (code, body) = get(addr, "/healthz");
+    assert_eq!(code, 200, "{body}");
+
+    // --- short run to completion ---------------------------------------
+    let ckpt_done = std::env::temp_dir().join("lgp_serve_ckpt_done");
+    let _ = std::fs::remove_dir_all(&ckpt_done);
+    let (code, body) = post(addr, "/sessions", &config_doc(&artifacts, &ckpt_done, 5, 0.0, 2));
+    assert_eq!(code, 201, "{body}");
+    let id = Json::parse(&body).unwrap().get("id").and_then(Json::as_u64).expect(&body);
+    let done = wait_status(addr, id, "done", deadline);
+    assert_eq!(done.get("steps").and_then(Json::as_usize), Some(5), "{body}");
+
+    // Finished sessions replay their retained stream and terminate.
+    let (code, stream) = get(addr, &format!("/sessions/{id}/events"));
+    assert_eq!(code, 200);
+    assert!(stream.contains(r#""event":"step""#), "{stream}");
+    assert!(stream.contains(r#""event":"checkpoint""#), "{stream}");
+    assert!(stream.contains(r#""event":"end""#), "{stream}");
+
+    // The list endpoint sees it too.
+    let (code, list) = get(addr, "/sessions");
+    assert_eq!(code, 200);
+    assert!(Json::parse(&list).unwrap().as_arr().unwrap().len() >= 1, "{list}");
+
+    // --- cancel mid-run --------------------------------------------------
+    let ckpt_cancel = std::env::temp_dir().join("lgp_serve_ckpt_cancel");
+    let _ = std::fs::remove_dir_all(&ckpt_cancel);
+    // Long budget, no periodic checkpoints: only a graceful stop writes.
+    let (code, body) =
+        post(addr, "/sessions", &config_doc(&artifacts, &ckpt_cancel, 200_000, 600.0, 0));
+    assert_eq!(code, 201, "{body}");
+    let id2 = Json::parse(&body).unwrap().get("id").and_then(Json::as_u64).expect(&body);
+
+    // Attach to the live chunked stream and wait for the first step.
+    let mut es = TcpStream::connect(addr).unwrap();
+    es.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+    es.write_all(format!("GET /sessions/{id2}/events HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let t0 = Instant::now();
+    while !String::from_utf8_lossy(&buf).contains(r#""event":"step""#) {
+        assert!(
+            t0.elapsed() < deadline,
+            "no step event on the live stream: {}",
+            String::from_utf8_lossy(&buf)
+        );
+        match es.read(&mut tmp) {
+            Ok(0) => panic!("stream ended early: {}", String::from_utf8_lossy(&buf)),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => panic!("stream read error: {e}"),
+        }
+    }
+
+    // Cancel over a second connection; the token routes through the same
+    // graceful path as SIGINT.
+    let (code, body) = post(addr, &format!("/sessions/{id2}/cancel"), "");
+    assert_eq!(code, 202, "{body}");
+
+    // The stream must now drain: final checkpoint event, end event, EOF.
+    loop {
+        assert!(t0.elapsed() < deadline, "stream did not close after cancel");
+        match es.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => panic!("stream read error after cancel: {e}"),
+        }
+    }
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.contains(r#""event":"checkpoint""#), "cancel must checkpoint: {text}");
+    assert!(text.contains(r#""event":"end""#), "{text}");
+
+    let st = wait_status(addr, id2, "cancelled", deadline);
+    let steps = st.get("steps").and_then(Json::as_usize).expect("cancelled status has steps");
+    assert!(steps >= 1, "{st:?}");
+
+    // Exactly one artifact — the off-schedule final checkpoint at the
+    // cancelled step — and it decodes.
+    let mut found: Vec<u64> = std::fs::read_dir(&ckpt_cancel)
+        .unwrap()
+        .filter_map(|e| {
+            lgp::checkpoint::parse_step(&e.unwrap().file_name().to_string_lossy())
+        })
+        .collect();
+    found.sort_unstable();
+    assert_eq!(found, vec![steps as u64], "only the graceful-stop artifact should exist");
+
+    let _ = std::fs::remove_dir_all(&ckpt_done);
+    let _ = std::fs::remove_dir_all(&ckpt_cancel);
+}
+
+/// The adversarial sweep from the HTTP side: every hostile request gets
+/// a structured error and the server keeps serving. Runs without
+/// artifacts — nothing here ever reaches a training thread.
+#[test]
+fn hostile_requests_get_structured_errors_and_the_server_survives() {
+    let (addr, _reg) = spawn_server();
+
+    // Bad JSON → 400 naming the byte offset.
+    let (code, body) = post(addr, "/sessions", "{\"algo\": ");
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("byte"), "{body}");
+
+    // Unknown / lossy config fields → 400 naming the field.
+    let (code, body) = post(addr, "/sessions", r#"{"stepz": 5}"#);
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("stepz"), "{body}");
+    let (code, body) = post(addr, "/sessions", r#"{"shards": -1}"#);
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("shards"), "{body}");
+
+    // Depth bomb → 400, not a stack overflow.
+    let (code, _) = post(addr, "/sessions", &"[".repeat(50_000));
+    assert_eq!(code, 400);
+
+    // Declared-oversized body → 413 before any buffering.
+    let resp = request_raw(
+        addr,
+        format!("POST /sessions HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 8 * 1024 * 1024)
+            .as_bytes(),
+    );
+    assert_eq!(status_of(&resp), 413, "{resp}");
+
+    // Oversized request head → 431 with the read bounded.
+    let resp = request_raw(
+        addr,
+        format!("GET /{} HTTP/1.1\r\nHost: t\r\n\r\n", "a".repeat(64 * 1024)).as_bytes(),
+    );
+    assert_eq!(status_of(&resp), 431, "{resp}");
+
+    // Unknown routes, ids, and methods → 404.
+    assert_eq!(get(addr, "/nope").0, 404);
+    assert_eq!(get(addr, "/sessions/999").0, 404);
+    assert_eq!(get(addr, "/sessions/notanid").0, 404);
+    assert_eq!(post(addr, "/healthz", "").0, 404);
+
+    // Raw garbage (no parseable request line) → structured 400, and the
+    // server is still alive.
+    let resp = request_raw(addr, b"\x01\x02garbage\r\n\r\n");
+    assert_eq!(status_of(&resp), 400, "{resp}");
+    let (code, body) = get(addr, "/healthz");
+    assert_eq!(code, 200, "server must survive the corpus: {body}");
+}
+
+/// A config that parses and applies but cannot build (missing artifacts
+/// dir) is accepted at POST time and surfaces asynchronously as status
+/// `failed` with the build error — the HTTP surface never blocks on
+/// artifact loading.
+#[test]
+fn build_failures_surface_as_failed_status_not_hung_requests() {
+    let (addr, _reg) = spawn_server();
+    let missing = std::env::temp_dir().join("lgp_serve_no_such_artifacts");
+    let ckpt = std::env::temp_dir().join("lgp_serve_failed_ckpt");
+    let (code, body) = post(addr, "/sessions", &config_doc(&missing, &ckpt, 3, 0.0, 0));
+    assert_eq!(code, 201, "{body}");
+    let id = Json::parse(&body).unwrap().get("id").and_then(Json::as_u64).unwrap();
+    let st = wait_status(addr, id, "failed", Duration::from_secs(60));
+    let err = st.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(!err.is_empty(), "failed status must carry the build error: {st:?}");
+    // The failure is also the stream's terminal event.
+    let (code, stream) = get(addr, &format!("/sessions/{id}/events"));
+    assert_eq!(code, 200);
+    assert!(stream.contains(r#""event":"error""#), "{stream}");
+}

@@ -390,6 +390,7 @@ fn tiny_cfg(shards: usize) -> Option<RunConfig> {
         tangents: 8,
         checkpoint_dir: None,
         checkpoint_every: 0,
+        checkpoint_keep: 0,
         resume: false,
     })
 }

@@ -32,6 +32,17 @@ cargo test -q --features alloc-counter --test alloc_free_hotpath
 LGP_SHARDS=2 cargo test -q --test checkpoint_resume
 cargo test -q --features fault-inject --test checkpoint_resume --test checkpoint_format
 
+# ADR-009 hardening + control-plane smoke: the adversarial JSON corpus
+# (depth bombs, surrogate abuse, truncated escapes, overflowing numbers —
+# every document a structured error, never a panic) and the serve
+# end-to-end smoke — bind an ephemeral port, POST a tiny session, stream
+# its chunked-JSONL events, cancel mid-run, and assert the graceful
+# final checkpoint landed on disk. Both binaries also run inside
+# `cargo test -q` above; the explicit pass keeps the gate visible and
+# re-runs them through the sharded executor.
+cargo test -q --test json_adversarial
+LGP_SHARDS=2 cargo test -q --test serve_control_plane
+
 # ADR-005 public-API drift gate: every example must build AND run against
 # lgp::prelude, so an example that falls behind the session/estimator/
 # observer API fails tier-1 here. Examples exit 0 with a SKIP message
