@@ -9,6 +9,7 @@
 use lgp::bench_support::json_out::{write_bench_doc, BenchRecord};
 use lgp::bench_support::{bench, fmt_time, kernels, Table};
 use lgp::checkpoint::{self, state as ckstate, Checkpoint};
+use lgp::coordinator::reduce::tree_reduce_grads;
 use lgp::estimator::combine::cv_combine_into;
 use lgp::model::params::{FlatGrad, ParamStore};
 use lgp::predictor::fit::{fit_with_ws, FitBuffer};
@@ -215,6 +216,77 @@ fn main() -> anyhow::Result<()> {
     ckpt_records.push(BenchRecord::from_summary("ckpt_load_decode", "-", &[ck_bytes], &s, None));
     let _ = std::fs::remove_dir_all(&ck_dir);
 
+    // --- dist leaf exchange: loopback sockets vs in-process reduce (ADR-010) --
+    // The same four accumulation leaves folded two ways: the left-deep
+    // ADR-004 reduction alone (what one process does between scatter and
+    // the optimizer step), and a full 2-process exchange over a real
+    // loopback TCP pair — the follower frames + ships its leaves, the
+    // leader folds all four in global slot order, scales, and broadcasts
+    // the mean back. The gap between the two rows is the per-update price
+    // of crossing a process boundary, which `lgp launch` pays every step.
+    let mk_leaf = |rng: &mut Pcg64| {
+        let mut g = FlatGrad { trunk: vec![0.0; p], head_w: vec![0.0; 640], head_b: vec![0.0; 10] };
+        rng.fill_normal(&mut g.trunk, 1.0);
+        lgp::dist::Leaf { grad: g, loss: 1.2, acc: 0.5, cost: 3.0, examples: 48 }
+    };
+    let leader_leaves: Vec<lgp::dist::Leaf> = (0..2).map(|_| mk_leaf(&mut rng)).collect();
+    let follower_leaves: Vec<lgp::dist::Leaf> = (0..2).map(|_| mk_leaf(&mut rng)).collect();
+    let mut dist_records: Vec<BenchRecord> = Vec::new();
+
+    let all: Vec<FlatGrad> = leader_leaves
+        .iter()
+        .chain(follower_leaves.iter())
+        .map(|l| l.grad.clone())
+        .collect();
+    let s = bench(warm, iters, || {
+        let mut grad = tree_reduce_grads(all.clone()).unwrap();
+        grad.scale(0.25);
+        std::hint::black_box(&grad);
+    });
+    table.row(vec![
+        "leaf reduce (in-process)".into(),
+        format!("4x{p} params"),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.1} GB/s", (4 * p * 4) as f64 / s.mean / 1e9),
+    ]);
+    dist_records.push(BenchRecord::from_summary("dist_reduce_inprocess", "-", &[4, p], &s, None));
+
+    let geom = lgp::dist::Geometry { fingerprint: CK_FP, procs: 2, accum: 4, seed: 0 };
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let fleaves = follower_leaves.clone();
+    let follower = std::thread::spawn(move || {
+        let mut d = lgp::dist::connect(&addr, 1, &geom).unwrap();
+        let mut step = 0u64;
+        // Mirror the leader until its Shutdown lands as a Stopped error.
+        while d.exchange(step, fleaves.clone()).is_ok() {
+            step += 1;
+        }
+    });
+    let mut leader = lgp::dist::accept_followers(&listener, &geom, || Ok(()))?;
+    let mut step = 0u64;
+    let s = bench(warm, iters, || {
+        let red = leader.exchange(step, leader_leaves.clone()).unwrap();
+        step += 1;
+        std::hint::black_box(&red);
+    });
+    leader.finish(lgp::dist::SHUTDOWN_COMPLETE, "bench done");
+    drop(leader);
+    follower.join().unwrap();
+    // Per exchange: 2 follower leaves in + 1 mean gradient back out.
+    table.row(vec![
+        "leaf exchange (loopback)".into(),
+        format!("4x{p} 2 procs"),
+        fmt_time(s.mean),
+        fmt_time(s.p90),
+        format!("{:.2} GB/s", (3 * p * 4) as f64 / s.mean / 1e9),
+    ]);
+    dist_records.push(
+        BenchRecord::from_summary("dist_exchange_loopback", "-", &[4, p], &s, None)
+            .with_threads(2),
+    );
+
     println!("[HOTPATH] host-side per-update costs\n");
     table.print();
     println!("\ncontext: one GPR update (accum=4) does 4 combines + 4 predictor");
@@ -273,6 +345,7 @@ fn main() -> anyhow::Result<()> {
     }
     records.extend(sharded);
     records.extend(ckpt_records);
+    records.extend(dist_records);
 
     let doc = kernels::doc(&records);
     let path = write_bench_doc("BENCH_kernels.json", &doc)?;

@@ -23,6 +23,7 @@ use anyhow::{bail, ensure, Context as _, Result};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
+pub mod reshard;
 pub mod state;
 
 #[cfg(any(test, feature = "fault-inject"))]

@@ -1,0 +1,205 @@
+//! Checkpoint resharding (`lgp reshard`, DESIGN.md ADR-010).
+//!
+//! Rewrites a `.lgpckpt` artifact for a run whose worker/process geometry
+//! is changing (N → M shards, or a different `--procs` split of the same
+//! slots). ADR-004 makes training state *shard-neutral* by construction —
+//! the fit ring is stored in logical row order, the data stream as a bare
+//! cursor, params/optimizer/estimator as flat tensors, and the ADR-008
+//! fingerprint deliberately excludes `shards` — so the rewrite is a
+//! *validating identity*: every section is decoded through its codec
+//! (every CRC checked), the geometry-touching sections (FITBUF, DATA) are
+//! re-derived through a full decode/encode cycle, and the output must
+//! come out byte-identical to the input. Any divergence means the format
+//! has drifted into shard-dependence, and the tool hard-errors instead of
+//! writing a subtly wrong artifact. The value of the operation is the
+//! *proof*: after `lgp reshard`, resuming the artifact under the new
+//! geometry is known-safe, not assumed-safe.
+
+use super::{state as ckstate, Checkpoint, Dec};
+use crate::predictor::fit::FitBuffer;
+use anyhow::{ensure, Context as _, Result};
+use std::path::{Path, PathBuf};
+
+/// What [`reshard_file`] validated and wrote.
+#[derive(Debug)]
+pub struct ReshardReport {
+    /// Optimizer updates captured by the artifact (stamps the filename).
+    pub step: u64,
+    /// Logical rows carried by the fit ring.
+    pub fitbuf_rows: usize,
+    /// Data-stream cursor (examples consumed so far).
+    pub cursor: u64,
+    /// Sections decoded and validated.
+    pub sections: usize,
+    /// Output artifact path.
+    pub path: PathBuf,
+    /// Output artifact size.
+    pub bytes: usize,
+}
+
+/// Validate `input` end-to-end and write the re-derived artifact into
+/// `out_dir` (atomically, ADR-008 tmp+fsync+rename), asserting the
+/// rewrite is byte-stable. `from`/`to` are the old and new shard counts —
+/// recorded for the operator; the artifact itself carries no shard count,
+/// which is exactly the invariant this tool verifies.
+pub fn reshard_file(
+    input: &Path,
+    out_dir: &Path,
+    from: usize,
+    to: usize,
+) -> Result<ReshardReport> {
+    ensure!(from >= 1 && to >= 1, "shard counts must be >= 1 (got {from} -> {to})");
+    let bytes = std::fs::read(input)
+        .with_context(|| format!("reading checkpoint {}", input.display()))?;
+    let ck = Checkpoint::decode(&bytes)
+        .with_context(|| format!("decoding checkpoint {}", input.display()))?;
+
+    // META leads with the step counter; the rest belongs to the session.
+    let step = Dec::new(ck.section(ckstate::META)?, ckstate::META).take_u64()?;
+
+    // DATA: positional stream state (ADR-004). A cursor is valid under
+    // any shard count because slot -> stream position is a pure function
+    // of (cursor, slot index), independent of which worker computes it.
+    let data_in = ck.section(ckstate::DATA)?;
+    let mut data = Dec::new(data_in, ckstate::DATA);
+    let _seed = data.take_u64()?;
+    let cursor = data.take_u64()?;
+    data.finish()?;
+
+    // FITBUF: run the ring through a full decode/encode cycle at the
+    // capacity the section records. Logical row order is the on-disk
+    // order, so repartitioning rows across M shard segments changes
+    // nothing — and if that ever stops being true, byte-stability here
+    // is the tripwire.
+    let fb_in = ck.section(ckstate::FITBUF)?;
+    let capacity = Dec::new(fb_in, ckstate::FITBUF).take_u64()? as usize;
+    let mut ring = FitBuffer::new(capacity);
+    ckstate::decode_fitbuf(&mut ring, fb_in)?;
+    let fb_out = ckstate::encode_fitbuf(&ring);
+    ensure!(
+        fb_out.as_slice() == fb_in,
+        "fit-ring re-encode diverged ({} -> {} bytes): the checkpoint \
+         format has become shard-dependent — refusing to reshard",
+        fb_in.len(),
+        fb_out.len()
+    );
+
+    // Rebuild the container section-for-section (same order, same
+    // fingerprint — `shards` is excluded from the fingerprint, so the
+    // resharded artifact resumes under the new geometry) and require
+    // byte-identity with the input.
+    let mut out = Checkpoint::new(ck.fingerprint);
+    let mut sections = 0usize;
+    for name in ck.section_names().map(str::to_string).collect::<Vec<_>>() {
+        out.add(&name, ck.section(&name)?.to_vec());
+        sections += 1;
+    }
+    let out_bytes = out.encode();
+    ensure!(
+        out_bytes == bytes,
+        "checkpoint re-encode diverged from the input artifact — refusing \
+         to reshard"
+    );
+
+    let path = super::write_atomic(out_dir, &super::file_name(step), &out_bytes)?;
+    crate::log_info!(
+        "reshard: {} ({from} shards) -> {} ({to} shards): {sections} sections, \
+         {} fit rows, cursor {cursor}, step {step}",
+        input.display(),
+        path.display(),
+        ring.len(),
+    );
+    Ok(ReshardReport {
+        step,
+        fitbuf_rows: ring.len(),
+        cursor,
+        sections,
+        path,
+        bytes: out_bytes.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Enc;
+    use crate::util::rng::Pcg64;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lgp_reshard_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A synthetic but codec-faithful artifact: real META/DATA/FITBUF
+    /// payloads, opaque bytes for the sections reshard copies verbatim.
+    fn synth_artifact(step: u64, cursor: u64, rows: usize) -> Vec<u8> {
+        let mut rng = Pcg64::seeded(step ^ cursor);
+        let mut ring = FitBuffer::new(4);
+        for _ in 0..rows {
+            let mut g = vec![0.0f32; 10];
+            let mut a = vec![0.0f32; 3];
+            let mut h = vec![0.0f32; 3];
+            rng.fill_normal(&mut g, 1.0);
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut h, 1.0);
+            ring.push(&g, &a, &h);
+        }
+        let mut ck = Checkpoint::new(0xfeed);
+        let mut meta = Enc::new();
+        meta.put_u64(step);
+        ck.add(ckstate::META, meta.into_bytes());
+        ck.add(ckstate::PARAMS, vec![1, 2, 3, 4]);
+        ck.add(ckstate::OPTIM, vec![5, 6]);
+        ck.add(ckstate::FITBUF, ckstate::encode_fitbuf(&ring));
+        let mut data = Enc::new();
+        data.put_u64(7);
+        data.put_u64(cursor);
+        ck.add(ckstate::DATA, data.into_bytes());
+        ck.encode()
+    }
+
+    #[test]
+    fn reshard_is_a_validated_byte_identity() {
+        let dir = temp_dir("identity");
+        let input = dir.join("in.lgpckpt");
+        let bytes = synth_artifact(12, 640, 6);
+        std::fs::write(&input, &bytes).unwrap();
+        let out_dir = dir.join("out");
+        let report = reshard_file(&input, &out_dir, 2, 8).unwrap();
+        assert_eq!(report.step, 12);
+        assert_eq!(report.cursor, 640);
+        assert_eq!(report.fitbuf_rows, 4, "ring capacity 4, 6 pushed");
+        assert_eq!(report.sections, 5);
+        assert_eq!(report.path, out_dir.join(crate::checkpoint::file_name(12)));
+        let out = std::fs::read(&report.path).unwrap();
+        assert_eq!(out, bytes, "reshard must be byte-stable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reshard_rejects_corrupt_and_invalid_inputs() {
+        let dir = temp_dir("corrupt");
+        let out_dir = dir.join("out");
+        // Bit flip in the body -> some section CRC fails.
+        let mut bytes = synth_artifact(3, 64, 2);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let input = dir.join("bad.lgpckpt");
+        std::fs::write(&input, &bytes).unwrap();
+        assert!(reshard_file(&input, &out_dir, 1, 2).is_err());
+        // Not a checkpoint at all.
+        let junk = dir.join("junk.lgpckpt");
+        std::fs::write(&junk, b"not a checkpoint").unwrap();
+        let err = reshard_file(&junk, &out_dir, 1, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("decoding"), "{err:#}");
+        // Degenerate shard counts.
+        let good = dir.join("good.lgpckpt");
+        std::fs::write(&good, synth_artifact(1, 8, 1)).unwrap();
+        assert!(reshard_file(&good, &out_dir, 0, 2).is_err());
+        assert!(reshard_file(&good, &out_dir, 2, 0).is_err());
+        assert!(out_dir.join(crate::checkpoint::file_name(3)).try_exists().map_or(true, |e| !e));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

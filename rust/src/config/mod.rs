@@ -273,6 +273,23 @@ pub fn shards_env_override() -> anyhow::Result<Option<usize>> {
     Ok(shards)
 }
 
+/// Validate a multi-process partition (DESIGN.md ADR-010): `procs`
+/// processes each own a contiguous group of `accum / procs` micro-batch
+/// slots, so the slot count must tile evenly — a ragged partition would
+/// change which stream positions exist and break the bit-identity
+/// contract with `--shards P*S` single-process runs. Used by both
+/// `lgp launch` and the dist handshake, so the launcher and a hand-rolled
+/// follower reject the same geometries.
+pub fn validate_dist(procs: usize, accum: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(procs >= 1, "dist procs must be >= 1, got {procs}");
+    anyhow::ensure!(
+        accum % procs == 0 && accum / procs >= 1,
+        "accum {accum} does not tile over {procs} processes \
+         (need accum % procs == 0 with at least one slot each)"
+    );
+    Ok(())
+}
+
 impl RunConfig {
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.f > 0.0 && self.f <= 1.0, "f must be in (0,1], got {}", self.f);

@@ -1,0 +1,577 @@
+//! Elastic multi-process distributed runner (DESIGN.md ADR-010).
+//!
+//! One training run spans `P` processes over loopback/LAN TCP: rank 0
+//! (the *leader*) owns the observers, checkpoints, and stop decisions;
+//! ranks 1..P (*followers*) each drive their own ADR-007 worker pool
+//! over a contiguous group of micro-batch slots. Every update:
+//!
+//! 1. each process computes its slot group's gradient leaves locally
+//!    (slot `j` of rank `r` reads stream position
+//!    `cursor + (r·accum/P + j)·per_slot` — the ADR-004 positional
+//!    contract, so the data partition is a pure function of geometry);
+//! 2. followers ship their *individual slot leaves* to the leader
+//!    ([`wire::Msg::Leaves`]);
+//! 3. the leader folds all `accum` leaves with the same left-deep
+//!    slot-ordered fold as `coordinator::reduce::tree_reduce_grads` —
+//!    remote leaves are grafted at the exact tree position a
+//!    single-process run would give them, which is why the result is
+//!    bit-identical to `--shards P*S` single-process (f32 addition is
+//!    not associative, so folding per-process *partial sums* would NOT
+//!    be);
+//! 4. the leader broadcasts the scaled mean gradient and folded scalar
+//!    traces ([`wire::Msg::Reduced`]); every process applies the same
+//!    optimizer step, so params/optimizer/EMA state evolve identically
+//!    everywhere (refit and eval are replicated locally — the fit
+//!    gather is canonical chunk-ordered and therefore worker-count
+//!    independent, so they need no communication at all).
+//!
+//! Failure model: state mutation happens only *after* a successful
+//! exchange, so a peer death ([`PeerLost`]) leaves the session at the
+//! last completed update — the leader writes a valid, resumable ADR-008
+//! checkpoint and exits nonzero. Graceful stops flow leader → follower
+//! as [`wire::Msg::Shutdown`] ([`Stopped`] on the follower side).
+
+use crate::model::params::FlatGrad;
+use anyhow::{bail, ensure, Context as _, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+pub mod wire;
+
+pub use wire::{Hello, Leaf, Msg, Reduced, PROTO_VERSION};
+pub use wire::{SHUTDOWN_COMPLETE, SHUTDOWN_ERROR, SHUTDOWN_INTERRUPTED};
+
+/// Handshake / connect patience. Spawning P release binaries and loading
+/// artifacts can take a while on a cold cache.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Per-message read patience during the update loop. One exchange waits
+/// at most one peer's local compute (slots + refit + eval); a peer that
+/// goes silent longer than this is treated as lost.
+const EXCHANGE_TIMEOUT: Duration = Duration::from_secs(300);
+
+// ---------------------------------------------------------------------------
+// Typed errors the session loop dispatches on
+// ---------------------------------------------------------------------------
+
+/// A peer died or desynchronized mid-run. The leader reacts by writing a
+/// final checkpoint at the last completed update and aborting nonzero.
+#[derive(Debug)]
+pub struct PeerLost {
+    pub rank: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for PeerLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dist: lost peer rank {} ({})", self.rank, self.detail)
+    }
+}
+
+impl std::error::Error for PeerLost {}
+
+/// The leader told this follower to stop ([`wire::Msg::Shutdown`]).
+/// `SHUTDOWN_COMPLETE` is a clean coordinated finish; anything else is
+/// an abnormal exit the follower propagates as an error.
+#[derive(Debug)]
+pub struct Stopped {
+    pub code: u8,
+    pub reason: String,
+}
+
+impl std::fmt::Display for Stopped {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dist: leader shutdown (code {}: {})", self.code, self.reason)
+    }
+}
+
+impl std::error::Error for Stopped {}
+
+// ---------------------------------------------------------------------------
+// Connection
+// ---------------------------------------------------------------------------
+
+/// One framed, message-oriented peer connection (buffered both ways;
+/// the protocol is strictly request/response so one stream suffices).
+struct Conn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    /// Remote rank, for diagnostics.
+    rank: usize,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, rank: usize, timeout: Duration) -> Result<Conn> {
+        stream.set_nodelay(true).context("dist: set_nodelay")?;
+        stream.set_read_timeout(Some(timeout)).context("dist: set_read_timeout")?;
+        stream.set_write_timeout(Some(timeout)).context("dist: set_write_timeout")?;
+        let r = BufReader::new(stream.try_clone().context("dist: cloning stream")?);
+        Ok(Conn { r, w: BufWriter::new(stream), rank })
+    }
+
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        wire::send_frame(&mut self.w, &msg.encode())
+            .with_context(|| format!("dist: sending {} to rank {}", msg.kind(), self.rank))
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        let payload = wire::recv_frame(&mut self.r)
+            .with_context(|| format!("dist: receiving from rank {}", self.rank))?;
+        Msg::decode(&payload)
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) -> Result<()> {
+        self.w.get_ref().set_read_timeout(Some(timeout))?;
+        self.w.get_ref().set_write_timeout(Some(timeout))?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Geometry + handshake
+// ---------------------------------------------------------------------------
+
+/// Everything two processes must agree on before exchanging gradients.
+/// Mismatches hard-error during the handshake, mirroring the ADR-008
+/// fingerprint check on resume.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    /// ADR-008 config/manifest fingerprint (`TrainSession::fingerprint`).
+    pub fingerprint: u64,
+    pub procs: usize,
+    /// Global `--accum`; must satisfy `accum % procs == 0`.
+    pub accum: usize,
+    pub seed: u64,
+}
+
+impl Geometry {
+    /// Validate the slot partition tiles the update evenly.
+    pub fn validate(&self) -> Result<()> {
+        crate::config::validate_dist(self.procs, self.accum)
+    }
+
+    fn check_hello(&self, h: &Hello) -> Result<()> {
+        ensure!(
+            h.proto == PROTO_VERSION,
+            "peer speaks dist protocol v{} (this build speaks v{PROTO_VERSION})",
+            h.proto
+        );
+        ensure!(
+            h.fingerprint == self.fingerprint,
+            "peer fingerprint {:016x} differs from ours {:016x} — different experiment",
+            h.fingerprint,
+            self.fingerprint
+        );
+        ensure!(
+            h.procs as usize == self.procs && h.accum as usize == self.accum,
+            "peer geometry procs={} accum={} differs from ours procs={} accum={}",
+            h.procs,
+            h.accum,
+            self.procs,
+            self.accum
+        );
+        ensure!(
+            h.seed == self.seed,
+            "peer data seed {} differs from ours {}",
+            h.seed,
+            self.seed
+        );
+        Ok(())
+    }
+}
+
+/// Leader side of the handshake: accept `procs - 1` followers on
+/// `listener`, validate each [`Hello`] against `geom`, reply `Welcome`
+/// (or `Reject` + hard error). `poll` runs while waiting (the launcher
+/// uses it to notice a follower that died before connecting); return an
+/// error from it to abort the accept loop.
+pub fn accept_followers(
+    listener: &TcpListener,
+    geom: &Geometry,
+    mut poll: impl FnMut() -> Result<()>,
+) -> Result<DistSession> {
+    geom.validate()?;
+    ensure!(geom.procs >= 2, "dist accept needs procs >= 2 (got {})", geom.procs);
+    listener.set_nonblocking(true).context("dist: listener nonblocking")?;
+    let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+    let mut peers: Vec<Conn> = Vec::with_capacity(geom.procs - 1);
+    while peers.len() < geom.procs - 1 {
+        poll()?;
+        ensure!(
+            Instant::now() < deadline,
+            "dist: timed out waiting for followers ({}/{} connected)",
+            peers.len(),
+            geom.procs - 1
+        );
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+            Err(e) => return Err(e).context("dist: accepting follower"),
+        };
+        stream.set_nonblocking(false).context("dist: stream blocking")?;
+        let mut conn = Conn::new(stream, 0, HANDSHAKE_TIMEOUT)?;
+        let msg = conn.recv()?;
+        let hello = match msg {
+            Msg::Hello(h) => h,
+            m => bail!("dist handshake: expected Hello, got {}", m.kind()),
+        };
+        let rank = hello.rank as usize;
+        let rank_ok = (1..geom.procs).contains(&rank) && !peers.iter().any(|p| p.rank == rank);
+        let verdict = geom.check_hello(&hello).and_then(|()| {
+            ensure!(rank_ok, "rank {rank} invalid or already connected (procs {})", geom.procs);
+            Ok(())
+        });
+        if let Err(e) = verdict {
+            let _ = conn.send(&Msg::Reject { reason: format!("{e:#}") });
+            return Err(e.context("dist handshake rejected a follower"));
+        }
+        conn.rank = rank;
+        conn.send(&Msg::Welcome { proto: PROTO_VERSION })?;
+        crate::log_info!("dist: follower rank {rank} joined ({} of {})", peers.len() + 1, geom.procs - 1);
+        peers.push(conn);
+    }
+    peers.sort_by_key(|p| p.rank);
+    for p in &mut peers {
+        p.set_timeout(EXCHANGE_TIMEOUT)?;
+    }
+    Ok(DistSession { rank: 0, procs: geom.procs, role: Role::Leader { peers } })
+}
+
+/// Follower side of the handshake: connect to the leader (with retry —
+/// the leader may still be loading artifacts), send [`Hello`], and wait
+/// for the verdict.
+pub fn connect(addr: &str, rank: usize, geom: &Geometry) -> Result<DistSession> {
+    geom.validate()?;
+    ensure!(
+        (1..geom.procs).contains(&rank),
+        "dist connect: rank {rank} out of range for procs {}",
+        geom.procs
+    );
+    let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                ensure!(
+                    Instant::now() < deadline,
+                    "dist: could not reach leader at {addr}: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    let mut conn = Conn::new(stream, 0, HANDSHAKE_TIMEOUT)?;
+    conn.send(&Msg::Hello(Hello {
+        proto: PROTO_VERSION,
+        fingerprint: geom.fingerprint,
+        rank: rank as u32,
+        procs: geom.procs as u32,
+        accum: geom.accum as u32,
+        seed: geom.seed,
+    }))?;
+    match conn.recv()? {
+        Msg::Welcome { proto } => {
+            ensure!(
+                proto == PROTO_VERSION,
+                "leader speaks dist protocol v{proto} (this build speaks v{PROTO_VERSION})"
+            );
+        }
+        Msg::Reject { reason } => bail!("dist: leader rejected this follower: {reason}"),
+        m => bail!("dist handshake: expected Welcome/Reject, got {}", m.kind()),
+    }
+    conn.set_timeout(EXCHANGE_TIMEOUT)?;
+    Ok(DistSession { rank, procs: geom.procs, role: Role::Follower { conn } })
+}
+
+// ---------------------------------------------------------------------------
+// DistSession
+// ---------------------------------------------------------------------------
+
+enum Role {
+    /// Peer connections sorted by rank (1..procs).
+    Leader { peers: Vec<Conn> },
+    Follower { conn: Conn },
+}
+
+/// A connected process group, attached to a `TrainSession` via
+/// `attach_dist`. Owns the sockets; the update-loop exchange and the
+/// final shutdown broadcast go through here.
+pub struct DistSession {
+    rank: usize,
+    procs: usize,
+    role: Role,
+}
+
+impl DistSession {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn procs(&self) -> usize {
+        self.procs
+    }
+
+    pub fn is_leader(&self) -> bool {
+        matches!(self.role, Role::Leader { .. })
+    }
+
+    /// This process's contiguous slot group: `(local_slots, offset)` with
+    /// global slot = `offset + local_slot`.
+    pub fn slot_range(&self, accum: usize) -> (usize, usize) {
+        let local = accum / self.procs;
+        (local, self.rank * local)
+    }
+
+    /// One update's gradient exchange. `local` holds this process's slot
+    /// leaves in slot order. On the leader: fold own + every follower's
+    /// leaves in global slot order (the ADR-004 left-deep tree), scale by
+    /// `1/accum`, broadcast, return the fold. On a follower: send leaves,
+    /// return the leader's broadcast. Errors are [`PeerLost`] (peer died
+    /// / desynchronized) or [`Stopped`] (leader-initiated shutdown).
+    pub fn exchange(&mut self, step: u64, local: Vec<Leaf>) -> Result<Reduced> {
+        let accum = local.len() * self.procs;
+        match &mut self.role {
+            Role::Leader { peers } => {
+                let mut it = local.into_iter();
+                let first = it.next().context("dist exchange with zero local slots")?;
+                let mut grad = first.grad;
+                let mut loss_sum = first.loss as f64;
+                let mut acc_sum = first.acc;
+                let mut cost_sum = first.cost;
+                let mut examples = first.examples;
+                let mut fold = |leaf: Leaf, rank: usize| -> Result<()> {
+                    ensure!(
+                        leaf.grad.trunk.len() == grad.trunk.len()
+                            && leaf.grad.head_w.len() == grad.head_w.len()
+                            && leaf.grad.head_b.len() == grad.head_b.len(),
+                        "dist: rank {rank} sent a gradient leaf of different shape"
+                    );
+                    grad.axpy(1.0, &leaf.grad);
+                    loss_sum += leaf.loss as f64;
+                    acc_sum += leaf.acc;
+                    cost_sum += leaf.cost;
+                    examples += leaf.examples;
+                    Ok(())
+                };
+                for leaf in it {
+                    fold(leaf, 0)?;
+                }
+                for peer in peers.iter_mut() {
+                    let rank = peer.rank;
+                    let lost = |detail: String| {
+                        anyhow::Error::new(PeerLost { rank, detail })
+                    };
+                    let msg = peer.recv().map_err(|e| lost(format!("{e:#}")))?;
+                    let (s, r, leaves) = match msg {
+                        Msg::Leaves { step, rank, leaves } => (step, rank, leaves),
+                        m => return Err(lost(format!("expected Leaves, got {}", m.kind()))),
+                    };
+                    if s != step || r as usize != rank || leaves.len() * self.procs != accum {
+                        return Err(lost(format!(
+                            "desynchronized: sent step {s} rank {r} with {} leaves \
+                             (expected step {step} rank {rank} with {} leaves)",
+                            leaves.len(),
+                            accum / self.procs
+                        )));
+                    }
+                    for leaf in leaves {
+                        fold(leaf, rank)?;
+                    }
+                }
+                grad.scale(1.0 / accum as f32);
+                let reduced =
+                    Reduced { step, grad, loss_sum, acc_sum, cost_sum, examples };
+                for peer in peers.iter_mut() {
+                    let rank = peer.rank;
+                    peer.send(&Msg::Reduced(reduced.clone())).map_err(|e| {
+                        anyhow::Error::new(PeerLost { rank, detail: format!("{e:#}") })
+                    })?;
+                }
+                Ok(reduced)
+            }
+            Role::Follower { conn } => {
+                let rank = self.rank;
+                let lost =
+                    |detail: String| anyhow::Error::new(PeerLost { rank: 0, detail });
+                conn.send(&Msg::Leaves { step, rank: rank as u32, leaves: local })
+                    .map_err(|e| lost(format!("{e:#}")))?;
+                match conn.recv().map_err(|e| lost(format!("{e:#}")))? {
+                    Msg::Reduced(r) => {
+                        if r.step != step {
+                            return Err(lost(format!(
+                                "desynchronized: leader reduced step {} (expected {step})",
+                                r.step
+                            )));
+                        }
+                        Ok(r)
+                    }
+                    Msg::Shutdown { code, reason } => {
+                        Err(anyhow::Error::new(Stopped { code, reason }))
+                    }
+                    m => Err(lost(format!("expected Reduced, got {}", m.kind()))),
+                }
+            }
+        }
+    }
+
+    /// Leader: broadcast a final [`wire::Msg::Shutdown`] to every
+    /// follower, best-effort (a follower that already exited at its own
+    /// `max_steps` boundary has closed its socket — that is fine). No-op
+    /// on followers.
+    pub fn finish(&mut self, code: u8, reason: &str) {
+        if let Role::Leader { peers } = &mut self.role {
+            for peer in peers.iter_mut() {
+                let _ = peer.send(&Msg::Shutdown { code, reason: reason.to_string() });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::reduce;
+
+    fn leaf(seed: u64, n: usize) -> Leaf {
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        let mut grad = FlatGrad {
+            trunk: vec![0.0; n],
+            head_w: vec![0.0; 3],
+            head_b: vec![0.0; 2],
+        };
+        rng.fill_normal(&mut grad.trunk, 1.0);
+        rng.fill_normal(&mut grad.head_w, 1.0);
+        rng.fill_normal(&mut grad.head_b, 1.0);
+        Leaf {
+            grad,
+            loss: rng.next_f32(),
+            acc: rng.next_f64(),
+            cost: 3.0,
+            examples: 8,
+        }
+    }
+
+    fn geom(fp: u64) -> Geometry {
+        Geometry { fingerprint: fp, procs: 2, accum: 4, seed: 7 }
+    }
+
+    fn pair(
+        leader_geom: Geometry,
+        follower_geom: Geometry,
+    ) -> (Result<DistSession>, Result<DistSession>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let g = follower_geom;
+        let follower = std::thread::spawn(move || connect(&addr, 1, &g));
+        let leader = accept_followers(&listener, &leader_geom, || Ok(()));
+        (leader, follower.join().unwrap())
+    }
+
+    #[test]
+    fn handshake_pairs_matching_geometry() {
+        let (leader, follower) = pair(geom(1), geom(1));
+        let leader = leader.unwrap();
+        let follower = follower.unwrap();
+        assert!(leader.is_leader());
+        assert!(!follower.is_leader());
+        assert_eq!(leader.slot_range(4), (2, 0));
+        assert_eq!(follower.slot_range(4), (2, 2));
+    }
+
+    #[test]
+    fn handshake_hard_errors_on_fingerprint_mismatch() {
+        let (leader, follower) = pair(geom(1), geom(2));
+        let le = format!("{:#}", leader.unwrap_err());
+        assert!(le.contains("fingerprint"), "{le}");
+        let fe = format!("{:#}", follower.unwrap_err());
+        assert!(fe.contains("rejected") && fe.contains("fingerprint"), "{fe}");
+    }
+
+    #[test]
+    fn handshake_hard_errors_on_geometry_mismatch() {
+        let mut other = geom(1);
+        other.accum = 8;
+        let (leader, follower) = pair(geom(1), other);
+        assert!(format!("{:#}", leader.unwrap_err()).contains("geometry"));
+        assert!(follower.is_err());
+    }
+
+    /// The distributed fold must be bit-identical to the single-process
+    /// left-deep fold over the same slot-ordered leaves — the core
+    /// determinism claim of ADR-010, checked here at the library level
+    /// without any artifacts.
+    #[test]
+    fn exchange_fold_matches_single_process_tree_bitwise() {
+        let leaves: Vec<Leaf> = (0..4).map(|i| leaf(100 + i, 33)).collect();
+        let mut want = reduce::tree_reduce_grads(
+            leaves.iter().map(|l| l.grad.clone()).collect(),
+        )
+        .unwrap();
+        want.scale(1.0 / 4.0);
+        let want_loss: f64 = leaves.iter().map(|l| l.loss as f64).sum();
+
+        let (leader, follower) = pair(geom(1), geom(1));
+        let mut leader = leader.unwrap();
+        let mut follower = follower.unwrap();
+        let (own, remote) = (leaves[..2].to_vec(), leaves[2..].to_vec());
+        let follower_thread = std::thread::spawn(move || {
+            let r = follower.exchange(9, remote).unwrap();
+            (follower, r)
+        });
+        let got = leader.exchange(9, own).unwrap();
+        let (_, follower_got) = follower_thread.join().unwrap();
+
+        for g in [&got.grad, &follower_got.grad] {
+            assert_eq!(g.trunk, want.trunk);
+            assert_eq!(g.head_w, want.head_w);
+            assert_eq!(g.head_b, want.head_b);
+        }
+        assert_eq!(got.loss_sum.to_bits(), want_loss.to_bits());
+        assert_eq!(got.loss_sum.to_bits(), follower_got.loss_sum.to_bits());
+        assert_eq!(got.examples, 32);
+    }
+
+    #[test]
+    fn follower_sees_stopped_after_leader_finish() {
+        let (leader, follower) = pair(geom(1), geom(1));
+        let mut leader = leader.unwrap();
+        let mut follower = follower.unwrap();
+        leader.finish(SHUTDOWN_INTERRUPTED, "sigint");
+        let err = follower.exchange(0, vec![leaf(1, 4), leaf(2, 4)]).unwrap_err();
+        let stopped = err.downcast_ref::<Stopped>().expect("Stopped error");
+        assert_eq!(stopped.code, SHUTDOWN_INTERRUPTED);
+        assert_eq!(stopped.reason, "sigint");
+    }
+
+    #[test]
+    fn dead_follower_surfaces_as_peer_lost() {
+        let (leader, follower) = pair(geom(1), geom(1));
+        let mut leader = leader.unwrap();
+        drop(follower.unwrap()); // follower "dies": socket closes
+        let err = leader.exchange(0, vec![leaf(1, 4), leaf(2, 4)]).unwrap_err();
+        let lost = err.downcast_ref::<PeerLost>().expect("PeerLost error");
+        assert_eq!(lost.rank, 1);
+    }
+
+    #[test]
+    fn desynchronized_step_is_peer_lost() {
+        let (leader, follower) = pair(geom(1), geom(1));
+        let mut leader = leader.unwrap();
+        let mut follower = follower.unwrap();
+        let t = std::thread::spawn(move || {
+            // Follower thinks it is on step 3; leader expects step 2.
+            let _ = follower.exchange(3, vec![leaf(1, 4), leaf(2, 4)]);
+        });
+        let err = leader.exchange(2, vec![leaf(3, 4), leaf(4, 4)]).unwrap_err();
+        assert!(err.downcast_ref::<PeerLost>().is_some(), "{err:#}");
+        assert!(format!("{err:#}").contains("desynchronized"), "{err:#}");
+        // Close the leader's sockets so the follower's pending recv
+        // unblocks before we join it.
+        drop(leader);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,369 @@
+//! Length-prefixed, CRC-framed wire protocol for the distributed runner
+//! (DESIGN.md ADR-010).
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! payload_len u32 | payload_crc u32 | payload
+//! ```
+//!
+//! with `payload_crc` the ADR-008 CRC32 of the payload bytes, so a
+//! corrupted or desynchronized stream reads as a structured error, never
+//! as a garbled message. The payload is a one-byte tag followed by a body
+//! in the checkpoint codec (`checkpoint::{Enc, Dec}`, little-endian) —
+//! the same encoding the `.lgpckpt` artifacts use, so the wire and disk
+//! formats cannot drift apart in how they serialize tensors.
+//!
+//! The handshake is version-negotiated and fingerprint-checked: a
+//! follower opens with [`Hello`] carrying [`PROTO_VERSION`] and the
+//! ADR-008 config/manifest fingerprint; the leader replies [`Msg::Welcome`]
+//! or [`Msg::Reject`] with a reason. A fingerprint or geometry mismatch is
+//! a hard error on both sides — resuming a different experiment's stream
+//! would silently diverge, exactly the failure ADR-008 fingerprints exist
+//! to prevent.
+
+use crate::checkpoint::{crc32, Dec, Enc};
+use crate::model::params::FlatGrad;
+use anyhow::{bail, ensure, Context as _, Result};
+use std::io::{Read, Write};
+
+/// Wire protocol version; bumped on any incompatible message change.
+/// Peers with different versions refuse to pair during the handshake.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on one frame's payload. Gradient-leaf frames scale with
+/// `accum/procs × total_params`; 256 MiB is far above any manifest this
+/// repo ships while still bounding the allocation a corrupt length
+/// prefix can demand.
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// Shutdown codes carried by [`Msg::Shutdown`] (leader → follower).
+pub const SHUTDOWN_COMPLETE: u8 = 0;
+pub const SHUTDOWN_INTERRUPTED: u8 = 1;
+pub const SHUTDOWN_ERROR: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one frame (length prefix + CRC + payload) and flush.
+pub fn send_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME_BYTES,
+        "dist frame of {} bytes exceeds the {} byte limit",
+        payload.len(),
+        MAX_FRAME_BYTES
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, verifying the length bound and the payload CRC.
+pub fn recv_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head).context("dist: reading frame header")?;
+    let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    let want_crc = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    ensure!(
+        len <= MAX_FRAME_BYTES,
+        "dist frame header claims {len} bytes (limit {MAX_FRAME_BYTES}) — corrupt or hostile peer"
+    );
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("dist: reading frame payload")?;
+    ensure!(crc32(&payload) == want_crc, "dist frame corrupt (payload crc mismatch)");
+    Ok(payload)
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// Follower's opening message: everything the leader must agree on
+/// before a single gradient crosses the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hello {
+    pub proto: u32,
+    /// ADR-008 config/manifest fingerprint of the follower's session.
+    pub fingerprint: u64,
+    pub rank: u32,
+    pub procs: u32,
+    /// Global micro-batch slot count (`--accum`); every process must see
+    /// the same value for the slot partition to tile the update.
+    pub accum: u32,
+    /// Data-stream seed; redundant with the fingerprint but cheap to
+    /// check and names the mismatch precisely.
+    pub seed: u64,
+}
+
+/// One micro-batch slot's contribution: the gradient leaf plus the
+/// scalar traces the coordinator folds in slot order (ADR-004).
+#[derive(Clone, Debug)]
+pub struct Leaf {
+    pub grad: FlatGrad,
+    pub loss: f32,
+    pub acc: f64,
+    pub cost: f64,
+    pub examples: u64,
+}
+
+/// The leader's folded update, broadcast so every process applies the
+/// bit-identical optimizer step.
+#[derive(Clone, Debug)]
+pub struct Reduced {
+    pub step: u64,
+    /// Mean gradient: the full left-deep fold over all `accum` leaves,
+    /// already scaled by `1/accum` on the leader.
+    pub grad: FlatGrad,
+    pub loss_sum: f64,
+    pub acc_sum: f64,
+    pub cost_sum: f64,
+    pub examples: u64,
+}
+
+/// Every message that crosses a dist socket.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    Hello(Hello),
+    Welcome { proto: u32 },
+    Reject { reason: String },
+    Leaves { step: u64, rank: u32, leaves: Vec<Leaf> },
+    Reduced(Reduced),
+    Shutdown { code: u8, reason: String },
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_REJECT: u8 = 3;
+const TAG_LEAVES: u8 = 4;
+const TAG_REDUCED: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+fn put_flat(e: &mut Enc, g: &FlatGrad) {
+    e.put_f32s(&g.trunk);
+    e.put_f32s(&g.head_w);
+    e.put_f32s(&g.head_b);
+}
+
+fn take_flat(d: &mut Dec) -> Result<FlatGrad> {
+    Ok(FlatGrad { trunk: d.take_f32s()?, head_w: d.take_f32s()?, head_b: d.take_f32s()? })
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Msg::Hello(h) => {
+                e.put_u8(TAG_HELLO);
+                e.put_u32(h.proto);
+                e.put_u64(h.fingerprint);
+                e.put_u32(h.rank);
+                e.put_u32(h.procs);
+                e.put_u32(h.accum);
+                e.put_u64(h.seed);
+            }
+            Msg::Welcome { proto } => {
+                e.put_u8(TAG_WELCOME);
+                e.put_u32(*proto);
+            }
+            Msg::Reject { reason } => {
+                e.put_u8(TAG_REJECT);
+                e.put_str(reason);
+            }
+            Msg::Leaves { step, rank, leaves } => {
+                e.put_u8(TAG_LEAVES);
+                e.put_u64(*step);
+                e.put_u32(*rank);
+                e.put_u32(leaves.len() as u32);
+                for l in leaves {
+                    e.put_f32(l.loss);
+                    e.put_f64(l.acc);
+                    e.put_f64(l.cost);
+                    e.put_u64(l.examples);
+                    put_flat(&mut e, &l.grad);
+                }
+            }
+            Msg::Reduced(r) => {
+                e.put_u8(TAG_REDUCED);
+                e.put_u64(r.step);
+                e.put_f64(r.loss_sum);
+                e.put_f64(r.acc_sum);
+                e.put_f64(r.cost_sum);
+                e.put_u64(r.examples);
+                put_flat(&mut e, &r.grad);
+            }
+            Msg::Shutdown { code, reason } => {
+                e.put_u8(TAG_SHUTDOWN);
+                e.put_u8(*code);
+                e.put_str(reason);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Msg> {
+        let mut d = Dec::new(bytes, "dist message");
+        let tag = d.take_u8()?;
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello(Hello {
+                proto: d.take_u32()?,
+                fingerprint: d.take_u64()?,
+                rank: d.take_u32()?,
+                procs: d.take_u32()?,
+                accum: d.take_u32()?,
+                seed: d.take_u64()?,
+            }),
+            TAG_WELCOME => Msg::Welcome { proto: d.take_u32()? },
+            TAG_REJECT => Msg::Reject { reason: d.take_str()? },
+            TAG_LEAVES => {
+                let step = d.take_u64()?;
+                let rank = d.take_u32()?;
+                let n = d.take_u32()? as usize;
+                let mut leaves = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let loss = d.take_f32()?;
+                    let acc = d.take_f64()?;
+                    let cost = d.take_f64()?;
+                    let examples = d.take_u64()?;
+                    let grad = take_flat(&mut d)?;
+                    leaves.push(Leaf { grad, loss, acc, cost, examples });
+                }
+                Msg::Leaves { step, rank, leaves }
+            }
+            TAG_REDUCED => {
+                let step = d.take_u64()?;
+                let loss_sum = d.take_f64()?;
+                let acc_sum = d.take_f64()?;
+                let cost_sum = d.take_f64()?;
+                let examples = d.take_u64()?;
+                let grad = take_flat(&mut d)?;
+                Msg::Reduced(Reduced { step, grad, loss_sum, acc_sum, cost_sum, examples })
+            }
+            TAG_SHUTDOWN => Msg::Shutdown { code: d.take_u8()?, reason: d.take_str()? },
+            t => bail!("dist message with unknown tag {t} (peer speaks a newer protocol?)"),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+
+    /// Short name for diagnostics ("expected Reduced, got Shutdown").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Hello(_) => "Hello",
+            Msg::Welcome { .. } => "Welcome",
+            Msg::Reject { .. } => "Reject",
+            Msg::Leaves { .. } => "Leaves",
+            Msg::Reduced(_) => "Reduced",
+            Msg::Shutdown { .. } => "Shutdown",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(seed: f32) -> FlatGrad {
+        FlatGrad {
+            trunk: vec![seed, seed + 0.5, -seed],
+            head_w: vec![2.0 * seed],
+            head_b: vec![-0.25],
+        }
+    }
+
+    fn roundtrip(m: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &m.encode()).unwrap();
+        let payload = recv_frame(&mut buf.as_slice()).unwrap();
+        Msg::decode(&payload).unwrap()
+    }
+
+    #[test]
+    fn every_message_kind_round_trips_through_a_frame() {
+        let hello = Msg::Hello(Hello {
+            proto: PROTO_VERSION,
+            fingerprint: 0xfeed_beef_dead_cafe,
+            rank: 1,
+            procs: 2,
+            accum: 4,
+            seed: 7,
+        });
+        match roundtrip(&hello) {
+            Msg::Hello(h) => {
+                assert_eq!(h.fingerprint, 0xfeed_beef_dead_cafe);
+                assert_eq!((h.rank, h.procs, h.accum, h.seed), (1, 2, 4, 7));
+            }
+            m => panic!("got {}", m.kind()),
+        }
+        let leaves = Msg::Leaves {
+            step: 42,
+            rank: 1,
+            leaves: vec![
+                Leaf { grad: grad(1.0), loss: 0.5, acc: 0.75, cost: 3.0, examples: 8 },
+                Leaf { grad: grad(-2.0), loss: 1.5, acc: 0.25, cost: 3.0, examples: 8 },
+            ],
+        };
+        match roundtrip(&leaves) {
+            Msg::Leaves { step, rank, leaves } => {
+                assert_eq!((step, rank), (42, 1));
+                assert_eq!(leaves.len(), 2);
+                assert_eq!(leaves[0].grad.trunk, grad(1.0).trunk);
+                assert_eq!(leaves[1].loss.to_bits(), 1.5f32.to_bits());
+            }
+            m => panic!("got {}", m.kind()),
+        }
+        let red = Msg::Reduced(Reduced {
+            step: 42,
+            grad: grad(0.125),
+            loss_sum: 2.0,
+            acc_sum: 1.0,
+            cost_sum: 6.0,
+            examples: 16,
+        });
+        match roundtrip(&red) {
+            Msg::Reduced(r) => {
+                assert_eq!(r.grad.trunk, grad(0.125).trunk);
+                assert_eq!(r.examples, 16);
+            }
+            m => panic!("got {}", m.kind()),
+        }
+        for m in [
+            Msg::Welcome { proto: PROTO_VERSION },
+            Msg::Reject { reason: "fingerprint mismatch".into() },
+            Msg::Shutdown { code: SHUTDOWN_INTERRUPTED, reason: "sigint".into() },
+        ] {
+            assert_eq!(roundtrip(&m).kind(), m.kind());
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_are_structured_errors() {
+        let msg = Msg::Welcome { proto: PROTO_VERSION };
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &msg.encode()).unwrap();
+        // Flip one payload byte: CRC must catch it.
+        let n = buf.len();
+        let mut bad = buf.clone();
+        bad[n - 1] ^= 0x10;
+        let err = recv_frame(&mut bad.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("crc mismatch"), "{err:#}");
+        // Oversized length prefix: rejected before allocating.
+        let mut huge = buf.clone();
+        huge[..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let err = recv_frame(&mut huge.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("limit"), "{err:#}");
+        // Truncated stream: structured read error.
+        assert!(recv_frame(&mut buf[..5].to_vec().as_slice()).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_and_trailing_bytes_are_rejected() {
+        assert!(Msg::decode(&[99]).is_err());
+        let mut bytes = Msg::Welcome { proto: 1 }.encode();
+        bytes.push(0);
+        let err = Msg::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+}

@@ -39,6 +39,7 @@ pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod estimator;
 pub mod metrics;
 pub mod model;
@@ -63,7 +64,8 @@ pub mod prelude {
     };
     pub use crate::metrics::{Alignment, LogRow};
     pub use crate::observer::{
-        CsvObserver, JsonlObserver, Multicast, RefitEvent, RunSummary, TrainObserver,
+        CsvObserver, DistEvent, DistEventKind, JsonlObserver, Multicast, RefitEvent,
+        RunSummary, TrainObserver,
     };
     pub use crate::session::{SessionBuilder, TrainSession};
     pub use crate::tensor::BackendKind;

@@ -5,6 +5,8 @@
 //!
 //! Subcommands:
 //!   train      run Algorithm 1 (GPR) or Algorithm 2 (baseline)
+//!   launch     multi-process run: spawn followers + lead (DESIGN.md ADR-010)
+//!   reshard    rewrite a checkpoint for a new shard geometry (ADR-010)
 //!   serve      host training sessions over HTTP/JSONL (DESIGN.md ADR-009)
 //!   theory     print the Section 5 closed-form tables (Thm 3/4, cost model)
 //!   sweep-f    train short runs across control fractions f
@@ -14,6 +16,8 @@
 //! Examples:
 //!   lgp train --preset tiny --algo gpr --f 0.25 --steps 30
 //!   lgp train --preset small --algo baseline --budget 60
+//!   lgp launch --procs 2 --preset tiny --shards 2 --steps 30
+//!   lgp reshard --dir ckpts --out ckpts8 --from 4 --to 8
 //!   lgp theory
 //!   lgp sweep-f --preset small --fs 0.125,0.25,0.5 --steps 20
 
@@ -36,6 +40,8 @@ fn main() {
     };
     let code = match args.subcommand.as_deref() {
         Some("train") => run(cmd_train(&args)),
+        Some("launch") => run(cmd_launch(&args)),
+        Some("reshard") => run(cmd_reshard(&args)),
         Some("serve") => run(cmd_serve(&args)),
         Some("theory") => run(cmd_theory(&args)),
         Some("sweep-f") => run(cmd_sweep_f(&args)),
@@ -69,6 +75,14 @@ SUBCOMMANDS
            [--checkpoint-keep K]   (prune to the newest K valid artifacts;
                            crash-safe checkpoints + bit-identical resume;
                            SIGINT checkpoints then exits, DESIGN.md ADR-008)
+  launch   --procs P plus the train flags: elastic multi-process runner
+           (DESIGN.md ADR-010). Spawns P-1 follower processes over
+           loopback sockets; P procs x S shards is bit-identical to
+           --shards P*S. SIGINT / peer death -> coordinated final
+           checkpoint on the leader, nonzero exit.
+  reshard  --ckpt FILE | --dir DIR (newest) --out DIR --from N --to M
+           rewrite a .lgpckpt for a new shard geometry: every section
+           CRC-checked and re-derived, output proven byte-stable
   serve    --addr 127.0.0.1:7878   (0 = ephemeral port, printed on stdout)
            training-as-a-service control plane (DESIGN.md ADR-009):
            POST /sessions (JSON config), GET /sessions/:id,
@@ -110,6 +124,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let csv_path = args.str_opt("csv");
     let jsonl_path = args.str_opt("jsonl");
     let show_artifact_times = args.flag("artifact-times");
+    // Follower wiring for `lgp launch` (DESIGN.md ADR-010): the leader
+    // re-spawns this binary with these three flags appended.
+    let dist_connect = args.str_opt("dist-connect");
+    let dist_rank = args.parsed::<usize>("dist-rank")?;
+    let dist_procs = args.parsed::<usize>("dist-procs")?;
+    let follower = match (&dist_connect, dist_rank, dist_procs) {
+        (None, None, None) => None,
+        (Some(addr), Some(rank), Some(procs)) => Some((addr.clone(), rank, procs)),
+        _ => anyhow::bail!(
+            "--dist-connect, --dist-rank and --dist-procs go together (lgp launch sets them)"
+        ),
+    };
     let mut b = checked_builder(args)?;
     if let Some(p) = &csv_path {
         b = b.observer(Box::new(CsvObserver::create(std::path::Path::new(p))?));
@@ -117,11 +143,53 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(p) = &jsonl_path {
         b = b.observer(Box::new(JsonlObserver::create(std::path::Path::new(p))?));
     }
+    if follower.is_some() {
+        // A follower must outlive a group SIGINT: the leader checkpoints
+        // and broadcasts the coordinated shutdown, and the follower's
+        // blocked exchange is what receives it. A token nobody cancels
+        // makes the run loop ignore the process-global flag...
+        b = b.cancel_token(lgp::util::shutdown::CancelToken::new());
+    }
     let algo = b.config().algo;
     let mut session = b.build()?;
+    if let Some((addr, rank, procs)) = follower {
+        anyhow::ensure!(
+            session.cfg.checkpoint_every == 0,
+            "a dist follower must not write periodic checkpoints (the leader owns them); \
+             drop --checkpoint-every"
+        );
+        // ...and installing the handler turns the terminal's
+        // process-group SIGINT into a harmless flag set instead of the
+        // default kill.
+        lgp::util::shutdown::install();
+        let geom = session.dist_geometry(procs);
+        let d = lgp::dist::connect(&addr, rank, &geom)?;
+        session.attach_dist(d)?;
+    }
     let t0 = std::time::Instant::now();
     session.run()?;
     let dt = t0.elapsed().as_secs_f64();
+    if let Some((rank, procs)) = session.dist_info() {
+        if rank != 0 {
+            // The leader owns the group summary; a follower line would
+            // interleave with it on the shared terminal.
+            println!(
+                "dist follower rank {rank}/{procs} done: steps={} wall={dt:.1}s",
+                session.step_count()
+            );
+            return Ok(());
+        }
+    }
+    print_train_summary(&session, algo, dt, show_artifact_times);
+    Ok(())
+}
+
+fn print_train_summary(
+    session: &lgp::session::TrainSession,
+    algo: Algo,
+    dt: f64,
+    show_artifact_times: bool,
+) {
     let st = session.rt.stats_snapshot();
     println!(
         "algo={algo:?} backend={} shards={} steps={} wall={dt:.1}s final_val_acc={:.4} examples={} cost_units={:.0}",
@@ -153,7 +221,194 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             a.f_star(&cost)
         );
     }
+}
+
+/// `lgp launch --procs P <train flags>` — elastic multi-process runner
+/// (DESIGN.md ADR-010): bind a loopback listener, re-spawn this binary
+/// `P-1` times as `train --dist-connect` followers, run rank 0 in-process
+/// as the leader, and supervise the children. `--procs P --shards S` is
+/// bit-identical to a single-process `--shards P*S` run.
+fn cmd_launch(args: &Args) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    use std::process::{Child, Command};
+
+    let procs = args.parsed::<usize>("procs")?.unwrap_or(2);
+    anyhow::ensure!(procs >= 1, "--procs must be >= 1 (got {procs})");
+    let csv_path = args.str_opt("csv");
+    let jsonl_path = args.str_opt("jsonl");
+    let show_artifact_times = args.flag("artifact-times");
+    let mut b = checked_builder(args)?;
+    if let Some(p) = &csv_path {
+        b = b.observer(Box::new(CsvObserver::create(std::path::Path::new(p))?));
+    }
+    if let Some(p) = &jsonl_path {
+        b = b.observer(Box::new(JsonlObserver::create(std::path::Path::new(p))?));
+    }
+    let algo = b.config().algo;
+    let mut session = b.build()?;
+    if procs == 1 {
+        // Degenerate group: exactly `lgp train`.
+        let t0 = std::time::Instant::now();
+        session.run()?;
+        print_train_summary(&session, algo, t0.elapsed().as_secs_f64(), show_artifact_times);
+        return Ok(());
+    }
+    lgp::config::validate_dist(procs, session.cfg.accum)?;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").context("binding dist listener")?;
+    let addr = listener.local_addr()?.to_string();
+
+    // Follower argv: this command's own flags minus the leader-only ones
+    // (observer sinks, wall budget, periodic checkpoint writing), plus
+    // the dist wiring. `--checkpoint-dir`/`--resume` stay so a resumed
+    // group restores every rank from the same artifact.
+    const LEADER_ONLY: &[&str] = &[
+        "procs",
+        "csv",
+        "jsonl",
+        "budget",
+        "checkpoint-every",
+        "checkpoint-keep",
+        "artifact-times",
+    ];
+    let mut follower_argv: Vec<String> = vec!["train".into()];
+    for (k, v) in args.entries() {
+        if LEADER_ONLY.contains(&k) {
+            continue;
+        }
+        follower_argv.push(format!("--{k}"));
+        follower_argv.push(v.to_string());
+    }
+    follower_argv.push("--dist-connect".into());
+    follower_argv.push(addr);
+    follower_argv.push("--dist-procs".into());
+    follower_argv.push(procs.to_string());
+    if session.cfg.max_steps == 0 {
+        // Budget-driven leader: followers get a far-off step limit so
+        // their config validates; they actually stop when the leader's
+        // budget expires and its shutdown broadcast lands in their
+        // blocked exchange.
+        follower_argv.push("--steps".into());
+        follower_argv.push("1000000000".into());
+    }
+
+    let exe = std::env::current_exe().context("locating own binary for follower spawn")?;
+    let mut children: Vec<(usize, Child)> = Vec::new();
+    for rank in 1..procs {
+        let child = Command::new(&exe)
+            .args(&follower_argv)
+            .arg("--dist-rank")
+            .arg(rank.to_string())
+            .spawn()
+            .with_context(|| format!("spawning follower rank {rank}"))?;
+        children.push((rank, child));
+    }
+
+    let geom = session.dist_geometry(procs);
+    let accepted = lgp::dist::accept_followers(&listener, &geom, || {
+        for (rank, ch) in children.iter_mut() {
+            if let Some(status) = ch.try_wait()? {
+                anyhow::bail!("follower rank {rank} exited during handshake: {status}");
+            }
+        }
+        Ok(())
+    });
+    let d = match accepted {
+        Ok(d) => d,
+        Err(e) => {
+            // A half-formed group cannot make progress; reap everything
+            // so no orphan keeps retrying against a dead listener.
+            for (_, ch) in children.iter_mut() {
+                let _ = ch.kill();
+                let _ = ch.wait();
+            }
+            return Err(e.context("dist handshake failed"));
+        }
+    };
+    session.attach_dist(d)?;
+
+    let t0 = std::time::Instant::now();
+    let run_result = session.run();
+    let interrupted = lgp::util::shutdown::requested();
+    let dt = t0.elapsed().as_secs_f64();
+
+    // Reap every follower before judging the run: the leader's finish
+    // broadcast (or its own death) is what unblocks them, so this
+    // converges quickly.
+    let mut follower_fail = false;
+    for (rank, ch) in children.iter_mut() {
+        match ch.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                eprintln!("follower rank {rank} exited with {status}");
+                follower_fail = true;
+            }
+            Err(e) => {
+                eprintln!("follower rank {rank} not reaped: {e}");
+                follower_fail = true;
+            }
+        }
+    }
+    run_result?;
+    print_train_summary(&session, algo, dt, show_artifact_times);
+    anyhow::ensure!(
+        !interrupted,
+        "interrupted: coordinated final checkpoint written, exiting nonzero (ADR-008/010)"
+    );
+    anyhow::ensure!(!follower_fail, "one or more followers exited nonzero");
     Ok(())
+}
+
+/// `lgp reshard` — validate a checkpoint end-to-end and rewrite it for a
+/// new shard geometry (`checkpoint::reshard`, DESIGN.md ADR-010).
+fn cmd_reshard(args: &Args) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+
+    let ckpt = args.str_opt("ckpt");
+    let dir = args.str_opt("dir");
+    let out = args.str_opt("out").context("--out DIR is required")?;
+    let from = args.parsed::<usize>("from")?.context("--from N (old shard count) is required")?;
+    let to = args.parsed::<usize>("to")?.context("--to M (new shard count) is required")?;
+    let unknown = args.unknown_keys();
+    anyhow::ensure!(unknown.is_empty(), "unknown flags: {unknown:?}");
+    let input = match (ckpt, dir) {
+        (Some(f), None) => std::path::PathBuf::from(f),
+        (None, Some(d)) => newest_checkpoint(std::path::Path::new(&d))?,
+        _ => anyhow::bail!("give exactly one of --ckpt FILE or --dir DIR"),
+    };
+    let report =
+        lgp::checkpoint::reshard::reshard_file(&input, std::path::Path::new(&out), from, to)?;
+    println!(
+        "resharded {from} -> {to} shards: step={} sections={} fit_rows={} cursor={} -> {} ({} bytes)",
+        report.step,
+        report.sections,
+        report.fitbuf_rows,
+        report.cursor,
+        report.path.display(),
+        report.bytes,
+    );
+    Ok(())
+}
+
+/// Highest-step `ckpt-*.lgpckpt` in `dir` (the artifact `--resume` would
+/// pick), so `lgp reshard --dir` reshards what a resume would load.
+fn newest_checkpoint(dir: &std::path::Path) -> anyhow::Result<std::path::PathBuf> {
+    use anyhow::Context as _;
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    let mut best: Option<(u64, std::path::PathBuf)> = None;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(step) = lgp::checkpoint::parse_step(&name.to_string_lossy()) else {
+            continue;
+        };
+        if best.as_ref().map_or(true, |(s, _)| step > *s) {
+            best = Some((step, entry.path()));
+        }
+    }
+    best.map(|(_, p)| p)
+        .with_context(|| format!("no ckpt-*.lgpckpt checkpoints in {}", dir.display()))
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {

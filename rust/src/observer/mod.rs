@@ -59,6 +59,43 @@ pub struct CheckpointEvent {
     pub write_secs: f64,
 }
 
+/// A distributed-runner lifecycle event (DESIGN.md ADR-010): process
+/// group membership and coordinated-shutdown transitions, stamped with
+/// this process's rank so per-process JSONL streams can be correlated.
+#[derive(Clone, Debug)]
+pub struct DistEvent {
+    /// Optimizer updates completed when the event fired.
+    pub step: usize,
+    /// This process's rank (0 = leader).
+    pub rank: usize,
+    /// Total processes in the group.
+    pub procs: usize,
+    pub kind: DistEventKind,
+    /// Human-readable context (peer rank, shutdown reason, ...).
+    pub detail: String,
+}
+
+/// What happened to the process group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistEventKind {
+    /// Handshake complete: this process is attached to the group.
+    Joined,
+    /// A peer died or desynchronized mid-run.
+    PeerLost,
+    /// Coordinated shutdown (leader broadcast, or follower received).
+    Shutdown,
+}
+
+impl DistEventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DistEventKind::Joined => "joined",
+            DistEventKind::PeerLost => "peer_lost",
+            DistEventKind::Shutdown => "shutdown",
+        }
+    }
+}
+
 /// End-of-run summary, emitted exactly once.
 #[derive(Clone, Copy, Debug)]
 pub struct RunSummary {
@@ -94,6 +131,14 @@ pub trait TrainObserver: Send {
 
     /// After each durable checkpoint write (ADR-008).
     fn on_checkpoint(&mut self, ev: &CheckpointEvent) -> anyhow::Result<()> {
+        let _ = ev;
+        Ok(())
+    }
+
+    /// On each distributed-runner lifecycle transition (ADR-010):
+    /// join, peer loss, coordinated shutdown. Never fires in
+    /// single-process runs.
+    fn on_dist(&mut self, ev: &DistEvent) -> anyhow::Result<()> {
         let _ = ev;
         Ok(())
     }
@@ -212,6 +257,18 @@ pub fn checkpoint_line(ev: &CheckpointEvent) -> String {
     )
 }
 
+/// `"event":"dist"` line for one process-group transition (ADR-010).
+pub fn dist_line(ev: &DistEvent) -> String {
+    format!(
+        r#"{{"event":"dist","step":{},"rank":{},"procs":{},"kind":{:?},"detail":{:?}}}"#,
+        ev.step,
+        ev.rank,
+        ev.procs,
+        ev.kind.as_str(),
+        ev.detail,
+    )
+}
+
 /// `"event":"end"` line, emitted exactly once per run.
 pub fn end_line(s: &RunSummary) -> String {
     format!(
@@ -242,6 +299,11 @@ impl TrainObserver for JsonlObserver {
 
     fn on_checkpoint(&mut self, ev: &CheckpointEvent) -> anyhow::Result<()> {
         writeln!(self.file, "{}", checkpoint_line(ev))?;
+        Ok(())
+    }
+
+    fn on_dist(&mut self, ev: &DistEvent) -> anyhow::Result<()> {
+        writeln!(self.file, "{}", dist_line(ev))?;
         Ok(())
     }
 
@@ -311,6 +373,13 @@ impl TrainObserver for Multicast {
     fn on_checkpoint(&mut self, ev: &CheckpointEvent) -> anyhow::Result<()> {
         for s in &mut self.sinks {
             s.on_checkpoint(ev)?;
+        }
+        Ok(())
+    }
+
+    fn on_dist(&mut self, ev: &DistEvent) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.on_dist(ev)?;
         }
         Ok(())
     }
@@ -446,6 +515,14 @@ mod tests {
         let mut o = JsonlObserver::create(&path).unwrap();
         o.on_step(&row(1, f64::NAN)).unwrap();
         o.on_refit(&refit_event(1)).unwrap();
+        o.on_dist(&DistEvent {
+            step: 1,
+            rank: 0,
+            procs: 2,
+            kind: DistEventKind::Joined,
+            detail: "1 follower".to_string(),
+        })
+        .unwrap();
         o.on_checkpoint(&CheckpointEvent {
             step: 1,
             path: PathBuf::from("ckpts/ckpt-00000001.lgpckpt"),
@@ -464,8 +541,12 @@ mod tests {
         drop(o);
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 4);
-        let ckpt = Json::parse(lines[2]).unwrap();
+        assert_eq!(lines.len(), 5);
+        let dist = Json::parse(lines[2]).unwrap();
+        assert_eq!(dist.get("event").and_then(Json::as_str), Some("dist"));
+        assert_eq!(dist.get("kind").and_then(Json::as_str), Some("joined"));
+        assert_eq!(dist.get("rank").and_then(Json::as_usize), Some(0));
+        let ckpt = Json::parse(lines[3]).unwrap();
         assert_eq!(ckpt.get("event").and_then(Json::as_str), Some("checkpoint"));
         assert_eq!(ckpt.get("bytes").and_then(Json::as_usize), Some(2048));
         for line in &lines {

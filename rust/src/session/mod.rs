@@ -46,7 +46,8 @@ use crate::estimator::{
 };
 use crate::metrics::{alignment_of, Alignment, AlignmentMeter, Ema, LogRow};
 use crate::model::params::{FlatGrad, ParamStore};
-use crate::observer::{CheckpointEvent, RefitEvent, RunSummary, TrainObserver};
+use crate::dist::DistSession;
+use crate::observer::{CheckpointEvent, DistEvent, DistEventKind, RefitEvent, RunSummary, TrainObserver};
 use crate::optim::{OptimConfig, Optimizer};
 use crate::predictor::fit::{fit_with_ws, FitBuffer, FitReport};
 use crate::predictor::{residuals, Predictor};
@@ -540,6 +541,7 @@ impl SessionBuilder {
             pred,
             data,
             dev_pred: None,
+            dist: None,
             log: Vec::new(),
             cost_units: 0.0,
             examples_seen: 0,
@@ -627,6 +629,10 @@ pub struct TrainSession {
     /// the serial path's state when `shards = 1`.
     workers: Vec<ShardWorker>,
     dev_pred: Option<crate::runtime::DevicePredictor>,
+    /// Connected process group (ADR-010); `None` = single-process. When
+    /// set, every update's leaves flow through
+    /// [`DistSession::exchange`] instead of the local-only reduce.
+    dist: Option<DistSession>,
     /// The gradient-estimation policy (ADR-005).
     est: Box<dyn GradientEstimator>,
     /// Per-session cancel token (serve, ADR-009); `None` = the CLI path,
@@ -684,6 +690,59 @@ impl TrainSession {
         self.est.f()
     }
 
+    // ---- elastic multi-process runner (ADR-010) ----------------------------
+
+    /// The handshake geometry this session would demand of a peer: the
+    /// ADR-008 fingerprint plus the slot partition (`procs` × local
+    /// slots = `accum`) and the data seed. Both sides of
+    /// [`crate::dist::connect`] / [`crate::dist::accept_followers`]
+    /// derive their geometry this way, so any config divergence
+    /// hard-errors at the handshake instead of corrupting a run.
+    pub fn dist_geometry(&self, procs: usize) -> crate::dist::Geometry {
+        crate::dist::Geometry {
+            fingerprint: self.fingerprint(),
+            procs,
+            accum: self.cfg.accum,
+            seed: self.cfg.seed,
+        }
+    }
+
+    /// Attach a connected process group before [`run`](Self::run). From
+    /// here on this process computes only its own contiguous slot group
+    /// per update and exchanges leaves with the group; `--procs P` with
+    /// `--shards S` is bit-identical to a single-process `--shards P*S`
+    /// run (DESIGN.md ADR-010).
+    pub fn attach_dist(&mut self, d: DistSession) -> anyhow::Result<()> {
+        anyhow::ensure!(self.dist.is_none(), "a dist session is already attached");
+        anyhow::ensure!(
+            self.step == 0,
+            "attach_dist on a session that already ran {} steps",
+            self.step
+        );
+        crate::config::validate_dist(d.procs(), self.cfg.accum)?;
+        let ev = DistEvent {
+            step: self.step,
+            rank: d.rank(),
+            procs: d.procs(),
+            kind: DistEventKind::Joined,
+            detail: if d.is_leader() {
+                format!("leader of {} process(es)", d.procs())
+            } else {
+                "connected to leader".to_string()
+            },
+        };
+        self.dist = Some(d);
+        for o in &mut self.observers {
+            o.on_dist(&ev)?;
+        }
+        Ok(())
+    }
+
+    /// `(rank, procs)` when a process group is attached.
+    pub fn dist_info(&self) -> Option<(usize, usize)> {
+        self.dist.as_ref().map(|d| (d.rank(), d.procs()))
+    }
+
     // ---- one optimizer update (scatter/reduce over the shards) -----------
 
     /// Accumulate `cfg.accum` micro-batch gradients across the shard
@@ -713,13 +772,47 @@ impl TrainSession {
         };
         let per_slot = plan.consumed_per_slot();
         let base = self.data.cursor();
-        let slots = self.cfg.accum;
+        let accum = self.cfg.accum;
+        // In a process group (ADR-010) this rank computes only its own
+        // contiguous slot group; slot j here is global slot offset + j,
+        // so the stream position is the one a single-process run would
+        // use for that slot.
+        let (slots, offset) = match &self.dist {
+            Some(d) => d.slot_range(accum),
+            None => (accum, 0),
+        };
         // Scatter through the persistent pool (ADR-007): each parked
         // worker computes its round-robin slots against disjoint stream
         // ranges; gather is slot-ordered, bit-identical to exec::scatter.
         let outs = self.pool.scatter(&mut self.workers, slots, |w, slot| {
-            worker::run_micro(&ctx, w, base + slot * per_slot)
+            worker::run_micro(&ctx, w, base + (offset + slot) * per_slot)
         })?;
+
+        if self.dist.is_some() {
+            // Ship the individual slot leaves; the leader grafts them at
+            // their global slot position in the same left-deep fold, so
+            // the broadcast mean gradient is bit-identical to a
+            // single-process reduce. Nothing (cursor, counters) mutates
+            // until the exchange succeeds — a lost peer therefore leaves
+            // this session exactly at the last completed update, which is
+            // what makes the final checkpoint resumable.
+            let leaves: Vec<crate::dist::Leaf> = outs
+                .into_iter()
+                .map(|o| crate::dist::Leaf {
+                    grad: o.grad,
+                    loss: o.loss,
+                    acc: o.acc,
+                    cost: o.cost,
+                    examples: o.examples as u64,
+                })
+                .collect();
+            let step = self.step as u64;
+            let red = self.dist.as_mut().expect("checked above").exchange(step, leaves)?;
+            self.data.advance(accum * per_slot);
+            self.cost_units += red.cost_sum;
+            self.examples_seen += red.examples as usize;
+            return Ok((red.grad, red.loss_sum, red.acc_sum));
+        }
         self.data.advance(slots * per_slot);
 
         // Reduce: fixed topology over slot order (ADR-004) for the
@@ -1072,7 +1165,56 @@ impl TrainSession {
     /// on SIGINT (graceful shutdown, ADR-008); with `resume` set, first
     /// restores the newest valid checkpoint and continues bit-identically
     /// from the next step.
+    ///
+    /// With a process group attached ([`attach_dist`](Self::attach_dist),
+    /// ADR-010) the leader additionally broadcasts its exit disposition
+    /// (complete / interrupted / error) to every follower on the way out,
+    /// so followers blocked in an exchange wind down instead of timing
+    /// out.
     pub fn run(&mut self) -> anyhow::Result<()> {
+        let result = self.run_loop();
+        let Some(d) = self.dist.as_mut() else {
+            return result.map(|_| ());
+        };
+        let (code, reason) = match &result {
+            Ok(false) => (crate::dist::SHUTDOWN_COMPLETE, "run complete".to_string()),
+            Ok(true) => (
+                crate::dist::SHUTDOWN_INTERRUPTED,
+                "stop requested on the leader".to_string(),
+            ),
+            Err(e) => (crate::dist::SHUTDOWN_ERROR, format!("{e:#}")),
+        };
+        // Best-effort on the leader (a follower that already finished at
+        // the same max_steps boundary has closed its socket); no-op on
+        // followers.
+        d.finish(code, &reason);
+        let ev = DistEvent {
+            step: self.step,
+            rank: d.rank(),
+            procs: d.procs(),
+            kind: DistEventKind::Shutdown,
+            detail: format!("code {code}: {reason}"),
+        };
+        let mut obs_err = None;
+        for o in &mut self.observers {
+            if let Err(e) = o.on_dist(&ev) {
+                obs_err = Some(e);
+                break;
+            }
+        }
+        match (result, obs_err) {
+            (Err(e), _) => Err(e),
+            (Ok(_), Some(e)) => Err(e),
+            (Ok(_), None) => Ok(()),
+        }
+    }
+
+    /// The training loop proper. Returns whether the loop exited on a
+    /// stop request (`true`) rather than by exhausting its budget or
+    /// step limit (`false`) — the wrapper above turns that into the
+    /// coordinated-shutdown code.
+    fn run_loop(&mut self) -> anyhow::Result<bool> {
+        let mut stopped = false;
         if self.cfg.resume && self.step == 0 {
             self.resume_latest()?;
         }
@@ -1134,7 +1276,56 @@ impl TrainSession {
 
             // Scatter micro-batches over the shards, reduce, step. Muon's
             // Newton–Schulz matmuls band across the same pool (ADR-007).
-            let (grad, loss_sum, acc_sum) = self.execute_update(&dev)?;
+            // In a process group the exchange inside can also deliver the
+            // leader's coordinated shutdown (follower side) or a peer
+            // loss — both leave this session at the last completed
+            // update, because nothing mutates before the exchange
+            // succeeds.
+            let (grad, loss_sum, acc_sum) = match self.execute_update(&dev) {
+                Ok(v) => v,
+                Err(e) => {
+                    if matches!(
+                        e.downcast_ref::<crate::dist::Stopped>(),
+                        Some(s) if s.code == crate::dist::SHUTDOWN_COMPLETE
+                    ) {
+                        // The leader exhausted its budget/step limit at
+                        // this boundary; finish here too (final eval and
+                        // summary run below, replicated).
+                        crate::log_info!(
+                            "dist: leader completed the run; stopping at step {}",
+                            self.step
+                        );
+                        break;
+                    }
+                    if e.downcast_ref::<crate::dist::PeerLost>().is_some() {
+                        let ev = self.dist.as_ref().map(|d| DistEvent {
+                            step: self.step,
+                            rank: d.rank(),
+                            procs: d.procs(),
+                            kind: DistEventKind::PeerLost,
+                            detail: format!("{e:#}"),
+                        });
+                        if let Some(ev) = ev {
+                            for o in &mut self.observers {
+                                let _ = o.on_dist(&ev);
+                            }
+                        }
+                        // Persist the last completed update so the run is
+                        // resumable from exactly where the group died.
+                        match self.write_checkpoint() {
+                            Ok(Some(p)) => crate::log_warn!(
+                                "dist: peer lost — wrote final checkpoint {}",
+                                p.display()
+                            ),
+                            Ok(None) => {}
+                            Err(we) => crate::log_warn!(
+                                "dist: final checkpoint after peer loss failed: {we:#}"
+                            ),
+                        }
+                    }
+                    return Err(e);
+                }
+            };
             self.opt.step_pooled(&mut self.params, &grad, &self.rt.manifest, Some(&self.pool));
             self.step += 1;
 
@@ -1197,6 +1388,7 @@ impl TrainSession {
             }
             if stop {
                 crate::log_info!("shutdown requested: stopping after step {}", self.step);
+                stopped = true;
                 break;
             }
         }
@@ -1222,7 +1414,7 @@ impl TrainSession {
         for o in &mut self.observers {
             o.on_end(&summary)?;
         }
-        Ok(())
+        Ok(stopped)
     }
 
     /// Final validation accuracy from the log.

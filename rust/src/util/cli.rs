@@ -137,6 +137,14 @@ impl Args {
         }
     }
 
+    /// Every parsed `--key value` pair, in sorted key order — for
+    /// commands that re-spawn the binary with a filtered copy of their
+    /// own flags (`lgp launch`, DESIGN.md ADR-010). Does not mark keys
+    /// as consumed.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str)> + '_ {
+        self.flags.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
     /// Keys that were provided but never read by the command — typo guard.
     pub fn unknown_keys(&self) -> Vec<String> {
         let seen = self.consumed.borrow();
@@ -185,6 +193,17 @@ mod tests {
         let a = parse("train --presett tiny");
         let _ = a.str_opt("preset");
         assert_eq!(a.unknown_keys(), vec!["presett".to_string()]);
+    }
+
+    #[test]
+    fn entries_expose_every_flag_for_respawn() {
+        let a = parse("launch --preset tiny --steps 4 --procs 2 --resume");
+        let got: Vec<(&str, &str)> = a.entries().collect();
+        assert_eq!(
+            got,
+            vec![("preset", "tiny"), ("procs", "2"), ("resume", "true"), ("steps", "4")]
+        );
+        assert!(!a.unknown_keys().is_empty(), "entries must not mark keys consumed");
     }
 
     #[test]

@@ -160,14 +160,20 @@ fn rig_params(rig: &Rig) -> ParamStore {
 }
 
 /// Capture the rig's full mutable state through the session section
-/// codecs — the same surface `TrainSession::build_checkpoint` uses.
+/// codecs — the same surface `TrainSession::build_checkpoint` uses. META
+/// leads with the step count and DATA with (seed, cursor), mirroring the
+/// session layout, so `checkpoint::reshard` accepts rig artifacts too.
 fn encode_rig(rig: &Rig) -> Vec<u8> {
     let mut ck = checkpoint::Checkpoint::new(FP);
+    let mut meta = Enc::new();
+    meta.put_u64(rig.losses.len() as u64);
+    ck.add(ckstate::META, meta.into_bytes());
     ck.add(ckstate::PARAMS, ckstate::encode_params(&rig_params(rig)));
     ck.add(ckstate::PREDICTOR, ckstate::encode_predictor(&rig.pred));
     ck.add(ckstate::FITBUF, ckstate::encode_fitbuf(&rig.buf));
     ck.add(ckstate::ESTIMATOR, ckstate::encode_estimator(&*rig.est));
     let mut data = Enc::new();
+    data.put_u64(SEED);
     data.put_u64(rig.cursor as u64);
     ck.add(ckstate::DATA, data.into_bytes());
     ck.encode()
@@ -186,6 +192,7 @@ fn restore_rig(rig: &mut Rig, ck: &checkpoint::Checkpoint) {
     ckstate::decode_fitbuf(&mut rig.buf, ck.section(ckstate::FITBUF).unwrap()).unwrap();
     ckstate::decode_estimator(&mut *rig.est, ck.section(ckstate::ESTIMATOR).unwrap()).unwrap();
     let mut data = Dec::new(ck.section(ckstate::DATA).unwrap(), ckstate::DATA);
+    assert_eq!(data.take_u64().unwrap(), SEED, "rig artifacts pin the data seed");
     rig.cursor = data.take_u64().unwrap() as usize;
     data.finish().unwrap();
 }
@@ -235,6 +242,54 @@ fn kill_and_resume_is_bit_identical_for_every_estimator() {
             );
             let _ = std::fs::remove_dir_all(&dir);
         }
+    }
+}
+
+/// ADR-010: `checkpoint::reshard` is a validated byte-identity. An
+/// N -> M -> N round trip must reproduce the artifact exactly, for every
+/// estimator in the zoo, and resuming from the twice-resharded artifact —
+/// under a *different* shard count — must rejoin the golden trajectory
+/// bit for bit. This is the executable form of the ADR-004/008 claim that
+/// checkpoints are shard-neutral.
+#[test]
+fn reshard_round_trip_is_byte_stable_and_resumes_bit_identically() {
+    use lgp::checkpoint::reshard;
+
+    for &kind in EstimatorKind::ALL {
+        let mut golden = build_rig(kind);
+        advance(&mut golden, UPDATES, 1);
+
+        let dir = scratch(&format!("reshard_{kind:?}"));
+        let mut first = build_rig(kind);
+        advance(&mut first, HALF, 1);
+        let original = encode_rig(&first);
+        let input =
+            checkpoint::write_atomic(&dir, &checkpoint::file_name(HALF as u64), &original)
+                .unwrap();
+
+        let m_dir = dir.join("to_m");
+        let n_dir = dir.join("back_to_n");
+        let r1 = reshard::reshard_file(&input, &m_dir, 1, 4).unwrap();
+        assert_eq!(r1.step, HALF as u64, "{kind:?}");
+        assert_eq!(r1.cursor as usize, HALF * ACC * first.consumed, "{kind:?}");
+        let r2 = reshard::reshard_file(&r1.path, &n_dir, 4, 1).unwrap();
+        assert_eq!(
+            std::fs::read(&r2.path).unwrap(),
+            original,
+            "{kind:?}: N->M->N round trip must be byte-stable"
+        );
+
+        let mut resumed = build_rig(kind);
+        let loaded = checkpoint::load_latest(&n_dir, FP).unwrap().expect("resharded artifact");
+        assert_eq!(loaded.step, HALF as u64);
+        restore_rig(&mut resumed, &loaded.ckpt);
+        advance(&mut resumed, UPDATES - HALF, 2);
+        assert_eq!(
+            resumed.tb.trunk, golden.tb.trunk,
+            "{kind:?}: resume after reshard differs (bitwise)"
+        );
+        assert_eq!(resumed.losses, golden.losses[HALF..].to_vec(), "{kind:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
 

@@ -1,0 +1,268 @@
+//! ADR-010 process-group determinism: a 2-process × 2-shard loopback run
+//! must be bit-identical to `--shards 4` single-process (and to serial),
+//! and a follower killed mid-run must leave the leader with a valid,
+//! resumable final checkpoint that rejoins the golden trajectory.
+//!
+//! The leader runs in-process through the library API (so the test can
+//! attach observers and read its state); the follower is the *real*
+//! binary, spawned as `lgp train --dist-connect` exactly the way
+//! `lgp launch` spawns it. Bit-identity is asserted on whole checkpoint
+//! artifacts — params, optimizer, predictor, fit ring, estimator state,
+//! data cursor, and the META scalar traces (loss EMA, cost units,
+//! alignment tracker) all at once.
+//!
+//! Artifact-gated like the other session-level suites: skips cleanly when
+//! artifacts/tiny has not been built. Lives in its own integration binary
+//! because it spawns child processes and serializes through `LOCK`.
+
+use lgp::config::{Algo, OptimKind, RunConfig};
+use lgp::metrics::LogRow;
+use lgp::observer::TrainObserver;
+use lgp::session::{SessionBuilder, TrainSession};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+const STEPS: usize = 6;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: tiny artifacts not built");
+        None
+    }
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lgp_dist_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The shared run configuration. Every fingerprinted field here must
+/// match the flags `spawn_follower` passes — the ADR-010 handshake
+/// fingerprint is what *proves* they match (a drift hard-errors the
+/// handshake instead of silently diverging the run).
+fn tiny_cfg(shards: usize, ckpt_dir: Option<PathBuf>, resume: bool) -> Option<RunConfig> {
+    Some(RunConfig {
+        artifacts_dir: artifacts_dir()?,
+        algo: Algo::Gpr,
+        f: 0.25,
+        accum: 4,
+        optimizer: OptimKind::Muon,
+        lr: 0.02,
+        weight_decay: 0.0,
+        budget_secs: 0.0,
+        max_steps: STEPS,
+        refit_every: 4,
+        ridge_lambda: 1e-4,
+        train_size: 600,
+        val_size: 150,
+        aug_multiplier: 1,
+        seed: 7,
+        eval_every: 0,
+        out_dir: std::env::temp_dir().join("lgp_dist_out"),
+        track_alignment: true,
+        adaptive_f: false,
+        backend: lgp::tensor::BackendKind::Blocked,
+        shards,
+        estimator: None,
+        tangents: 8,
+        checkpoint_dir: ckpt_dir,
+        checkpoint_every: 0,
+        checkpoint_keep: 0,
+        resume,
+    })
+}
+
+fn session(cfg: RunConfig) -> TrainSession {
+    SessionBuilder::from_config(cfg).build().unwrap()
+}
+
+/// Snapshot the completed run's full state through the real artifact
+/// path and return the bytes — the bit-identity comparison surface.
+fn final_artifact(session: &mut TrainSession) -> Vec<u8> {
+    let path = session.write_checkpoint().unwrap().expect("checkpoint dir is set");
+    std::fs::read(path).unwrap()
+}
+
+/// Spawn the real binary as the rank-1 follower of a 2-process group,
+/// flag-for-flag the way `lgp launch` would.
+fn spawn_follower(addr: &str) -> Child {
+    let art = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    let out = std::env::temp_dir().join("lgp_dist_follower_out");
+    Command::new(env!("CARGO_BIN_EXE_lgp"))
+        .arg("train")
+        .args(["--artifacts", art.to_str().unwrap()])
+        .args(["--algo", "gpr", "--f", "0.25", "--accum", "4"])
+        .args(["--optimizer", "muon", "--lr", "0.02", "--weight-decay", "0"])
+        .args(["--steps", "6", "--refit-every", "4", "--ridge", "0.0001"])
+        .args(["--train-size", "600", "--val-size", "150", "--aug-mult", "1"])
+        .args(["--seed", "7", "--eval-every", "0", "--backend", "blocked"])
+        .args(["--tangents", "8", "--shards", "2"])
+        .args(["--out", out.to_str().unwrap()])
+        .args(["--dist-connect", addr, "--dist-procs", "2", "--dist-rank", "1"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn follower")
+}
+
+/// Accept the follower, bailing early if it already died (same poll the
+/// `lgp launch` supervisor runs during the handshake window).
+fn accept_one(
+    listener: &std::net::TcpListener,
+    geom: &lgp::dist::Geometry,
+    child: &mut Child,
+) -> lgp::dist::DistSession {
+    let accepted = lgp::dist::accept_followers(listener, geom, || {
+        if let Some(status) = child.try_wait()? {
+            anyhow::bail!("follower exited during handshake: {status}");
+        }
+        Ok(())
+    });
+    match accepted {
+        Ok(d) => d,
+        Err(e) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("dist handshake failed: {e:#}");
+        }
+    }
+}
+
+#[test]
+fn two_proc_loopback_is_bit_identical_to_single_process() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if artifacts_dir().is_none() {
+        return;
+    }
+
+    // Golden: one process, four shards.
+    let golden_dir = scratch("golden");
+    let Some(cfg) = tiny_cfg(4, Some(golden_dir.clone()), false) else { return };
+    let mut golden = session(cfg);
+    golden.run().unwrap();
+    let golden_bytes = final_artifact(&mut golden);
+
+    // Serial reference: one process, one shard.
+    let serial_dir = scratch("serial");
+    let Some(cfg) = tiny_cfg(1, Some(serial_dir.clone()), false) else { return };
+    let mut serial = session(cfg);
+    serial.run().unwrap();
+    assert_eq!(
+        final_artifact(&mut serial),
+        golden_bytes,
+        "--shards 4 must be bit-identical to serial (ADR-004 precondition)"
+    );
+
+    // Dist: 2 processes × 2 shards over loopback sockets.
+    let dist_dir = scratch("group");
+    let Some(cfg) = tiny_cfg(2, Some(dist_dir.clone()), false) else { return };
+    let mut leader = session(cfg);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut child = spawn_follower(&addr);
+    let geom = leader.dist_geometry(2);
+    let d = accept_one(&listener, &geom, &mut child);
+    leader.attach_dist(d).unwrap();
+    leader.run().unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "follower must exit clean on a completed run: {status}");
+    assert_eq!(leader.step_count(), STEPS);
+    assert_eq!(
+        final_artifact(&mut leader),
+        golden_bytes,
+        "2 procs x 2 shards must be bit-identical to --shards 4 single-process"
+    );
+
+    for d in [golden_dir, serial_dir, dist_dir] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+/// Kills the follower after a chosen leader step completes — from inside
+/// the observer fan-out, so the next exchange hits a dead peer.
+struct KillFollowerAt(usize, Arc<Mutex<Child>>);
+
+impl TrainObserver for KillFollowerAt {
+    fn on_step(&mut self, row: &LogRow) -> anyhow::Result<()> {
+        if row.step == self.0 {
+            let mut ch = self.1.lock().unwrap();
+            let _ = ch.kill();
+            let _ = ch.wait(); // reap now so the socket is fully closed
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn follower_death_leaves_a_valid_resumable_leader_checkpoint() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if artifacts_dir().is_none() {
+        return;
+    }
+
+    // The uninterrupted single-process reference.
+    let golden_dir = scratch("kill_golden");
+    let Some(cfg) = tiny_cfg(4, Some(golden_dir.clone()), false) else { return };
+    let mut golden = session(cfg);
+    golden.run().unwrap();
+    let golden_bytes = final_artifact(&mut golden);
+
+    // Leader with a checkpoint dir; the follower is killed after step 2.
+    let ckpt = scratch("kill_ckpt");
+    let Some(cfg) = tiny_cfg(2, Some(ckpt.clone()), false) else { return };
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let child = Arc::new(Mutex::new(spawn_follower(&addr)));
+    let mut leader = SessionBuilder::from_config(cfg)
+        .observer(Box::new(KillFollowerAt(2, child.clone())))
+        .build()
+        .unwrap();
+    let geom = leader.dist_geometry(2);
+    let d = {
+        let mut ch = child.lock().unwrap();
+        accept_one(&listener, &geom, &mut ch)
+    };
+    leader.attach_dist(d).unwrap();
+
+    let err = leader.run().expect_err("a lost peer must surface as a run error");
+    assert!(
+        err.downcast_ref::<lgp::dist::PeerLost>().is_some(),
+        "expected PeerLost, got: {err:#}"
+    );
+
+    // The exchange-before-mutation contract: the leader stopped at a
+    // completed update boundary and wrote a valid final checkpoint there.
+    // The exact step depends on how far the SIGKILL raced the pipeline,
+    // but it is strictly before the full budget.
+    let loaded = lgp::checkpoint::load_latest(&ckpt, leader.fingerprint())
+        .unwrap()
+        .expect("peer loss must leave a final checkpoint behind");
+    let stopped_at = loaded.step as usize;
+    assert!(
+        (2..STEPS).contains(&stopped_at),
+        "leader should stop at a mid-run boundary, stopped at {stopped_at}"
+    );
+    assert_eq!(leader.step_count(), stopped_at);
+
+    // A fresh single-process session resumes the leader's artifact and
+    // finishes the budget bit-identically to the uninterrupted run.
+    let Some(cfg) = tiny_cfg(4, Some(ckpt.clone()), true) else { return };
+    let mut resumed = session(cfg);
+    resumed.run().unwrap();
+    assert_eq!(resumed.step_count(), STEPS);
+    assert_eq!(
+        final_artifact(&mut resumed),
+        golden_bytes,
+        "resume after peer loss must rejoin the golden trajectory bit for bit"
+    );
+
+    let _ = std::fs::remove_dir_all(&golden_dir);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}

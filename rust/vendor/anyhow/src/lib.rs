@@ -44,6 +44,19 @@ impl Error {
         }
     }
 
+    /// Attempt to view the concrete error type this `Error` wraps,
+    /// looking through any [`Context`] layers — the view real anyhow's
+    /// `downcast_ref` gives, so swapping in `anyhow = "1"` keeps callers
+    /// (the dist loop's `PeerLost`/`Stopped` dispatch, ADR-010) working.
+    /// Ad-hoc `anyhow!` messages wrap no concrete type and return `None`.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        match &self.repr {
+            Repr::Msg(_) => None,
+            Repr::Wrapped(e) => e.downcast_ref::<E>(),
+            Repr::Context { source, .. } => source.downcast_ref::<E>(),
+        }
+    }
+
     /// The root-most error message (no chain).
     pub fn root_message(&self) -> String {
         match &self.repr {
@@ -301,6 +314,19 @@ mod tests {
         let e = v.context("slot missing").unwrap_err();
         assert_eq!(e.to_string(), "slot missing");
         assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn downcast_ref_sees_through_context_layers() {
+        let e = Error::new(io_err());
+        assert_eq!(
+            e.downcast_ref::<std::io::Error>().map(|e| e.kind()),
+            Some(std::io::ErrorKind::NotFound)
+        );
+        let layered = Error::new(io_err()).context("outer");
+        assert!(layered.downcast_ref::<std::io::Error>().is_some());
+        assert!(layered.downcast_ref::<std::fmt::Error>().is_none());
+        assert!(Error::msg("ad hoc").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]

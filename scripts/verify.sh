@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification + the ADR-004 parallel-path smoke + the ADR-005
-# public-API drift gate + the ADR-007 simd/pool smoke.
+# public-API drift gate + the ADR-007 simd/pool smoke + the ADR-010
+# dist-group / reshard smoke.
 #
 #   scripts/verify.sh            # build, tests, sharded smoke, alloc gate,
 #                                # examples against the public API, simd
@@ -42,6 +43,53 @@ cargo test -q --features fault-inject --test checkpoint_resume --test checkpoint
 # re-runs them through the sharded executor.
 cargo test -q --test json_adversarial
 LGP_SHARDS=2 cargo test -q --test serve_control_plane
+
+# ADR-010 dist smoke: a 2-process × 2-shard loopback group must be
+# bit-identical to `--shards 4` single-process — tests/dist_determinism.rs
+# spawns the real binary as the rank-1 follower and compares whole
+# checkpoint artifacts (it also kills the follower mid-run and asserts the
+# leader's final checkpoint resumes onto the golden trajectory). Then the
+# CLI surface end-to-end: `lgp launch --procs 2` must supervise a tiny
+# group to a clean exit. Auto-skips where loopback sockets cannot be
+# bound (sandboxed hosts).
+sockets_ok=1
+if command -v python3 >/dev/null 2>&1; then
+    python3 -c 'import socket; s = socket.socket(); s.bind(("127.0.0.1", 0)); s.listen(1)' \
+        2>/dev/null || sockets_ok=0
+fi
+if [ "$sockets_ok" = 1 ]; then
+    cargo test -q --test dist_determinism
+    if [ -f artifacts/tiny/manifest.json ]; then
+        dist_out="$(mktemp -d)"
+        cargo run --release -- launch --procs 2 --artifacts artifacts/tiny \
+            --algo gpr --steps 4 --accum 4 --shards 1 --seed 3 \
+            --eval-every 0 --out "$dist_out"
+        rm -rf "$dist_out"
+    else
+        echo "SKIP: lgp launch smoke — tiny artifacts not built"
+    fi
+else
+    echo "SKIP: dist socket smoke — cannot bind loopback sockets on this host"
+fi
+
+# ADR-010 reshard smoke (pure file I/O — runs even where the socket smoke
+# skips): train a few checkpointed steps, rewrite the artifact 1 -> 4 -> 1
+# shards, and the round trip must reproduce the input byte for byte. The
+# shard-count-independence this leans on is exactly what the reshard zoo
+# suite in tests/checkpoint_resume.rs proves across every estimator.
+if [ -f artifacts/tiny/manifest.json ]; then
+    rs="$(mktemp -d)"
+    cargo run --release -- train --artifacts artifacts/tiny --algo gpr \
+        --steps 3 --accum 4 --seed 3 --eval-every 0 --out "$rs/out" \
+        --checkpoint-dir "$rs/ck" --checkpoint-every 1
+    src="$(ls "$rs"/ck/ckpt-*.lgpckpt | sort | tail -n 1)"
+    cargo run --release -- reshard --ckpt "$src" --from 1 --to 4 --out "$rs/m"
+    cargo run --release -- reshard --dir "$rs/m" --from 4 --to 1 --out "$rs/n"
+    cmp "$src" "$rs/n/$(basename "$src")"
+    rm -rf "$rs"
+else
+    echo "SKIP: reshard smoke — tiny artifacts not built"
+fi
 
 # ADR-005 public-API drift gate: every example must build AND run against
 # lgp::prelude, so an example that falls behind the session/estimator/
